@@ -1,0 +1,72 @@
+//! Ablation of the *Global Server Correction* — the paper's core design
+//! point (§3.2, Fig 5/6/9):
+//!
+//!   1. correction steps S ∈ {0, 1, 2, 4}      (S=0 degenerates to PSGD-PA)
+//!   2. local epoch size K ∈ {1, 4, 16}        (Fig 5)
+//!   3. correction batch: uniform vs max-cut    (Fig 9 — uniform should win
+//!      or tie: biased batches give biased correction gradients)
+//!
+//!     cargo run --release --example ablation_correction [--dataset tiny-hetero]
+
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{driver, Algorithm, CorrectionBatch, Schedule};
+use llcg::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let dataset = args
+        .iter()
+        .position(|a| a == "--dataset")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "tiny-hetero".to_string());
+    let rt = Runtime::load("artifacts")?;
+
+    let base = || {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset = dataset.clone();
+        cfg.arch = "sage".into();
+        cfg.algorithm = Algorithm::Llcg;
+        cfg.parts = 4;
+        cfg.rounds = 15;
+        cfg.schedule = Schedule::Fixed { k: 8 };
+        cfg.eval_every = 5;
+        cfg.eval_max_nodes = 256;
+        cfg
+    };
+
+    let ds = driver::load_dataset(&base())?;
+    println!("dataset: {}", ds.stats());
+
+    println!("\n-- 1. correction steps S (S=0 == PSGD-PA) --");
+    for s in [0usize, 1, 2, 4] {
+        let mut cfg = base();
+        cfg.correction_steps = s;
+        let res = driver::run_experiment(&cfg, &ds, &rt)?;
+        println!("  S={s}: val={:.4} test={:.4}", res.final_val, res.final_test);
+    }
+
+    println!("\n-- 2. local epoch size K (same round budget) --");
+    for k in [1usize, 4, 16] {
+        let mut cfg = base();
+        cfg.schedule = Schedule::Fixed { k };
+        cfg.correction_steps = 1;
+        let res = driver::run_experiment(&cfg, &ds, &rt)?;
+        println!(
+            "  K={k:<3}: total-steps={:<4} val={:.4}",
+            res.total_steps, res.final_val
+        );
+    }
+
+    println!("\n-- 3. correction mini-batch selection (Fig 9) --");
+    for (name, batch) in [
+        ("uniform", CorrectionBatch::Uniform),
+        ("max-cut-edges", CorrectionBatch::MaxCutEdges),
+    ] {
+        let mut cfg = base();
+        cfg.correction_steps = 2;
+        cfg.correction_batch = batch;
+        let res = driver::run_experiment(&cfg, &ds, &rt)?;
+        println!("  {name:<14}: val={:.4}", res.final_val);
+    }
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! The paper's headline scenario (Fig 2 / Fig 4): distributed training on
+//! the Reddit analog with 8 machines, comparing
+//!
+//!   PSGD-PA   — parameter averaging only, cut-edges ignored (Alg. 1):
+//!               converges to a *lower plateau* (the Thm-1 residual error);
+//!   GGS       — global graph sampling: full accuracy, but transfers node
+//!               features every mini-batch (100x the bytes);
+//!   LLCG      — local training + server correction (Alg. 2): full accuracy
+//!               at PSGD-PA's communication cost.
+//!
+//!     cargo run --release --example distributed_training [--fast]
+
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let rt = Runtime::load("artifacts")?;
+
+    let mk_cfg = |alg: Algorithm| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset = if fast { "tiny-hetero" } else { "reddit-s" }.into();
+        cfg.arch = "sage".into(); // paper's Reddit base arch (Table 2)
+        cfg.algorithm = alg;
+        cfg.parts = 8;
+        cfg.rounds = if fast { 8 } else { 30 };
+        cfg.schedule = match alg {
+            // LLCG uses the exponentially growing local epochs of Alg. 2
+            Algorithm::Llcg => Schedule::Exponential { k0: 8, rho: 1.1 },
+            _ => Schedule::Fixed { k: 8 },
+        };
+        cfg.correction_steps = 2;
+        cfg.server_lr = 0.05;
+        cfg.eval_every = 5;
+        cfg.eval_max_nodes = 384;
+        cfg
+    };
+
+    // fast mode uses tiny artifacts (gcn/sage only built for tiny* = gcn…)
+    // tiny-hetero shares the tiny shape config; its artifacts are "…_tiny".
+    println!("scenario: {} machines, dataset={}", 8, mk_cfg(Algorithm::Llcg).dataset);
+    println!(
+        "\n{:<12} {:>9} {:>9} {:>14} {:>12}",
+        "algorithm", "val", "test", "MB/round", "cut-ratio"
+    );
+    let mut results = Vec::new();
+    for alg in [Algorithm::PsgdPa, Algorithm::Ggs, Algorithm::Llcg] {
+        let mut cfg = mk_cfg(alg);
+        if fast {
+            // tiny-hetero uses the tiny-shaped artifacts via its dims; the
+            // artifact key is {arch}_{opt}_{dataset}; for the fast path we
+            // run the gcn/tiny artifacts on the tiny-hetero graph.
+            cfg.dataset = "tiny-hetero".into();
+            cfg.arch = "gcn".into();
+        }
+        let ds = driver::load_dataset(&cfg)?;
+        let res = driver::run_experiment(&cfg, &ds, &rt)?;
+        println!(
+            "{:<12} {:>9.4} {:>9.4} {:>14.3} {:>12.3}",
+            alg.name(),
+            res.final_val,
+            res.final_test,
+            res.avg_round_mb(),
+            res.cut_ratio
+        );
+        results.push(res);
+    }
+
+    let (psgd, ggs, llcg) = (&results[0], &results[1], &results[2]);
+    println!("\npaper-shape checks:");
+    println!(
+        "  LLCG within {:.1} pts of GGS (paper: ~equal accuracy)",
+        (ggs.final_val - llcg.final_val) * 100.0
+    );
+    println!(
+        "  LLCG beats PSGD-PA by {:.1} pts (paper: the Thm-1 residual gap)",
+        (llcg.final_val - psgd.final_val) * 100.0
+    );
+    println!(
+        "  GGS moves {:.0}x more bytes/round than LLCG (paper: ~100-300x)",
+        ggs.avg_round_bytes / llcg.avg_round_bytes
+    );
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT compile path: lower every (arch, entrypoint, dataset-shape) train/eval
+step to HLO **text** + write ``artifacts/manifest.json`` for the Rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and its README).
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); Python is
+never on the training path.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--datasets tiny,arxiv-s]
+                          [--archs gcn,sage] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# --------------------------------------------------------------------------
+# Dataset shape configs: synthetic analogs of the paper's datasets (Table 2),
+# scaled for the CPU-PJRT testbed; the generator parameters that realize each
+# analog live on the Rust side (graph/generators.rs + config/datasets.rs).
+# d: input feature dim, c: classes, h: hidden, b: batch, f1/f2: fan-outs.
+# --------------------------------------------------------------------------
+DATASETS: Dict[str, Dict] = {
+    # fast shapes for unit/integration tests and the quickstart example
+    "tiny": dict(d=16, c=4, h=16, b=8, f1=4, f2=4, loss="softmax_ce",
+                 archs=("gcn", "sage", "mlp")),
+    # decoupled-label variant used by gap smoke-tests; same shape as tiny
+    "tiny-hetero": dict(d=16, c=4, h=16, b=8, f1=4, f2=4, loss="softmax_ce",
+                        archs=("gcn", "sage")),
+    "flickr-s": dict(d=64, c=7, h=64, b=32, f1=8, f2=8, loss="softmax_ce",
+                     archs=("gcn", "sage", "gat", "appnp")),
+    "proteins-s": dict(d=16, c=16, h=64, b=32, f1=8, f2=8, loss="sigmoid_bce",
+                       archs=("gcn", "sage", "gat", "appnp")),
+    "arxiv-s": dict(d=32, c=16, h=64, b=32, f1=8, f2=8, loss="softmax_ce",
+                    archs=("gcn", "sage", "gat", "appnp")),
+    "reddit-s": dict(d=64, c=16, h=64, b=32, f1=8, f2=8, loss="softmax_ce",
+                     archs=("gcn", "sage", "gat", "appnp")),
+    "yelp-s": dict(d=32, c=12, h=64, b=32, f1=8, f2=8, loss="sigmoid_bce",
+                   archs=("gcn", "mlp")),
+    "products-s": dict(d=32, c=12, h=64, b=32, f1=8, f2=8, loss="softmax_ce",
+                       archs=("sage", "gcn")),
+}
+
+OPTIMIZERS = ("adam", "sgd")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train(arch: str, ds_name: str, cfg: Dict, optimizer: str):
+    d, c, h, b = cfg["d"], cfg["c"], cfg["h"], cfg["b"]
+    n1, n2 = b * cfg["f1"], b * cfg["f1"] * cfg["f2"]
+    step, n_params, n_opt = model.make_train_step(
+        arch, cfg["loss"], optimizer, d, h, c
+    )
+    pspecs = model.param_shape_structs(arch, d, h, c)
+    ospecs = []
+    if optimizer == "adam":
+        ospecs = pspecs + pspecs + [jax.ShapeDtypeStruct((), jax.numpy.float32)]
+    bspecs = model.block_specs(b, n1, n2, d, c, cfg["loss"])
+    lowered = jax.jit(step, keep_unused=True).lower(*pspecs, *ospecs, *bspecs)
+    return to_hlo_text(lowered), n_params, n_opt, (n1, n2)
+
+
+def lower_eval(arch: str, ds_name: str, cfg: Dict):
+    d, c, h, b = cfg["d"], cfg["c"], cfg["h"], cfg["b"]
+    n1, n2 = b * cfg["f1"], b * cfg["f1"] * cfg["f2"]
+    step, n_params = model.make_eval_step(arch, d, h, c)
+    pspecs = model.param_shape_structs(arch, d, h, c)
+    bspecs = model.block_specs(b, n1, n2, d, c, cfg["loss"])[:5]
+    lowered = jax.jit(step, keep_unused=True).lower(*pspecs, *bspecs)
+    return to_hlo_text(lowered), n_params, (n1, n2)
+
+
+def build(out_dir: str, datasets: List[str], archs_filter: List[str] | None):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "artifacts": []}
+    for ds in datasets:
+        cfg = DATASETS[ds]
+        d, c, h, b = cfg["d"], cfg["c"], cfg["h"], cfg["b"]
+        archs = [a for a in cfg["archs"] if not archs_filter or a in archs_filter]
+        for arch in archs:
+            pspecs = model.param_specs(arch, d, h, c)
+            pjson = [{"name": n, "shape": list(s)} for n, s in pspecs]
+            for opt in OPTIMIZERS:
+                name = f"{arch}_{opt}_{ds}"
+                text, n_params, n_opt, (n1, n2) = lower_train(arch, ds, cfg, opt)
+                fname = f"{name}.hlo.txt"
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(text)
+                manifest["artifacts"].append(
+                    {
+                        "name": name,
+                        "file": fname,
+                        "kind": "train",
+                        "arch": arch,
+                        "optimizer": opt,
+                        "loss": cfg["loss"],
+                        "dataset": ds,
+                        "dims": {
+                            "b": b, "n1": n1, "n2": n2,
+                            "d": d, "h": h, "c": c,
+                            "f1": cfg["f1"], "f2": cfg["f2"],
+                        },
+                        "params": pjson,
+                        "n_opt": n_opt,
+                    }
+                )
+                print(f"  wrote {fname} ({len(text)} chars)")
+            name = f"{arch}_eval_{ds}"
+            text, n_params, (n1, n2) = lower_eval(arch, ds, cfg)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "kind": "eval",
+                    "arch": arch,
+                    "optimizer": "none",
+                    "loss": cfg["loss"],
+                    "dataset": ds,
+                    "dims": {
+                        "b": b, "n1": n1, "n2": n2,
+                        "d": d, "h": h, "c": c,
+                        "f1": cfg["f1"], "f2": cfg["f2"],
+                    },
+                    "params": pjson,
+                    "n_opt": 0,
+                }
+            )
+            print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--datasets", default=",".join(DATASETS.keys()))
+    ap.add_argument("--archs", default="")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    datasets = [d for d in args.datasets.split(",") if d]
+    unknown = [d for d in datasets if d not in DATASETS]
+    if unknown:
+        raise SystemExit(f"unknown datasets: {unknown}")
+    if args.list:
+        for ds, cfg in DATASETS.items():
+            print(ds, cfg)
+        return
+    archs = [a for a in args.archs.split(",") if a] or None
+    build(args.out_dir, datasets, archs)
+
+
+if __name__ == "__main__":
+    main()

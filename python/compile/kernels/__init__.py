@@ -1,0 +1,7 @@
+"""L1 Pallas kernels + pure-jnp oracles.
+
+``ops`` exposes the differentiable wrappers the L2 model consumes; the raw
+kernels live in ``aggregate``; the oracles in ``ref``.
+"""
+
+from . import aggregate, ops, ref  # noqa: F401

@@ -1,0 +1,216 @@
+"""L1 Pallas kernels: the GNN aggregation hot spot.
+
+The paper's compute hot spot is sparse neighbor aggregation (cuSPARSE SpMM /
+PyG scatter on the authors' GPUs).  On TPU, scatter/gather is hostile to the
+MXU systolic array, so the standard re-think (DESIGN.md §Hardware-Adaptation)
+is: the host (Rust sampler) builds a *row-normalized dense aggregation
+operator* ``A`` for each mini-batch block, and aggregation becomes a dense
+blocked matmul ``A @ X`` that the MXU eats natively.
+
+Two kernels:
+
+- ``block_aggregate(A, X)``     — tiled matmul with an f32 VMEM accumulator,
+  grid ``(M/bm, N/bn, K/bk)``; the HBM->VMEM schedule the paper's GPU code
+  expressed with threadblocks is expressed here with ``BlockSpec``.
+- ``matmul_bias_act(X, W, b)``  — same loop nest with a fused
+  bias + activation epilogue (one HBM round-trip instead of three); chained
+  after ``block_aggregate`` this gives the fused GCN layer
+  ``act((A @ X) @ W + b)``.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and these artifacts execute on the Rust CPU client.
+Real-TPU perf is *estimated* from VMEM footprint + MXU utilization in
+``roofline.py`` (see DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (perf pass 1, EXPERIMENTS.md §Perf): MXU-native 128+
+# multiples, sized to use the VMEM budget rather than the minimum.  Large BK
+# amortizes the grid loop — on CPU-interpret each grid step is a while-loop
+# iteration (pure overhead), on real TPU each is a DMA round-trip.  Working
+# set at (256, 2048, 256): A 2 MiB + B 2 MiB + acc 0.25 MiB, ~8.5 MiB with
+# input double-buffering — inside the ~16 MiB VMEM budget (roofline.py
+# prints the exact footprint per shape).
+DEF_BM = 256
+DEF_BN = 256
+DEF_BK = 2048
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-d array up to (rows, cols)."""
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, nk: int, act: str, acc_dtype):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis.
+
+    o_ref is revisited across the K steps and doubles as the accumulator
+    (interpret mode has no multi-buffer hazard; on real TPU the same pattern
+    works because the output block index map ignores the K axis, so the tile
+    stays resident in VMEM across the K loop).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(acc_dtype)
+    b = b_ref[...].astype(acc_dtype)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=acc_dtype).astype(
+        o_ref.dtype
+    )
+
+    if act != "none":
+
+        @pl.when(k == nk - 1)
+        def _epilogue():
+            x = o_ref[...]
+            if act == "relu":
+                x = jnp.maximum(x, 0.0)
+            elif act == "leaky_relu":
+                x = jnp.where(x > 0, x, 0.2 * x)
+            o_ref[...] = x
+
+
+def _bias_act_kernel(a_ref, b_ref, bias_ref, o_ref, *, nk: int, act: str, acc_dtype):
+    """Matmul with fused bias-add + activation epilogue."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(acc_dtype)
+    b = b_ref[...].astype(acc_dtype)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=acc_dtype).astype(
+        o_ref.dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        x = o_ref[...] + bias_ref[...].astype(o_ref.dtype)
+        if act == "relu":
+            x = jnp.maximum(x, 0.0)
+        elif act == "leaky_relu":
+            x = jnp.where(x > 0, x, 0.2 * x)
+        o_ref[...] = x
+
+
+def _tiled_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    bias: Optional[jax.Array],
+    act: str,
+    bm: int,
+    bn: int,
+    bk: int,
+) -> jax.Array:
+    """Shared driver: pad to tile multiples, run the grid, slice back."""
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0], (
+        a.shape,
+        b.shape,
+    )
+    m, k = a.shape
+    _, n = b.shape
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    # Small operands: shrink tiles rather than blowing up the pad ratio.
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 128) if n > 128 else _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 128) if k > 128 else _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    a = _pad2(a, mp, kp)
+    b = _pad2(b, kp, np_)
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    args = [a, b]
+    if bias is None:
+        kernel = functools.partial(
+            _matmul_kernel, nk=nk, act=act, acc_dtype=jnp.float32
+        )
+    else:
+        bias2 = _pad2(bias.reshape(1, -1), 1, np_)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        args.append(bias2)
+        kernel = functools.partial(
+            _bias_act_kernel, nk=nk, act=act, acc_dtype=jnp.float32
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,
+    )(*args)
+    return out[:m, :n]
+
+
+def block_aggregate(
+    a: jax.Array,
+    x: jax.Array,
+    *,
+    bm: int = DEF_BM,
+    bn: int = DEF_BN,
+    bk: int = DEF_BK,
+) -> jax.Array:
+    """Neighbor aggregation ``A @ X`` for a sampled block.
+
+    ``a`` is the row-normalized dense aggregation operator built by the Rust
+    sampler (rows: target slots, cols: neighbor slots; zero rows = padding),
+    ``x`` the gathered neighbor features.
+    """
+    return _tiled_matmul(a, x, None, "none", bm, bn, bk)
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "relu",
+    bm: int = DEF_BM,
+    bn: int = DEF_BN,
+    bk: int = DEF_BK,
+) -> jax.Array:
+    """Fused ``act(x @ w + b)`` — dense transform with epilogue fusion."""
+    return _tiled_matmul(x, w, b, act, bm, bn, bk)
+
+
+def fused_gcn_layer(
+    a: jax.Array,
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "relu",
+) -> jax.Array:
+    """One GCN layer ``act((A @ X) @ W + b)``.
+
+    Aggregation first: for fan-out blocks ``A`` is (rows x cols) with
+    cols >> rows, so ``(A@X)@W`` does ``rows*cols*d + rows*d*h`` FLOPs versus
+    ``cols*d*h + rows*cols*h`` for ``A@(XW)`` — with rows << cols and d >= h
+    the former touches less HBM; roofline.py quantifies both orders.
+    """
+    return matmul_bias_act(block_aggregate(a, x), w, b, act=act)

@@ -1,0 +1,87 @@
+"""Differentiable wrappers around the L1 Pallas kernels.
+
+``pallas_call`` in interpret mode has no automatic VJP, so each kernel gets a
+``jax.custom_vjp`` whose backward pass is expressed *in terms of the same
+Pallas kernels* (matmul transposes) — the backward of the hot spot stays on
+the hot path and lowers into the same tiled HLO as the forward.
+
+    y = A @ X            =>  dA = g @ X^T,  dX = A^T @ g
+    y = act(X @ W + b)   =>  dpre = g * act'(y);
+                             dX = dpre @ W^T, dW = X^T @ dpre, db = sum(dpre)
+
+(`act'` is recoverable from y for relu/leaky_relu because both are monotone
+with sign(pre) == sign(y).)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import aggregate as ag
+
+
+# --------------------------------------------------------------------------
+# aggregate: y = A @ X
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def aggregate(a: jax.Array, x: jax.Array) -> jax.Array:
+    """Differentiable ``A @ X`` neighbor aggregation (Pallas)."""
+    return ag.block_aggregate(a, x)
+
+
+def _aggregate_fwd(a, x):
+    return ag.block_aggregate(a, x), (a, x)
+
+
+def _aggregate_bwd(res, g):
+    a, x = res
+    da = ag.block_aggregate(g, x.T)
+    dx = ag.block_aggregate(a.T, g)
+    return da, dx
+
+
+aggregate.defvjp(_aggregate_fwd, _aggregate_bwd)
+
+
+# --------------------------------------------------------------------------
+# linear: y = act(X @ W + b)
+# --------------------------------------------------------------------------
+def _act_grad_from_y(y: jax.Array, act: str) -> jax.Array:
+    if act == "relu":
+        return (y > 0).astype(y.dtype)
+    if act == "leaky_relu":
+        return jnp.where(y > 0, 1.0, 0.2).astype(y.dtype)
+    if act == "none":
+        return jnp.ones_like(y)
+    raise ValueError(f"unknown act {act!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none") -> jax.Array:
+    """Differentiable fused ``act(x @ w + b)`` (Pallas, epilogue-fused)."""
+    return ag.matmul_bias_act(x, w, b, act=act)
+
+
+def _linear_fwd(x, w, b, act):
+    y = ag.matmul_bias_act(x, w, b, act=act)
+    return y, (x, w, y)
+
+
+def _linear_bwd(act, res, g):
+    x, w, y = res
+    dpre = g * _act_grad_from_y(y, act)
+    dx = ag.block_aggregate(dpre, w.T)
+    dw = ag.block_aggregate(x.T, dpre)
+    db = jnp.sum(dpre, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+def gcn_layer(a, x, w, b, *, act: str = "relu") -> jax.Array:
+    """Differentiable GCN layer ``act((A @ X) @ W + b)``."""
+    return linear(aggregate(a, x), w, b, act)

@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suite checks the kernels
+against (``assert_allclose``), and the baselines the roofline comparison
+uses.  Keep them boring: one obvious jnp expression per kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_aggregate_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """Oracle for ``aggregate.block_aggregate``: plain dense matmul."""
+    return jnp.dot(
+        a.astype(jnp.float32), x.astype(jnp.float32), preferred_element_type=jnp.float32
+    ).astype(jnp.promote_types(a.dtype, x.dtype))
+
+
+def _act(x: jax.Array, act: str) -> jax.Array:
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "leaky_relu":
+        return jnp.where(x > 0, x, 0.2 * x)
+    if act == "none":
+        return x
+    raise ValueError(f"unknown act {act!r}")
+
+
+def matmul_bias_act_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, act: str = "relu"
+) -> jax.Array:
+    """Oracle for ``aggregate.matmul_bias_act``."""
+    y = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    y = y + b.astype(jnp.float32)[None, :]
+    return _act(y, act).astype(jnp.promote_types(x.dtype, w.dtype))
+
+
+def fused_gcn_layer_ref(
+    a: jax.Array, x: jax.Array, w: jax.Array, b: jax.Array, *, act: str = "relu"
+) -> jax.Array:
+    """Oracle for ``aggregate.fused_gcn_layer``: act((A@X)@W + b)."""
+    return matmul_bias_act_ref(block_aggregate_ref(a, x), w, b, act=act)

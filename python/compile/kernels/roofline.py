@@ -1,0 +1,109 @@
+"""L1 kernel perf model: VMEM footprint + MXU-utilization estimates.
+
+``interpret=True`` Pallas gives CPU-numpy timings only — NOT a TPU proxy —
+so per DESIGN.md §Perf the kernel is optimized *structurally*: pick tile
+shapes whose working set fits VMEM with room for double-buffering and whose
+matmul panels keep the 128x128 MXU full. This module prints that analysis
+for the shipped block shapes (and is exercised by the pytest suite).
+
+Usage: python -m compile.kernels.roofline
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM, v4-ish
+MXU_DIM = 128
+F32 = 4
+
+
+@dataclass
+class TileAnalysis:
+    m: int
+    k: int
+    n: int
+    bm: int
+    bk: int
+    bn: int
+
+    @property
+    def tiles_bytes(self) -> int:
+        """Working set of one grid step: A-tile + B-tile + out/acc tile."""
+        return F32 * (self.bm * self.bk + self.bk * self.bn + self.bm * self.bn)
+
+    @property
+    def double_buffered_bytes(self) -> int:
+        """Input tiles are double-buffered (overlap DMA with compute)."""
+        return self.tiles_bytes + F32 * (self.bm * self.bk + self.bk * self.bn)
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.double_buffered_bytes <= VMEM_BYTES
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of MXU lanes kept busy by the tile shape: a bm x bk @
+        bk x bn matmul engages min(d, 128)/128 of each systolic dimension,
+        discounted by padding waste on the real (m, k, n)."""
+
+        def eff(dim: int, tile: int) -> float:
+            lane = min(tile, MXU_DIM) / MXU_DIM
+            # padding waste: last tile in the dim is partially full
+            full = dim / tile
+            used = full / -(-full // 1) if tile <= dim else dim / tile
+            return lane * min(1.0, used)
+
+        return eff(self.m, self.bm) * eff(self.k, self.bk) * eff(self.n, self.bn)
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.k * self.n
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Bytes moved assuming each input panel is read once per reuse
+        pass: A read n/bn times, B read m/bm times, C written once."""
+        reads_a = -(-self.n // self.bn) * self.m * self.k
+        reads_b = -(-self.m // self.bm) * self.k * self.n
+        return F32 * (reads_a + reads_b + self.m * self.n)
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / self.hbm_bytes
+
+
+def analyze(name: str, m: int, k: int, n: int, bm: int = 128, bk: int = 128, bn: int = 128):
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    t = TileAnalysis(m, k, n, bm, bk, bn)
+    print(
+        f"{name:<38} {m:>5}x{k:<5}x{n:<4} tiles {bm:>3}x{bk:<3}x{bn:<3} "
+        f"vmem={t.double_buffered_bytes/1024:7.0f}KiB fit={'Y' if t.fits_vmem else 'N'} "
+        f"mxu={t.mxu_utilization:5.2f} AI={t.arithmetic_intensity:6.1f} flop/B"
+    )
+    return t
+
+
+def main() -> None:
+    print("kernel shape analysis (paper-scale block shapes, B=32 f=8x8):")
+    b, n1, n2, d, h, c = 32, 256, 2048, 64, 64, 16
+    # layer 1: aggregate A2 @ X2 then (.) @ W1
+    analyze("block_aggregate(A2@X2)", n1, n2, d)
+    analyze("matmul_bias_act(H@W1)", n1, d, h)
+    # layer 2
+    analyze("block_aggregate(A1@H1)", b, n1, h)
+    analyze("matmul_bias_act(H@W2)", b, h, c)
+    # fused-layer alternative order: A @ (X W) — more FLOPs when rows<<cols
+    a2xw_first = analyze("alt-order X2@W1 then A2@(XW)", n2, d, h)
+    agg_first = analyze("ship-order (A2@X2)@W1 total", n1, n2, d)
+    flops_agg_first = agg_first.flops + 2 * n1 * d * h
+    flops_xw_first = a2xw_first.flops + 2 * n1 * n2 * h
+    print(
+        f"\norder check: aggregate-first {flops_agg_first/1e6:.1f} MFLOP vs "
+        f"transform-first {flops_xw_first/1e6:.1f} MFLOP "
+        f"({'aggregate-first wins' if flops_agg_first < flops_xw_first else 'transform-first wins'} at d={d}, h={h})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""L2: GNN models (GCN / SAGE / GAT / APPNP / MLP) forward + backward + optimizer
+step as pure JAX, built on the L1 Pallas kernels (``kernels.ops``).
+
+This module is *build-time only*: ``aot.py`` lowers the jitted train/eval
+steps to HLO text once; the Rust coordinator executes the artifacts via PJRT
+for the whole training run.  Python never touches the training path.
+
+Mini-batch block format (built by the Rust sampler, DESIGN.md §L2):
+
+    A1  [B,  N1]   row-normalized aggregation operator, targets <- 1-hop
+    A2  [N1, N2]   row-normalized aggregation operator, 1-hop  <- 2-hop
+    X0  [B,  d]    target features        (self features, SAGE/APPNP/MLP)
+    X1  [N1, d]    1-hop slot features
+    X2  [N2, d]    2-hop slot features
+    Y   [B] i32 (softmax_ce) or [B, C] f32 (sigmoid_bce)
+    mask[B] f32    1.0 for real batch rows, 0.0 for padding
+
+Zero rows of A* are padding slots; every model maps zero rows to zero
+contributions.  All aggregation matmuls lower into the Pallas kernels.
+
+Entry points lowered per (arch, optimizer, dataset-shape) by aot.py:
+
+    train_step(params.., [opt..,] A1, A2, X0, X1, X2, Y, mask, lr)
+        -> (loss, params'.., [opt'..])
+    eval_step(params.., A1, A2, X0, X1, X2) -> (logits,)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ops
+
+ARCHS = ("mlp", "gcn", "sage", "gat", "appnp")
+LOSSES = ("softmax_ce", "sigmoid_bce")
+OPTIMIZERS = ("sgd", "adam")
+
+APPNP_TELEPORT = 0.1  # beta in Eq. 12
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# --------------------------------------------------------------------------
+# Parameter specs (shared with the Rust side through the manifest)
+# --------------------------------------------------------------------------
+def param_specs(arch: str, d: int, h: int, c: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list for ``arch``; the manifest records this
+    order and Rust packs/averages parameters positionally."""
+    if arch == "mlp":
+        return [("w1", (d, h)), ("b1", (h,)), ("w2", (h, c)), ("b2", (c,))]
+    if arch == "gcn":
+        return [("w1", (d, h)), ("b1", (h,)), ("w2", (h, c)), ("b2", (c,))]
+    if arch == "sage":
+        return [
+            ("ws1", (d, h)),
+            ("wn1", (d, h)),
+            ("b1", (h,)),
+            ("ws2", (h, c)),
+            ("wn2", (h, c)),
+            ("b2", (c,)),
+        ]
+    if arch == "gat":
+        return [
+            ("w1", (d, h)),
+            ("asrc1", (h,)),
+            ("adst1", (h,)),
+            ("b1", (h,)),
+            ("w2", (h, c)),
+            ("asrc2", (c,)),
+            ("adst2", (c,)),
+            ("b2", (c,)),
+        ]
+    if arch == "appnp":
+        return [("w1", (d, h)), ("b1", (h,)), ("w2", (h, c)), ("b2", (c,))]
+    raise ValueError(f"unknown arch {arch!r}")
+
+
+# --------------------------------------------------------------------------
+# Architectures (Appendix A.2, Eq. 6-12, on sampled blocks)
+# --------------------------------------------------------------------------
+def _gat_layer(a, xr, xc, w, a_src, a_dst, b, act):
+    """Masked dense GAT layer (Eq. 10-11).
+
+    ``a`` is used only as a mask (entries > 0 = real edges); attention
+    replaces the mean weights.  Rows with no neighbors produce zeros.
+    """
+    zc = ops.linear(xc, w, jnp.zeros((w.shape[1],), w.dtype), "none")  # [Cn,h]
+    zr = ops.linear(xr, w, jnp.zeros((w.shape[1],), w.dtype), "none")  # [R, h]
+    er = zc @ a_dst  # source-side term, per column node
+    el = zr @ a_src  # target-side term, per row node
+    e = el[:, None] + er[None, :]
+    e = jnp.where(e > 0, e, 0.2 * e)  # LeakyReLU(0.2)
+    adj = (a > 0).astype(e.dtype)
+    neg = jnp.full_like(e, -1e30)
+    e = jnp.where(adj > 0, e, neg)
+    emax = jnp.max(e, axis=1, keepdims=True)
+    ex = jnp.exp(e - jax.lax.stop_gradient(emax)) * adj
+    denom = jnp.maximum(jnp.sum(ex, axis=1, keepdims=True), 1e-9)
+    alpha = ex / denom
+    out = ops.aggregate(alpha, zc) + b[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def forward(arch: str, params: Dict[str, jax.Array], blocks: Dict[str, jax.Array]):
+    """Two-layer ``arch`` forward on a sampled block; returns logits [B, C]."""
+    a1, a2 = blocks["a1"], blocks["a2"]
+    x0, x1, x2 = blocks["x0"], blocks["x1"], blocks["x2"]
+    p = params
+
+    if arch == "mlp":
+        h1 = ops.linear(x0, p["w1"], p["b1"], "relu")
+        return ops.linear(h1, p["w2"], p["b2"], "none")
+
+    if arch == "gcn":
+        # Eq. 1: h = relu(mean_agg(X) @ W); aggregation is the Pallas kernel.
+        h1 = ops.gcn_layer(a2, x2, p["w1"], p["b1"], act="relu")
+        return ops.gcn_layer(a1, h1, p["w2"], p["b2"], act="none")
+
+    if arch == "sage":
+        # Eq. 7: h = relu(x W_s + mean_agg(X) W_n)
+        n1 = ops.aggregate(a2, x2)
+        h1 = jnp.maximum(
+            ops.linear(x1, p["ws1"], p["b1"], "none")
+            + ops.linear(n1, p["wn1"], jnp.zeros_like(p["b1"]), "none"),
+            0.0,
+        )
+        n0 = ops.aggregate(a1, h1)
+        # self-representation at level 0 re-encodes x0 (and its 1-hop mean)
+        # through the layer-1 weights — standard for sampled SAGE blocks.
+        h0_self = jnp.maximum(
+            ops.linear(x0, p["ws1"], p["b1"], "none")
+            + ops.linear(
+                ops.aggregate(a1, x1), p["wn1"], jnp.zeros_like(p["b1"]), "none"
+            ),
+            0.0,
+        )
+        return ops.linear(h0_self, p["ws2"], p["b2"], "none") + ops.linear(
+            n0, p["wn2"], jnp.zeros_like(p["b2"]), "none"
+        )
+
+    if arch == "gat":
+        # layer-1 embeddings at the 1-hop slots (from 2-hop features) and at
+        # the targets themselves (from 1-hop features), then attention again.
+        h1 = _gat_layer(a2, x1, x2, p["w1"], p["asrc1"], p["adst1"], p["b1"], "relu")
+        h0 = _gat_layer(a1, x0, x1, p["w1"], p["asrc1"], p["adst1"], p["b1"], "relu")
+        return _gat_layer(a1, h0, h1, p["w2"], p["asrc2"], p["adst2"], p["b2"], "none")
+
+    if arch == "appnp":
+        # Eq. 12: graph-agnostic MLP prediction + 2 personalized-PageRank
+        # propagation steps over the sampled block.
+        def mlp(x):
+            return ops.linear(
+                ops.linear(x, p["w1"], p["b1"], "relu"), p["w2"], p["b2"], "none"
+            )
+
+        beta = APPNP_TELEPORT
+        h2, h1v, h0 = mlp(x2), mlp(x1), mlp(x0)
+        z1 = beta * h1v + (1.0 - beta) * ops.aggregate(a2, h2)
+        z0 = beta * h0 + (1.0 - beta) * ops.aggregate(a1, z1)
+        return z0
+
+    raise ValueError(f"unknown arch {arch!r}")
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+def loss_fn(loss: str, logits: jax.Array, y: jax.Array, mask: jax.Array):
+    """Masked mean loss over the batch (Eq. 2 estimator)."""
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    if loss == "softmax_ce":
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+        return jnp.sum(nll * mask) / denom
+    if loss == "sigmoid_bce":
+        z = logits
+        # numerically stable BCE-with-logits
+        bce = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+        return jnp.sum(jnp.mean(bce, axis=-1) * mask) / denom
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+# --------------------------------------------------------------------------
+# Train / eval steps (the lowered entry points)
+# --------------------------------------------------------------------------
+def _split(flat: Sequence[jax.Array], names: Sequence[str]) -> Dict[str, jax.Array]:
+    assert len(flat) == len(names)
+    return dict(zip(names, flat))
+
+
+def make_train_step(arch: str, loss: str, optimizer: str, d: int, h: int, c: int):
+    """Returns ``(fn, n_params, n_opt)`` where ``fn`` is the flat-signature
+    train step lowered by aot.py.
+
+    SGD:   p' = p - lr * g                                  (Alg. 2 line 8)
+    Adam:  standard bias-corrected Adam on the local machine (App. A.2).
+    """
+    specs = param_specs(arch, d, h, c)
+    names = [n for n, _ in specs]
+    n_params = len(names)
+    n_opt = 2 * n_params + 1 if optimizer == "adam" else 0
+
+    def step(*args):
+        params = list(args[:n_params])
+        off = n_params
+        if optimizer == "adam":
+            m = list(args[off : off + n_params])
+            v = list(args[off + n_params : off + 2 * n_params])
+            t = args[off + 2 * n_params]
+            off += n_opt
+        a1, a2, x0, x1, x2, y, mask, lr = args[off : off + 8]
+        blocks = {"a1": a1, "a2": a2, "x0": x0, "x1": x1, "x2": x2}
+
+        def objective(plist):
+            logits = forward(arch, _split(plist, names), blocks)
+            return loss_fn(loss, logits, y, mask)
+
+        lval, grads = jax.value_and_grad(objective)(params)
+
+        if optimizer == "sgd":
+            new = [p - lr * g for p, g in zip(params, grads)]
+            return (lval, *new)
+
+        t1 = t + 1.0
+        new_m = [ADAM_B1 * mi + (1 - ADAM_B1) * g for mi, g in zip(m, grads)]
+        new_v = [ADAM_B2 * vi + (1 - ADAM_B2) * g * g for vi, g in zip(v, grads)]
+        mhat = [mi / (1 - ADAM_B1**t1) for mi in new_m]
+        vhat = [vi / (1 - ADAM_B2**t1) for vi in new_v]
+        new = [
+            p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS)
+            for p, mh, vh in zip(params, mhat, vhat)
+        ]
+        return (lval, *new, *new_m, *new_v, t1)
+
+    return step, n_params, n_opt
+
+
+def make_eval_step(arch: str, d: int, h: int, c: int):
+    """Returns ``(fn, n_params)``; ``fn(params.., A1, A2, X0, X1, X2) ->
+    (logits,)`` — the server-side validation / correction-metric path."""
+    specs = param_specs(arch, d, h, c)
+    names = [n for n, _ in specs]
+    n_params = len(names)
+
+    def step(*args):
+        params = _split(list(args[:n_params]), names)
+        a1, a2, x0, x1, x2 = args[n_params : n_params + 5]
+        blocks = {"a1": a1, "a2": a2, "x0": x0, "x1": x1, "x2": x2}
+        return (forward(arch, params, blocks),)
+
+    return step, n_params
+
+
+# --------------------------------------------------------------------------
+# Shape helpers for lowering
+# --------------------------------------------------------------------------
+def block_specs(b: int, n1: int, n2: int, d: int, c: int, loss: str):
+    """ShapeDtypeStructs of (A1, A2, X0, X1, X2, Y, mask, lr)."""
+    f32 = jnp.float32
+    y = (
+        jax.ShapeDtypeStruct((b,), jnp.int32)
+        if loss == "softmax_ce"
+        else jax.ShapeDtypeStruct((b, c), f32)
+    )
+    return (
+        jax.ShapeDtypeStruct((b, n1), f32),
+        jax.ShapeDtypeStruct((n1, n2), f32),
+        jax.ShapeDtypeStruct((b, d), f32),
+        jax.ShapeDtypeStruct((n1, d), f32),
+        jax.ShapeDtypeStruct((n2, d), f32),
+        y,
+        jax.ShapeDtypeStruct((b,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )
+
+
+def param_shape_structs(arch: str, d: int, h: int, c: int):
+    return [
+        jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_specs(arch, d, h, c)
+    ]

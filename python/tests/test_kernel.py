@@ -1,0 +1,204 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes (the system contract: any block shape the
+Rust sampler can emit must agree with ref.py to f32 tolerance).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate as ag
+from compile.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = dict(rtol=2e-3, atol=2e-3)  # f32 accumulation-order slack
+
+
+# --------------------------------------------------------------------------
+# block_aggregate
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 64, 16),
+        (32, 256, 64),  # tiny dataset block shape
+        (128, 128, 128),  # exactly one tile
+        (129, 257, 130),  # off-tile remainders in every dim
+        (256, 2048, 64),  # paper-scale block shape
+    ],
+)
+def test_block_aggregate_shapes(m, k, n):
+    a = _rand(0, (m, k), jnp.float32)
+    x = _rand(1, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        ag.block_aggregate(a, x), ref.block_aggregate_ref(a, x), **TOL
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_aggregate_dtypes(dtype):
+    a = _rand(0, (16, 96), dtype)
+    x = _rand(1, (96, 24), dtype)
+    got = ag.block_aggregate(a, x)
+    want = ref.block_aggregate_ref(a, x)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_block_aggregate_zero_rows_are_padding():
+    """Zero rows in A (padding slots) must produce exactly-zero outputs."""
+    a = np.zeros((8, 32), np.float32)
+    a[0, :4] = 0.25
+    x = np.asarray(_rand(3, (32, 12), jnp.float32))
+    out = np.asarray(ag.block_aggregate(jnp.asarray(a), jnp.asarray(x)))
+    assert np.all(out[1:] == 0.0)
+    np.testing.assert_allclose(out[0], a[0] @ x, **TOL)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 192),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_aggregate_hypothesis(m, k, n, seed):
+    a = _rand(seed, (m, k), jnp.float32)
+    x = _rand(seed + 1, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        ag.block_aggregate(a, x), ref.block_aggregate_ref(a, x), **TOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+def test_block_aggregate_tile_sweep(bm, bn, bk):
+    """Result must be tile-size independent (the perf knobs are safe)."""
+    a = _rand(7, (48, 160), jnp.float32)
+    x = _rand(8, (160, 40), jnp.float32)
+    np.testing.assert_allclose(
+        ag.block_aggregate(a, x, bm=bm, bn=bn, bk=bk),
+        ref.block_aggregate_ref(a, x),
+        **TOL,
+    )
+
+
+# --------------------------------------------------------------------------
+# matmul_bias_act / fused layer
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("act", ["none", "relu", "leaky_relu"])
+def test_matmul_bias_act(act):
+    x = _rand(0, (40, 72), jnp.float32)
+    w = _rand(1, (72, 24), jnp.float32)
+    b = _rand(2, (24,), jnp.float32)
+    np.testing.assert_allclose(
+        ag.matmul_bias_act(x, w, b, act=act),
+        ref.matmul_bias_act_ref(x, w, b, act=act),
+        **TOL,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 128),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["none", "relu", "leaky_relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_bias_act_hypothesis(m, k, n, act, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    b = _rand(seed + 2, (n,), jnp.float32)
+    np.testing.assert_allclose(
+        ag.matmul_bias_act(x, w, b, act=act),
+        ref.matmul_bias_act_ref(x, w, b, act=act),
+        **TOL,
+    )
+
+
+def test_fused_gcn_layer():
+    a = _rand(0, (32, 256), jnp.float32)
+    x = _rand(1, (256, 64), jnp.float32)
+    w = _rand(2, (64, 48), jnp.float32)
+    b = _rand(3, (48,), jnp.float32)
+    np.testing.assert_allclose(
+        ag.fused_gcn_layer(a, x, w, b),
+        ref.fused_gcn_layer_ref(a, x, w, b),
+        rtol=5e-3,
+        atol=5e-3,
+    )
+
+
+# --------------------------------------------------------------------------
+# custom_vjp wrappers: gradients vs jnp autodiff of the oracle
+# --------------------------------------------------------------------------
+def _grad_check(fn, fn_ref, args, tol=5e-3):
+    g = jax.grad(lambda *a: jnp.sum(fn(*a) ** 2), argnums=tuple(range(len(args))))(
+        *args
+    )
+    gr = jax.grad(
+        lambda *a: jnp.sum(fn_ref(*a) ** 2), argnums=tuple(range(len(args)))
+    )(*args)
+    for u, v in zip(g, gr):
+        np.testing.assert_allclose(u, v, rtol=tol, atol=tol)
+
+
+def test_aggregate_grad():
+    a = _rand(0, (24, 80), jnp.float32)
+    x = _rand(1, (80, 20), jnp.float32)
+    _grad_check(ops.aggregate, ref.block_aggregate_ref, (a, x))
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "leaky_relu"])
+def test_linear_grad(act):
+    x = _rand(0, (24, 48), jnp.float32)
+    w = _rand(1, (48, 16), jnp.float32)
+    b = _rand(2, (16,), jnp.float32)
+    _grad_check(
+        lambda x, w, b: ops.linear(x, w, b, act),
+        lambda x, w, b: ref.matmul_bias_act_ref(x, w, b, act=act),
+        (x, w, b),
+    )
+
+
+def test_gcn_layer_grad():
+    a = _rand(0, (16, 64), jnp.float32)
+    x = _rand(1, (64, 24), jnp.float32)
+    w = _rand(2, (24, 8), jnp.float32)
+    b = _rand(3, (8,), jnp.float32)
+    _grad_check(
+        lambda a, x, w, b: ops.gcn_layer(a, x, w, b),
+        lambda a, x, w, b: ref.fused_gcn_layer_ref(a, x, w, b),
+        (a, x, w, b),
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 32),
+    k=st.integers(2, 64),
+    n=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aggregate_grad_hypothesis(m, k, n, seed):
+    a = _rand(seed, (m, k), jnp.float32)
+    x = _rand(seed + 1, (k, n), jnp.float32)
+    _grad_check(ops.aggregate, ref.block_aggregate_ref, (a, x))

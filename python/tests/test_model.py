@@ -1,0 +1,337 @@
+"""L2 model correctness: forward shape/semantics, loss, train-step dynamics.
+
+Includes a pure-jnp GCN oracle (no Pallas) to validate the end-to-end forward
+used by the artifacts, plus invariants the Rust coordinator relies on:
+padding rows are inert, the SGD step equals p - lr*g, Adam state threading.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, F1, F2, D, H, C = 8, 4, 4, 12, 16, 5
+N1, N2 = B * F1, B * F1 * F2
+
+
+def _mk_blocks(seed=0, b=B, n1=N1, n2=N2, d=D):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    # row-normalized operators with some zero (padding) rows
+    a1 = jax.random.uniform(ks[0], (b, n1))
+    a1 = a1 * (jax.random.uniform(ks[1], (b, n1)) > 0.5)
+    a1 = a1 / jnp.maximum(a1.sum(1, keepdims=True), 1e-9)
+    a2 = jax.random.uniform(ks[2], (n1, n2))
+    a2 = a2 * (jax.random.uniform(ks[3], (n1, n2)) > 0.7)
+    a2 = a2 / jnp.maximum(a2.sum(1, keepdims=True), 1e-9)
+    x0 = jax.random.normal(ks[4], (b, d))
+    x1 = jax.random.normal(ks[5], (n1, d))
+    x2 = jax.random.normal(jax.random.PRNGKey(seed + 99), (n2, d))
+    return {"a1": a1, "a2": a2, "x0": x0, "x1": x1, "x2": x2}
+
+
+def _init_params(arch, seed=0, d=D, h=H, c=C):
+    specs = model.param_specs(arch, d, h, c)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(specs))
+    out = {}
+    for (name, shape), k in zip(specs, keys):
+        fan_in = shape[0] if len(shape) == 2 else shape[0]
+        out[name] = jax.random.normal(k, shape) * (1.0 / np.sqrt(fan_in))
+    return out
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", model.ARCHS)
+def test_forward_shape(arch):
+    p = _init_params(arch)
+    logits = model.forward(arch, p, _mk_blocks())
+    assert logits.shape == (B, C)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_gcn_forward_matches_jnp_oracle():
+    """The Pallas-backed GCN forward == plain jnp GCN on the same block."""
+    p = _init_params("gcn")
+    blocks = _mk_blocks()
+    got = model.forward("gcn", p, blocks)
+    h1 = jax.nn.relu(blocks["a2"] @ blocks["x2"] @ p["w1"] + p["b1"])
+    want = blocks["a1"] @ h1 @ p["w2"] + p["b2"]
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_mlp_ignores_graph():
+    """MLP must be invariant to the aggregation operators (Fig 10b)."""
+    p = _init_params("mlp")
+    b1, b2 = _mk_blocks(0), _mk_blocks(1)
+    b2 = dict(b2, x0=b1["x0"])
+    np.testing.assert_allclose(
+        model.forward("mlp", p, b1), model.forward("mlp", p, b2), rtol=1e-6
+    )
+
+
+def test_gcn_depends_on_graph():
+    p = _init_params("gcn")
+    b1, b2 = _mk_blocks(0), _mk_blocks(1)
+    b2 = dict(b2, x0=b1["x0"])
+    assert not np.allclose(
+        model.forward("gcn", p, b1), model.forward("gcn", p, b2), atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("arch", ["gcn", "sage", "gat", "appnp"])
+def test_isolated_row_gives_finite_output(arch):
+    """A target with zero A1 row (no sampled neighbors) must stay finite."""
+    p = _init_params(arch)
+    blocks = _mk_blocks()
+    a1 = np.asarray(blocks["a1"]).copy()
+    a1[0, :] = 0.0
+    blocks = dict(blocks, a1=jnp.asarray(a1))
+    logits = model.forward(arch, p, blocks)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+def test_softmax_ce_masked():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0], [5.0, 5.0]])
+    y = jnp.asarray([0, 1, 0], jnp.int32)
+    full = model.loss_fn("softmax_ce", logits, y, jnp.asarray([1.0, 1.0, 1.0]))
+    masked = model.loss_fn("softmax_ce", logits, y, jnp.asarray([1.0, 1.0, 0.0]))
+    assert masked < full  # dropping the uncertain row lowers the mean
+    assert float(masked) < 1e-3
+
+
+def test_softmax_ce_uniform_is_log_c():
+    logits = jnp.zeros((4, 7))
+    y = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    l = model.loss_fn("softmax_ce", logits, y, jnp.ones(4))
+    np.testing.assert_allclose(float(l), np.log(7.0), rtol=1e-5)
+
+
+def test_sigmoid_bce_perfect_prediction():
+    y = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+    logits = (y * 2 - 1) * 20.0
+    l = model.loss_fn("sigmoid_bce", logits, y, jnp.ones(2))
+    assert float(l) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bce_matches_naive(seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    logits = jax.random.normal(k1, (6, 9)) * 3
+    y = (jax.random.uniform(k2, (6, 9)) > 0.5).astype(jnp.float32)
+    got = model.loss_fn("sigmoid_bce", logits, y, jnp.ones(6))
+    p = jax.nn.sigmoid(logits)
+    naive = -jnp.mean(y * jnp.log(p + 1e-12) + (1 - y) * jnp.log(1 - p + 1e-12))
+    np.testing.assert_allclose(float(got), float(naive), rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+def _flat_params(arch):
+    p = _init_params(arch)
+    return [p[n] for n, _ in model.param_specs(arch, D, H, C)]
+
+
+def _block_args(loss="softmax_ce"):
+    blocks = _mk_blocks()
+    y = (
+        jnp.arange(B, dtype=jnp.int32) % C
+        if loss == "softmax_ce"
+        else (jax.random.uniform(jax.random.PRNGKey(5), (B, C)) > 0.5).astype(
+            jnp.float32
+        )
+    )
+    mask = jnp.ones((B,), jnp.float32)
+    return [blocks["a1"], blocks["a2"], blocks["x0"], blocks["x1"], blocks["x2"], y, mask]
+
+
+@pytest.mark.parametrize("arch", model.ARCHS)
+def test_sgd_step_decreases_loss(arch):
+    step, n_params, n_opt = model.make_train_step(arch, "softmax_ce", "sgd", D, H, C)
+    params = _flat_params(arch)
+    args = _block_args()
+    lr = jnp.asarray(0.1, jnp.float32)
+    out1 = step(*params, *args, lr)
+    out2 = step(*out1[1:], *args, lr)
+    out3 = step(*out2[1:], *args, lr)
+    assert float(out3[0]) < float(out1[0])
+
+
+def test_sgd_step_is_p_minus_lr_g():
+    step, n_params, _ = model.make_train_step("gcn", "softmax_ce", "sgd", D, H, C)
+    params = _flat_params("gcn")
+    args = _block_args()
+    lr = jnp.asarray(0.05, jnp.float32)
+
+    names = [n for n, _ in model.param_specs("gcn", D, H, C)]
+
+    def obj(plist):
+        logits = model.forward("gcn", dict(zip(names, plist)),
+                               dict(zip(["a1","a2","x0","x1","x2"], args[:5])))
+        return model.loss_fn("softmax_ce", logits, args[5], args[6])
+
+    grads = jax.grad(obj)(params)
+    out = step(*params, *args, lr)
+    for p, g, pn in zip(params, grads, out[1:]):
+        np.testing.assert_allclose(pn, p - 0.05 * g, rtol=2e-3, atol=2e-4)
+
+
+def test_adam_step_threads_state_and_learns():
+    step, n_params, n_opt = model.make_train_step("gcn", "softmax_ce", "adam", D, H, C)
+    assert n_opt == 2 * n_params + 1
+    params = _flat_params("gcn")
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    t = jnp.asarray(0.0, jnp.float32)
+    args = _block_args()
+    lr = jnp.asarray(0.01, jnp.float32)
+    state = [*params, *m, *v, t]
+    losses = []
+    for _ in range(5):
+        out = step(*state, *args, lr)
+        losses.append(float(out[0]))
+        state = list(out[1:])
+    assert losses[-1] < losses[0]
+    assert float(state[-1]) == 5.0  # t incremented once per step
+    # second moment (v) is a sum of squares — must be non-negative everywhere
+    for vi in state[2 * n_params : 3 * n_params]:
+        assert bool(jnp.all(vi >= 0.0))
+
+
+def test_masked_rows_do_not_affect_gradient():
+    """Zeroing a row's mask must make its label irrelevant (padding safety)."""
+    step, _, _ = model.make_train_step("gcn", "softmax_ce", "sgd", D, H, C)
+    params = _flat_params("gcn")
+    args = _block_args()
+    lr = jnp.asarray(0.1, jnp.float32)
+    mask = np.ones(B, np.float32)
+    mask[0] = 0.0
+    args[6] = jnp.asarray(mask)
+    y2 = np.asarray(args[5]).copy()
+    y2[0] = (y2[0] + 1) % C
+    out_a = step(*params, *args, lr)
+    args_b = list(args)
+    args_b[5] = jnp.asarray(y2)
+    out_b = step(*params, *args_b, lr)
+    for pa, pb in zip(out_a[1:], out_b[1:]):
+        np.testing.assert_allclose(pa, pb, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("arch", ["gcn", "sage"])
+def test_eval_step_matches_forward(arch):
+    estep, n_params = model.make_eval_step(arch, D, H, C)
+    params = _flat_params(arch)
+    blocks = _mk_blocks()
+    (logits,) = estep(
+        *params, blocks["a1"], blocks["a2"], blocks["x0"], blocks["x1"], blocks["x2"]
+    )
+    names = [n for n, _ in model.param_specs(arch, D, H, C)]
+    want = model.forward(arch, dict(zip(names, params)), blocks)
+    np.testing.assert_allclose(logits, want, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# jit parity: the exact jitted function that aot.py lowers
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["gcn", "sage"])
+def test_jit_matches_eager(arch):
+    step, n_params, _ = model.make_train_step(arch, "softmax_ce", "sgd", D, H, C)
+    params = _flat_params(arch)
+    args = _block_args()
+    lr = jnp.asarray(0.1, jnp.float32)
+    eager = step(*params, *args, lr)
+    jitted = jax.jit(step)(*params, *args, lr)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# pure-jnp oracles for the remaining architectures (GCN's is above)
+# --------------------------------------------------------------------------
+def test_sage_forward_matches_jnp_oracle():
+    p = _init_params("sage")
+    bl = _mk_blocks()
+    got = model.forward("sage", p, bl)
+    relu = jax.nn.relu
+    h1 = relu(bl["x1"] @ p["ws1"] + (bl["a2"] @ bl["x2"]) @ p["wn1"] + p["b1"])
+    h0 = relu(bl["x0"] @ p["ws1"] + (bl["a1"] @ bl["x1"]) @ p["wn1"] + p["b1"])
+    want = h0 @ p["ws2"] + p["b2"] + (bl["a1"] @ h1) @ p["wn2"]
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_appnp_forward_matches_jnp_oracle():
+    p = _init_params("appnp")
+    bl = _mk_blocks()
+    got = model.forward("appnp", p, bl)
+
+    def mlp(x):
+        return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+    beta = model.APPNP_TELEPORT
+    z1 = beta * mlp(bl["x1"]) + (1 - beta) * (bl["a2"] @ mlp(bl["x2"]))
+    want = beta * mlp(bl["x0"]) + (1 - beta) * (bl["a1"] @ z1)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_gat_forward_matches_jnp_oracle():
+    p = _init_params("gat")
+    bl = _mk_blocks()
+    got = model.forward("gat", p, bl)
+
+    def gat_layer(a, xr, xc, w, asrc, adst, b, relu_out):
+        zc, zr = xc @ w, xr @ w
+        e = (zr @ asrc)[:, None] + (zc @ adst)[None, :]
+        e = jnp.where(e > 0, e, 0.2 * e)
+        adj = (a > 0).astype(e.dtype)
+        e = jnp.where(adj > 0, e, -1e30)
+        ex = jnp.exp(e - jnp.max(e, axis=1, keepdims=True)) * adj
+        alpha = ex / jnp.maximum(ex.sum(1, keepdims=True), 1e-9)
+        out = alpha @ zc + b[None, :]
+        return jax.nn.relu(out) if relu_out else out
+
+    h1 = gat_layer(bl["a2"], bl["x1"], bl["x2"], p["w1"], p["asrc1"], p["adst1"], p["b1"], True)
+    h0 = gat_layer(bl["a1"], bl["x0"], bl["x1"], p["w1"], p["asrc1"], p["adst1"], p["b1"], True)
+    want = gat_layer(bl["a1"], h0, h1, p["w2"], p["asrc2"], p["adst2"], p["b2"], False)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+def test_gat_attention_sums_to_one_on_real_rows():
+    """Indirect invariant: scaling one neighbor's features changes only
+    that row's output (attention is row-local)."""
+    p = _init_params("gat")
+    b1 = _mk_blocks()
+    x1 = np.asarray(b1["x1"]).copy()
+    x1[0] *= 5.0
+    b2 = dict(b1, x1=jnp.asarray(x1))
+    o1 = model.forward("gat", p, b1)
+    o2 = model.forward("gat", p, b2)
+    assert not np.allclose(o1, o2, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["gat", "appnp"])
+def test_train_step_learns_all_archs_jit(arch):
+    step, n_params, n_opt = model.make_train_step(arch, "softmax_ce", "adam", D, H, C)
+    params = _flat_params(arch)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    t = jnp.asarray(0.0, jnp.float32)
+    args = _block_args()
+    lr = jnp.asarray(0.01, jnp.float32)
+    jstep = jax.jit(step, keep_unused=True)
+    state = [*params, *m, *v, t]
+    losses = []
+    for _ in range(6):
+        out = jstep(*state, *args, lr)
+        losses.append(float(out[0]))
+        state = list(out[1:])
+    assert losses[-1] < losses[0], f"{arch} did not learn: {losses}"

@@ -1,0 +1,206 @@
+//! Performance benchmark harness (`cargo bench`).
+//!
+//! Custom harness (`harness = false`): the offline environment has no
+//! criterion (DESIGN.md §Substitutions). Reports mean/std/p50/p99 over
+//! timed iterations after warmup, one section per perf-critical component:
+//!
+//!   graph-gen        dataset generator throughput
+//!   partition        partitioners on reddit-s (Fig 1 substrate)
+//!   sampler          block building (the L3 hot path feeding PJRT)
+//!   runtime          HLO train/eval step latency (the compute hot path)
+//!   round            end-to-end round latency (Fig 1 speedup source)
+//!   comm             parameter averaging
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+use std::time::Instant;
+
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::graph::generators;
+use llcg::partition;
+use llcg::runtime::{ModelState, Runtime};
+use llcg::sampler::{BlockBuilder, Fanout};
+use llcg::util::{stats::Summary, Pcg64};
+
+struct Bench {
+    filter: Option<String>,
+    rows: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    fn new() -> Bench {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        Bench {
+            filter,
+            rows: Vec::new(),
+        }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter
+            .as_deref()
+            .map(|f| name.contains(f))
+            .unwrap_or(true)
+    }
+
+    /// Time `f` for `iters` iterations after `warmup` runs.
+    fn run(&mut self, name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) {
+        if !self.enabled(name) {
+            return;
+        }
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3); // ms
+        }
+        let s = Summary::of(&samples);
+        println!(
+            "{name:<44} {:>9.3} ms ±{:>8.3}  p50={:>9.3}  p99={:>9.3}  (n={})",
+            s.mean, s.std, s.p50, s.p99, s.n
+        );
+        self.rows.push((name.to_string(), s));
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    println!(
+        "{:<44} {:>12} {:>9} {:>14} {:>11}",
+        "benchmark", "mean", "std", "p50", "p99"
+    );
+
+    // ---- graph generation --------------------------------------------------
+    b.run("graph-gen/tiny(n=300)", 1, 10, || {
+        std::hint::black_box(generators::by_name("tiny", 0).unwrap());
+    });
+    b.run("graph-gen/reddit-s(n=8000,deg=25)", 1, 3, || {
+        std::hint::black_box(generators::by_name("reddit-s", 0).unwrap());
+    });
+
+    // ---- partitioners -------------------------------------------------------
+    let ds = generators::by_name("reddit-s", 0).unwrap();
+    for name in ["random", "bfs", "ldg", "metis"] {
+        let p = partition::by_name(name).unwrap();
+        let mut rng = Pcg64::new(1);
+        b.run(&format!("partition/{name}(reddit-s,P=8)"), 1, 3, || {
+            std::hint::black_box(p.partition(&ds.graph, 8, &mut rng));
+        });
+    }
+
+    // ---- sampler / block building ------------------------------------------
+    let mut rng = Pcg64::new(2);
+    let bb = BlockBuilder::new(32, 8, 8, ds.d, 16, false);
+    let train = ds.splits.train.clone();
+    b.run("sampler/block-build(B=32,f=8x8,reddit-s)", 3, 50, || {
+        let batch = rng.sample_without_replacement(&train, 32);
+        std::hint::black_box(bb.build(&batch, &ds.graph, &ds, &mut rng));
+    });
+    let mut bb_full = bb.clone();
+    bb_full.fanout = Fanout::Full;
+    b.run("sampler/block-build-full-neighbors", 3, 50, || {
+        let batch = rng.sample_without_replacement(&train, 32);
+        std::hint::black_box(bb_full.build(&batch, &ds.graph, &ds, &mut rng));
+    });
+
+    // ---- runtime: HLO step latency -------------------------------------------
+    let artifacts_ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if artifacts_ok {
+        let rt = Runtime::load("artifacts").unwrap();
+        for (ds_name, arch) in [("tiny", "gcn"), ("reddit-s", "sage"), ("reddit-s", "gat")]
+        {
+            let train_name = Runtime::train_name(arch, "adam", ds_name);
+            if rt.meta(&train_name).is_err() {
+                continue;
+            }
+            let data = generators::by_name(ds_name, 0).unwrap();
+            let meta = rt.meta(&train_name).unwrap().clone();
+            let mut rng = Pcg64::new(3);
+            let mut state = ModelState::init(&meta, &mut rng);
+            let bb = BlockBuilder::new(
+                meta.dims.b,
+                meta.dims.f1,
+                meta.dims.f2,
+                meta.dims.d,
+                meta.dims.c,
+                meta.multilabel(),
+            );
+            let batch = rng.sample_without_replacement(&data.splits.train, meta.dims.b);
+            let blk = bb.build(&batch, &data.graph, &data, &mut rng);
+            rt.warmup(&train_name).unwrap();
+            let iters = if ds_name == "tiny" { 40 } else { 15 };
+            b.run(
+                &format!("runtime/train-step({arch},{ds_name})"),
+                2,
+                iters,
+                || {
+                    std::hint::black_box(
+                        rt.train_step(&train_name, &mut state, &blk, 0.01).unwrap(),
+                    );
+                },
+            );
+            let eval_name = Runtime::eval_name(arch, ds_name);
+            if rt.meta(&eval_name).is_ok() {
+                rt.warmup(&eval_name).unwrap();
+                b.run(
+                    &format!("runtime/eval-step({arch},{ds_name})"),
+                    2,
+                    iters,
+                    || {
+                        std::hint::black_box(
+                            rt.eval_step(&eval_name, &state.params, &blk).unwrap(),
+                        );
+                    },
+                );
+            }
+        }
+
+        // ---- end-to-end round (Fig 1 / Table 1 substrate) --------------------
+        let rt2 = Runtime::load("artifacts").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset = "tiny".into();
+        cfg.arch = "gcn".into();
+        cfg.algorithm = Algorithm::Llcg;
+        cfg.parts = 4;
+        cfg.rounds = 1;
+        cfg.schedule = Schedule::Fixed { k: 4 };
+        cfg.eval_max_nodes = 64;
+        let data = generators::by_name("tiny", 0).unwrap();
+        b.run("round/llcg(tiny,P=4,K=4)+eval", 1, 8, || {
+            std::hint::black_box(driver::run_experiment(&cfg, &data, &rt2).unwrap());
+        });
+        let mut cfg_no_eval = cfg.clone();
+        cfg_no_eval.eval_every = 10; // skip eval inside the single round
+        b.run("round/llcg(tiny,P=4,K=4)no-eval", 1, 8, || {
+            std::hint::black_box(
+                driver::run_experiment(&cfg_no_eval, &data, &rt2).unwrap(),
+            );
+        });
+    } else {
+        eprintln!("(artifacts missing — skipping runtime benches; run `make artifacts`)");
+    }
+
+    // ---- comm: parameter averaging -------------------------------------------
+    let mut rng = Pcg64::new(4);
+    let states: Vec<ModelState> = (0..8)
+        .map(|_| ModelState {
+            params: vec![
+                llcg::runtime::Tensor::glorot(&[64, 64], &mut rng),
+                llcg::runtime::Tensor::glorot(&[64, 16], &mut rng),
+            ],
+            opt: vec![],
+        })
+        .collect();
+    b.run("comm/average-params(8 workers, 5k params)", 5, 200, || {
+        let refs: Vec<&ModelState> = states.iter().collect();
+        std::hint::black_box(ModelState::average_params(&refs));
+    });
+
+    println!("\n{} benchmarks complete.", b.rows.len());
+}

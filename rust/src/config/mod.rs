@@ -1,0 +1,249 @@
+//! Run configuration: JSON-file + CLI-flag configuration for distributed
+//! training runs, with dataset/algorithm/partitioner registries.
+
+use crate::coordinator::{Algorithm, CorrectionBatch, Schedule};
+use crate::util::Json;
+
+/// Everything needed to launch one distributed training run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub dataset: String,
+    pub arch: String,
+    pub algorithm: Algorithm,
+    pub parts: usize,
+    pub rounds: usize,
+    pub schedule: Schedule,
+    /// server correction steps per round (LLCG)
+    pub correction_steps: usize,
+    pub correction_batch: CorrectionBatch,
+    /// full neighbors (capped) vs sampled neighbors in correction (Fig 7/8)
+    pub correction_full_neighbors: bool,
+    pub optimizer: String,
+    /// optimizer for server correction steps ("sgd" is Alg. 2's γ-step;
+    /// "adam" keeps persistent server Adam state across rounds)
+    pub server_optimizer: String,
+    pub lr: f32,
+    /// server correction learning rate (γ in Alg. 2)
+    pub server_lr: f32,
+    pub partitioner: String,
+    /// local neighbor-sampling ratio (Fig 6)
+    pub sample_ratio: f64,
+    /// extra-storage fraction for the SubgraphApprox baseline (Fig 11)
+    pub approx_storage: f64,
+    pub seed: u64,
+    /// validate every `eval_every` rounds (1 = every round)
+    pub eval_every: usize,
+    /// cap on validation nodes scored per eval (0 = all)
+    pub eval_max_nodes: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "tiny".into(),
+            arch: "gcn".into(),
+            algorithm: Algorithm::Llcg,
+            parts: 4,
+            rounds: 20,
+            schedule: Schedule::Fixed { k: 4 },
+            correction_steps: 1,
+            correction_batch: CorrectionBatch::Uniform,
+            correction_full_neighbors: true,
+            optimizer: "adam".into(),
+            server_optimizer: "adam".into(),
+            lr: 0.01,
+            server_lr: 0.01,
+            partitioner: "metis".into(),
+            sample_ratio: 1.0,
+            approx_storage: 0.1,
+            seed: 0,
+            eval_every: 1,
+            eval_max_nodes: 512,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON object (unknown keys rejected to catch typos).
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
+        let obj = j.as_object().ok_or("config must be a json object")?;
+        let mut cfg = ExperimentConfig::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "dataset" => cfg.dataset = req_str(v, k)?,
+                "arch" => cfg.arch = req_str(v, k)?,
+                "algorithm" => {
+                    cfg.algorithm = Algorithm::parse(&req_str(v, k)?)
+                        .ok_or_else(|| format!("unknown algorithm {v}"))?
+                }
+                "parts" => cfg.parts = req_num(v, k)? as usize,
+                "rounds" => cfg.rounds = req_num(v, k)? as usize,
+                "local_steps" => {
+                    cfg.schedule = Schedule::Fixed {
+                        k: req_num(v, k)? as usize,
+                    }
+                }
+                "rho" => {
+                    let rho = req_num(v, k)?;
+                    let k0 = match cfg.schedule {
+                        Schedule::Fixed { k } => k,
+                        Schedule::Exponential { k0, .. } => k0,
+                    };
+                    cfg.schedule = Schedule::Exponential { k0, rho };
+                }
+                "correction_steps" => cfg.correction_steps = req_num(v, k)? as usize,
+                "correction_batch" => {
+                    cfg.correction_batch = match req_str(v, k)?.as_str() {
+                        "uniform" => CorrectionBatch::Uniform,
+                        "max_cut" => CorrectionBatch::MaxCutEdges,
+                        other => return Err(format!("unknown correction_batch {other}")),
+                    }
+                }
+                "correction_full_neighbors" => {
+                    cfg.correction_full_neighbors =
+                        v.as_bool().ok_or(format!("{k} must be bool"))?
+                }
+                "optimizer" => cfg.optimizer = req_str(v, k)?,
+                "server_optimizer" => cfg.server_optimizer = req_str(v, k)?,
+                "lr" => cfg.lr = req_num(v, k)? as f32,
+                "server_lr" => cfg.server_lr = req_num(v, k)? as f32,
+                "partitioner" => cfg.partitioner = req_str(v, k)?,
+                "sample_ratio" => cfg.sample_ratio = req_num(v, k)?,
+                "approx_storage" => cfg.approx_storage = req_num(v, k)?,
+                "seed" => cfg.seed = req_num(v, k)? as u64,
+                "eval_every" => cfg.eval_every = req_num(v, k)? as usize,
+                "eval_max_nodes" => cfg.eval_max_nodes = req_num(v, k)? as usize,
+                "artifacts_dir" => cfg.artifacts_dir = req_str(v, k)?,
+                other => return Err(format!("unknown config key {other:?}")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Apply `--key=value` CLI overrides on top of this config.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let j = match key {
+            "dataset" | "arch" | "algorithm" | "optimizer" | "server_optimizer"
+            | "partitioner" | "correction_batch" | "artifacts_dir" => {
+                Json::Str(value.to_string())
+            }
+            "correction_full_neighbors" => Json::Bool(value == "true" || value == "1"),
+            _ => Json::Num(
+                value
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad numeric value for {key}: {value}"))?,
+            ),
+        };
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert(key.to_string(), j);
+        let patch = Json::Object(obj);
+        let merged = Self::from_json_onto(self.clone(), &patch)?;
+        *self = merged;
+        Ok(())
+    }
+
+    fn from_json_onto(base: ExperimentConfig, j: &Json) -> Result<ExperimentConfig, String> {
+        // Re-parse the patch keys onto an existing config.
+        let mut cfg = base;
+        let obj = j.as_object().ok_or("patch must be object")?;
+        for (k, v) in obj {
+            let mut single = std::collections::BTreeMap::new();
+            single.insert(k.clone(), v.clone());
+            let parsed = Self::from_json(&Json::Object(single))?;
+            match k.as_str() {
+                "dataset" => cfg.dataset = parsed.dataset,
+                "arch" => cfg.arch = parsed.arch,
+                "algorithm" => cfg.algorithm = parsed.algorithm,
+                "parts" => cfg.parts = parsed.parts,
+                "rounds" => cfg.rounds = parsed.rounds,
+                "local_steps" => cfg.schedule = parsed.schedule,
+                "rho" => {
+                    let k0 = match cfg.schedule {
+                        Schedule::Fixed { k } => k,
+                        Schedule::Exponential { k0, .. } => k0,
+                    };
+                    if let Schedule::Exponential { rho, .. } = parsed.schedule {
+                        cfg.schedule = Schedule::Exponential { k0, rho };
+                    }
+                }
+                "correction_steps" => cfg.correction_steps = parsed.correction_steps,
+                "correction_batch" => cfg.correction_batch = parsed.correction_batch,
+                "correction_full_neighbors" => {
+                    cfg.correction_full_neighbors = parsed.correction_full_neighbors
+                }
+                "optimizer" => cfg.optimizer = parsed.optimizer,
+                "server_optimizer" => cfg.server_optimizer = parsed.server_optimizer,
+                "lr" => cfg.lr = parsed.lr,
+                "server_lr" => cfg.server_lr = parsed.server_lr,
+                "partitioner" => cfg.partitioner = parsed.partitioner,
+                "sample_ratio" => cfg.sample_ratio = parsed.sample_ratio,
+                "approx_storage" => cfg.approx_storage = parsed.approx_storage,
+                "seed" => cfg.seed = parsed.seed,
+                "eval_every" => cfg.eval_every = parsed.eval_every,
+                "eval_max_nodes" => cfg.eval_max_nodes = parsed.eval_max_nodes,
+                "artifacts_dir" => cfg.artifacts_dir = parsed.artifacts_dir,
+                _ => unreachable!("from_json validated keys"),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+fn req_str(v: &Json, k: &str) -> Result<String, String> {
+    v.as_str()
+        .map(String::from)
+        .ok_or(format!("{k} must be a string"))
+}
+
+fn req_num(v: &Json, k: &str) -> Result<f64, String> {
+    v.as_f64().ok_or(format!("{k} must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let j = Json::parse(
+            r#"{"dataset":"reddit-s","arch":"sage","algorithm":"llcg","parts":8,
+                "rounds":75,"local_steps":4,"rho":1.1,"correction_steps":2,
+                "lr":0.01,"partitioner":"metis","seed":3}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.dataset, "reddit-s");
+        assert_eq!(cfg.parts, 8);
+        assert!(matches!(
+            cfg.schedule,
+            Schedule::Exponential { k0: 4, rho } if (rho - 1.1).abs() < 1e-9
+        ));
+        assert_eq!(cfg.correction_steps, 2);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let j = Json::parse(r#"{"datset":"typo"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_override("parts", "8").unwrap();
+        cfg.apply_override("algorithm", "psgd-pa").unwrap();
+        cfg.apply_override("lr", "0.05").unwrap();
+        assert_eq!(cfg.parts, 8);
+        assert_eq!(cfg.algorithm, Algorithm::PsgdPa);
+        assert!((cfg.lr - 0.05).abs() < 1e-9);
+        assert!(cfg.apply_override("nope", "1").is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Empirical measurement of the paper's theoretical quantities:
+//! the local-global gradient discrepancy κ² (§4.1) and the neighbor-sampling
+//! bias σ²_bias — the two terms that make the PSGD-PA residual irreducible
+//! (Thm 1) and that size the correction-step count S (Thm 2).
+//!
+//! Gradients are extracted through the SGD artifact: one SGD step with
+//! learning rate ε gives  g = (θ − θ') / ε  without a dedicated grad
+//! entry point.
+
+use anyhow::Result;
+
+use crate::graph::Dataset;
+use crate::runtime::{ModelState, Runtime, Tensor};
+use crate::sampler::{BlockBuilder, Fanout};
+use crate::util::Pcg64;
+
+const EPS: f32 = 1e-3;
+
+/// Gradient of the loss at `params` on mini-batches drawn from `ids` with
+/// adjacency `adj`, averaged over `batches` batches (flattened).
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_gradient(
+    rt: &Runtime,
+    sgd_name: &str,
+    params: &[Tensor],
+    ds: &Dataset,
+    adj: &crate::graph::CsrGraph,
+    ids: &[u32],
+    builder: &BlockBuilder,
+    batches: usize,
+    rng: &mut Pcg64,
+) -> Result<Vec<f32>> {
+    let total: usize = params.iter().map(|p| p.numel()).sum();
+    let mut grad = vec![0f32; total];
+    let meta = rt.meta(sgd_name)?.clone();
+    for _ in 0..batches {
+        let batch = rng.sample_without_replacement(ids, meta.dims.b);
+        if batch.is_empty() {
+            continue;
+        }
+        let blk = builder.build(&batch, adj, ds, rng);
+        let mut state = ModelState {
+            params: params.to_vec(),
+            opt: vec![],
+        };
+        rt.train_step(sgd_name, &mut state, &blk, EPS)?;
+        let mut off = 0usize;
+        for (p_new, p_old) in state.params.iter().zip(params) {
+            for (g, (&pn, &po)) in grad[off..off + p_old.numel()]
+                .iter_mut()
+                .zip(p_new.data.iter().zip(&p_old.data))
+            {
+                *g += (po - pn) / EPS / batches as f32;
+            }
+            off += p_old.numel();
+        }
+    }
+    Ok(grad)
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64) * ((x - y) as f64))
+        .sum()
+}
+
+/// Measured discrepancy report.
+#[derive(Clone, Debug)]
+pub struct Discrepancy {
+    /// max_p ‖∇L_p^local − ∇L_p^full‖² — cut-edge structure term κ_A²
+    pub kappa_a: f64,
+    /// max_p ‖∇L_p^full − ∇L‖² — feature/label heterogeneity term κ_X²
+    pub kappa_x: f64,
+    /// ‖∇̃ (sampled) − ∇ (full-neighbor)‖² on the global graph — σ²_bias proxy
+    pub sigma_bias: f64,
+}
+
+impl Discrepancy {
+    pub fn kappa(&self) -> f64 {
+        self.kappa_a + self.kappa_x
+    }
+}
+
+/// Measure κ_A², κ_X², σ²_bias at `params` for a given partition.
+#[allow(clippy::too_many_arguments)]
+pub fn measure(
+    rt: &Runtime,
+    arch: &str,
+    dataset: &str,
+    params: &[Tensor],
+    ds: &Dataset,
+    assignment: &[u32],
+    parts: usize,
+    batches: usize,
+    seed: u64,
+) -> Result<Discrepancy> {
+    let sgd_name = Runtime::train_name(arch, "sgd", dataset);
+    let meta = rt.meta(&sgd_name)?.clone();
+    let mut builder = BlockBuilder::new(
+        meta.dims.b,
+        meta.dims.f1,
+        meta.dims.f2,
+        meta.dims.d,
+        meta.dims.c,
+        meta.multilabel(),
+    );
+    builder.fanout = Fanout::Full; // full-neighbor gradients for κ terms
+    let mut rng = Pcg64::new(seed);
+
+    // global full-neighbor gradient
+    let g_global = estimate_gradient(
+        rt,
+        &sgd_name,
+        params,
+        ds,
+        &ds.graph,
+        &ds.splits.train,
+        &builder,
+        batches,
+        &mut rng.split(0),
+    )?;
+
+    let mut kappa_a = 0f64;
+    let mut kappa_x = 0f64;
+    for p in 0..parts as u32 {
+        let ids: Vec<u32> = ds
+            .splits
+            .train
+            .iter()
+            .copied()
+            .filter(|&v| assignment[v as usize] == p)
+            .collect();
+        if ids.is_empty() {
+            continue;
+        }
+        let local_adj = ds.graph.induced_view(assignment, p);
+        // ∇L_p^local: local nodes, local adjacency (cut-edges dropped)
+        let g_local = estimate_gradient(
+            rt, &sgd_name, params, ds, &local_adj, &ids, &builder, batches,
+            &mut rng.split(1 + p as u64),
+        )?;
+        // ∇L_p^full: local nodes, FULL adjacency (Eq. 5)
+        let g_full = estimate_gradient(
+            rt, &sgd_name, params, ds, &ds.graph, &ids, &builder, batches,
+            &mut rng.split(101 + p as u64),
+        )?;
+        kappa_a = kappa_a.max(sq_dist(&g_local, &g_full));
+        kappa_x = kappa_x.max(sq_dist(&g_full, &g_global));
+    }
+
+    // σ²_bias: neighbor-sampled vs full-neighbor gradient on the full graph
+    let mut sampled_builder = builder.clone();
+    sampled_builder.fanout = Fanout::Sample;
+    sampled_builder.sample_ratio = 0.5;
+    let g_sampled = estimate_gradient(
+        rt,
+        &sgd_name,
+        params,
+        ds,
+        &ds.graph,
+        &ds.splits.train,
+        &sampled_builder,
+        batches,
+        &mut rng.split(999),
+    )?;
+    let sigma_bias = sq_dist(&g_sampled, &g_global);
+
+    Ok(Discrepancy {
+        kappa_a,
+        kappa_x,
+        sigma_bias,
+    })
+}

@@ -1,0 +1,656 @@
+//! The distributed-training driver: partitions the graph, sets up workers
+//! and the parameter server, and runs the round loop of Algorithm 1/2.
+//!
+//! Execution model: the paper itself simulates distribution on one box and
+//! reports *communication rounds and bytes*, not wall-clock (Section 5,
+//! "Real-world simulation"). We do the same: workers execute sequentially on
+//! the single PJRT CPU client (the `xla` crate client is not `Send`), and
+//! the *simulated parallel* round time is `max_p(worker compute) + server
+//! compute` — recorded per round alongside the byte counters.
+
+use anyhow::{bail, Result};
+
+use super::{Algorithm, CommStats, CorrectionBatch};
+use crate::config::ExperimentConfig;
+use crate::graph::{generators, CsrGraph, Dataset, Labels};
+use crate::metrics;
+use crate::partition;
+use crate::runtime::{ModelState, Runtime, Tensor};
+use crate::sampler::{BatchIter, BlockBuilder, Fanout};
+use crate::util::{Json, Pcg64};
+
+/// One worker's static setup.
+pub struct PartInfo {
+    pub part: u32,
+    /// adjacency this worker trains on (induced / global / augmented)
+    pub adj: CsrGraph,
+    /// training nodes owned by this worker
+    pub train_ids: Vec<u32>,
+    /// one-time feature-storage bytes (SubgraphApprox)
+    pub storage_bytes: u64,
+}
+
+/// Per-round measurements — one row of every figure in the paper.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub local_steps: usize,
+    /// mean local training loss across workers this round
+    pub local_loss: f64,
+    /// loss of the (corrected) global model on a global train sample
+    pub global_loss: f64,
+    /// validation score of the (corrected) global model (F1 or ROC-AUC)
+    pub val_score: f64,
+    pub comm: CommStats,
+    /// cumulative bytes including this round
+    pub cum_bytes: u64,
+    /// simulated parallel compute time: max over workers
+    pub worker_time_s: f64,
+    /// server averaging + correction + eval time
+    pub server_time_s: f64,
+}
+
+/// Complete result of one distributed run.
+pub struct RunResult {
+    pub algorithm: Algorithm,
+    pub dataset: String,
+    pub arch: String,
+    pub parts: usize,
+    pub records: Vec<RoundRecord>,
+    pub final_val: f64,
+    pub final_test: f64,
+    pub cut_ratio: f64,
+    /// avg bytes communicated per round
+    pub avg_round_bytes: f64,
+    pub total_steps: usize,
+}
+
+impl RunResult {
+    pub fn avg_round_mb(&self) -> f64 {
+        self.avg_round_bytes / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algorithm", Json::str(self.algorithm.name())),
+            ("dataset", Json::str(&self.dataset)),
+            ("arch", Json::str(&self.arch)),
+            ("parts", Json::num(self.parts as f64)),
+            ("final_val", Json::num(self.final_val)),
+            ("final_test", Json::num(self.final_test)),
+            ("cut_ratio", Json::num(self.cut_ratio)),
+            ("avg_round_mb", Json::num(self.avg_round_mb())),
+            ("total_steps", Json::num(self.total_steps as f64)),
+            (
+                "rounds",
+                Json::arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::num(r.round as f64)),
+                                ("local_steps", Json::num(r.local_steps as f64)),
+                                ("local_loss", Json::num(r.local_loss)),
+                                ("global_loss", Json::num(r.global_loss)),
+                                ("val_score", Json::num(r.val_score)),
+                                ("bytes", Json::num(r.comm.total() as f64)),
+                                ("cum_bytes", Json::num(r.cum_bytes as f64)),
+                                ("worker_time_s", Json::num(r.worker_time_s)),
+                                ("server_time_s", Json::num(r.server_time_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Build each worker's adjacency view + train-node ownership.
+pub fn build_parts(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    assignment: &[u32],
+    rng: &mut Pcg64,
+) -> Vec<PartInfo> {
+    let mut parts = Vec::with_capacity(cfg.parts);
+    for p in 0..cfg.parts as u32 {
+        let train_ids: Vec<u32> = ds
+            .splits
+            .train
+            .iter()
+            .copied()
+            .filter(|&v| assignment[v as usize] == p)
+            .collect();
+        let (adj, storage_bytes) = match cfg.algorithm {
+            Algorithm::Ggs | Algorithm::FullSync => (ds.graph.clone(), 0),
+            Algorithm::SubgraphApprox => {
+                build_approx_view(ds, assignment, p, cfg.approx_storage, rng)
+            }
+            Algorithm::PsgdPa | Algorithm::Llcg => {
+                (ds.graph.induced_view(assignment, p), 0)
+            }
+        };
+        parts.push(PartInfo {
+            part: p,
+            adj,
+            train_ids,
+            storage_bytes,
+        });
+    }
+    parts
+}
+
+/// SubgraphApprox (Angerd et al.): store a sampled `storage` fraction of
+/// remote nodes; the worker's adjacency is the subgraph induced by
+/// (members ∪ stored remotes). Storage features are a one-time transfer.
+fn build_approx_view(
+    ds: &Dataset,
+    assignment: &[u32],
+    part: u32,
+    storage: f64,
+    rng: &mut Pcg64,
+) -> (CsrGraph, u64) {
+    let n = ds.n();
+    let members: Vec<u32> = (0..n as u32)
+        .filter(|&v| assignment[v as usize] == part)
+        .collect();
+    let remotes: Vec<u32> = (0..n as u32)
+        .filter(|&v| assignment[v as usize] != part)
+        .collect();
+    let extra = ((members.len() as f64) * storage).round() as usize;
+    let stored = rng.sample_without_replacement(&remotes, extra);
+    let mut keep = vec![false; n];
+    for &v in members.iter().chain(&stored) {
+        keep[v as usize] = true;
+    }
+    let mut indptr = Vec::with_capacity(n + 1);
+    indptr.push(0usize);
+    let mut indices = Vec::new();
+    for v in 0..n as u32 {
+        if keep[v as usize] {
+            for &u in ds.graph.neighbors(v) {
+                if keep[u as usize] {
+                    indices.push(u);
+                }
+            }
+        }
+        indptr.push(indices.len());
+    }
+    let bytes = (stored.len() * ds.d * 4) as u64;
+    (
+        CsrGraph {
+            n,
+            indptr,
+            indices,
+        },
+        bytes,
+    )
+}
+
+/// Pick the correction mini-batch (Fig 9): uniform over global training
+/// nodes, or biased toward endpoints of cut edges.
+fn correction_batch(
+    batch_kind: CorrectionBatch,
+    ds: &Dataset,
+    assignment: &[u32],
+    b: usize,
+    rng: &mut Pcg64,
+) -> Vec<u32> {
+    match batch_kind {
+        CorrectionBatch::Uniform => rng.sample_without_replacement(&ds.splits.train, b),
+        CorrectionBatch::MaxCutEdges => {
+            let mut cut_nodes: Vec<u32> = Vec::new();
+            for v in 0..ds.n() as u32 {
+                if ds
+                    .graph
+                    .neighbors(v)
+                    .iter()
+                    .any(|&u| assignment[u as usize] != assignment[v as usize])
+                {
+                    cut_nodes.push(v);
+                }
+            }
+            let train_set: std::collections::HashSet<u32> =
+                ds.splits.train.iter().copied().collect();
+            let cut_train: Vec<u32> = cut_nodes
+                .into_iter()
+                .filter(|v| train_set.contains(v))
+                .collect();
+            if cut_train.len() >= b {
+                rng.sample_without_replacement(&cut_train, b)
+            } else {
+                let mut batch = cut_train;
+                let rest: Vec<u32> = ds
+                    .splits
+                    .train
+                    .iter()
+                    .copied()
+                    .filter(|v| !batch.contains(v))
+                    .collect();
+                batch.extend(rng.sample_without_replacement(&rest, b - batch.len()));
+                batch
+            }
+        }
+    }
+}
+
+/// Evaluate `params` on `ids` (chunked, full-neighbor blocks on the full
+/// graph); returns logits in `ids` order.
+pub fn eval_logits(
+    rt: &Runtime,
+    eval_name: &str,
+    params: &[Tensor],
+    ds: &Dataset,
+    ids: &[u32],
+    builder: &BlockBuilder,
+    rng: &mut Pcg64,
+) -> Result<Vec<f32>> {
+    let meta = rt.meta(eval_name)?.clone();
+    let c = meta.dims.c;
+    let mut full_builder = builder.clone();
+    full_builder.fanout = Fanout::Full;
+    full_builder.sample_ratio = 1.0;
+    let mut logits = Vec::with_capacity(ids.len() * c);
+    for chunk in ids.chunks(meta.dims.b) {
+        let blk = full_builder.build(chunk, &ds.graph, ds, rng);
+        let out = rt.eval_step(eval_name, params, &blk)?;
+        logits.extend_from_slice(&out[..chunk.len() * c]);
+    }
+    Ok(logits)
+}
+
+/// Score = ROC-AUC for multilabel-AUC datasets (proteins), micro-F1 otherwise.
+pub fn score(ds: &Dataset, logits: &[f32], c: usize, ids: &[u32]) -> f64 {
+    if ds.name.starts_with("proteins") {
+        metrics::roc_auc(logits, c, &ds.labels, ids)
+    } else {
+        metrics::micro_f1(logits, c, &ds.labels, ids)
+    }
+}
+
+/// Run one complete distributed-training experiment.
+pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<RunResult> {
+    let mut root_rng = Pcg64::new(cfg.seed);
+
+    // --- artifacts --------------------------------------------------------
+    let train_name = Runtime::train_name(&cfg.arch, &cfg.optimizer, &cfg.dataset);
+    let server_train_name =
+        Runtime::train_name(&cfg.arch, &cfg.server_optimizer, &cfg.dataset);
+    let eval_name = Runtime::eval_name(&cfg.arch, &cfg.dataset);
+    let meta = rt.meta(&train_name)?.clone();
+    let dims = meta.dims;
+    if dims.d != ds.d {
+        bail!(
+            "dataset {} has d={} but artifact {} expects d={}",
+            ds.name, ds.d, train_name, dims.d
+        );
+    }
+
+    // --- partition ---------------------------------------------------------
+    let assignment = if cfg.parts <= 1 {
+        vec![0u32; ds.n()]
+    } else {
+        let p = partition::by_name(&cfg.partitioner)
+            .ok_or_else(|| anyhow::anyhow!("unknown partitioner {}", cfg.partitioner))?;
+        p.partition(&ds.graph, cfg.parts, &mut root_rng.split(1))
+    };
+    let cut_ratio = ds.graph.cut_ratio(&assignment);
+    let mut setup_rng = root_rng.split(2);
+    let parts = build_parts(cfg, ds, &assignment, &mut setup_rng);
+
+    // --- states ------------------------------------------------------------
+    let mut init_rng = root_rng.split(3);
+    let global_init = ModelState::init(&meta, &mut init_rng);
+    let mut workers: Vec<ModelState> = (0..cfg.parts).map(|_| global_init.clone()).collect();
+    let mut global_params: Vec<Tensor> = global_init.params.clone();
+    // server correction state (its optimizer state persists across rounds)
+    let server_meta = rt.meta(&server_train_name)?.clone();
+    let mut server_state = ModelState::init(&server_meta, &mut init_rng.split(9));
+
+    // --- builders ----------------------------------------------------------
+    let mut local_builder = BlockBuilder::new(
+        dims.b,
+        dims.f1,
+        dims.f2,
+        dims.d,
+        dims.c,
+        meta.multilabel(),
+    );
+    local_builder.sample_ratio = cfg.sample_ratio;
+    let mut corr_builder = local_builder.clone();
+    corr_builder.sample_ratio = 1.0;
+    corr_builder.fanout = if cfg.correction_full_neighbors {
+        Fanout::Full
+    } else {
+        Fanout::Sample
+    };
+
+    let param_bytes: u64 = global_params.iter().map(|t| t.size_bytes()).sum();
+    let is_fullsync = cfg.algorithm == Algorithm::FullSync;
+
+    let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
+    let mut cum_bytes: u64 = parts.iter().map(|p| p.storage_bytes).sum();
+    let mut eval_rng = root_rng.split(4);
+    let mut corr_rng = root_rng.split(5);
+
+    // --- round loop ---------------------------------------------------------
+    for round in 1..=cfg.rounds {
+        let k = if is_fullsync {
+            1
+        } else {
+            cfg.schedule.steps_for_round(round)
+        };
+        let mut comm = CommStats::default();
+        if round == 1 {
+            comm.feature_bytes += parts.iter().map(|p| p.storage_bytes).sum::<u64>();
+        }
+        let mut worker_time = 0f64;
+        let mut local_loss_sum = 0f64;
+        let mut local_loss_n = 0usize;
+
+        // ---- local training (simulated-parallel) --------------------------
+        for (p, info) in parts.iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            // receive global params (download)
+            comm.down_bytes += param_bytes;
+            workers[p].set_params(global_params.clone());
+            if info.train_ids.is_empty() {
+                comm.up_bytes += param_bytes;
+                continue;
+            }
+            let mut rng = super::worker_rng(cfg.seed, p, round);
+            let mut batches = BatchIter::new(&info.train_ids, dims.b, &mut rng);
+            for _ in 0..k {
+                let batch = match batches.next() {
+                    Some(b) => b,
+                    None => {
+                        batches = BatchIter::new(&info.train_ids, dims.b, &mut rng);
+                        batches.next().unwrap()
+                    }
+                };
+                let blk = local_builder.build(&batch, &info.adj, ds, &mut rng);
+                if cfg.algorithm.uses_global_view() {
+                    comm.feature_bytes += blk.remote_feature_bytes(&assignment, info.part);
+                }
+                let loss = rt.train_step(&train_name, &mut workers[p], &blk, cfg.lr)?;
+                local_loss_sum += loss as f64;
+                local_loss_n += 1;
+            }
+            // send params to server (upload)
+            comm.up_bytes += param_bytes;
+            worker_time = worker_time.max(t0.elapsed().as_secs_f64());
+        }
+
+        // ---- server: average + correct ------------------------------------
+        let t_server = std::time::Instant::now();
+        let refs: Vec<&ModelState> = workers.iter().collect();
+        global_params = ModelState::average_params(&refs);
+
+        if cfg.algorithm.corrects() && cfg.correction_steps > 0 {
+            server_state.set_params(global_params.clone());
+            for _ in 0..cfg.correction_steps {
+                let batch = correction_batch(
+                    cfg.correction_batch,
+                    ds,
+                    &assignment,
+                    dims.b,
+                    &mut corr_rng,
+                );
+                let blk = corr_builder.build(&batch, &ds.graph, ds, &mut corr_rng);
+                rt.train_step(&server_train_name, &mut server_state, &blk, cfg.server_lr)?;
+            }
+            global_params = server_state.params.clone();
+        }
+
+        // ---- evaluation -----------------------------------------------------
+        let (mut val_score, mut global_loss) = (f64::NAN, f64::NAN);
+        if round % cfg.eval_every == 0 || round == cfg.rounds {
+            let val_ids: Vec<u32> = if cfg.eval_max_nodes > 0
+                && ds.splits.val.len() > cfg.eval_max_nodes
+            {
+                eval_rng.sample_without_replacement(&ds.splits.val, cfg.eval_max_nodes)
+            } else {
+                ds.splits.val.clone()
+            };
+            let logits = eval_logits(
+                rt,
+                &eval_name,
+                &global_params,
+                ds,
+                &val_ids,
+                &local_builder,
+                &mut eval_rng,
+            )?;
+            val_score = score(ds, &logits, dims.c, &val_ids);
+
+            let train_sample: Vec<u32> = if cfg.eval_max_nodes > 0
+                && ds.splits.train.len() > cfg.eval_max_nodes
+            {
+                eval_rng.sample_without_replacement(&ds.splits.train, cfg.eval_max_nodes)
+            } else {
+                ds.splits.train.clone()
+            };
+            let tr_logits = eval_logits(
+                rt,
+                &eval_name,
+                &global_params,
+                ds,
+                &train_sample,
+                &local_builder,
+                &mut eval_rng,
+            )?;
+            global_loss = metrics::mean_loss(&tr_logits, dims.c, &ds.labels, &train_sample);
+        }
+        let server_time = t_server.elapsed().as_secs_f64();
+
+        cum_bytes += comm.total();
+        records.push(RoundRecord {
+            round,
+            local_steps: k,
+            local_loss: if local_loss_n > 0 {
+                local_loss_sum / local_loss_n as f64
+            } else {
+                f64::NAN
+            },
+            global_loss,
+            val_score,
+            comm,
+            cum_bytes,
+            worker_time_s: worker_time,
+            server_time_s: server_time,
+        });
+    }
+
+    // --- final test score ----------------------------------------------------
+    let test_ids: Vec<u32> = if cfg.eval_max_nodes > 0
+        && ds.splits.test.len() > cfg.eval_max_nodes * 2
+    {
+        eval_rng.sample_without_replacement(&ds.splits.test, cfg.eval_max_nodes * 2)
+    } else {
+        ds.splits.test.clone()
+    };
+    let final_test = if test_ids.is_empty() {
+        f64::NAN
+    } else {
+        let logits = eval_logits(
+            rt,
+            &eval_name,
+            &global_params,
+            ds,
+            &test_ids,
+            &local_builder,
+            &mut eval_rng,
+        )?;
+        score(ds, &logits, dims.c, &test_ids)
+    };
+    let final_val = records
+        .iter()
+        .rev()
+        .find(|r| !r.val_score.is_nan())
+        .map(|r| r.val_score)
+        .unwrap_or(f64::NAN);
+
+    let total_rounds = records.len().max(1) as f64;
+    let avg_round_bytes =
+        records.iter().map(|r| r.comm.total()).sum::<u64>() as f64 / total_rounds;
+    Ok(RunResult {
+        algorithm: cfg.algorithm,
+        dataset: cfg.dataset.clone(),
+        arch: cfg.arch.clone(),
+        parts: cfg.parts,
+        records,
+        final_val,
+        final_test,
+        cut_ratio,
+        avg_round_bytes,
+        total_steps: if is_fullsync {
+            cfg.rounds
+        } else {
+            cfg.schedule.total_steps(cfg.rounds)
+        },
+    })
+}
+
+/// Convenience: generate the dataset named in `cfg` (registry lookup).
+pub fn load_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
+    generators::by_name(&cfg.dataset, cfg.seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.dataset))
+}
+
+/// Label-distribution skew across parts: mean total-variation distance
+/// between each part's label histogram and the global histogram — a direct
+/// observable for the κ_X heterogeneity of §4.1.
+pub fn label_skew(ds: &Dataset, assignment: &[u32], parts: usize) -> f64 {
+    let c = ds.c();
+    let hist = |ids: &dyn Fn(u32) -> bool| -> Vec<f64> {
+        let mut h = vec![0f64; c];
+        let mut n = 0f64;
+        match &ds.labels {
+            Labels::MultiClass(y) => {
+                for v in 0..ds.n() as u32 {
+                    if ids(v) {
+                        h[y[v as usize] as usize] += 1.0;
+                        n += 1.0;
+                    }
+                }
+            }
+            Labels::MultiLabel { data, c: dc } => {
+                for v in 0..ds.n() as u32 {
+                    if ids(v) {
+                        for j in 0..*dc {
+                            h[j] += data[v as usize * dc + j] as f64;
+                        }
+                        n += 1.0;
+                    }
+                }
+            }
+        }
+        if n > 0.0 {
+            for x in h.iter_mut() {
+                *x /= n;
+            }
+        }
+        h
+    };
+    let global = hist(&|_| true);
+    let mut tv_sum = 0f64;
+    for p in 0..parts as u32 {
+        let local = hist(&|v| assignment[v as usize] == p);
+        let tv: f64 = global
+            .iter()
+            .zip(&local)
+            .map(|(g, l)| (g - l).abs())
+            .sum::<f64>()
+            / 2.0;
+        tv_sum += tv;
+    }
+    tv_sum / parts as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_skew_detects_community_partitions() {
+        let ds = generators::by_name("tiny", 0).unwrap();
+        // partition by label (maximum skew) vs round-robin (no skew)
+        let by_label: Vec<u32> = match &ds.labels {
+            Labels::MultiClass(y) => y.iter().map(|&l| (l % 4) as u32).collect(),
+            _ => unreachable!(),
+        };
+        let round_robin: Vec<u32> = (0..ds.n() as u32).map(|v| v % 4).collect();
+        let skew_label = label_skew(&ds, &by_label, 4);
+        let skew_rr = label_skew(&ds, &round_robin, 4);
+        assert!(
+            skew_label > 3.0 * skew_rr.max(0.01),
+            "label {skew_label} vs rr {skew_rr}"
+        );
+    }
+
+    #[test]
+    fn correction_batch_uniform_is_from_train() {
+        let ds = generators::by_name("tiny", 1).unwrap();
+        let assignment: Vec<u32> = (0..ds.n() as u32).map(|v| v % 2).collect();
+        let mut rng = Pcg64::new(1);
+        let train: std::collections::HashSet<u32> = ds.splits.train.iter().copied().collect();
+        let b = correction_batch(CorrectionBatch::Uniform, &ds, &assignment, 16, &mut rng);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|v| train.contains(v)));
+    }
+
+    #[test]
+    fn correction_batch_max_cut_prefers_cut_nodes() {
+        let ds = generators::by_name("tiny", 2).unwrap();
+        let assignment: Vec<u32> = (0..ds.n() as u32).map(|v| v % 2).collect();
+        let mut rng = Pcg64::new(2);
+        let b = correction_batch(CorrectionBatch::MaxCutEdges, &ds, &assignment, 16, &mut rng);
+        // alternating assignment cuts nearly every edge: all batch nodes
+        // should touch a cut edge
+        let n_cut = b
+            .iter()
+            .filter(|&&v| {
+                ds.graph
+                    .neighbors(v)
+                    .iter()
+                    .any(|&u| assignment[u as usize] != assignment[v as usize])
+            })
+            .count();
+        assert!(n_cut >= 14, "only {n_cut}/16 touch cut edges");
+    }
+
+    #[test]
+    fn build_parts_views_respect_algorithm() {
+        let ds = generators::by_name("tiny", 3).unwrap();
+        let assignment: Vec<u32> = (0..ds.n() as u32).map(|v| v % 2).collect();
+        let mut rng = Pcg64::new(3);
+        let mut mk = |alg: Algorithm| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.parts = 2;
+            cfg.algorithm = alg;
+            build_parts(&cfg, &ds, &assignment, &mut rng)
+        };
+        // induced views drop cut edges
+        let local = mk(Algorithm::PsgdPa);
+        let mut induced_edges = 0usize;
+        for v in 0..ds.n() as u32 {
+            induced_edges += local[0].adj.neighbors(v).len();
+        }
+        let global = mk(Algorithm::Ggs);
+        let mut global_edges = 0usize;
+        for v in 0..ds.n() as u32 {
+            global_edges += global[0].adj.neighbors(v).len();
+        }
+        assert!(induced_edges < global_edges);
+        // approx view sits in between and reports storage bytes
+        let approx = mk(Algorithm::SubgraphApprox);
+        assert!(approx[0].storage_bytes > 0);
+        let mut approx_edges = 0usize;
+        for v in 0..ds.n() as u32 {
+            approx_edges += approx[0].adj.neighbors(v).len();
+        }
+        assert!(approx_edges > induced_edges);
+        assert!(approx_edges < global_edges);
+    }
+}

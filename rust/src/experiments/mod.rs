@@ -1,0 +1,590 @@
+//! Reproduction harness: one function per paper table/figure (DESIGN.md
+//! experiment index). Each prints the paper's rows/series and writes a JSON
+//! record under `runs/` for EXPERIMENTS.md.
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{driver, Algorithm, CorrectionBatch, Schedule};
+use crate::graph::generators;
+use crate::runtime::Runtime;
+use crate::util::Json;
+
+pub const REPRO_COMMANDS: &[&str] = &[
+    "fig1", "fig2", "fig4", "table1", "fig5", "fig6", "fig78", "fig9", "fig10", "fig11",
+    "theory",
+];
+
+pub fn run_repro(name: &str, flags: &[(String, String)]) -> Result<()> {
+    let mut opts = ReproOpts::default();
+    for (k, v) in flags {
+        match k.as_str() {
+            "fast" => opts.fast = v == "true" || v == "1",
+            "seed" => opts.seed = v.parse()?,
+            "seeds" => opts.seeds = v.parse()?,
+            "out-dir" => opts.out_dir = v.clone(),
+            "artifacts_dir" | "artifacts-dir" => opts.artifacts_dir = v.clone(),
+            _ => bail!("unknown flag --{k}"),
+        }
+    }
+    match name {
+        "fig1" => fig1(&opts),
+        "fig2" => fig2(&opts),
+        "fig4" => fig4(&opts),
+        "table1" => table1(&opts),
+        "fig5" => fig5(&opts),
+        "fig6" => fig6(&opts),
+        "fig78" => fig78(&opts),
+        "fig9" => fig9(&opts),
+        "fig10" => fig10(&opts),
+        "fig11" => fig11(&opts),
+        "theory" => theory(&opts),
+        other => bail!("unknown repro target {other:?} (have {REPRO_COMMANDS:?})"),
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ReproOpts {
+    /// shrink rounds/datasets for smoke runs
+    pub fast: bool,
+    pub seed: u64,
+    /// repetitions for mean±std rows (Table 1)
+    pub seeds: usize,
+    pub out_dir: String,
+    pub artifacts_dir: String,
+}
+
+impl Default for ReproOpts {
+    fn default() -> Self {
+        ReproOpts {
+            fast: false,
+            seed: 0,
+            seeds: 2,
+            out_dir: "runs".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ReproOpts {
+    fn base_cfg(&self, dataset: &str, arch: &str) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dataset = dataset.to_string();
+        cfg.arch = arch.to_string();
+        cfg.artifacts_dir = self.artifacts_dir.clone();
+        cfg.seed = self.seed;
+        cfg.parts = 8;
+        cfg.rounds = if self.fast { 6 } else { 30 };
+        cfg.eval_every = if self.fast { 2 } else { 5 };
+        cfg.schedule = Schedule::Fixed { k: 4 };
+        cfg.eval_max_nodes = 384;
+        cfg
+    }
+
+    fn save(&self, name: &str, j: Json) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = format!("{}/{}.json", self.out_dir, name);
+        std::fs::write(&path, j.to_string_pretty())?;
+        eprintln!("wrote {path}");
+        Ok(())
+    }
+}
+
+fn run_one(cfg: &ExperimentConfig, rt: &Runtime) -> Result<driver::RunResult> {
+    let ds = driver::load_dataset(cfg)?;
+    driver::run_experiment(cfg, &ds, rt)
+}
+
+/// Algorithms compared in the headline figures.
+fn algos3() -> Vec<Algorithm> {
+    vec![Algorithm::PsgdPa, Algorithm::Ggs, Algorithm::Llcg]
+}
+
+fn setup_llcg(cfg: &mut ExperimentConfig, alg: Algorithm) {
+    cfg.algorithm = alg;
+    if alg == Algorithm::Llcg {
+        // paper defaults: rho = 1.1, S = 1
+        let k0 = match cfg.schedule {
+            Schedule::Fixed { k } => k,
+            Schedule::Exponential { k0, .. } => k0,
+        };
+        cfg.schedule = Schedule::Exponential { k0, rho: 1.1 };
+        cfg.correction_steps = 8;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1: speedup + per-machine memory vs number of machines (Reddit analog).
+// ---------------------------------------------------------------------------
+fn fig1(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let dataset = if opts.fast { "tiny" } else { "reddit-s" };
+    let arch = if opts.fast { "gcn" } else { "sage" };
+    println!("Fig 1 — distributed speedup & memory vs machines ({dataset})");
+    println!(
+        "{:>9} {:>12} {:>12} {:>12} {:>14}",
+        "machines", "epoch_s", "speedup", "mem_MB/mach", "val"
+    );
+    let mut rows = Vec::new();
+    let mut t1 = 0f64;
+    for &p in &[1usize, 2, 4, 8] {
+        let mut cfg = opts.base_cfg(dataset, arch);
+        cfg.parts = p;
+        cfg.rounds = if opts.fast { 2 } else { 6 };
+        setup_llcg(&mut cfg, Algorithm::Llcg);
+        let ds = driver::load_dataset(&cfg)?;
+        let res = driver::run_experiment(&cfg, &ds, &rt)?;
+        // simulated-parallel *epoch* time: (steps to cover the largest
+        // local training shard) x measured per-step time + server work.
+        let k: usize = res.records.iter().map(|r| r.local_steps).sum();
+        let step_s: f64 = res
+            .records
+            .iter()
+            .map(|r| r.worker_time_s)
+            .sum::<f64>()
+            / k as f64;
+        let b = rt.meta(&crate::runtime::Runtime::train_name(arch, "adam", dataset))?.dims.b;
+        let shard = ds.splits.train.len().div_ceil(p);
+        let epoch_steps = shard.div_ceil(b);
+        let server_s: f64 = res
+            .records
+            .iter()
+            .map(|r| r.server_time_s)
+            .sum::<f64>()
+            / res.records.len() as f64;
+        let round_s = step_s * epoch_steps as f64 + server_s;
+        if p == 1 {
+            t1 = round_s;
+        }
+        // per-machine memory = features+graph of its partition
+        let mem = (ds.n() / p) as f64 * (ds.d as f64 * 4.0)
+            + (ds.graph.indices.len() / p) as f64 * 4.0;
+        println!(
+            "{:>9} {:>12.3} {:>12.2} {:>12.2} {:>14.4}",
+            p,
+            round_s,
+            t1 / round_s,
+            mem / 1e6,
+            res.final_val
+        );
+        rows.push(Json::obj(vec![
+            ("machines", Json::num(p as f64)),
+            ("round_s", Json::num(round_s)),
+            ("speedup", Json::num(t1 / round_s)),
+            ("mem_mb", Json::num(mem / 1e6)),
+            ("val", Json::num(res.final_val)),
+        ]));
+    }
+    opts.save("fig1", Json::arr(rows))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2: PSGD-PA vs GGS (accuracy per round; bytes per round), Reddit analog.
+// ---------------------------------------------------------------------------
+fn fig2(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let dataset = if opts.fast { "tiny" } else { "reddit-s" };
+    let arch = if opts.fast { "gcn" } else { "sage" };
+    println!("Fig 2 — PSGD-PA vs GGS vs single-machine ({dataset}, P=8)");
+    let mut out = Vec::new();
+    for alg in [Algorithm::PsgdPa, Algorithm::Ggs] {
+        let mut cfg = opts.base_cfg(dataset, arch);
+        cfg.algorithm = alg;
+        let res = run_one(&cfg, &rt)?;
+        println!(
+            "  {:<10} final_val={:.4} avg_MB/round={:.3}",
+            alg.name(),
+            res.final_val,
+            res.avg_round_mb()
+        );
+        out.push(res.to_json());
+    }
+    // single machine baseline
+    let mut cfg = opts.base_cfg(dataset, arch);
+    cfg.parts = 1;
+    cfg.algorithm = Algorithm::PsgdPa;
+    let res = run_one(&cfg, &rt)?;
+    println!(
+        "  {:<10} final_val={:.4} (upper bound)",
+        "single", res.final_val
+    );
+    out.push(res.to_json());
+    opts.save("fig2", Json::arr(out))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4: val score per round (a–d), global loss per round (e,f), score per
+// byte (g,h) — all captured in the per-round records of each run.
+// ---------------------------------------------------------------------------
+fn fig4(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let datasets: Vec<&str> = if opts.fast {
+        vec!["tiny"]
+    } else {
+        vec!["flickr-s", "proteins-s", "arxiv-s", "reddit-s"]
+    };
+    let mut out = Vec::new();
+    for ds_name in &datasets {
+        println!("Fig 4 — {ds_name} (P=8): val score / loss / bytes per round");
+        println!(
+            "  {:<10} {:>9} {:>10} {:>12}",
+            "algo", "final", "glob_loss", "avg_MB/round"
+        );
+        for alg in algos3() {
+            let arch = if opts.fast { "gcn" } else { "sage" };
+            let mut cfg = opts.base_cfg(ds_name, arch);
+            setup_llcg(&mut cfg, alg);
+            let res = run_one(&cfg, &rt)?;
+            let last_loss = res
+                .records
+                .iter()
+                .rev()
+                .find(|r| !r.global_loss.is_nan())
+                .map(|r| r.global_loss)
+                .unwrap_or(f64::NAN);
+            println!(
+                "  {:<10} {:>9.4} {:>10.4} {:>12.3}",
+                alg.name(),
+                res.final_val,
+                last_loss,
+                res.avg_round_mb()
+            );
+            out.push(res.to_json());
+        }
+    }
+    opts.save("fig4", Json::arr(out))
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: score + avg MB/round for 3 algos × {GCN|SAGE, GAT, APPNP} × 4
+// datasets, mean±std over seeds.
+// ---------------------------------------------------------------------------
+fn table1(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rows: Vec<(&str, Vec<&str>)> = if opts.fast {
+        vec![("tiny", vec!["gcn", "sage"])]
+    } else {
+        vec![
+            ("flickr-s", vec!["sage", "gat", "appnp"]),
+            ("proteins-s", vec!["sage", "gat", "appnp"]),
+            ("arxiv-s", vec!["sage", "gat", "appnp"]),
+            ("reddit-s", vec!["sage", "gat", "appnp"]),
+        ]
+    };
+    let seeds = if opts.fast { 1 } else { opts.seeds };
+    let mut out = Vec::new();
+    println!("Table 1 — score ± std and avg MB/round (seeds={seeds})");
+    for (ds_name, archs) in &rows {
+        for arch in archs {
+            for alg in algos3() {
+                let mut scores = Vec::new();
+                let mut mbs = Vec::new();
+                for s in 0..seeds {
+                    let mut cfg = opts.base_cfg(ds_name, arch);
+                    cfg.seed = opts.seed + s as u64;
+                    setup_llcg(&mut cfg, alg);
+                    let res = run_one(&cfg, &rt)?;
+                    scores.push(res.final_test);
+                    mbs.push(res.avg_round_mb());
+                }
+                let mean = crate::util::stats::mean(&scores);
+                let std = crate::util::stats::std(&scores);
+                println!(
+                    "{:<12} {:<6} {:<10} {:>7.2}±{:<5.2} {:>10.3} MB",
+                    ds_name,
+                    arch,
+                    alg.name(),
+                    mean * 100.0,
+                    std * 100.0,
+                    crate::util::stats::mean(&mbs)
+                );
+                out.push(Json::obj(vec![
+                    ("dataset", Json::str(*ds_name)),
+                    ("arch", Json::str(*arch)),
+                    ("algorithm", Json::str(alg.name())),
+                    ("score_mean", Json::num(mean)),
+                    ("score_std", Json::num(std)),
+                    ("avg_mb", Json::num(crate::util::stats::mean(&mbs))),
+                ]));
+            }
+        }
+    }
+    opts.save("table1", Json::arr(out))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5: effect of local epoch size K (arxiv analog).
+// ---------------------------------------------------------------------------
+fn fig5(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let dataset = if opts.fast { "tiny" } else { "arxiv-s" };
+    let ks: Vec<usize> = if opts.fast {
+        vec![1, 4]
+    } else {
+        vec![1, 4, 16, 64, 128]
+    };
+    println!("Fig 5 — local epoch size K sweep ({dataset}, LLCG)");
+    let mut out = Vec::new();
+    for &k in &ks {
+        let arch = if opts.fast { "gcn" } else { "sage" };
+        let mut cfg = opts.base_cfg(dataset, arch);
+        setup_llcg(&mut cfg, Algorithm::Llcg);
+        cfg.schedule = Schedule::Exponential { k0: k, rho: 1.1 };
+        cfg.rounds = cfg.rounds.min(15); // large K makes rounds expensive
+        // same *round* budget: more local work per round for larger K
+        let res = run_one(&cfg, &rt)?;
+        println!(
+            "  K={:<4} total_steps={:<6} final_val={:.4}",
+            k, res.total_steps, res.final_val
+        );
+        out.push(Json::obj(vec![
+            ("k", Json::num(k as f64)),
+            ("total_steps", Json::num(res.total_steps as f64)),
+            ("final_val", Json::num(res.final_val)),
+            ("history", history_json(&res)),
+        ]));
+    }
+    opts.save("fig5", Json::arr(out))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6: neighbor-sampling ratio × correction steps (reddit analog).
+// ---------------------------------------------------------------------------
+fn fig6(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let dataset = if opts.fast { "tiny" } else { "reddit-s" };
+    let grid: Vec<(f64, usize)> = if opts.fast {
+        vec![(1.0, 1), (0.2, 1)]
+    } else {
+        vec![
+            (1.0, 1),
+            (0.5, 1),
+            (0.2, 1),
+            (0.05, 1),
+            (0.05, 4),
+            (0.2, 4),
+        ]
+    };
+    println!("Fig 6 — sampling ratio × correction steps ({dataset}, LLCG)");
+    let mut out = Vec::new();
+    for &(ratio, s) in &grid {
+        let arch = if opts.fast { "gcn" } else { "sage" };
+        let mut cfg = opts.base_cfg(dataset, arch);
+        setup_llcg(&mut cfg, Algorithm::Llcg);
+        cfg.sample_ratio = ratio;
+        cfg.correction_steps = s;
+        let res = run_one(&cfg, &rt)?;
+        println!(
+            "  ratio={:<5} S={} final_val={:.4}",
+            ratio, s, res.final_val
+        );
+        out.push(Json::obj(vec![
+            ("sample_ratio", Json::num(ratio)),
+            ("correction_steps", Json::num(s as f64)),
+            ("final_val", Json::num(res.final_val)),
+            ("history", history_json(&res)),
+        ]));
+    }
+    opts.save("fig6", Json::arr(out))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 7/8: full vs sampled neighbors in the correction step.
+// ---------------------------------------------------------------------------
+fn fig78(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let datasets: Vec<&str> = if opts.fast {
+        vec!["tiny"]
+    } else {
+        vec!["reddit-s", "arxiv-s"]
+    };
+    let mut out = Vec::new();
+    for ds_name in &datasets {
+        println!("Fig 7/8 — correction sampling ({ds_name}, LLCG)");
+        for full in [true, false] {
+            let arch = if opts.fast { "gcn" } else { "sage" };
+            let mut cfg = opts.base_cfg(ds_name, arch);
+            setup_llcg(&mut cfg, Algorithm::Llcg);
+            cfg.correction_full_neighbors = full;
+            let res = run_one(&cfg, &rt)?;
+            println!(
+                "  correction {:<18} final_val={:.4}",
+                if full { "full-neighbors" } else { "sampled-neighbors" },
+                res.final_val
+            );
+            out.push(Json::obj(vec![
+                ("dataset", Json::str(*ds_name)),
+                ("full_neighbors", Json::Bool(full)),
+                ("final_val", Json::num(res.final_val)),
+                ("history", history_json(&res)),
+            ]));
+        }
+    }
+    opts.save("fig78", Json::arr(out))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 9: uniform vs max-cut-edge correction batches.
+// ---------------------------------------------------------------------------
+fn fig9(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let datasets: Vec<&str> = if opts.fast {
+        vec!["tiny"]
+    } else {
+        vec!["reddit-s", "arxiv-s"]
+    };
+    let mut out = Vec::new();
+    for ds_name in &datasets {
+        println!("Fig 9 — correction batch selection ({ds_name}, LLCG)");
+        for batch in [CorrectionBatch::Uniform, CorrectionBatch::MaxCutEdges] {
+            let arch = if opts.fast { "gcn" } else { "sage" };
+            let mut cfg = opts.base_cfg(ds_name, arch);
+            setup_llcg(&mut cfg, Algorithm::Llcg);
+            cfg.correction_batch = batch;
+            let res = run_one(&cfg, &rt)?;
+            println!("  {:<12?} final_val={:.4}", batch, res.final_val);
+            out.push(Json::obj(vec![
+                ("dataset", Json::str(*ds_name)),
+                ("batch", Json::str(format!("{batch:?}"))),
+                ("final_val", Json::num(res.final_val)),
+                ("history", history_json(&res)),
+            ]));
+        }
+    }
+    opts.save("fig9", Json::arr(out))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10: structure-independent datasets — PSGD-PA ≈ GGS on yelp analog;
+// MLP ≈ GCN there; products analog shows no gap either (small cut + split).
+// ---------------------------------------------------------------------------
+fn fig10(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let mut out = Vec::new();
+    let yelp = if opts.fast { "tiny" } else { "yelp-s" };
+    println!("Fig 10a — PSGD-PA vs GGS on {yelp}");
+    for alg in [Algorithm::PsgdPa, Algorithm::Ggs] {
+        let mut cfg = opts.base_cfg(yelp, if opts.fast { "gcn" } else { "sage" });
+        cfg.algorithm = alg;
+        let res = run_one(&cfg, &rt)?;
+        println!("  {:<10} final_val={:.4}", alg.name(), res.final_val);
+        out.push(res.to_json());
+    }
+    println!("Fig 10b — GNN vs MLP on {yelp} (single machine)");
+    for arch in if opts.fast { ["gcn", "mlp"] } else { ["sage", "mlp"] } {
+        let mut cfg = opts.base_cfg(yelp, arch);
+        cfg.parts = 1;
+        cfg.algorithm = Algorithm::PsgdPa;
+        let res = run_one(&cfg, &rt)?;
+        println!("  {:<10} final_val={:.4}", arch, res.final_val);
+        out.push(res.to_json());
+    }
+    if !opts.fast {
+        println!("Fig 10c — PSGD-PA vs GGS on products-s");
+        for alg in [Algorithm::PsgdPa, Algorithm::Ggs] {
+            let mut cfg = opts.base_cfg("products-s", "sage");
+            cfg.algorithm = alg;
+            let res = run_one(&cfg, &rt)?;
+            println!("  {:<10} final_val={:.4}", alg.name(), res.final_val);
+            out.push(res.to_json());
+        }
+    }
+    opts.save("fig10", Json::arr(out))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 11: 16 machines, PSGD-PA vs SubgraphApprox vs FullSync vs LLCG.
+// ---------------------------------------------------------------------------
+fn fig11(opts: &ReproOpts) -> Result<()> {
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let dataset = if opts.fast { "tiny" } else { "products-s" };
+    println!("Fig 11 — large-scale setting ({dataset}, P=16)");
+    let mut out = Vec::new();
+    for alg in [
+        Algorithm::PsgdPa,
+        Algorithm::SubgraphApprox,
+        Algorithm::FullSync,
+        Algorithm::Llcg,
+    ] {
+        let mut cfg = opts.base_cfg(dataset, if opts.fast { "gcn" } else { "sage" });
+        cfg.parts = if opts.fast { 4 } else { 16 };
+        setup_llcg(&mut cfg, alg);
+        let res = run_one(&cfg, &rt)?;
+        println!(
+            "  {:<16} final_val={:.4} avg_MB/round={:.3}",
+            alg.name(),
+            res.final_val,
+            res.avg_round_mb()
+        );
+        out.push(res.to_json());
+    }
+    opts.save("fig11", Json::arr(out))
+}
+
+// ---------------------------------------------------------------------------
+// Theory: measure κ_A², κ_X², σ²_bias across partitioners / homophily —
+// the quantities behind Thm 1's irreducible residual.
+// ---------------------------------------------------------------------------
+fn theory(opts: &ReproOpts) -> Result<()> {
+    use crate::coordinator::discrepancy;
+    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let dataset = if opts.fast { "tiny" } else { "arxiv-s" };
+    let ds = generators::by_name(dataset, opts.seed).unwrap();
+    let arch = "gcn";
+    let meta = rt.meta(&Runtime::train_name(arch, "sgd", dataset))?.clone();
+    let mut rng = crate::util::Pcg64::new(opts.seed);
+    let params = crate::runtime::ModelState::init(&meta, &mut rng).params;
+    println!("Theory — κ², σ²_bias by partitioner ({dataset}, P=8)");
+    println!(
+        "{:<10} {:>10} {:>12} {:>12} {:>12}",
+        "partition", "cut_ratio", "kappa_A^2", "kappa_X^2", "sigma_bias^2"
+    );
+    let mut out = Vec::new();
+    for pname in ["metis", "random"] {
+        let p = crate::partition::by_name(pname).unwrap();
+        let assignment = p.partition(&ds.graph, 8, &mut rng.split(7));
+        let d = discrepancy::measure(
+            &rt,
+            arch,
+            dataset,
+            &params,
+            &ds,
+            &assignment,
+            8,
+            if opts.fast { 2 } else { 8 },
+            opts.seed,
+        )?;
+        println!(
+            "{:<10} {:>10.4} {:>12.4} {:>12.4} {:>12.4}",
+            pname,
+            ds.graph.cut_ratio(&assignment),
+            d.kappa_a,
+            d.kappa_x,
+            d.sigma_bias
+        );
+        out.push(Json::obj(vec![
+            ("partitioner", Json::str(pname)),
+            ("cut_ratio", Json::num(ds.graph.cut_ratio(&assignment))),
+            ("kappa_a", Json::num(d.kappa_a)),
+            ("kappa_x", Json::num(d.kappa_x)),
+            ("sigma_bias", Json::num(d.sigma_bias)),
+        ]));
+    }
+    opts.save("theory", Json::arr(out))
+}
+
+fn history_json(res: &driver::RunResult) -> Json {
+    Json::arr(
+        res.records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("round", Json::num(r.round as f64)),
+                    ("val", Json::num(r.val_score)),
+                    ("loss", Json::num(r.global_loss)),
+                    ("cum_bytes", Json::num(r.cum_bytes as f64)),
+                ])
+            })
+            .collect(),
+    )
+}

@@ -1,0 +1,610 @@
+//! Synthetic dataset generators — the offline substitutes for the paper's
+//! datasets (Table 2), per DESIGN.md §Substitutions.
+//!
+//! The generator is a **two-level degree-corrected block model** built so
+//! that the quantities LLCG's theory cares about are directly tunable:
+//!
+//! - *Topology communities* are dense label-agnostic blocks — what a
+//!   min-cut partitioner (our METIS substitute) discovers and assigns to
+//!   machines.
+//! - Every node carries a random *attribute* `a(v)` (same alphabet as the
+//!   classes) whose centroid is embedded in its **own** features — a pure
+//!   distractor for classifying the node itself.
+//! - A `cross_frac` fraction of each node's edges are **informative**: they
+//!   connect `v` to nodes `u` with `a(u) = y(v)`, preferentially in *other*
+//!   communities. The label is therefore readable only by *aggregating
+//!   neighbor features* — and those edges are exactly the ones a min-cut
+//!   partition cuts. This realizes the κ_A structure term of §4.1 as a
+//!   knob, producing the PSGD-PA accuracy drop of Fig 2/4: local (induced)
+//!   aggregation sees topology neighbors with random attributes, the global
+//!   aggregation sees the label.
+//! - `self_signal` additionally embeds the true class centroid in the
+//!   node's own features: it sets the MLP floor (what a model can do with
+//!   no graph at all).
+//! - `coupled_labels` ties label = community (the OGB-Products regime,
+//!   Fig 10c: METIS keeps label homophily local ⇒ no PSGD-PA gap), and
+//!   `FeatureMultiLabel` labels ignore the graph entirely (the Yelp regime,
+//!   Fig 10 a/b: MLP ≈ GCN and PSGD-PA ≈ GGS).
+//!
+//! Every named analog matches the feature/class dimensions of the artifacts
+//! compiled by `python/compile/aot.py`.
+
+use super::{CsrGraph, Dataset, Labels, Splits};
+use crate::util::Pcg64;
+
+/// Two-level block-model configuration.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub name: String,
+    pub n: usize,
+    /// number of topology communities (dense blocks; what METIS finds)
+    pub communities: usize,
+    /// target average degree (undirected)
+    pub avg_degree: f64,
+    /// fraction of edges that are informative (`a(u) = y(v)`, cross-community
+    /// biased) — the κ_A knob; min-cut partitions destroy these
+    pub cross_frac: f64,
+    /// of the remaining edges, P(partner in own community) (vs uniform)
+    pub homophily: f64,
+    /// Pareto weight for per-node degree multipliers; 0 = regular degrees
+    pub degree_skew: f64,
+    /// label = community (mod c) instead of independent (products regime)
+    pub coupled_labels: bool,
+    pub d: usize,
+    pub c: usize,
+    /// class-centroid scale in the node's OWN features (the MLP floor)
+    pub self_signal: f64,
+    /// attribute-centroid scale (the neighbor-borne signal read via edges)
+    pub attr_signal: f64,
+    pub label_mode: LabelMode,
+    /// fraction of labels flipped/corrupted
+    pub label_noise: f64,
+    pub train_frac: f64,
+    pub val_frac: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LabelMode {
+    /// one class per node (primary label drives edges + centroids)
+    MultiClass,
+    /// multi-hot derived from the primary label via a random class->labels
+    /// mapping (the proteins regime)
+    MultiLabel,
+    /// multi-hot from random feature projections — structure-independent
+    /// (the Yelp regime)
+    FeatureMultiLabel,
+}
+
+impl SynthConfig {
+    /// Named analogs of the paper's datasets. Dimensions (d, c, loss) match
+    /// `python/compile/aot.py::DATASETS`; sizes are scaled for the CPU
+    /// testbed (DESIGN.md §Substitutions).
+    pub fn by_name(name: &str) -> Option<SynthConfig> {
+        let mut cfg = match name {
+            // fast + easy (coupled): for unit/integration tests
+            "tiny" => SynthConfig {
+                name: String::new(),
+                n: 300,
+                communities: 4,
+                avg_degree: 6.0,
+                cross_frac: 0.0,
+                homophily: 0.85,
+                degree_skew: 0.0,
+                coupled_labels: true,
+                d: 16,
+                c: 4,
+                self_signal: 0.5,
+                attr_signal: 0.0,
+                label_mode: LabelMode::MultiClass,
+                label_noise: 0.0,
+                train_frac: 0.5,
+                val_frac: 0.25,
+            },
+            // small decoupled variant for gap smoke-tests
+            "tiny-hetero" => SynthConfig {
+                name: String::new(),
+                n: 600,
+                communities: 4,
+                avg_degree: 12.0,
+                cross_frac: 0.55,
+                homophily: 0.95,
+                degree_skew: 0.0,
+                coupled_labels: false,
+                d: 16,
+                c: 4,
+                self_signal: 0.3,
+                attr_signal: 1.3,
+                label_mode: LabelMode::MultiClass,
+                label_noise: 0.0,
+                train_frac: 0.5,
+                val_frac: 0.25,
+            },
+            "flickr-s" => SynthConfig {
+                name: String::new(),
+                n: 6_000,
+                communities: 8,
+                avg_degree: 10.0,
+                cross_frac: 0.35,
+                homophily: 0.95,
+                degree_skew: 1.0,
+                coupled_labels: false,
+                d: 64,
+                c: 7,
+                self_signal: 0.40,
+                attr_signal: 0.8,
+                label_mode: LabelMode::MultiClass,
+                label_noise: 0.05,
+                train_frac: 0.50,
+                val_frac: 0.25,
+            },
+            "proteins-s" => SynthConfig {
+                name: String::new(),
+                n: 6_000,
+                communities: 8,
+                avg_degree: 30.0,
+                cross_frac: 0.30,
+                homophily: 0.95,
+                degree_skew: 0.5,
+                coupled_labels: false,
+                d: 16,
+                c: 16,
+                self_signal: 0.25,
+                attr_signal: 0.7,
+                label_mode: LabelMode::MultiLabel,
+                label_noise: 0.05,
+                train_frac: 0.65,
+                val_frac: 0.16,
+            },
+            "arxiv-s" => SynthConfig {
+                name: String::new(),
+                n: 8_000,
+                communities: 8,
+                avg_degree: 7.0,
+                cross_frac: 0.35,
+                homophily: 0.95,
+                degree_skew: 1.0,
+                coupled_labels: false,
+                d: 32,
+                c: 16,
+                self_signal: 0.45,
+                attr_signal: 0.90,
+                label_mode: LabelMode::MultiClass,
+                label_noise: 0.05,
+                train_frac: 0.54,
+                val_frac: 0.17,
+            },
+            // the big-gap dataset: nearly no self signal; the label lives in
+            // cross-community neighbor attributes (cut by METIS)
+            "reddit-s" => SynthConfig {
+                name: String::new(),
+                n: 8_000,
+                communities: 8,
+                avg_degree: 25.0,
+                cross_frac: 0.45,
+                homophily: 0.95,
+                degree_skew: 1.2,
+                coupled_labels: false,
+                d: 64,
+                c: 16,
+                self_signal: 0.40,
+                attr_signal: 1.30,
+                label_mode: LabelMode::MultiClass,
+                label_noise: 0.02,
+                train_frac: 0.66,
+                val_frac: 0.10,
+            },
+            // structure-independent labels: MLP ≈ GCN, PSGD-PA ≈ GGS
+            "yelp-s" => SynthConfig {
+                name: String::new(),
+                n: 8_000,
+                communities: 12,
+                avg_degree: 20.0,
+                cross_frac: 0.0,
+                homophily: 0.6,
+                degree_skew: 0.8,
+                coupled_labels: false,
+                d: 32,
+                c: 12,
+                self_signal: 1.5,
+                attr_signal: 0.0,
+                label_mode: LabelMode::FeatureMultiLabel,
+                label_noise: 0.02,
+                train_frac: 0.75,
+                val_frac: 0.15,
+            },
+            // coupled labels + tiny train split + strong communities:
+            // METIS cut is small and label-homophily stays local (Fig 10c)
+            "products-s" => SynthConfig {
+                name: String::new(),
+                n: 12_000,
+                communities: 12,
+                avg_degree: 15.0,
+                cross_frac: 0.0,
+                homophily: 0.95,
+                degree_skew: 1.0,
+                coupled_labels: true,
+                d: 32,
+                c: 12,
+                self_signal: 0.45,
+                attr_signal: 0.0,
+                label_mode: LabelMode::MultiClass,
+                label_noise: 0.03,
+                train_frac: 0.08,
+                val_frac: 0.02,
+            },
+            _ => return None,
+        };
+        cfg.name = name.to_string();
+        Some(cfg)
+    }
+
+    pub fn all_names() -> &'static [&'static str] {
+        &[
+            "tiny",
+            "tiny-hetero",
+            "flickr-s",
+            "proteins-s",
+            "arxiv-s",
+            "reddit-s",
+            "yelp-s",
+            "products-s",
+        ]
+    }
+}
+
+/// Generate a dataset from `cfg`, fully determined by `seed`.
+pub fn generate(cfg: &SynthConfig, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed ^ 0x11c6_u64.wrapping_mul(0x9e3779b97f4a7c15));
+    let n = cfg.n;
+    let k = cfg.communities;
+    let c_out = cfg.c;
+    assert!(k >= 1 && n >= k, "bad block-model config");
+
+    // --- communities (balanced), primary labels, attributes ----------------
+    let mut community: Vec<u32> = (0..n).map(|v| (v % k) as u32).collect();
+    rng.shuffle(&mut community);
+    let primary: Vec<u16> = if cfg.coupled_labels {
+        community
+            .iter()
+            .map(|&cc| (cc as usize % c_out) as u16)
+            .collect()
+    } else {
+        (0..n).map(|_| rng.gen_range(c_out as u64) as u16).collect()
+    };
+    // distractor attribute, independent of everything else
+    let attr: Vec<u16> = (0..n).map(|_| rng.gen_range(c_out as u64) as u16).collect();
+
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (v, &cc) in community.iter().enumerate() {
+        members[cc as usize].push(v as u32);
+    }
+    let mut by_attr: Vec<Vec<u32>> = vec![Vec::new(); c_out];
+    for (v, &a) in attr.iter().enumerate() {
+        by_attr[a as usize].push(v as u32);
+    }
+
+    // --- edges --------------------------------------------------------------
+    let half_deg = (cfg.avg_degree / 2.0).max(0.5);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity((n as f64 * half_deg) as usize);
+    let all: Vec<u32> = (0..n as u32).collect();
+    for v in 0..n as u32 {
+        let mult = if cfg.degree_skew > 0.0 {
+            let u = rng.f64().max(1e-9);
+            (u.powf(-1.0 / 2.5)).min(8.0) * cfg.degree_skew + (1.0 - cfg.degree_skew)
+        } else {
+            1.0
+        };
+        let mut deg = (half_deg * mult).round() as usize;
+        if deg == 0 && rng.bernoulli(half_deg * mult) {
+            deg = 1;
+        }
+        let cv = community[v as usize] as usize;
+        let yv = primary[v as usize] as usize;
+        for _ in 0..deg {
+            let u = if rng.bernoulli(cfg.cross_frac) && k > 1 && !by_attr[yv].is_empty()
+            {
+                // informative edge: partner whose ATTRIBUTE equals v's label,
+                // biased away from v's own community — readable only by
+                // aggregation, destroyed by min-cut partitioning
+                let pool = &by_attr[yv];
+                let mut pick = *rng.choose(pool);
+                for _ in 0..16 {
+                    if community[pick as usize] as usize != cv && pick != v {
+                        break;
+                    }
+                    pick = *rng.choose(pool);
+                }
+                pick
+            } else if rng.bernoulli(cfg.homophily) || k == 1 {
+                // topology edge: own community (label-agnostic)
+                *rng.choose(&members[cv])
+            } else {
+                // background noise edge
+                *rng.choose(&all)
+            };
+            if u != v {
+                edges.push((v, u));
+            }
+        }
+    }
+    let graph = CsrGraph::from_edges(n, &edges);
+
+    // --- features: self-label centroid + attribute centroid + noise --------
+    let d = cfg.d;
+    let mut centroids = vec![0f32; c_out * d];
+    for x in centroids.iter_mut() {
+        *x = rng.normal_f32();
+    }
+    let mut features = vec![0f32; n * d];
+    let s_self = cfg.self_signal as f32;
+    let s_attr = cfg.attr_signal as f32;
+    for v in 0..n {
+        let yv = primary[v] as usize;
+        let av = attr[v] as usize;
+        for j in 0..d {
+            features[v * d + j] = s_self * centroids[yv * d + j]
+                + s_attr * centroids[av * d + j]
+                + rng.normal_f32();
+        }
+    }
+
+    // --- labels --------------------------------------------------------------
+    let labels = match cfg.label_mode {
+        LabelMode::MultiClass => {
+            let mut y = primary.clone();
+            for yy in y.iter_mut() {
+                if rng.bernoulli(cfg.label_noise) {
+                    *yy = rng.gen_range(c_out as u64) as u16;
+                }
+            }
+            Labels::MultiClass(y)
+        }
+        LabelMode::MultiLabel => {
+            // output label j active for a random ~40% subset of primary classes
+            let mut active = vec![false; c_out * c_out];
+            for j in 0..c_out {
+                for l in 0..c_out {
+                    active[j * c_out + l] = rng.bernoulli(0.4);
+                }
+                if !(0..c_out).any(|l| active[j * c_out + l]) {
+                    active[j * c_out + rng.gen_range(c_out as u64) as usize] = true;
+                }
+            }
+            let mut data = vec![0f32; n * c_out];
+            for v in 0..n {
+                let l = primary[v] as usize;
+                for j in 0..c_out {
+                    let mut on = active[j * c_out + l];
+                    if rng.bernoulli(cfg.label_noise) {
+                        on = !on;
+                    }
+                    data[v * c_out + j] = if on { 1.0 } else { 0.0 };
+                }
+            }
+            Labels::MultiLabel { data, c: c_out }
+        }
+        LabelMode::FeatureMultiLabel => {
+            // random projection of features only — graph-independent labels
+            let mut w = vec![0f32; d * c_out];
+            for x in w.iter_mut() {
+                *x = rng.normal_f32();
+            }
+            let mut data = vec![0f32; n * c_out];
+            for v in 0..n {
+                for j in 0..c_out {
+                    let s: f32 =
+                        (0..d).map(|i| features[v * d + i] * w[i * c_out + j]).sum();
+                    let mut on = s > 0.0;
+                    if rng.bernoulli(cfg.label_noise) {
+                        on = !on;
+                    }
+                    data[v * c_out + j] = if on { 1.0 } else { 0.0 };
+                }
+            }
+            Labels::MultiLabel { data, c: c_out }
+        }
+    };
+
+    let splits = Splits::random(n, cfg.train_frac, cfg.val_frac, &mut rng);
+    Dataset {
+        name: cfg.name.clone(),
+        graph,
+        features,
+        d,
+        labels,
+        splits,
+    }
+}
+
+/// Convenience: generate a named analog.
+pub fn by_name(name: &str, seed: u64) -> Option<Dataset> {
+    SynthConfig::by_name(name).map(|cfg| generate(&cfg, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_dataset_shape() {
+        let ds = by_name("tiny", 0).unwrap();
+        assert_eq!(ds.n(), 300);
+        assert_eq!(ds.d, 16);
+        assert_eq!(ds.c(), 4);
+        assert_eq!(ds.features.len(), 300 * 16);
+        assert!(ds.graph.avg_degree() > 3.0 && ds.graph.avg_degree() < 12.0);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = by_name("tiny", 7).unwrap();
+        let b = by_name("tiny", 7).unwrap();
+        assert_eq!(a.graph.indices, b.graph.indices);
+        assert_eq!(a.features, b.features);
+        let c = by_name("tiny", 8).unwrap();
+        assert_ne!(a.graph.indices, c.graph.indices);
+    }
+
+    #[test]
+    fn coupled_homophily_is_respected() {
+        let mut cfg = SynthConfig::by_name("tiny").unwrap();
+        cfg.n = 2000;
+        cfg.homophily = 0.9;
+        let ds = generate(&cfg, 1);
+        let labels = match &ds.labels {
+            Labels::MultiClass(y) => y.clone(),
+            _ => unreachable!(),
+        };
+        let g = &ds.graph;
+        let (mut same, mut total) = (0usize, 0usize);
+        for v in 0..g.n as u32 {
+            for &u in g.neighbors(v) {
+                if u > v {
+                    total += 1;
+                    if labels[u as usize] == labels[v as usize] {
+                        same += 1;
+                    }
+                }
+            }
+        }
+        let frac = same as f64 / total as f64;
+        assert!(frac > 0.8, "coupled homophily frac={frac}");
+    }
+
+    #[test]
+    fn all_presets_generate() {
+        for name in SynthConfig::all_names() {
+            let cfg = SynthConfig::by_name(name).unwrap();
+            let mut small = cfg.clone();
+            small.n = 500.max(small.communities * 4);
+            let ds = generate(&small, 3);
+            assert_eq!(ds.d, cfg.d);
+            assert!(ds.c() <= cfg.c);
+            assert!(ds.graph.num_edges() > 0);
+            match &ds.labels {
+                Labels::MultiClass(y) => assert_eq!(y.len(), small.n),
+                Labels::MultiLabel { data, c } => assert_eq!(data.len(), small.n * c),
+            }
+        }
+    }
+
+    #[test]
+    fn yelp_labels_ignore_structure() {
+        let ds = by_name("yelp-s", 11).unwrap();
+        if let Labels::MultiLabel { data, c } = &ds.labels {
+            let pos: f64 =
+                data.iter().map(|&x| x as f64).sum::<f64>() / (ds.n() * c) as f64;
+            assert!((pos - 0.5).abs() < 0.1, "pos rate {pos}");
+        } else {
+            panic!("yelp-s should be multilabel");
+        }
+    }
+
+    #[test]
+    fn degree_skew_creates_heavy_tail() {
+        let mut cfg = SynthConfig::by_name("tiny").unwrap();
+        cfg.n = 3000;
+        cfg.degree_skew = 1.2;
+        let ds = generate(&cfg, 5);
+        let max_deg = (0..3000u32).map(|v| ds.graph.degree(v)).max().unwrap();
+        let avg = ds.graph.avg_degree();
+        assert!(max_deg as f64 > 3.0 * avg, "max={max_deg} avg={avg}");
+    }
+
+    /// Nearest-class-mean classifier on mean-aggregated features — a
+    /// model-free probe of how much label signal aggregation exposes.
+    fn agg_probe_accuracy(ds: &Dataset, adj: &CsrGraph) -> f64 {
+        let labels = match &ds.labels {
+            Labels::MultiClass(y) => y,
+            _ => unreachable!(),
+        };
+        let c = ds.c();
+        let d = ds.d;
+        let agg = |v: u32| -> Vec<f32> {
+            let mut out = ds.feature(v).to_vec();
+            let nbrs = adj.neighbors(v);
+            for &u in nbrs {
+                for (o, &x) in out.iter_mut().zip(ds.feature(u)) {
+                    *o += x;
+                }
+            }
+            let denom = (nbrs.len() + 1) as f32;
+            out.iter_mut().for_each(|x| *x /= denom);
+            out
+        };
+        // class means from train split
+        let mut means = vec![0f32; c * d];
+        let mut counts = vec![0f32; c];
+        for &v in &ds.splits.train {
+            let a = agg(v);
+            let l = labels[v as usize] as usize;
+            counts[l] += 1.0;
+            for j in 0..d {
+                means[l * d + j] += a[j];
+            }
+        }
+        for l in 0..c {
+            if counts[l] > 0.0 {
+                for j in 0..d {
+                    means[l * d + j] /= counts[l];
+                }
+            }
+        }
+        // nearest-mean on val split
+        let mut correct = 0usize;
+        for &v in &ds.splits.val {
+            let a = agg(v);
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for l in 0..c {
+                let dist: f32 = (0..d)
+                    .map(|j| (a[j] - means[l * d + j]).powi(2))
+                    .sum();
+                if dist < best_d {
+                    best_d = dist;
+                    best = l;
+                }
+            }
+            if best == labels[v as usize] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.splits.val.len() as f64
+    }
+
+    #[test]
+    fn decoupled_label_signal_is_neighbor_borne_and_cut_sensitive() {
+        // The core mechanism behind the PSGD-PA gap: full-graph aggregation
+        // reveals the label; after a min-cut partition the induced views
+        // don't. Probed with a model-free nearest-class-mean classifier.
+        use crate::partition::{MultilevelPartitioner, Partitioner};
+        let ds = by_name("tiny-hetero", 3).unwrap();
+        let full_acc = agg_probe_accuracy(&ds, &ds.graph);
+        assert!(full_acc > 0.6, "full-graph aggregation too weak: {full_acc}");
+
+        let mut rng = Pcg64::new(4);
+        let assign = MultilevelPartitioner::default().partition(&ds.graph, 4, &mut rng);
+        // stitch per-part induced views into one adjacency (same ids)
+        let mut indptr = vec![0usize; ds.n() + 1];
+        let mut indices = Vec::new();
+        let views: Vec<CsrGraph> =
+            (0..4).map(|p| ds.graph.induced_view(&assign, p)).collect();
+        for v in 0..ds.n() as u32 {
+            let p = assign[v as usize] as usize;
+            indices.extend_from_slice(views[p].neighbors(v));
+            indptr[v as usize + 1] = indices.len();
+        }
+        let local = CsrGraph {
+            n: ds.n(),
+            indptr,
+            indices,
+        };
+        let local_acc = agg_probe_accuracy(&ds, &local);
+        // the 1-hop nearest-class-mean probe understates what a trained
+        // 2-layer GNN extracts, so the margin here is conservative
+        assert!(
+            local_acc < full_acc - 0.05,
+            "cut did not hurt: full={full_acc:.3} local={local_acc:.3}"
+        );
+    }
+}

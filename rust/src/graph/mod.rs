@@ -1,0 +1,305 @@
+//! Graph substrate: CSR storage, datasets (features/labels/splits), and the
+//! partition-aware views the distributed algorithms train on.
+
+pub mod generators;
+
+use crate::util::Pcg64;
+
+/// Compressed-sparse-row undirected graph. `indices[indptr[v]..indptr[v+1]]`
+/// are the neighbors of `v`; edges are stored in both directions.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    pub n: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Build from an undirected edge list; symmetrizes, sorts, dedups, and
+    /// drops self-loops (models add self-contributions explicitly).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> CsrGraph {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            let (u, v) = (u as usize, v as usize);
+            assert!(u < n && v < n, "edge ({u},{v}) out of range n={n}");
+            if u == v {
+                continue;
+            }
+            adj[u].push(v as u32);
+            adj[v].push(u as u32);
+        }
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::new();
+        for list in adj.iter_mut() {
+            list.sort_unstable();
+            list.dedup();
+            indices.extend_from_slice(list);
+            indptr.push(indices.len());
+        }
+        CsrGraph { n, indptr, indices }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.indices[self.indptr[v as usize]..self.indptr[v as usize + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        self.indptr[v as usize + 1] - self.indptr[v as usize]
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.indices.len() / 2
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.indices.len() as f64 / self.n as f64
+        }
+    }
+
+    /// Count of undirected edges whose endpoints live in different parts.
+    pub fn edge_cut(&self, assignment: &[u32]) -> usize {
+        assert_eq!(assignment.len(), self.n);
+        let mut cut = 0usize;
+        for v in 0..self.n as u32 {
+            for &u in self.neighbors(v) {
+                if u > v && assignment[u as usize] != assignment[v as usize] {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+
+    /// Fraction of undirected edges that are cut by `assignment`.
+    pub fn cut_ratio(&self, assignment: &[u32]) -> f64 {
+        let e = self.num_edges();
+        if e == 0 {
+            0.0
+        } else {
+            self.edge_cut(assignment) as f64 / e as f64
+        }
+    }
+
+    /// Induced-subgraph adjacency restricted to one part: neighbors of `v`
+    /// that share `v`'s part. Returned as a new CSR over *global* ids, with
+    /// non-member rows empty — exactly the "ignore cut-edges" view of Eq. 3.
+    pub fn induced_view(&self, assignment: &[u32], part: u32) -> CsrGraph {
+        assert_eq!(assignment.len(), self.n);
+        let mut indptr = Vec::with_capacity(self.n + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::new();
+        for v in 0..self.n as u32 {
+            if assignment[v as usize] == part {
+                for &u in self.neighbors(v) {
+                    if assignment[u as usize] == part {
+                        indices.push(u);
+                    }
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrGraph {
+            n: self.n,
+            indptr,
+            indices,
+        }
+    }
+
+    /// Connected components (labels), for generator sanity checks.
+    pub fn components(&self) -> Vec<u32> {
+        let mut comp = vec![u32::MAX; self.n];
+        let mut next = 0u32;
+        let mut stack = Vec::new();
+        for s in 0..self.n as u32 {
+            if comp[s as usize] != u32::MAX {
+                continue;
+            }
+            comp[s as usize] = next;
+            stack.push(s);
+            while let Some(v) = stack.pop() {
+                for &u in self.neighbors(v) {
+                    if comp[u as usize] == u32::MAX {
+                        comp[u as usize] = next;
+                        stack.push(u);
+                    }
+                }
+            }
+            next += 1;
+        }
+        comp
+    }
+}
+
+/// Node labels: one class per node, or a multi-hot vector per node.
+#[derive(Clone, Debug)]
+pub enum Labels {
+    /// `labels[v]` in `0..c`
+    MultiClass(Vec<u16>),
+    /// row-major `[n, c]` in {0.0, 1.0}
+    MultiLabel { data: Vec<f32>, c: usize },
+}
+
+impl Labels {
+    pub fn num_classes(&self) -> usize {
+        match self {
+            Labels::MultiClass(v) => (v.iter().copied().max().unwrap_or(0) + 1) as usize,
+            Labels::MultiLabel { c, .. } => *c,
+        }
+    }
+
+    pub fn is_multilabel(&self) -> bool {
+        matches!(self, Labels::MultiLabel { .. })
+    }
+}
+
+/// Train/val/test split masks.
+#[derive(Clone, Debug)]
+pub struct Splits {
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+impl Splits {
+    /// Random split by fraction; remainder goes to test.
+    pub fn random(n: usize, train_frac: f64, val_frac: f64, rng: &mut Pcg64) -> Splits {
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut ids);
+        let nt = ((n as f64) * train_frac).round() as usize;
+        let nv = ((n as f64) * val_frac).round() as usize;
+        Splits {
+            train: ids[..nt].to_vec(),
+            val: ids[nt..(nt + nv).min(n)].to_vec(),
+            test: ids[(nt + nv).min(n)..].to_vec(),
+        }
+    }
+}
+
+/// A complete node-classification dataset: graph + features + labels + split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub graph: CsrGraph,
+    /// row-major `[n, d]`
+    pub features: Vec<f32>,
+    pub d: usize,
+    pub labels: Labels,
+    pub splits: Splits,
+}
+
+impl Dataset {
+    #[inline]
+    pub fn feature(&self, v: u32) -> &[f32] {
+        let v = v as usize;
+        &self.features[v * self.d..(v + 1) * self.d]
+    }
+
+    pub fn n(&self) -> usize {
+        self.graph.n
+    }
+
+    pub fn c(&self) -> usize {
+        self.labels.num_classes()
+    }
+
+    /// Table-2-style statistics row.
+    pub fn stats(&self) -> String {
+        format!(
+            "{:<12} nodes={:<8} edges={:<9} d={:<4} c={:<3} train/val/test={}/{}/{} avg_deg={:.1}",
+            self.name,
+            self.n(),
+            self.graph.num_edges(),
+            self.d,
+            self.c(),
+            self.splits.train.len(),
+            self.splits.val.len(),
+            self.splits.test.len(),
+            self.graph.avg_degree()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> CsrGraph {
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        CsrGraph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn csr_basics() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 1), (3, 3)]);
+        assert_eq!(g.num_edges(), 3); // dedup + self-loop dropped
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn symmetry() {
+        let g = CsrGraph::from_edges(5, &[(0, 3), (3, 4), (1, 2)]);
+        for v in 0..5u32 {
+            for &u in g.neighbors(v) {
+                assert!(g.neighbors(u).contains(&v), "asymmetric edge {v}-{u}");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_cut_counts() {
+        let g = path_graph(4); // 0-1-2-3
+        assert_eq!(g.edge_cut(&[0, 0, 1, 1]), 1);
+        assert_eq!(g.edge_cut(&[0, 1, 0, 1]), 3);
+        assert_eq!(g.edge_cut(&[0, 0, 0, 0]), 0);
+        assert!((g.cut_ratio(&[0, 0, 1, 1]) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn induced_view_drops_cut_edges() {
+        let g = path_graph(4);
+        let view = g.induced_view(&[0, 0, 1, 1], 0);
+        assert_eq!(view.neighbors(0), &[1]);
+        assert_eq!(view.neighbors(1), &[0]); // edge 1-2 is cut
+        assert_eq!(view.neighbors(2), &[] as &[u32]); // not a member
+        let view1 = g.induced_view(&[0, 0, 1, 1], 1);
+        assert_eq!(view1.neighbors(2), &[3]);
+    }
+
+    #[test]
+    fn components_on_disconnected() {
+        let g = CsrGraph::from_edges(5, &[(0, 1), (2, 3)]);
+        let c = g.components();
+        assert_eq!(c[0], c[1]);
+        assert_eq!(c[2], c[3]);
+        assert_ne!(c[0], c[2]);
+        assert_ne!(c[4], c[0]);
+        assert_ne!(c[4], c[2]);
+    }
+
+    #[test]
+    fn splits_are_disjoint_and_cover() {
+        let mut rng = Pcg64::new(1);
+        let s = Splits::random(100, 0.6, 0.2, &mut rng);
+        assert_eq!(s.train.len(), 60);
+        assert_eq!(s.val.len(), 20);
+        assert_eq!(s.test.len(), 20);
+        let mut all: Vec<u32> = s
+            .train
+            .iter()
+            .chain(&s.val)
+            .chain(&s.test)
+            .copied()
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,32 @@
+//! # LLCG — Learn Locally, Correct Globally (ICLR 2022) in Rust + JAX/Pallas
+//!
+//! A distributed GNN-training framework reproducing Ramezani et al., *"Learn
+//! Locally, Correct Globally: A Distributed Algorithm for Training Graph
+//! Neural Networks"*.
+//!
+//! Architecture (see `DESIGN.md`):
+//! - **L3 (this crate)** — the coordinator: graph substrate, METIS-like
+//!   partitioner, neighbor sampler / block builder, parameter server with
+//!   *global server correction*, workers, communication accounting, and the
+//!   algorithms (LLCG, PSGD-PA, GGS, FullSync, SubgraphApprox).
+//! - **L2/L1 (`python/`, build-time only)** — JAX GNN models on Pallas
+//!   aggregation kernels, AOT-lowered to HLO text artifacts.
+//! - **runtime** — PJRT CPU client (`xla` crate) loading `artifacts/*.hlo.txt`.
+//!
+//! Python never runs on the training path: `make artifacts` once, then the
+//! `llcg` binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod sampler;
+pub mod testkit;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use coordinator::{Algorithm, RunResult};
+pub use graph::{CsrGraph, Dataset};

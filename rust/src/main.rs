@@ -1,0 +1,178 @@
+//! `llcg` — CLI for the LLCG distributed GNN training framework.
+//!
+//! Subcommands:
+//!   run [--config file.json] [--key=value ...]   one distributed run
+//!   datasets                                     Table-2-style stats
+//!   partition --dataset D --parts P              partitioner comparison
+//!   repro-<exp>                                  regenerate a paper table/figure
+//!                                                (fig2, fig4, table1, fig5,
+//!                                                 fig6, fig78, fig9, fig10,
+//!                                                 fig11, theory, fig1)
+//!
+//! Hand-rolled flag parsing (offline environment has no clap; DESIGN.md
+//! §Substitutions). Flags are `--key value` or `--key=value`.
+
+use anyhow::{bail, Result};
+
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::driver;
+use llcg::experiments;
+use llcg::graph::generators::{self, SynthConfig};
+use llcg::partition;
+use llcg::runtime::Runtime;
+use llcg::util::Pcg64;
+
+fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.push((k.to_string(), v.to_string()));
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.push((stripped.to_string(), args[i + 1].clone()));
+                i += 1;
+            } else {
+                out.push((stripped.to_string(), "true".to_string()));
+            }
+        } else {
+            bail!("unexpected positional argument {a:?}");
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+fn build_config(flags: &[(String, String)]) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    for (k, v) in flags {
+        if k == "config" {
+            cfg = ExperimentConfig::from_file(v).map_err(|e| anyhow::anyhow!(e))?;
+        }
+    }
+    for (k, v) in flags {
+        if k == "config" || k == "out" {
+            continue;
+        }
+        cfg.apply_override(k, v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(flags: &[(String, String)]) -> Result<()> {
+    let cfg = build_config(flags)?;
+    let ds = driver::load_dataset(&cfg)?;
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    eprintln!(
+        "run: {} on {} ({} parts, {} rounds, arch={}, opt={})",
+        cfg.algorithm.name(),
+        cfg.dataset,
+        cfg.parts,
+        cfg.rounds,
+        cfg.arch,
+        cfg.optimizer
+    );
+    let result = driver::run_experiment(&cfg, &ds, &rt)?;
+    println!(
+        "{:>5} {:>6} {:>10} {:>10} {:>9} {:>12}",
+        "round", "steps", "loc_loss", "glob_loss", "val", "cum_MB"
+    );
+    for r in &result.records {
+        println!(
+            "{:>5} {:>6} {:>10.4} {:>10.4} {:>9.4} {:>12.3}",
+            r.round,
+            r.local_steps,
+            r.local_loss,
+            r.global_loss,
+            r.val_score,
+            r.cum_bytes as f64 / 1e6
+        );
+    }
+    println!(
+        "final: val={:.4} test={:.4} cut_ratio={:.3} avg_round_MB={:.3}",
+        result.final_val,
+        result.final_test,
+        result.cut_ratio,
+        result.avg_round_mb()
+    );
+    for (k, v) in flags {
+        if k == "out" {
+            std::fs::create_dir_all(
+                std::path::Path::new(v).parent().unwrap_or(std::path::Path::new(".")),
+            )?;
+            std::fs::write(v, result.to_json().to_string_pretty())?;
+            eprintln!("wrote {v}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("Table 2 analogs (synthetic; seeds fixed at 0):");
+    for name in SynthConfig::all_names() {
+        let ds = generators::by_name(name, 0).unwrap();
+        println!("  {}", ds.stats());
+    }
+    Ok(())
+}
+
+fn cmd_partition(flags: &[(String, String)]) -> Result<()> {
+    let mut dataset = "reddit-s".to_string();
+    let mut parts = 8usize;
+    let mut seed = 0u64;
+    for (k, v) in flags {
+        match k.as_str() {
+            "dataset" => dataset = v.clone(),
+            "parts" => parts = v.parse()?,
+            "seed" => seed = v.parse()?,
+            _ => bail!("unknown flag --{k}"),
+        }
+    }
+    let ds = generators::by_name(&dataset, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    println!("{} | {} parts", ds.stats(), parts);
+    println!(
+        "{:<12} {:>9} {:>10} {:>10} {:>10} {:>9}",
+        "method", "edge_cut", "cut_ratio", "imbalance", "label_skew", "time_s"
+    );
+    for name in ["random", "hash", "bfs", "ldg", "metis"] {
+        let p = partition::by_name(name).unwrap();
+        let mut rng = Pcg64::new(seed);
+        let t0 = std::time::Instant::now();
+        let a = p.partition(&ds.graph, parts, &mut rng);
+        let dt = t0.elapsed().as_secs_f64();
+        let q = partition::quality(&ds.graph, &a, parts);
+        let skew = driver::label_skew(&ds, &a, parts);
+        println!(
+            "{:<12} {:>9} {:>10.4} {:>10.3} {:>10.3} {:>9.3}",
+            name, q.edge_cut, q.cut_ratio, q.imbalance, skew, dt
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!(
+            "usage: llcg <run|datasets|partition|repro-*> [--flags]\n\
+             repro commands: {}",
+            experiments::REPRO_COMMANDS.join(", ")
+        );
+        std::process::exit(2);
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "datasets" => cmd_datasets(),
+        "partition" => cmd_partition(&flags),
+        other => {
+            if let Some(name) = other.strip_prefix("repro-") {
+                experiments::run_repro(name, &flags)
+            } else {
+                bail!("unknown command {other:?}");
+            }
+        }
+    }
+}

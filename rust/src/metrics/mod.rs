@@ -1,0 +1,247 @@
+//! Evaluation metrics (micro-F1, ROC-AUC, accuracy, loss) and experiment
+//! logging — the quantities every table/figure of the paper reports.
+
+use crate::graph::Labels;
+
+/// Micro-averaged F1.
+/// - multiclass: argmax prediction — micro-F1 == accuracy;
+/// - multilabel: logits > 0 ⇒ positive, F1 = 2TP / (2TP + FP + FN).
+pub fn micro_f1(logits: &[f32], c: usize, labels: &Labels, ids: &[u32]) -> f64 {
+    assert_eq!(logits.len(), ids.len() * c);
+    match labels {
+        Labels::MultiClass(y) => {
+            if ids.is_empty() {
+                return 0.0;
+            }
+            let mut correct = 0usize;
+            for (i, &v) in ids.iter().enumerate() {
+                let row = &logits[i * c..(i + 1) * c];
+                let pred = argmax(row);
+                if pred == y[v as usize] as usize {
+                    correct += 1;
+                }
+            }
+            correct as f64 / ids.len() as f64
+        }
+        Labels::MultiLabel { data, c: dc } => {
+            assert_eq!(*dc, c);
+            let (mut tp, mut fp, mut fnn) = (0u64, 0u64, 0u64);
+            for (i, &v) in ids.iter().enumerate() {
+                for j in 0..c {
+                    let pred = logits[i * c + j] > 0.0;
+                    let truth = data[v as usize * c + j] > 0.5;
+                    match (pred, truth) {
+                        (true, true) => tp += 1,
+                        (true, false) => fp += 1,
+                        (false, true) => fnn += 1,
+                        _ => {}
+                    }
+                }
+            }
+            if 2 * tp + fp + fnn == 0 {
+                return 0.0;
+            }
+            (2 * tp) as f64 / (2 * tp + fp + fnn) as f64
+        }
+    }
+}
+
+/// ROC-AUC averaged over classes (rank statistic; ties get midranks).
+/// For multiclass labels uses one-vs-rest on the logits.
+pub fn roc_auc(logits: &[f32], c: usize, labels: &Labels, ids: &[u32]) -> f64 {
+    assert_eq!(logits.len(), ids.len() * c);
+    let n = ids.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let is_pos = |v: u32, j: usize| -> bool {
+        match labels {
+            Labels::MultiClass(y) => y[v as usize] as usize == j,
+            Labels::MultiLabel { data, c: dc } => data[v as usize * *dc + j] > 0.5,
+        }
+    };
+    let mut aucs = Vec::new();
+    let mut scored: Vec<(f32, bool)> = Vec::with_capacity(n);
+    for j in 0..c {
+        scored.clear();
+        for (i, &v) in ids.iter().enumerate() {
+            scored.push((logits[i * c + j], is_pos(v, j)));
+        }
+        let pos = scored.iter().filter(|x| x.1).count();
+        let neg = n - pos;
+        if pos == 0 || neg == 0 {
+            continue; // undefined for this class
+        }
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // midrank sum of positives
+        let mut rank_sum = 0f64;
+        let mut i = 0usize;
+        while i < n {
+            let mut k = i;
+            while k + 1 < n && scored[k + 1].0 == scored[i].0 {
+                k += 1;
+            }
+            let midrank = (i + k) as f64 / 2.0 + 1.0;
+            for item in &scored[i..=k] {
+                if item.1 {
+                    rank_sum += midrank;
+                }
+            }
+            i = k + 1;
+        }
+        let u = rank_sum - (pos as f64) * (pos as f64 + 1.0) / 2.0;
+        aucs.push(u / (pos as f64 * neg as f64));
+    }
+    if aucs.is_empty() {
+        0.0
+    } else {
+        aucs.iter().sum::<f64>() / aucs.len() as f64
+    }
+}
+
+/// Masked mean loss from logits, matching `model.loss_fn` semantics
+/// (softmax-CE for multiclass, mean sigmoid-BCE for multilabel) — used for
+/// the "global training loss" curves (Fig 4 e/f).
+pub fn mean_loss(logits: &[f32], c: usize, labels: &Labels, ids: &[u32]) -> f64 {
+    assert_eq!(logits.len(), ids.len() * c);
+    if ids.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0f64;
+    for (i, &v) in ids.iter().enumerate() {
+        let row = &logits[i * c..(i + 1) * c];
+        match labels {
+            Labels::MultiClass(y) => {
+                let target = y[v as usize] as usize;
+                // log-sum-exp
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let lse: f64 =
+                    row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln()
+                        + m as f64;
+                total += lse - row[target] as f64;
+            }
+            Labels::MultiLabel { data, c: dc } => {
+                let mut bce = 0f64;
+                for j in 0..c {
+                    let z = row[j] as f64;
+                    let y = data[v as usize * *dc + j] as f64;
+                    bce += z.max(0.0) - z * y + (1.0 + (-z.abs()).exp()).ln();
+                }
+                total += bce / c as f64;
+            }
+        }
+    }
+    total / ids.len() as f64
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (j, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Append-only CSV logger for experiment histories.
+pub struct CsvLogger {
+    path: std::path::PathBuf,
+    wrote_header: bool,
+}
+
+impl CsvLogger {
+    pub fn create(path: impl Into<std::path::PathBuf>) -> std::io::Result<CsvLogger> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, "")?;
+        Ok(CsvLogger {
+            path,
+            wrote_header: false,
+        })
+    }
+
+    pub fn row(&mut self, header: &[&str], values: &[String]) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&self.path)?;
+        if !self.wrote_header {
+            writeln!(f, "{}", header.join(","))?;
+            self.wrote_header = true;
+        }
+        writeln!(f, "{}", values.join(","))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiclass_f1_is_accuracy() {
+        let labels = Labels::MultiClass(vec![0, 1, 2, 1]);
+        // logits for nodes 0..4, c=3
+        let logits = vec![
+            9.0, 0.0, 0.0, // -> 0 correct
+            0.0, 9.0, 0.0, // -> 1 correct
+            9.0, 0.0, 0.0, // -> 0 wrong (truth 2)
+            0.0, 9.0, 0.0, // -> 1 correct
+        ];
+        let f1 = micro_f1(&logits, 3, &labels, &[0, 1, 2, 3]);
+        assert!((f1 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multilabel_f1() {
+        let labels = Labels::MultiLabel {
+            data: vec![1.0, 0.0, 1.0, 1.0],
+            c: 2,
+        };
+        // node0: pred (+,-) truth (1,0): TP=1; node1: pred (-,+) truth (1,1): TP=1, FN=1
+        let logits = vec![2.0, -2.0, -2.0, 2.0];
+        let f1 = micro_f1(&logits, 2, &labels, &[0, 1]);
+        assert!((f1 - 2.0 * 2.0 / (2.0 * 2.0 + 0.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let labels = Labels::MultiClass(vec![0, 0, 1, 1]);
+        // c=2 one-vs-rest; scores perfectly separate
+        let logits = vec![5.0, -5.0, 4.0, -4.0, -4.0, 4.0, -5.0, 5.0];
+        let auc = roc_auc(&logits, 2, &labels, &[0, 1, 2, 3]);
+        assert!((auc - 1.0).abs() < 1e-12, "auc={auc}");
+        // all-equal scores -> 0.5 via midranks
+        let logits_tied = vec![1.0; 8];
+        let auc_t = roc_auc(&logits_tied, 2, &labels, &[0, 1, 2, 3]);
+        assert!((auc_t - 0.5).abs() < 1e-12, "auc={auc_t}");
+    }
+
+    #[test]
+    fn loss_uniform_logits_is_log_c() {
+        let labels = Labels::MultiClass(vec![0, 3]);
+        let logits = vec![0.0; 8];
+        let l = mean_loss(&logits, 4, &labels, &[0, 1]);
+        assert!((l - (4f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_decreases_with_confidence() {
+        let labels = Labels::MultiClass(vec![1]);
+        let weak = mean_loss(&[0.0, 1.0], 2, &labels, &[0]);
+        let strong = mean_loss(&[0.0, 8.0], 2, &labels, &[0]);
+        assert!(strong < weak);
+    }
+
+    #[test]
+    fn csv_logger_writes_header_once() {
+        let dir = std::env::temp_dir().join("llcg_test_csv");
+        let path = dir.join("x.csv");
+        let mut log = CsvLogger::create(&path).unwrap();
+        log.row(&["a", "b"], &["1".into(), "2".into()]).unwrap();
+        log.row(&["a", "b"], &["3".into(), "4".into()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+    }
+}

@@ -1,0 +1,288 @@
+//! Graph partitioning — the METIS substitute (DESIGN.md §Substitutions).
+//!
+//! The paper splits input graphs with METIS before training. This module
+//! provides:
+//! - [`MultilevelPartitioner`] — the METIS-like default: heavy-edge-matching
+//!   coarsening → greedy seeding on the coarsest graph → projected
+//!   Kernighan–Lin/FM boundary refinement at every level;
+//! - streaming/trivial baselines ([`LdgPartitioner`], [`BfsPartitioner`],
+//!   [`RandomPartitioner`], [`HashPartitioner`]) used by ablations to vary
+//!   the cut ratio (and hence κ).
+
+pub mod multilevel;
+
+pub use multilevel::MultilevelPartitioner;
+
+use crate::graph::CsrGraph;
+use crate::util::Pcg64;
+
+/// A node→part assignment produced by a [`Partitioner`].
+pub type Assignment = Vec<u32>;
+
+/// Common interface: split `g` into `parts` balanced pieces.
+pub trait Partitioner {
+    fn partition(&self, g: &CsrGraph, parts: usize, rng: &mut Pcg64) -> Assignment;
+    fn name(&self) -> &'static str;
+}
+
+/// Quality metrics of an assignment.
+#[derive(Clone, Debug)]
+pub struct PartitionQuality {
+    pub parts: usize,
+    pub edge_cut: usize,
+    pub cut_ratio: f64,
+    /// max part size / ideal part size
+    pub imbalance: f64,
+    pub sizes: Vec<usize>,
+}
+
+pub fn quality(g: &CsrGraph, assignment: &Assignment, parts: usize) -> PartitionQuality {
+    let mut sizes = vec![0usize; parts];
+    for &a in assignment {
+        sizes[a as usize] += 1;
+    }
+    let ideal = g.n as f64 / parts as f64;
+    let max = *sizes.iter().max().unwrap_or(&0);
+    PartitionQuality {
+        parts,
+        edge_cut: g.edge_cut(assignment),
+        cut_ratio: g.cut_ratio(assignment),
+        imbalance: if ideal > 0.0 { max as f64 / ideal } else { 0.0 },
+        sizes,
+    }
+}
+
+/// Uniform random assignment — the worst-case cut baseline.
+pub struct RandomPartitioner;
+
+impl Partitioner for RandomPartitioner {
+    fn partition(&self, g: &CsrGraph, parts: usize, rng: &mut Pcg64) -> Assignment {
+        // balanced random: shuffle then deal round-robin
+        let mut ids: Vec<u32> = (0..g.n as u32).collect();
+        rng.shuffle(&mut ids);
+        let mut out = vec![0u32; g.n];
+        for (i, &v) in ids.iter().enumerate() {
+            out[v as usize] = (i % parts) as u32;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Deterministic id-hash assignment (what a naive system does).
+pub struct HashPartitioner;
+
+impl Partitioner for HashPartitioner {
+    fn partition(&self, g: &CsrGraph, parts: usize, _rng: &mut Pcg64) -> Assignment {
+        (0..g.n as u64)
+            .map(|v| {
+                let mut z = v.wrapping_add(0x9e3779b97f4a7c15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+                ((z ^ (z >> 31)) % parts as u64) as u32
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+}
+
+/// Balanced multi-source BFS region growing.
+pub struct BfsPartitioner;
+
+impl Partitioner for BfsPartitioner {
+    fn partition(&self, g: &CsrGraph, parts: usize, rng: &mut Pcg64) -> Assignment {
+        let cap = g.n.div_ceil(parts);
+        let mut assign = vec![u32::MAX; g.n];
+        let mut sizes = vec![0usize; parts];
+        let mut queues: Vec<std::collections::VecDeque<u32>> =
+            (0..parts).map(|_| Default::default()).collect();
+        let mut order: Vec<u32> = (0..g.n as u32).collect();
+        rng.shuffle(&mut order);
+        let mut seeds = order.iter().copied();
+        for (p, q) in queues.iter_mut().enumerate() {
+            if let Some(s) = seeds.find(|&s| assign[s as usize] == u32::MAX) {
+                assign[s as usize] = p as u32;
+                sizes[p] += 1;
+                q.push_back(s);
+            }
+        }
+        let mut active = true;
+        while active {
+            active = false;
+            for p in 0..parts {
+                if sizes[p] >= cap {
+                    continue;
+                }
+                if let Some(v) = queues[p].pop_front() {
+                    active = true;
+                    for &u in g.neighbors(v) {
+                        if assign[u as usize] == u32::MAX && sizes[p] < cap {
+                            assign[u as usize] = p as u32;
+                            sizes[p] += 1;
+                            queues[p].push_back(u);
+                        }
+                    }
+                    // keep v queued if it still has unassigned neighbors
+                    if g.neighbors(v).iter().any(|&u| assign[u as usize] == u32::MAX) {
+                        queues[p].push_back(v);
+                    }
+                } else {
+                    // restart from an unassigned seed (disconnected graphs)
+                    if let Some(s) =
+                        (0..g.n as u32).find(|&s| assign[s as usize] == u32::MAX)
+                    {
+                        assign[s as usize] = p as u32;
+                        sizes[p] += 1;
+                        queues[p].push_back(s);
+                        active = true;
+                    }
+                }
+            }
+        }
+        // sweep leftovers into the smallest parts
+        for v in 0..g.n {
+            if assign[v] == u32::MAX {
+                let p = (0..parts).min_by_key(|&p| sizes[p]).unwrap();
+                assign[v] = p as u32;
+                sizes[p] += 1;
+            }
+        }
+        assign
+    }
+
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+}
+
+/// Linear Deterministic Greedy streaming partitioner (Stanton & Kliot 2012):
+/// each node goes to the part with the most already-assigned neighbors,
+/// weighted by remaining capacity.
+pub struct LdgPartitioner;
+
+impl Partitioner for LdgPartitioner {
+    fn partition(&self, g: &CsrGraph, parts: usize, rng: &mut Pcg64) -> Assignment {
+        let cap = g.n.div_ceil(parts) + 1;
+        let mut assign = vec![u32::MAX; g.n];
+        let mut sizes = vec![0usize; parts];
+        let mut order: Vec<u32> = (0..g.n as u32).collect();
+        rng.shuffle(&mut order);
+        let mut counts = vec![0f64; parts];
+        for &v in &order {
+            for c in counts.iter_mut() {
+                *c = 0.0;
+            }
+            for &u in g.neighbors(v) {
+                let a = assign[u as usize];
+                if a != u32::MAX {
+                    counts[a as usize] += 1.0;
+                }
+            }
+            let mut best = 0usize;
+            let mut best_score = f64::NEG_INFINITY;
+            for p in 0..parts {
+                if sizes[p] >= cap {
+                    continue;
+                }
+                let penalty = 1.0 - sizes[p] as f64 / cap as f64;
+                let score = counts[p] * penalty + 1e-9 * penalty;
+                if score > best_score {
+                    best_score = score;
+                    best = p;
+                }
+            }
+            assign[v as usize] = best as u32;
+            sizes[best] += 1;
+        }
+        assign
+    }
+
+    fn name(&self) -> &'static str {
+        "ldg"
+    }
+}
+
+/// Look up a partitioner by config name.
+pub fn by_name(name: &str) -> Option<Box<dyn Partitioner>> {
+    match name {
+        "random" => Some(Box::new(RandomPartitioner)),
+        "hash" => Some(Box::new(HashPartitioner)),
+        "bfs" => Some(Box::new(BfsPartitioner)),
+        "ldg" => Some(Box::new(LdgPartitioner)),
+        "metis" | "multilevel" => Some(Box::new(MultilevelPartitioner::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn check_valid(assign: &Assignment, n: usize, parts: usize) {
+        assert_eq!(assign.len(), n);
+        assert!(assign.iter().all(|&a| (a as usize) < parts));
+        let mut sizes = vec![0usize; parts];
+        for &a in assign {
+            sizes[a as usize] += 1;
+        }
+        let ideal = n as f64 / parts as f64;
+        for (p, &s) in sizes.iter().enumerate() {
+            assert!(
+                (s as f64) < 1.6 * ideal + 2.0,
+                "part {p} oversized: {s} vs ideal {ideal}"
+            );
+            assert!(s > 0, "part {p} empty");
+        }
+    }
+
+    #[test]
+    fn all_partitioners_valid_on_sbm() {
+        let ds = generators::by_name("tiny", 0).unwrap();
+        let mut rng = Pcg64::new(1);
+        for name in ["random", "hash", "bfs", "ldg", "metis"] {
+            let p = by_name(name).unwrap();
+            let a = p.partition(&ds.graph, 4, &mut rng);
+            check_valid(&a, ds.n(), 4);
+        }
+    }
+
+    #[test]
+    fn ldg_beats_random_on_community_graph() {
+        let ds = generators::by_name("tiny", 2).unwrap();
+        let mut rng = Pcg64::new(3);
+        let a_rand = RandomPartitioner.partition(&ds.graph, 4, &mut rng);
+        let a_ldg = LdgPartitioner.partition(&ds.graph, 4, &mut rng);
+        assert!(
+            ds.graph.cut_ratio(&a_ldg) < ds.graph.cut_ratio(&a_rand),
+            "ldg {} !< random {}",
+            ds.graph.cut_ratio(&a_ldg),
+            ds.graph.cut_ratio(&a_rand)
+        );
+    }
+
+    #[test]
+    fn single_part_has_no_cut() {
+        let ds = generators::by_name("tiny", 4).unwrap();
+        let mut rng = Pcg64::new(5);
+        for name in ["random", "bfs", "ldg", "metis"] {
+            let a = by_name(name).unwrap().partition(&ds.graph, 1, &mut rng);
+            assert_eq!(ds.graph.edge_cut(&a), 0);
+        }
+    }
+
+    #[test]
+    fn quality_metrics() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let q = quality(&g, &vec![0, 0, 1, 1], 2);
+        assert_eq!(q.edge_cut, 1);
+        assert_eq!(q.sizes, vec![2, 2]);
+        assert!((q.imbalance - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,382 @@
+//! Multilevel k-way partitioner — the METIS substitute.
+//!
+//! Classic three-phase scheme (Karypis & Kumar):
+//! 1. **Coarsen** — heavy-edge matching collapses matched pairs into
+//!    super-nodes (edge weights accumulate) until the graph is small.
+//! 2. **Initial partition** — weighted LDG-style greedy on the coarsest
+//!    graph, respecting node weights.
+//! 3. **Uncoarsen + refine** — project the assignment back level by level,
+//!    running a bounded Kernighan–Lin/FM boundary-refinement pass at each
+//!    level (positive-gain moves only, balance-constrained).
+//!
+//! Produces cut ratios within a small factor of METIS on SBM-style graphs
+//! (measured in EXPERIMENTS.md §Partitioner) — sufficient because LLCG only
+//! depends on the cut through κ, not on exact METIS behaviour.
+
+use super::{Assignment, Partitioner};
+use crate::graph::CsrGraph;
+use crate::util::Pcg64;
+
+/// Weighted graph used internally during coarsening.
+struct WGraph {
+    n: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    /// edge weights, parallel to `indices`
+    eweights: Vec<u64>,
+    /// node weights (number of original nodes collapsed)
+    nweights: Vec<u64>,
+}
+
+impl WGraph {
+    fn from_csr(g: &CsrGraph) -> WGraph {
+        WGraph {
+            n: g.n,
+            indptr: g.indptr.clone(),
+            indices: g.indices.clone(),
+            eweights: vec![1; g.indices.len()],
+            nweights: vec![1; g.n],
+        }
+    }
+
+    fn neighbors(&self, v: u32) -> (&[u32], &[u64]) {
+        let r = self.indptr[v as usize]..self.indptr[v as usize + 1];
+        (&self.indices[r.clone()], &self.eweights[r])
+    }
+}
+
+pub struct MultilevelPartitioner {
+    /// stop coarsening when the graph has at most `coarsen_target * parts`
+    /// super-nodes
+    pub coarsen_target: usize,
+    /// max refinement passes per level
+    pub refine_passes: usize,
+    /// allowed imbalance factor (max part weight / ideal)
+    pub balance: f64,
+}
+
+impl Default for MultilevelPartitioner {
+    fn default() -> Self {
+        Self {
+            coarsen_target: 30,
+            refine_passes: 4,
+            balance: 1.10,
+        }
+    }
+}
+
+impl Partitioner for MultilevelPartitioner {
+    fn partition(&self, g: &CsrGraph, parts: usize, rng: &mut Pcg64) -> Assignment {
+        if parts <= 1 {
+            return vec![0; g.n];
+        }
+        let ml = self.multilevel(g, parts, rng);
+        // On graphs with a dense random overlay (e.g. many cross-community
+        // edges), heavy-edge matching can coarsen along noise edges and the
+        // projected solution is poor. A streaming-LDG seed refined on the
+        // fine graph is a strong fallback; keep whichever cuts less.
+        let ldg = {
+            let mut a = super::LdgPartitioner.partition(g, parts, rng);
+            let wg = WGraph::from_csr(g);
+            refine(&wg, &mut a, parts, self.refine_passes * 2, self.balance);
+            a
+        };
+        if g.edge_cut(&ldg) < g.edge_cut(&ml) {
+            ldg
+        } else {
+            ml
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "metis-like"
+    }
+}
+
+impl MultilevelPartitioner {
+    fn multilevel(&self, g: &CsrGraph, parts: usize, rng: &mut Pcg64) -> Assignment {
+        // ---- coarsening ----------------------------------------------------
+        let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new(); // (graph, map fine->coarse)
+        let mut cur = WGraph::from_csr(g);
+        while cur.n > self.coarsen_target * parts && levels.len() < 30 {
+            let (coarse, map) = coarsen(&cur, rng);
+            if coarse.n as f64 > cur.n as f64 * 0.95 {
+                // matching stalled (e.g. star graphs) — stop
+                levels.push((std::mem::replace(&mut cur, coarse), map));
+                break;
+            }
+            levels.push((std::mem::replace(&mut cur, coarse), map));
+        }
+
+        // ---- initial partition on coarsest --------------------------------
+        let mut assign = initial_partition(&cur, parts, self.balance, rng);
+        refine(&cur, &mut assign, parts, self.refine_passes, self.balance);
+
+        // ---- uncoarsen + refine -------------------------------------------
+        while let Some((fine, map)) = levels.pop() {
+            let mut fine_assign = vec![0u32; fine.n];
+            for v in 0..fine.n {
+                fine_assign[v] = assign[map[v] as usize];
+            }
+            assign = fine_assign;
+            refine(&fine, &mut assign, parts, self.refine_passes, self.balance);
+        }
+        assign
+    }
+}
+
+/// Heavy-edge matching: visit nodes in random order; match each unmatched
+/// node with its heaviest unmatched neighbor; collapse pairs.
+fn coarsen(g: &WGraph, rng: &mut Pcg64) -> (WGraph, Vec<u32>) {
+    let n = g.n;
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![u32::MAX; n];
+    for &v in &order {
+        if mate[v as usize] != u32::MAX {
+            continue;
+        }
+        let (ns, ws) = g.neighbors(v);
+        let mut best = u32::MAX;
+        let mut best_w = 0u64;
+        for (&u, &w) in ns.iter().zip(ws) {
+            if u != v && mate[u as usize] == u32::MAX && w >= best_w {
+                best = u;
+                best_w = w;
+            }
+        }
+        if best != u32::MAX {
+            mate[v as usize] = best;
+            mate[best as usize] = v;
+        } else {
+            mate[v as usize] = v; // self-matched
+        }
+    }
+    // assign coarse ids
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n as u32 {
+        if map[v as usize] != u32::MAX {
+            continue;
+        }
+        let m = mate[v as usize];
+        map[v as usize] = next;
+        if m != v && m != u32::MAX {
+            map[m as usize] = next;
+        }
+        next += 1;
+    }
+    let cn = next as usize;
+    // accumulate coarse adjacency
+    let mut cweights = vec![0u64; cn];
+    for v in 0..n {
+        cweights[map[v] as usize] += g.nweights[v];
+    }
+    let mut adj: Vec<std::collections::HashMap<u32, u64>> =
+        vec![Default::default(); cn];
+    for v in 0..n as u32 {
+        let cv = map[v as usize];
+        let (ns, ws) = g.neighbors(v);
+        for (&u, &w) in ns.iter().zip(ws) {
+            let cu = map[u as usize];
+            if cu != cv {
+                *adj[cv as usize].entry(cu).or_insert(0) += w;
+            }
+        }
+    }
+    let mut indptr = Vec::with_capacity(cn + 1);
+    indptr.push(0usize);
+    let mut indices = Vec::new();
+    let mut eweights = Vec::new();
+    for a in adj.iter() {
+        let mut items: Vec<(u32, u64)> = a.iter().map(|(&u, &w)| (u, w)).collect();
+        items.sort_unstable();
+        for (u, w) in items {
+            indices.push(u);
+            eweights.push(w);
+        }
+        indptr.push(indices.len());
+    }
+    (
+        WGraph {
+            n: cn,
+            indptr,
+            indices,
+            eweights,
+            nweights: cweights,
+        },
+        map,
+    )
+}
+
+/// Weighted greedy seeding on the coarsest graph: BFS-flavoured LDG over
+/// node weights.
+fn initial_partition(g: &WGraph, parts: usize, balance: f64, rng: &mut Pcg64) -> Assignment {
+    let total_w: u64 = g.nweights.iter().sum();
+    let cap = ((total_w as f64 / parts as f64) * balance).ceil() as u64 + 1;
+    let mut assign = vec![u32::MAX; g.n];
+    let mut loads = vec![0u64; parts];
+    let mut order: Vec<u32> = (0..g.n as u32).collect();
+    // heaviest nodes first gives the greedy a better start
+    order.sort_by_key(|&v| std::cmp::Reverse(g.nweights[v as usize]));
+    // random tie-break jitter
+    let chunk = (order.len() / 8).max(1);
+    for w in order.chunks_mut(chunk) {
+        rng.shuffle(w);
+    }
+    let mut gain = vec![0f64; parts];
+    for &v in &order {
+        for gm in gain.iter_mut() {
+            *gm = 0.0;
+        }
+        let (ns, ws) = g.neighbors(v);
+        for (&u, &w) in ns.iter().zip(ws) {
+            let a = assign[u as usize];
+            if a != u32::MAX {
+                gain[a as usize] += w as f64;
+            }
+        }
+        let mut best = usize::MAX;
+        let mut best_score = f64::NEG_INFINITY;
+        for p in 0..parts {
+            if loads[p] + g.nweights[v as usize] > cap {
+                continue;
+            }
+            let penalty = 1.0 - loads[p] as f64 / cap as f64;
+            let score = gain[p] * penalty + 1e-6 * penalty;
+            if score > best_score {
+                best_score = score;
+                best = p;
+            }
+        }
+        if best == usize::MAX {
+            best = (0..parts).min_by_key(|&p| loads[p]).unwrap();
+        }
+        assign[v as usize] = best as u32;
+        loads[best] += g.nweights[v as usize];
+    }
+    assign
+}
+
+/// Bounded KL/FM refinement: repeatedly move boundary nodes to the neighbor
+/// part with the highest positive gain, respecting the balance cap.
+fn refine(g: &WGraph, assign: &mut Assignment, parts: usize, passes: usize, balance: f64) {
+    let total_w: u64 = g.nweights.iter().sum();
+    let cap = ((total_w as f64 / parts as f64) * balance).ceil() as u64 + 1;
+    let mut loads = vec![0u64; parts];
+    for v in 0..g.n {
+        loads[assign[v] as usize] += g.nweights[v];
+    }
+    let mut conn = vec![0i64; parts];
+    for _ in 0..passes {
+        let mut moved = 0usize;
+        for v in 0..g.n as u32 {
+            let from = assign[v as usize] as usize;
+            let (ns, ws) = g.neighbors(v);
+            if ns.is_empty() {
+                continue;
+            }
+            for c in conn.iter_mut() {
+                *c = 0;
+            }
+            let mut boundary = false;
+            for (&u, &w) in ns.iter().zip(ws) {
+                let a = assign[u as usize] as usize;
+                conn[a] += w as i64;
+                if a != from {
+                    boundary = true;
+                }
+            }
+            if !boundary {
+                continue;
+            }
+            let internal = conn[from];
+            let mut best = from;
+            let mut best_gain = 0i64;
+            for (p, &c) in conn.iter().enumerate() {
+                if p == from || c == 0 {
+                    continue;
+                }
+                if loads[p] + g.nweights[v as usize] > cap {
+                    continue;
+                }
+                let gain = c - internal;
+                if gain > best_gain {
+                    best_gain = gain;
+                    best = p;
+                }
+            }
+            if best != from {
+                assign[v as usize] = best as u32;
+                loads[from] -= g.nweights[v as usize];
+                loads[best] += g.nweights[v as usize];
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, SynthConfig};
+    use crate::partition::{quality, RandomPartitioner};
+
+    #[test]
+    fn beats_random_by_a_lot_on_communities() {
+        let mut cfg = SynthConfig::by_name("tiny").unwrap();
+        cfg.n = 2000;
+        cfg.homophily = 0.9;
+        let ds = generators::generate(&cfg, 1);
+        let mut rng = Pcg64::new(2);
+        let ml = MultilevelPartitioner::default().partition(&ds.graph, 4, &mut rng);
+        let rd = RandomPartitioner.partition(&ds.graph, 4, &mut rng);
+        let ml_cut = ds.graph.cut_ratio(&ml);
+        let rd_cut = ds.graph.cut_ratio(&rd);
+        assert!(
+            ml_cut < 0.5 * rd_cut,
+            "multilevel {ml_cut} not << random {rd_cut}"
+        );
+    }
+
+    #[test]
+    fn respects_balance() {
+        let ds = generators::by_name("tiny", 3).unwrap();
+        let mut rng = Pcg64::new(4);
+        for parts in [2usize, 4, 8] {
+            let a = MultilevelPartitioner::default().partition(&ds.graph, parts, &mut rng);
+            let q = quality(&ds.graph, &a, parts);
+            assert!(q.imbalance < 1.35, "imbalance {} at p={parts}", q.imbalance);
+            assert!(q.sizes.iter().all(|&s| s > 0));
+        }
+    }
+
+    #[test]
+    fn handles_tiny_and_disconnected_graphs() {
+        let g = CsrGraph::from_edges(6, &[(0, 1), (2, 3)]); // node 4, 5 isolated
+        let mut rng = Pcg64::new(5);
+        let a = MultilevelPartitioner::default().partition(&g, 2, &mut rng);
+        assert_eq!(a.len(), 6);
+        assert!(a.iter().all(|&x| x < 2));
+    }
+
+    #[test]
+    fn perfect_communities_recovered() {
+        // two cliques joined by one edge: the 2-way cut should be exactly 1
+        let mut edges = Vec::new();
+        for i in 0..10u32 {
+            for j in (i + 1)..10 {
+                edges.push((i, j));
+                edges.push((10 + i, 10 + j));
+            }
+        }
+        edges.push((0, 10));
+        let g = CsrGraph::from_edges(20, &edges);
+        let mut rng = Pcg64::new(6);
+        let a = MultilevelPartitioner::default().partition(&g, 2, &mut rng);
+        assert_eq!(g.edge_cut(&a), 1, "assignment {a:?}");
+    }
+}

@@ -1,0 +1,457 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts (built once by
+//! `make artifacts`) and executes train/eval steps from the coordinator's
+//! hot path. Python is never involved at run time.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily on first use and cached per process.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::sampler::Block;
+use crate::util::{Json, Pcg64};
+
+/// A dense f32 tensor (shape + row-major data).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let len = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; len],
+        }
+    }
+
+    /// Glorot/Xavier-uniform init for weight matrices, zeros for vectors.
+    pub fn glorot(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+        if shape.len() < 2 {
+            return Tensor::zeros(shape);
+        }
+        let (fan_in, fan_out) = (shape[0] as f64, shape[1] as f64);
+        let limit = (6.0 / (fan_in + fan_out)).sqrt() as f32;
+        let len = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..len)
+                .map(|_| (rng.f32() * 2.0 - 1.0) * limit)
+                .collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        self.numel() as u64 * 4
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        // single-copy path (perf pass 2): vec1().reshape() copies twice
+        f32_literal(&self.data, &self.shape)
+    }
+}
+
+/// Build an f32 literal from a slice in one copy (vs `vec1` + `reshape`).
+fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Static dims of one artifact's block format.
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    pub b: usize,
+    pub n1: usize,
+    pub n2: usize,
+    pub d: usize,
+    pub h: usize,
+    pub c: usize,
+    pub f1: usize,
+    pub f2: usize,
+}
+
+/// Manifest entry for one compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // "train" | "eval"
+    pub arch: String,
+    pub optimizer: String, // "adam" | "sgd" | "none"
+    pub loss: String,      // "softmax_ce" | "sigmoid_bce"
+    pub dataset: String,
+    pub dims: Dims,
+    /// ordered (name, shape)
+    pub params: Vec<(String, Vec<usize>)>,
+    pub n_opt: usize,
+}
+
+impl ArtifactMeta {
+    pub fn multilabel(&self) -> bool {
+        self.loss == "sigmoid_bce"
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>() as u64 * 4)
+            .sum()
+    }
+
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let dims = j.req("dims");
+        let gd = |k: &str| -> Result<usize> {
+            dims.req(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("dims.{k} not a number"))
+        };
+        let params = j
+            .req("params")
+            .as_array()
+            .ok_or_else(|| anyhow!("params not an array"))?
+            .iter()
+            .map(|p| {
+                let name = p.req("name").as_str().unwrap_or_default().to_string();
+                let shape: Vec<usize> = p
+                    .req("shape")
+                    .as_array()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_usize())
+                    .collect();
+                (name, shape)
+            })
+            .collect();
+        Ok(ArtifactMeta {
+            name: j.req("name").as_str().unwrap_or_default().to_string(),
+            file: j.req("file").as_str().unwrap_or_default().to_string(),
+            kind: j.req("kind").as_str().unwrap_or_default().to_string(),
+            arch: j.req("arch").as_str().unwrap_or_default().to_string(),
+            optimizer: j.req("optimizer").as_str().unwrap_or_default().to_string(),
+            loss: j.req("loss").as_str().unwrap_or_default().to_string(),
+            dataset: j.req("dataset").as_str().unwrap_or_default().to_string(),
+            dims: Dims {
+                b: gd("b")?,
+                n1: gd("n1")?,
+                n2: gd("n2")?,
+                d: gd("d")?,
+                h: gd("h")?,
+                c: gd("c")?,
+                f1: gd("f1")?,
+                f2: gd("f2")?,
+            },
+            params,
+            n_opt: j.req("n_opt").as_usize().unwrap_or(0),
+        })
+    }
+}
+
+/// Model parameters + optimizer state, in manifest order.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub params: Vec<Tensor>,
+    /// adam: [m.., v.., t]; sgd: empty
+    pub opt: Vec<Tensor>,
+}
+
+impl ModelState {
+    /// Fresh state for a train artifact (Glorot weights, zero opt state).
+    pub fn init(meta: &ArtifactMeta, rng: &mut Pcg64) -> ModelState {
+        let params: Vec<Tensor> = meta
+            .params
+            .iter()
+            .map(|(_, s)| Tensor::glorot(s, rng))
+            .collect();
+        let opt = if meta.optimizer == "adam" {
+            let mut opt: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+            opt.extend(params.iter().map(|p| Tensor::zeros(&p.shape)));
+            opt.push(Tensor::zeros(&[])); // t
+            opt
+        } else {
+            Vec::new()
+        };
+        ModelState { params, opt }
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.params.iter().map(|p| p.size_bytes()).sum()
+    }
+
+    /// Elementwise average of many states' *parameters* (Alg. 2 line 12).
+    /// Optimizer state is not averaged (it stays local, like FedAvg+Adam).
+    pub fn average_params(states: &[&ModelState]) -> Vec<Tensor> {
+        assert!(!states.is_empty());
+        let mut out = states[0].params.clone();
+        for t in out.iter_mut() {
+            for x in t.data.iter_mut() {
+                *x = 0.0;
+            }
+        }
+        let scale = 1.0 / states.len() as f32;
+        for s in states {
+            for (acc, p) in out.iter_mut().zip(&s.params) {
+                debug_assert_eq!(acc.shape, p.shape);
+                for (a, &x) in acc.data.iter_mut().zip(&p.data) {
+                    *a += x * scale;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn set_params(&mut self, params: Vec<Tensor>) {
+        assert_eq!(params.len(), self.params.len());
+        self.params = params;
+    }
+}
+
+/// The PJRT runtime: manifest + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// executions performed (profiling)
+    pub exec_count: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Load `dir/manifest.json`; artifacts compile lazily on first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {manifest_path:?} — run `make artifacts` first to AOT-compile the models"
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut metas = HashMap::new();
+        for a in j
+            .req("artifacts")
+            .as_array()
+            .ok_or_else(|| anyhow!("manifest.artifacts missing"))?
+        {
+            let meta = ArtifactMeta::from_json(a)?;
+            metas.insert(meta.name.clone(), meta);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            metas,
+            execs: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (have: {:?})",
+                self.metas.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.metas.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Conventional artifact names.
+    pub fn train_name(arch: &str, optimizer: &str, dataset: &str) -> String {
+        format!("{arch}_{optimizer}_{dataset}")
+    }
+
+    pub fn eval_name(arch: &str, dataset: &str) -> String {
+        format!("{arch}_eval_{dataset}")
+    }
+
+    fn exec(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.meta(name)?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.execs.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (so timing loops exclude compilation).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.exec(name).map(|_| ())
+    }
+
+    fn block_literals(&self, meta: &ArtifactMeta, block: &Block) -> Result<Vec<xla::Literal>> {
+        let dims = &meta.dims;
+        if block.b != dims.b || block.n1 != dims.n1 || block.n2 != dims.n2 {
+            bail!(
+                "block dims ({},{},{}) do not match artifact {} ({},{},{})",
+                block.b, block.n1, block.n2, meta.name, dims.b, dims.n1, dims.n2
+            );
+        }
+        let shaped = f32_literal;
+        Ok(vec![
+            shaped(&block.a1, &[dims.b, dims.n1])?,
+            shaped(&block.a2, &[dims.n1, dims.n2])?,
+            shaped(&block.x0, &[dims.b, dims.d])?,
+            shaped(&block.x1, &[dims.n1, dims.d])?,
+            shaped(&block.x2, &[dims.n2, dims.d])?,
+        ])
+    }
+
+    fn label_literals(&self, meta: &ArtifactMeta, block: &Block) -> Result<Vec<xla::Literal>> {
+        let dims = &meta.dims;
+        let y = if meta.multilabel() {
+            f32_literal(&block.y_multi, &[dims.b, dims.c])?
+        } else {
+            i32_literal(&block.y_class, &[dims.b])?
+        };
+        let mask = f32_literal(&block.mask, &[dims.b])?;
+        Ok(vec![y, mask])
+    }
+
+    /// Run one train step; mutates `state` in place; returns the batch loss.
+    pub fn train_step(
+        &self,
+        name: &str,
+        state: &mut ModelState,
+        block: &Block,
+        lr: f32,
+    ) -> Result<f32> {
+        let meta = self.meta(name)?.clone();
+        if meta.kind != "train" {
+            bail!("{name} is not a train artifact");
+        }
+        let exe = self.exec(name)?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(
+            state.params.len() + state.opt.len() + 8,
+        );
+        for p in &state.params {
+            inputs.push(p.to_literal()?);
+        }
+        for o in &state.opt {
+            inputs.push(o.to_literal()?);
+        }
+        inputs.extend(self.block_literals(&meta, block)?);
+        inputs.extend(self.label_literals(&meta, block)?);
+        inputs.push(xla::Literal::scalar(lr));
+
+        *self.exec_count.borrow_mut() += 1;
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let expect = 1 + state.params.len() + state.opt.len();
+        if outs.len() != expect {
+            bail!("{name}: expected {expect} outputs, got {}", outs.len());
+        }
+        let mut iter = outs.into_iter();
+        let loss = iter.next().unwrap().to_vec::<f32>()?[0];
+        for p in state.params.iter_mut() {
+            p.data = iter.next().unwrap().to_vec::<f32>()?;
+        }
+        for o in state.opt.iter_mut() {
+            o.data = iter.next().unwrap().to_vec::<f32>()?;
+        }
+        Ok(loss)
+    }
+
+    /// Run one eval step; returns logits `[b * c]`.
+    pub fn eval_step(&self, name: &str, params: &[Tensor], block: &Block) -> Result<Vec<f32>> {
+        let meta = self.meta(name)?.clone();
+        if meta.kind != "eval" {
+            bail!("{name} is not an eval artifact");
+        }
+        let exe = self.exec(name)?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 5);
+        for p in params {
+            inputs.push(p.to_literal()?);
+        }
+        inputs.extend(self.block_literals(&meta, block)?);
+        *self.exec_count.borrow_mut() += 1;
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_glorot_bounds() {
+        let mut rng = Pcg64::new(1);
+        let t = Tensor::glorot(&[64, 32], &mut rng);
+        let limit = (6.0f32 / 96.0).sqrt();
+        assert!(t.data.iter().all(|&x| x.abs() <= limit));
+        assert!(t.data.iter().any(|&x| x.abs() > limit * 0.5));
+        let b = Tensor::glorot(&[32], &mut rng);
+        assert!(b.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn average_params() {
+        let a = ModelState {
+            params: vec![Tensor {
+                shape: vec![2],
+                data: vec![1.0, 3.0],
+            }],
+            opt: vec![],
+        };
+        let b = ModelState {
+            params: vec![Tensor {
+                shape: vec![2],
+                data: vec![3.0, 5.0],
+            }],
+            opt: vec![],
+        };
+        let avg = ModelState::average_params(&[&a, &b]);
+        assert_eq!(avg[0].data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn manifest_meta_parsing() {
+        let j = Json::parse(
+            r#"{"name":"gcn_sgd_tiny","file":"x.hlo.txt","kind":"train",
+                "arch":"gcn","optimizer":"sgd","loss":"softmax_ce","dataset":"tiny",
+                "dims":{"b":8,"n1":32,"n2":128,"d":16,"h":16,"c":4,"f1":4,"f2":4},
+                "params":[{"name":"w1","shape":[16,16]},{"name":"b1","shape":[16]}],
+                "n_opt":0}"#,
+        )
+        .unwrap();
+        let m = ArtifactMeta::from_json(&j).unwrap();
+        assert_eq!(m.dims.n2, 128);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.param_bytes(), (16 * 16 + 16) * 4);
+        assert!(!m.multilabel());
+    }
+}

@@ -1,0 +1,450 @@
+//! Neighbor sampler + dense block builder.
+//!
+//! Bridges the graph substrate and the AOT-compiled compute: for a batch of
+//! `B` target nodes it samples a 2-hop neighborhood (Hamilton et al. style,
+//! Alg. 2 line 6) and materializes the dense block format the HLO train/eval
+//! steps consume (DESIGN.md §L2):
+//!
+//! ```text
+//! level-1 slots: target i owns slots [i*f1, (i+1)*f1); slot i*f1 is the
+//!                target itself (self-loop), the rest are sampled neighbors.
+//! level-2 slots: level-1 slot j owns slots [j*f2, (j+1)*f2) likewise.
+//! A1[i, s] = 1/(#filled slots of i)  — row-normalized mean aggregation.
+//! ```
+//!
+//! The *same* builder serves local training (induced-subgraph adjacency =
+//! "ignore cut-edges"), GGS (full adjacency + remote-feature accounting) and
+//! server correction (full adjacency, full-neighbor-up-to-cap sampling).
+
+use crate::graph::{CsrGraph, Dataset, Labels};
+use crate::util::Pcg64;
+
+pub const EMPTY: u32 = u32::MAX;
+
+/// Dense mini-batch block — input payload for one HLO train/eval step.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub b: usize,
+    pub n1: usize,
+    pub n2: usize,
+    pub d: usize,
+    pub c: usize,
+    /// `[b * n1]` row-major
+    pub a1: Vec<f32>,
+    /// `[n1 * n2]` row-major
+    pub a2: Vec<f32>,
+    pub x0: Vec<f32>,
+    pub x1: Vec<f32>,
+    pub x2: Vec<f32>,
+    /// multiclass labels (i32 for the HLO side); empty if multilabel
+    pub y_class: Vec<i32>,
+    /// multilabel targets `[b * c]`; empty if multiclass
+    pub y_multi: Vec<f32>,
+    pub mask: Vec<f32>,
+    /// node behind each level-1 slot (EMPTY = padding)
+    pub nodes_l1: Vec<u32>,
+    /// node behind each level-2 slot (EMPTY = padding)
+    pub nodes_l2: Vec<u32>,
+    /// the targets themselves
+    pub targets: Vec<u32>,
+}
+
+impl Block {
+    /// Unique real node ids touched by this block (targets + both levels).
+    pub fn unique_nodes(&self) -> Vec<u32> {
+        let mut all: Vec<u32> = self
+            .targets
+            .iter()
+            .chain(self.nodes_l1.iter())
+            .chain(self.nodes_l2.iter())
+            .copied()
+            .filter(|&v| v != EMPTY)
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+
+    /// Bytes of feature data for nodes whose part != `part` under
+    /// `assignment` — the GGS per-batch feature-communication cost.
+    pub fn remote_feature_bytes(&self, assignment: &[u32], part: u32) -> u64 {
+        let remote = self
+            .unique_nodes()
+            .into_iter()
+            .filter(|&v| assignment[v as usize] != part)
+            .count() as u64;
+        remote * (self.d as u64) * 4
+    }
+}
+
+/// Sampling policy for one level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fanout {
+    /// sample up to `k` neighbors uniformly without replacement
+    Sample,
+    /// take neighbors in order up to the slot cap ("full neighbors", capped
+    /// by the static block shape — see DESIGN.md on the correction step)
+    Full,
+}
+
+/// Block builder bound to one artifact's static dims.
+#[derive(Clone, Debug)]
+pub struct BlockBuilder {
+    pub b: usize,
+    pub f1: usize,
+    pub f2: usize,
+    pub d: usize,
+    pub c: usize,
+    pub multilabel: bool,
+    /// neighbor sampling policy (local training samples; correction is Full)
+    pub fanout: Fanout,
+    /// if < 1.0, only this fraction of the fanout slots are used for
+    /// neighbors (the Fig 6 "sampling ratio" knob)
+    pub sample_ratio: f64,
+}
+
+impl BlockBuilder {
+    pub fn new(b: usize, f1: usize, f2: usize, d: usize, c: usize, multilabel: bool) -> Self {
+        BlockBuilder {
+            b,
+            f1,
+            f2,
+            d,
+            c,
+            multilabel,
+            fanout: Fanout::Sample,
+            sample_ratio: 1.0,
+        }
+    }
+
+    pub fn n1(&self) -> usize {
+        self.b * self.f1
+    }
+
+    pub fn n2(&self) -> usize {
+        self.b * self.f1 * self.f2
+    }
+
+    /// Fill one level: node `u`'s slot group of width `f`; slot 0 is `u`
+    /// itself, the rest sampled/capped neighbors. Returns filled count.
+    fn fill_slots(
+        &self,
+        adj: &CsrGraph,
+        u: u32,
+        f: usize,
+        out_nodes: &mut [u32],
+        rng: &mut Pcg64,
+    ) -> usize {
+        debug_assert_eq!(out_nodes.len(), f);
+        out_nodes.fill(EMPTY);
+        out_nodes[0] = u;
+        let budget = (((f - 1) as f64) * self.sample_ratio).round() as usize;
+        if budget == 0 {
+            return 1;
+        }
+        let neigh = adj.neighbors(u);
+        let chosen: Vec<u32> = match self.fanout {
+            Fanout::Sample => rng.sample_without_replacement(neigh, budget),
+            Fanout::Full => neigh.iter().copied().take(budget).collect(),
+        };
+        let mut cnt = 1;
+        for (i, v) in chosen.into_iter().enumerate() {
+            out_nodes[1 + i] = v;
+            cnt += 1;
+        }
+        cnt
+    }
+
+    /// Build a block for `targets` (≤ B; short batches are padded + masked).
+    pub fn build(
+        &self,
+        targets: &[u32],
+        adj: &CsrGraph,
+        ds: &Dataset,
+        rng: &mut Pcg64,
+    ) -> Block {
+        assert!(targets.len() <= self.b, "batch larger than block B");
+        assert_eq!(ds.d, self.d, "dataset d mismatch");
+        let (b, f1, f2, d, c) = (self.b, self.f1, self.f2, self.d, self.c);
+        let (n1, n2) = (self.n1(), self.n2());
+
+        let mut nodes_l1 = vec![EMPTY; n1];
+        let mut nodes_l2 = vec![EMPTY; n2];
+        let mut a1 = vec![0f32; b * n1];
+        let mut a2 = vec![0f32; n1 * n2];
+        let mut mask = vec![0f32; b];
+        let mut padded_targets = vec![EMPTY; b];
+
+        for (i, &t) in targets.iter().enumerate() {
+            padded_targets[i] = t;
+            mask[i] = 1.0;
+            let slots = &mut nodes_l1[i * f1..(i + 1) * f1];
+            let cnt = self.fill_slots(adj, t, f1, slots, rng);
+            let w = 1.0 / cnt as f32;
+            for s in 0..f1 {
+                if nodes_l1[i * f1 + s] != EMPTY {
+                    a1[i * n1 + i * f1 + s] = w;
+                }
+            }
+        }
+        for j in 0..n1 {
+            let u = nodes_l1[j];
+            if u == EMPTY {
+                continue;
+            }
+            let slots_start = j * f2;
+            let cnt = {
+                let slots = &mut nodes_l2[slots_start..slots_start + f2];
+                self.fill_slots(adj, u, f2, slots, rng)
+            };
+            let w = 1.0 / cnt as f32;
+            for s in 0..f2 {
+                if nodes_l2[slots_start + s] != EMPTY {
+                    a2[j * n2 + slots_start + s] = w;
+                }
+            }
+        }
+
+        // feature gathers (zeros for EMPTY slots)
+        let gather = |nodes: &[u32]| {
+            let mut out = vec![0f32; nodes.len() * d];
+            for (i, &v) in nodes.iter().enumerate() {
+                if v != EMPTY {
+                    out[i * d..(i + 1) * d].copy_from_slice(ds.feature(v));
+                }
+            }
+            out
+        };
+        let x0 = gather(&padded_targets);
+        let x1 = gather(&nodes_l1);
+        let x2 = gather(&nodes_l2);
+
+        // labels
+        let mut y_class = Vec::new();
+        let mut y_multi = Vec::new();
+        match (&ds.labels, self.multilabel) {
+            (Labels::MultiClass(y), false) => {
+                y_class = padded_targets
+                    .iter()
+                    .map(|&t| if t == EMPTY { 0 } else { y[t as usize] as i32 })
+                    .collect();
+            }
+            (Labels::MultiLabel { data, c: dc }, true) => {
+                assert_eq!(*dc, c, "label dim mismatch");
+                y_multi = vec![0f32; b * c];
+                for (i, &t) in padded_targets.iter().enumerate() {
+                    if t != EMPTY {
+                        y_multi[i * c..(i + 1) * c]
+                            .copy_from_slice(&data[t as usize * c..(t as usize + 1) * c]);
+                    }
+                }
+            }
+            _ => panic!("label kind / builder multilabel flag mismatch"),
+        }
+
+        Block {
+            b,
+            n1,
+            n2,
+            d,
+            c,
+            a1,
+            a2,
+            x0,
+            x1,
+            x2,
+            y_class,
+            y_multi,
+            mask,
+            nodes_l1,
+            nodes_l2,
+            targets: padded_targets,
+        }
+    }
+}
+
+/// Iterate over `ids` in seeded-shuffled mini-batches of size `b`.
+pub struct BatchIter {
+    ids: Vec<u32>,
+    pos: usize,
+    b: usize,
+}
+
+impl BatchIter {
+    pub fn new(ids: &[u32], b: usize, rng: &mut Pcg64) -> Self {
+        let mut ids = ids.to_vec();
+        rng.shuffle(&mut ids);
+        BatchIter { ids, pos: 0, b }
+    }
+}
+
+impl Iterator for BatchIter {
+    type Item = Vec<u32>;
+
+    fn next(&mut self) -> Option<Vec<u32>> {
+        if self.pos >= self.ids.len() {
+            return None;
+        }
+        let end = (self.pos + self.b).min(self.ids.len());
+        let out = self.ids[self.pos..end].to_vec();
+        self.pos = end;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn setup() -> (Dataset, BlockBuilder, Pcg64) {
+        let ds = generators::by_name("tiny", 0).unwrap();
+        let bb = BlockBuilder::new(8, 4, 4, ds.d, ds.c(), false);
+        (ds, bb, Pcg64::new(1))
+    }
+
+    #[test]
+    fn rows_are_normalized() {
+        let (ds, bb, mut rng) = setup();
+        let targets: Vec<u32> = (0..8).collect();
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        for i in 0..blk.b {
+            let row: f32 = blk.a1[i * blk.n1..(i + 1) * blk.n1].iter().sum();
+            assert!((row - 1.0).abs() < 1e-5, "a1 row {i} sums to {row}");
+        }
+        for j in 0..blk.n1 {
+            let row: f32 = blk.a2[j * blk.n2..(j + 1) * blk.n2].iter().sum();
+            if blk.nodes_l1[j] == EMPTY {
+                assert_eq!(row, 0.0, "padding row {j} not zero");
+            } else {
+                assert!((row - 1.0).abs() < 1e-5, "a2 row {j} sums to {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn slot_zero_is_self() {
+        let (ds, bb, mut rng) = setup();
+        let targets: Vec<u32> = vec![5, 9, 13];
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        for (i, &t) in targets.iter().enumerate() {
+            assert_eq!(blk.nodes_l1[i * bb.f1], t);
+            assert_eq!(blk.nodes_l2[i * bb.f1 * bb.f2], t);
+        }
+    }
+
+    #[test]
+    fn short_batch_masked() {
+        let (ds, bb, mut rng) = setup();
+        let blk = bb.build(&[1, 2, 3], &ds.graph, &ds, &mut rng);
+        assert_eq!(&blk.mask[..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&blk.mask[3..], &[0.0; 5]);
+        // padded target rows of A1 must be all-zero
+        for i in 3..8 {
+            assert!(blk.a1[i * blk.n1..(i + 1) * blk.n1].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn sampled_neighbors_are_real_neighbors() {
+        let (ds, bb, mut rng) = setup();
+        let targets: Vec<u32> = (20..28).collect();
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        for (i, &t) in targets.iter().enumerate() {
+            for s in 1..bb.f1 {
+                let v = blk.nodes_l1[i * bb.f1 + s];
+                if v != EMPTY {
+                    assert!(ds.graph.neighbors(t).contains(&v), "{v} not nbr of {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn induced_view_never_crosses_parts() {
+        let (ds, bb, mut rng) = setup();
+        let assignment: Vec<u32> = (0..ds.n() as u32).map(|v| v % 2).collect();
+        let local = ds.graph.induced_view(&assignment, 0);
+        let targets: Vec<u32> = (0..ds.n() as u32)
+            .filter(|&v| assignment[v as usize] == 0)
+            .take(8)
+            .collect();
+        let blk = bb.build(&targets, &local, &ds, &mut rng);
+        for &v in blk.nodes_l1.iter().chain(&blk.nodes_l2) {
+            if v != EMPTY {
+                assert_eq!(assignment[v as usize], 0, "cut-edge node {v} leaked in");
+            }
+        }
+        assert_eq!(blk.remote_feature_bytes(&assignment, 0), 0);
+    }
+
+    #[test]
+    fn remote_bytes_counted_on_global_view() {
+        let (ds, bb, mut rng) = setup();
+        let assignment: Vec<u32> = (0..ds.n() as u32).map(|v| v % 2).collect();
+        let targets: Vec<u32> = (0..ds.n() as u32)
+            .filter(|&v| assignment[v as usize] == 0)
+            .take(8)
+            .collect();
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        // with ~alternating assignment the 2-hop set will contain remotes
+        assert!(blk.remote_feature_bytes(&assignment, 0) > 0);
+        // and the bytes are 4*d per unique remote node
+        let uniq = blk.unique_nodes();
+        let remote = uniq.iter().filter(|&&v| assignment[v as usize] != 0).count();
+        assert_eq!(
+            blk.remote_feature_bytes(&assignment, 0),
+            (remote * ds.d * 4) as u64
+        );
+    }
+
+    #[test]
+    fn sample_ratio_shrinks_fanout() {
+        let (ds, mut bb, mut rng) = setup();
+        bb.sample_ratio = 0.34; // 1 of 3 neighbor slots
+        let targets: Vec<u32> = (0..8).collect();
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        for i in 0..8 {
+            let filled = blk.nodes_l1[i * bb.f1..(i + 1) * bb.f1]
+                .iter()
+                .filter(|&&v| v != EMPTY)
+                .count();
+            assert!(filled <= 2, "row {i} has {filled} slots at ratio 0.34");
+        }
+    }
+
+    #[test]
+    fn full_fanout_is_deterministic_prefix() {
+        let (ds, mut bb, mut rng) = setup();
+        bb.fanout = Fanout::Full;
+        let t = 3u32;
+        let blk1 = bb.build(&[t], &ds.graph, &ds, &mut rng);
+        let blk2 = bb.build(&[t], &ds.graph, &ds, &mut rng);
+        assert_eq!(blk1.nodes_l1, blk2.nodes_l1);
+        let nbrs = ds.graph.neighbors(t);
+        for s in 1..bb.f1.min(nbrs.len() + 1) {
+            assert_eq!(blk1.nodes_l1[s], nbrs[s - 1]);
+        }
+    }
+
+    #[test]
+    fn batch_iter_covers_all_ids() {
+        let ids: Vec<u32> = (0..23).collect();
+        let mut rng = Pcg64::new(9);
+        let mut seen: Vec<u32> = BatchIter::new(&ids, 5, &mut rng).flatten().collect();
+        assert_eq!(seen.len(), 23);
+        seen.sort_unstable();
+        assert_eq!(seen, ids);
+    }
+
+    #[test]
+    fn multilabel_blocks() {
+        let ds = generators::by_name("proteins-s", 0).unwrap();
+        let bb = BlockBuilder::new(4, 3, 3, ds.d, ds.c(), true);
+        let mut rng = Pcg64::new(2);
+        let blk = bb.build(&[0, 1], &ds.graph, &ds, &mut rng);
+        assert!(blk.y_class.is_empty());
+        assert_eq!(blk.y_multi.len(), 4 * ds.c());
+        assert!(blk.y_multi.iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+}

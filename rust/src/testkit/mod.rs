@@ -1,0 +1,220 @@
+//! Property-based-testing harness (std-only substitute for `proptest`,
+//! DESIGN.md §Substitutions).
+//!
+//! `check(cases, strategy, property)` runs `property` on `cases` random
+//! inputs drawn by `strategy`; on failure it performs greedy shrinking via
+//! the strategy's `shrink` and reports the minimal failing input plus the
+//! seed needed to replay it deterministically.
+
+use crate::util::Pcg64;
+
+/// A value generator with optional shrinking.
+pub trait Strategy {
+    type Value: std::fmt::Debug + Clone;
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+
+    /// Candidate "smaller" values, most aggressive first.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` generated inputs. Panics (with the shrunk
+/// counterexample + replay seed) if the property returns false or panics.
+pub fn check<S: Strategy>(
+    seed: u64,
+    cases: usize,
+    strategy: &S,
+    property: impl Fn(&S::Value) -> bool,
+) {
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let value = strategy.generate(&mut rng);
+        if holds(&property, &value) {
+            continue;
+        }
+        // shrink greedily
+        let mut failing = value;
+        let mut improved = true;
+        let mut rounds = 0;
+        while improved && rounds < 200 {
+            improved = false;
+            rounds += 1;
+            for cand in strategy.shrink(&failing) {
+                if !holds(&property, &cand) {
+                    failing = cand;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        panic!(
+            "property failed (seed={seed}, case={case})\nminimal counterexample: {failing:#?}"
+        );
+    }
+}
+
+fn holds<V: std::fmt::Debug>(property: &impl Fn(&V) -> bool, v: &V) -> bool {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(v))).unwrap_or(false)
+}
+
+// ---------------------------------------------------------------- strategies
+
+/// Uniform usize in `[lo, hi]`, shrinks toward `lo`.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Strategy for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.gen_range((self.1 - self.0 + 1) as u64) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Pair of independent strategies.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Random graph specification: node count + edge list + a seed to vary
+/// topology. Shrinks by dropping edges then nodes.
+#[derive(Clone, Debug)]
+pub struct GraphCase {
+    pub n: usize,
+    pub edges: Vec<(u32, u32)>,
+}
+
+pub struct GraphStrategy {
+    pub max_n: usize,
+    pub max_extra_edges: usize,
+}
+
+impl Strategy for GraphStrategy {
+    type Value = GraphCase;
+
+    fn generate(&self, rng: &mut Pcg64) -> GraphCase {
+        let n = 2 + rng.gen_range((self.max_n - 1) as u64) as usize;
+        let mut edges = Vec::new();
+        // random spanning-ish chain for connectivity, then noise edges
+        for v in 1..n as u32 {
+            let u = rng.gen_range(v as u64) as u32;
+            edges.push((u, v));
+        }
+        let extra = rng.gen_range(self.max_extra_edges as u64 + 1) as usize;
+        for _ in 0..extra {
+            let u = rng.gen_range(n as u64) as u32;
+            let v = rng.gen_range(n as u64) as u32;
+            if u != v {
+                edges.push((u, v));
+            }
+        }
+        GraphCase { n, edges }
+    }
+
+    fn shrink(&self, v: &GraphCase) -> Vec<GraphCase> {
+        let mut out = Vec::new();
+        if v.edges.len() > 1 {
+            out.push(GraphCase {
+                n: v.n,
+                edges: v.edges[..v.edges.len() / 2].to_vec(),
+            });
+            out.push(GraphCase {
+                n: v.n,
+                edges: v.edges[..v.edges.len() - 1].to_vec(),
+            });
+        }
+        if v.n > 2 {
+            let n2 = v.n - 1;
+            out.push(GraphCase {
+                n: n2,
+                edges: v
+                    .edges
+                    .iter()
+                    .copied()
+                    .filter(|&(a, b)| (a as usize) < n2 && (b as usize) < n2)
+                    .collect(),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(1, 50, &UsizeRange(0, 100), |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        check(2, 100, &UsizeRange(0, 1000), |&x| x < 500);
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // capture the panic message and ensure the shrunk value is minimal
+        let result = std::panic::catch_unwind(|| {
+            check(3, 200, &UsizeRange(0, 1_000), |&x| x < 700);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy shrink should land well below the generated failure
+        assert!(msg.contains("counterexample"), "{msg}");
+        let value: usize = msg
+            .rsplit(':')
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .expect("numeric counterexample");
+        assert!(value >= 700 && value <= 720, "poorly shrunk: {value}");
+    }
+
+    #[test]
+    fn graph_strategy_generates_valid_edges() {
+        let s = GraphStrategy {
+            max_n: 30,
+            max_extra_edges: 50,
+        };
+        let mut rng = Pcg64::new(4);
+        for _ in 0..50 {
+            let g = s.generate(&mut rng);
+            assert!(g.n >= 2);
+            for &(u, v) in &g.edges {
+                assert!((u as usize) < g.n && (v as usize) < g.n && u != v);
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Std-only substrates: seeded RNG, JSON, statistics, timing.
+//!
+//! The offline build environment provides no `rand`/`serde`/`serde_json`
+//! crates, so these are purpose-built (DESIGN.md §Substitutions). Each is a
+//! small, fully-tested implementation of exactly what the coordinator needs.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Pcg64;
+pub use stats::Summary;
+
+/// Wall-clock a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}

@@ -1,0 +1,265 @@
+//! PCG-64 (XSL-RR) pseudo-random generator — deterministic, seedable,
+//! splittable. Every stochastic component (generators, partitioners,
+//! samplers, initializers) takes one of these so whole distributed runs are
+//! exactly reproducible from a single seed.
+
+/// PCG-XSL-RR 128/64 (O'Neill 2014). 128-bit LCG state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with SplitMix64 expansion so nearby integer seeds decorrelate.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        };
+        let state = ((next() as u128) << 64) | next() as u128;
+        let inc = (((next() as u128) << 64) | next() as u128) | 1;
+        let mut rng = Self { state, inc };
+        rng.next_u64(); // burn-in so state fully mixes the seed
+        rng
+    }
+
+    /// Derive an independent child stream (worker p, round r, ...).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift (unbiased).
+    #[inline]
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "gen_range bound must be positive");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53-bit precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided: trig is fine here).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // (0, 1]
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle in place.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick one element uniformly (panics on empty slice).
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len() as u64) as usize]
+    }
+
+    /// Sample `k` distinct items from `xs` without replacement.
+    /// Uses partial Fisher–Yates over an index buffer for small `xs`,
+    /// reservoir ("Algorithm R") when `xs` is large relative to `k`.
+    pub fn sample_without_replacement<T: Copy>(&mut self, xs: &[T], k: usize) -> Vec<T> {
+        let n = xs.len();
+        let k = k.min(n);
+        if k == 0 {
+            return Vec::new();
+        }
+        if n <= 64 || k * 4 >= n {
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            for i in 0..k {
+                let j = i + self.gen_range((n - i) as u64) as usize;
+                idx.swap(i, j);
+            }
+            idx[..k].iter().map(|&i| xs[i as usize]).collect()
+        } else {
+            let mut res: Vec<T> = xs[..k].to_vec();
+            for i in k..n {
+                let j = self.gen_range(i as u64 + 1) as usize;
+                if j < k {
+                    res[j] = xs[i];
+                }
+            }
+            res
+        }
+    }
+
+    /// Sample from an unnormalized discrete distribution (linear scan).
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted_index needs positive mass");
+        let mut target = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (mut a, mut b) = (Pcg64::new(1), Pcg64::new(2));
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn gen_range_in_bounds_and_covers() {
+        let mut rng = Pcg64::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = rng.gen_range(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut rng = Pcg64::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(13);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct() {
+        let mut rng = Pcg64::new(3);
+        let xs: Vec<u32> = (0..100).collect();
+        for &k in &[0usize, 1, 5, 50, 100, 150] {
+            let s = rng.sample_without_replacement(&xs, k);
+            assert_eq!(s.len(), k.min(100));
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), s.len(), "duplicates at k={k}");
+        }
+    }
+
+    #[test]
+    fn reservoir_path_uniformity() {
+        // k small relative to n triggers the reservoir path; check coverage.
+        let mut rng = Pcg64::new(5);
+        let xs: Vec<u32> = (0..1000).collect();
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..2000 {
+            for v in rng.sample_without_replacement(&xs, 10) {
+                counts[v as usize] += 1;
+            }
+        }
+        let hit = counts.iter().filter(|&&c| c > 0).count();
+        assert!(hit > 950, "coverage {hit}/1000");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(9);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_index_respects_mass() {
+        let mut rng = Pcg64::new(17);
+        let w = [0.0, 0.0, 1.0, 3.0];
+        let mut counts = [0u32; 4];
+        for _ in 0..4000 {
+            counts[rng.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[0] + counts[1], 0);
+        let ratio = counts[3] as f64 / counts[2] as f64;
+        assert!((ratio - 3.0).abs() < 0.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Pcg64::new(1);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

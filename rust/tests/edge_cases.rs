@@ -1,0 +1,277 @@
+//! Edge-case and failure-injection tests across modules: degenerate graphs,
+//! empty parts, short batches, malformed configs/manifests, metric corner
+//! cases, and the gradient-extraction path.
+
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{discrepancy, driver, Algorithm, Schedule};
+use llcg::graph::{generators, CsrGraph, Dataset, Labels, Splits};
+use llcg::metrics;
+use llcg::partition::{self, Partitioner};
+use llcg::runtime::{ModelState, Runtime};
+use llcg::sampler::{BlockBuilder, EMPTY};
+use llcg::util::{Json, Pcg64};
+
+fn artifacts() -> Option<Runtime> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Runtime::load("artifacts").ok()
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// degenerate graphs
+// ---------------------------------------------------------------------------
+#[test]
+fn edgeless_graph_everything_still_works() {
+    let g = CsrGraph::from_edges(10, &[]);
+    assert_eq!(g.num_edges(), 0);
+    assert_eq!(g.avg_degree(), 0.0);
+    let mut rng = Pcg64::new(1);
+    for name in ["random", "bfs", "ldg", "metis"] {
+        let a = partition::by_name(name).unwrap().partition(&g, 3, &mut rng);
+        assert_eq!(a.len(), 10);
+        assert_eq!(g.edge_cut(&a), 0);
+    }
+}
+
+#[test]
+fn isolated_node_gets_self_only_block() {
+    let g = CsrGraph::from_edges(3, &[(0, 1)]); // node 2 isolated
+    let ds = Dataset {
+        name: "iso".into(),
+        graph: g,
+        features: vec![1.0; 3 * 2],
+        d: 2,
+        labels: Labels::MultiClass(vec![0, 1, 0]),
+        splits: Splits {
+            train: vec![0, 1, 2],
+            val: vec![],
+            test: vec![],
+        },
+    };
+    let bb = BlockBuilder::new(2, 3, 3, 2, 2, false);
+    let mut rng = Pcg64::new(2);
+    let blk = bb.build(&[2], &ds.graph, &ds, &mut rng);
+    // slot 0 = self, all neighbor slots EMPTY, row still normalized (1 slot)
+    assert_eq!(blk.nodes_l1[0], 2);
+    assert_eq!(&blk.nodes_l1[1..3], &[EMPTY, EMPTY]);
+    let row: f32 = blk.a1[..blk.n1].iter().sum();
+    assert!((row - 1.0).abs() < 1e-6);
+}
+
+#[test]
+fn star_graph_partitioners_terminate() {
+    // pathological for heavy-edge matching: one hub
+    let edges: Vec<(u32, u32)> = (1..500u32).map(|v| (0, v)).collect();
+    let g = CsrGraph::from_edges(500, &edges);
+    let mut rng = Pcg64::new(3);
+    let a = partition::by_name("metis").unwrap().partition(&g, 4, &mut rng);
+    assert_eq!(a.len(), 500);
+}
+
+// ---------------------------------------------------------------------------
+// empty / skewed parts in the driver
+// ---------------------------------------------------------------------------
+#[test]
+fn run_with_more_parts_than_train_clusters() {
+    // tiny has 150 train nodes; P=32 leaves some parts nearly empty —
+    // the round loop must survive empty-part workers.
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.parts = 32;
+    cfg.rounds = 2;
+    cfg.schedule = Schedule::Fixed { k: 1 };
+    cfg.eval_max_nodes = 32;
+    let ds = generators::by_name("tiny", 0).unwrap();
+    let res = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    assert_eq!(res.records.len(), 2);
+    assert!(res.final_val.is_finite());
+}
+
+#[test]
+fn batch_larger_than_worker_train_set_is_padded() {
+    let Some(rt) = artifacts() else { return };
+    let meta = rt.meta("gcn_sgd_tiny").unwrap().clone();
+    let ds = generators::by_name("tiny", 0).unwrap();
+    let bb = BlockBuilder::new(
+        meta.dims.b,
+        meta.dims.f1,
+        meta.dims.f2,
+        meta.dims.d,
+        meta.dims.c,
+        false,
+    );
+    let mut rng = Pcg64::new(4);
+    let mut state = ModelState::init(&meta, &mut rng);
+    let blk = bb.build(&[3], &ds.graph, &ds, &mut rng); // 1 of 8 slots real
+    let loss = rt.train_step("gcn_sgd_tiny", &mut state, &blk, 0.1).unwrap();
+    assert!(loss.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// config / manifest failure injection
+// ---------------------------------------------------------------------------
+#[test]
+fn config_rejects_bad_values() {
+    let bad = [
+        r#"{"algorithm": "warp-drive"}"#,
+        r#"{"correction_batch": "sideways"}"#,
+        r#"{"parts": "eight"}"#,
+        r#"{"lr": true}"#,
+        r#"{"no_such_key": 1}"#,
+    ];
+    for b in bad {
+        let j = Json::parse(b).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {b}");
+    }
+}
+
+#[test]
+fn runtime_load_missing_dir_fails_with_hint() {
+    let msg = match Runtime::load("/nonexistent/path") {
+        Ok(_) => panic!("load of missing dir should fail"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn runtime_unknown_artifact_fails() {
+    let Some(rt) = artifacts() else { return };
+    assert!(rt.meta("no_such_artifact").is_err());
+}
+
+#[test]
+fn driver_rejects_dataset_artifact_mismatch() {
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.arch = "gcn".into();
+    // dataset generated with different feature dim than the artifact
+    let mut ds = generators::by_name("tiny", 0).unwrap();
+    ds.d = 8;
+    ds.features.truncate(ds.n() * 8);
+    assert!(driver::run_experiment(&cfg, &ds, &rt).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// metrics corner cases
+// ---------------------------------------------------------------------------
+#[test]
+fn metrics_empty_ids() {
+    let labels = Labels::MultiClass(vec![0, 1]);
+    assert_eq!(metrics::micro_f1(&[], 2, &labels, &[]), 0.0);
+    assert_eq!(metrics::roc_auc(&[], 2, &labels, &[]), 0.0);
+    assert_eq!(metrics::mean_loss(&[], 2, &labels, &[]), 0.0);
+}
+
+#[test]
+fn auc_skips_single_class_columns() {
+    // class 1 has no positives among ids -> skipped, not NaN
+    let labels = Labels::MultiClass(vec![0, 0, 0]);
+    let logits = vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0];
+    let auc = metrics::roc_auc(&logits, 2, &labels, &[0, 1, 2]);
+    assert!(auc.is_finite());
+}
+
+#[test]
+fn multilabel_f1_all_negative_predictions() {
+    let labels = Labels::MultiLabel {
+        data: vec![0.0, 0.0, 0.0, 0.0],
+        c: 2,
+    };
+    let logits = vec![-5.0, -5.0, -5.0, -5.0];
+    // no positives anywhere -> define 0.0, not NaN
+    let f1 = metrics::micro_f1(&logits, 2, &labels, &[0, 1]);
+    assert_eq!(f1, 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// gradient extraction / discrepancy
+// ---------------------------------------------------------------------------
+#[test]
+fn gradient_extraction_is_finite_and_nonzero() {
+    let Some(rt) = artifacts() else { return };
+    let ds = generators::by_name("tiny", 0).unwrap();
+    let meta = rt.meta("gcn_sgd_tiny").unwrap().clone();
+    let mut rng = Pcg64::new(5);
+    let params = ModelState::init(&meta, &mut rng).params;
+    let bb = BlockBuilder::new(
+        meta.dims.b,
+        meta.dims.f1,
+        meta.dims.f2,
+        meta.dims.d,
+        meta.dims.c,
+        false,
+    );
+    let g = discrepancy::estimate_gradient(
+        &rt,
+        "gcn_sgd_tiny",
+        &params,
+        &ds,
+        &ds.graph,
+        &ds.splits.train,
+        &bb,
+        2,
+        &mut rng,
+    )
+    .unwrap();
+    assert!(g.iter().all(|x| x.is_finite()));
+    let norm: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    assert!(norm > 0.0, "zero gradient at init");
+}
+
+#[test]
+fn discrepancy_kappa_larger_for_worse_partitions() {
+    let Some(rt) = artifacts() else { return };
+    if rt.meta("gcn_sgd_tiny-hetero").is_err() {
+        eprintln!("skipping: tiny-hetero artifacts not built");
+        return;
+    }
+    let ds = generators::by_name("tiny-hetero", 0).unwrap();
+    let meta = rt.meta("gcn_sgd_tiny-hetero").unwrap().clone();
+    let mut rng = Pcg64::new(6);
+    let params = ModelState::init(&meta, &mut rng).params;
+    let assign_metis = partition::by_name("metis")
+        .unwrap()
+        .partition(&ds.graph, 4, &mut rng);
+    let d = discrepancy::measure(
+        &rt,
+        "gcn",
+        "tiny-hetero",
+        &params,
+        &ds,
+        &assign_metis,
+        4,
+        3,
+        7,
+    )
+    .unwrap();
+    assert!(d.kappa_a >= 0.0 && d.kappa_x >= 0.0 && d.sigma_bias >= 0.0);
+    assert!(d.kappa() > 0.0, "decoupled dataset must have nonzero kappa");
+}
+
+// ---------------------------------------------------------------------------
+// run-result serialization
+// ---------------------------------------------------------------------------
+#[test]
+fn run_result_json_roundtrips() {
+    let Some(rt) = artifacts() else { return };
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.rounds = 2;
+    cfg.schedule = Schedule::Fixed { k: 1 };
+    cfg.eval_max_nodes = 16;
+    cfg.algorithm = Algorithm::PsgdPa;
+    let ds = generators::by_name("tiny", 0).unwrap();
+    let res = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    let j = res.to_json();
+    let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+    assert_eq!(parsed.req("algorithm").as_str(), Some("psgd-pa"));
+    assert_eq!(
+        parsed.req("rounds").as_array().map(|a| a.len()),
+        Some(2usize)
+    );
+}

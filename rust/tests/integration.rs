@@ -1,0 +1,334 @@
+//! Integration tests over the full stack: runtime (PJRT + HLO artifacts) +
+//! sampler + coordinator. Require `make artifacts` (the `tiny` set).
+//!
+//! Kept on the `tiny` shape config so the whole file runs in seconds.
+
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::graph::generators;
+use llcg::metrics;
+use llcg::runtime::{ModelState, Runtime};
+use llcg::sampler::{BlockBuilder, Fanout};
+use llcg::util::Pcg64;
+
+fn artifacts_dir() -> String {
+    // tests run from the crate root
+    let p = std::path::Path::new("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` first"
+    );
+    "artifacts".to_string()
+}
+
+fn tiny_setup() -> (llcg::graph::Dataset, Runtime) {
+    let ds = generators::by_name("tiny", 0).unwrap();
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    (ds, rt)
+}
+
+fn builder_for(rt: &Runtime, name: &str) -> BlockBuilder {
+    let meta = rt.meta(name).unwrap();
+    BlockBuilder::new(
+        meta.dims.b,
+        meta.dims.f1,
+        meta.dims.f2,
+        meta.dims.d,
+        meta.dims.c,
+        meta.multilabel(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// runtime-level
+// ---------------------------------------------------------------------------
+#[test]
+fn train_step_decreases_loss_on_repeated_batch() {
+    let (ds, rt) = tiny_setup();
+    let name = "gcn_sgd_tiny";
+    let meta = rt.meta(name).unwrap().clone();
+    let mut rng = Pcg64::new(1);
+    let mut state = ModelState::init(&meta, &mut rng);
+    let bb = builder_for(&rt, name);
+    let targets: Vec<u32> = ds.splits.train[..meta.dims.b].to_vec();
+    let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+    let first = rt.train_step(name, &mut state, &blk, 0.1).unwrap();
+    let mut last = first;
+    for _ in 0..10 {
+        last = rt.train_step(name, &mut state, &blk, 0.1).unwrap();
+    }
+    assert!(
+        last < first * 0.8,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn adam_step_threads_time_counter() {
+    let (ds, rt) = tiny_setup();
+    let name = "gcn_adam_tiny";
+    let meta = rt.meta(name).unwrap().clone();
+    let mut rng = Pcg64::new(2);
+    let mut state = ModelState::init(&meta, &mut rng);
+    assert_eq!(state.opt.len(), 2 * state.params.len() + 1);
+    let bb = builder_for(&rt, name);
+    let targets: Vec<u32> = ds.splits.train[..4].to_vec();
+    let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+    for i in 1..=3 {
+        rt.train_step(name, &mut state, &blk, 0.01).unwrap();
+        let t = state.opt.last().unwrap().data[0];
+        assert_eq!(t, i as f32, "adam t counter wrong after step {i}");
+    }
+}
+
+#[test]
+fn eval_step_returns_logits_and_is_deterministic() {
+    let (ds, rt) = tiny_setup();
+    let train = rt.meta("gcn_sgd_tiny").unwrap().clone();
+    let mut rng = Pcg64::new(3);
+    let state = ModelState::init(&train, &mut rng);
+    let bb = builder_for(&rt, "gcn_eval_tiny");
+    let targets: Vec<u32> = (0..8).collect();
+    let mut rng_a = Pcg64::new(7);
+    let mut rng_b = Pcg64::new(7);
+    let blk_a = bb.build(&targets, &ds.graph, &ds, &mut rng_a);
+    let blk_b = bb.build(&targets, &ds.graph, &ds, &mut rng_b);
+    let la = rt.eval_step("gcn_eval_tiny", &state.params, &blk_a).unwrap();
+    let lb = rt.eval_step("gcn_eval_tiny", &state.params, &blk_b).unwrap();
+    assert_eq!(la.len(), 8 * train.dims.c);
+    assert_eq!(la, lb, "same seed must give identical logits");
+    assert!(la.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn sgd_matches_manual_update_direction() {
+    // after one sgd step with small lr, params move; with lr=0 they don't
+    let (ds, rt) = tiny_setup();
+    let name = "gcn_sgd_tiny";
+    let meta = rt.meta(name).unwrap().clone();
+    let mut rng = Pcg64::new(4);
+    let state0 = ModelState::init(&meta, &mut rng);
+    let bb = builder_for(&rt, name);
+    let targets: Vec<u32> = ds.splits.train[..8].to_vec();
+    let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+
+    let mut state_zero = state0.clone();
+    rt.train_step(name, &mut state_zero, &blk, 0.0).unwrap();
+    for (a, b) in state_zero.params.iter().zip(&state0.params) {
+        assert_eq!(a.data, b.data, "lr=0 must be a no-op on params");
+    }
+
+    let mut state_step = state0.clone();
+    rt.train_step(name, &mut state_step, &blk, 0.1).unwrap();
+    let moved: f64 = state_step
+        .params
+        .iter()
+        .zip(&state0.params)
+        .map(|(a, b)| {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| ((x - y) as f64).abs())
+                .sum::<f64>()
+        })
+        .sum();
+    assert!(moved > 0.0, "lr=0.1 must move params");
+}
+
+#[test]
+fn all_tiny_archs_run() {
+    let (ds, rt) = tiny_setup();
+    let mut rng = Pcg64::new(5);
+    for arch in ["gcn", "sage", "mlp"] {
+        let name = format!("{arch}_adam_tiny");
+        let meta = rt.meta(&name).unwrap().clone();
+        let mut state = ModelState::init(&meta, &mut rng);
+        let bb = builder_for(&rt, &name);
+        let targets: Vec<u32> = ds.splits.train[..8].to_vec();
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        let loss = rt.train_step(&name, &mut state, &blk, 0.01).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "{arch}: bad loss {loss}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator-level
+// ---------------------------------------------------------------------------
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.arch = "gcn".into();
+    cfg.parts = 4;
+    cfg.rounds = 6;
+    cfg.schedule = Schedule::Fixed { k: 3 };
+    cfg.eval_max_nodes = 64;
+    cfg.artifacts_dir = artifacts_dir();
+    cfg
+}
+
+#[test]
+fn llcg_learns_on_tiny() {
+    let cfg = base_cfg();
+    let ds = generators::by_name("tiny", cfg.seed).unwrap();
+    let rt = Runtime::load(&cfg.artifacts_dir).unwrap();
+    let res = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    assert_eq!(res.records.len(), 6);
+    let first_loss = res.records[0].global_loss;
+    let last_loss = res.records.last().unwrap().global_loss;
+    assert!(last_loss < first_loss, "{first_loss} -> {last_loss}");
+    assert!(res.final_val > 0.4, "val {}", res.final_val);
+}
+
+#[test]
+fn runs_are_deterministic_given_seed() {
+    let cfg = base_cfg();
+    let ds = generators::by_name("tiny", cfg.seed).unwrap();
+    let rt = Runtime::load(&cfg.artifacts_dir).unwrap();
+    let a = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    let b = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.local_loss, rb.local_loss);
+        assert_eq!(ra.val_score, rb.val_score);
+    }
+    assert_eq!(a.final_test, b.final_test);
+}
+
+#[test]
+fn comm_accounting_psgd_vs_ggs() {
+    let mut cfg = base_cfg();
+    cfg.algorithm = Algorithm::PsgdPa;
+    let ds = generators::by_name("tiny", cfg.seed).unwrap();
+    let rt = Runtime::load(&cfg.artifacts_dir).unwrap();
+    let psgd = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    cfg.algorithm = Algorithm::Ggs;
+    let ggs = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+
+    // PSGD-PA: bytes = 2 * P * |θ| per round, zero feature bytes
+    let meta = rt.meta("gcn_adam_tiny").unwrap();
+    let expected = 2 * cfg.parts as u64 * meta.param_bytes();
+    for r in &psgd.records {
+        assert_eq!(r.comm.feature_bytes, 0);
+        assert_eq!(r.comm.down_bytes + r.comm.up_bytes, expected);
+    }
+    // GGS moves strictly more bytes (features on top of params)
+    assert!(ggs.avg_round_bytes > psgd.avg_round_bytes);
+    assert!(ggs.records.iter().any(|r| r.comm.feature_bytes > 0));
+}
+
+#[test]
+fn llcg_comm_equals_psgd_comm() {
+    // the headline claim: LLCG costs the same bytes per round as PSGD-PA
+    let mut cfg = base_cfg();
+    cfg.algorithm = Algorithm::PsgdPa;
+    let ds = generators::by_name("tiny", cfg.seed).unwrap();
+    let rt = Runtime::load(&cfg.artifacts_dir).unwrap();
+    let psgd = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    cfg.algorithm = Algorithm::Llcg;
+    cfg.correction_steps = 2;
+    let llcg = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    assert_eq!(
+        psgd.records[0].comm.total(),
+        llcg.records[0].comm.total(),
+        "server correction must add no communication"
+    );
+}
+
+#[test]
+fn fullsync_runs_one_step_per_round() {
+    let mut cfg = base_cfg();
+    cfg.algorithm = Algorithm::FullSync;
+    cfg.schedule = Schedule::Fixed { k: 7 }; // must be ignored
+    let ds = generators::by_name("tiny", cfg.seed).unwrap();
+    let rt = Runtime::load(&cfg.artifacts_dir).unwrap();
+    let res = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    assert!(res.records.iter().all(|r| r.local_steps == 1));
+}
+
+#[test]
+fn subgraph_approx_storage_counted_once() {
+    let mut cfg = base_cfg();
+    cfg.algorithm = Algorithm::SubgraphApprox;
+    cfg.approx_storage = 0.1;
+    let ds = generators::by_name("tiny", cfg.seed).unwrap();
+    let rt = Runtime::load(&cfg.artifacts_dir).unwrap();
+    let res = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    assert!(res.records[0].comm.feature_bytes > 0, "storage not counted");
+    for r in &res.records[1..] {
+        assert_eq!(r.comm.feature_bytes, 0, "storage counted more than once");
+    }
+}
+
+#[test]
+fn exponential_schedule_reduces_rounds_for_same_steps() {
+    let mut cfg = base_cfg();
+    cfg.algorithm = Algorithm::Llcg;
+    cfg.schedule = Schedule::Exponential { k0: 2, rho: 1.5 };
+    cfg.rounds = 8;
+    let ds = generators::by_name("tiny", cfg.seed).unwrap();
+    let rt = Runtime::load(&cfg.artifacts_dir).unwrap();
+    let res = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    let steps: Vec<usize> = res.records.iter().map(|r| r.local_steps).collect();
+    assert!(steps.windows(2).all(|w| w[1] >= w[0]), "{steps:?}");
+    assert!(*steps.last().unwrap() > steps[0]);
+}
+
+#[test]
+fn single_machine_equals_parts_one() {
+    let mut cfg = base_cfg();
+    cfg.parts = 1;
+    cfg.algorithm = Algorithm::PsgdPa;
+    let ds = generators::by_name("tiny", cfg.seed).unwrap();
+    let rt = Runtime::load(&cfg.artifacts_dir).unwrap();
+    let res = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    assert_eq!(res.cut_ratio, 0.0);
+    assert!(res.final_val > 0.4);
+}
+
+#[test]
+fn multilabel_pipeline_runs() {
+    // proteins-s artifacts may be absent in a tiny-only build; guard.
+    let rt = Runtime::load(artifacts_dir()).unwrap();
+    if rt.meta("gcn_adam_proteins-s").is_err() {
+        eprintln!("skipping: proteins-s artifacts not built");
+        return;
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "proteins-s".into();
+    cfg.arch = "gcn".into();
+    cfg.parts = 2;
+    cfg.rounds = 2;
+    cfg.schedule = Schedule::Fixed { k: 2 };
+    cfg.eval_max_nodes = 64;
+    cfg.artifacts_dir = artifacts_dir();
+    let ds = generators::by_name("proteins-s", cfg.seed).unwrap();
+    let rt = Runtime::load(&cfg.artifacts_dir).unwrap();
+    let res = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    assert!(res.final_val.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// metrics consistency through the full path
+// ---------------------------------------------------------------------------
+#[test]
+fn eval_logits_chunking_consistent() {
+    let (ds, rt) = tiny_setup();
+    let meta = rt.meta("gcn_sgd_tiny").unwrap().clone();
+    let mut rng = Pcg64::new(11);
+    let state = ModelState::init(&meta, &mut rng);
+    let mut bb = builder_for(&rt, "gcn_eval_tiny");
+    bb.fanout = Fanout::Full;
+    let ids: Vec<u32> = (0..19).collect(); // 2 full chunks + remainder
+    let logits = driver::eval_logits(
+        &rt,
+        "gcn_eval_tiny",
+        &state.params,
+        &ds,
+        &ids,
+        &bb,
+        &mut Pcg64::new(1),
+    )
+    .unwrap();
+    assert_eq!(logits.len(), 19 * meta.dims.c);
+    let f1 = metrics::micro_f1(&logits, meta.dims.c, &ds.labels, &ids);
+    assert!((0.0..=1.0).contains(&f1));
+}

@@ -1,0 +1,315 @@
+//! Property-based tests over coordinator invariants (routing of nodes to
+//! partitions, batching, block/state structure), driven by the in-repo
+//! `testkit` harness (proptest substitute — DESIGN.md §Substitutions).
+//!
+//! These are pure-Rust properties: no PJRT artifacts required.
+
+use llcg::graph::{CsrGraph, Dataset, Labels, Splits};
+use llcg::partition::{self, Partitioner};
+use llcg::runtime::{ModelState, Tensor};
+use llcg::sampler::{BatchIter, BlockBuilder, EMPTY};
+use llcg::testkit::{check, GraphCase, GraphStrategy, Pair, UsizeRange};
+use llcg::util::Pcg64;
+
+fn graph_of(case: &GraphCase) -> CsrGraph {
+    CsrGraph::from_edges(case.n, &case.edges)
+}
+
+fn dataset_of(g: CsrGraph, d: usize, c: usize, seed: u64) -> Dataset {
+    let n = g.n;
+    let mut rng = Pcg64::new(seed);
+    let features = (0..n * d).map(|_| rng.normal_f32()).collect();
+    let labels = Labels::MultiClass(
+        (0..n).map(|_| rng.gen_range(c as u64) as u16).collect(),
+    );
+    let splits = Splits::random(n, 0.6, 0.2, &mut rng);
+    Dataset {
+        name: "prop".into(),
+        graph: g,
+        features,
+        d,
+        labels,
+        splits,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// graph invariants
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_csr_is_symmetric_and_deduped() {
+    let strat = GraphStrategy {
+        max_n: 60,
+        max_extra_edges: 200,
+    };
+    check(101, 60, &strat, |case| {
+        let g = graph_of(case);
+        for v in 0..g.n as u32 {
+            let nbrs = g.neighbors(v);
+            // sorted + deduped
+            if nbrs.windows(2).any(|w| w[0] >= w[1]) {
+                return false;
+            }
+            // symmetric, no self-loops
+            if nbrs.iter().any(|&u| u == v) {
+                return false;
+            }
+            if !nbrs.iter().all(|&u| g.neighbors(u).contains(&v)) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_edge_cut_bounded_by_total_edges() {
+    let strat = Pair(
+        GraphStrategy {
+            max_n: 50,
+            max_extra_edges: 120,
+        },
+        UsizeRange(1, 6),
+    );
+    check(102, 50, &strat, |(case, parts)| {
+        let g = graph_of(case);
+        let mut rng = Pcg64::new(7);
+        let a = partition::RandomPartitioner.partition(&g, *parts, &mut rng);
+        g.edge_cut(&a) <= g.num_edges()
+    });
+}
+
+#[test]
+fn prop_induced_views_partition_the_edge_set() {
+    // sum over parts of induced edges + 2*cut == total directed edges
+    let strat = Pair(
+        GraphStrategy {
+            max_n: 40,
+            max_extra_edges: 100,
+        },
+        UsizeRange(1, 5),
+    );
+    check(103, 50, &strat, |(case, parts)| {
+        let g = graph_of(case);
+        let mut rng = Pcg64::new(11);
+        let a = partition::LdgPartitioner.partition(&g, *parts, &mut rng);
+        let mut induced = 0usize;
+        for p in 0..*parts as u32 {
+            induced += g.induced_view(&a, p).indices.len();
+        }
+        induced + 2 * g.edge_cut(&a) == g.indices.len()
+    });
+}
+
+// ---------------------------------------------------------------------------
+// partitioner invariants (routing)
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_every_partitioner_is_total_and_bounded() {
+    let strat = Pair(
+        GraphStrategy {
+            max_n: 50,
+            max_extra_edges: 150,
+        },
+        UsizeRange(1, 6),
+    );
+    check(104, 40, &strat, |(case, parts)| {
+        let g = graph_of(case);
+        for name in ["random", "hash", "bfs", "ldg", "metis"] {
+            let mut rng = Pcg64::new(13);
+            let a = partition::by_name(name)
+                .unwrap()
+                .partition(&g, *parts, &mut rng);
+            if a.len() != g.n {
+                return false;
+            }
+            if !a.iter().all(|&x| (x as usize) < *parts) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_balanced_partitioners_respect_capacity() {
+    let strat = Pair(
+        GraphStrategy {
+            max_n: 80,
+            max_extra_edges: 150,
+        },
+        UsizeRange(2, 6),
+    );
+    check(105, 40, &strat, |(case, parts)| {
+        let g = graph_of(case);
+        for name in ["random", "bfs", "ldg"] {
+            let mut rng = Pcg64::new(17);
+            let a = partition::by_name(name)
+                .unwrap()
+                .partition(&g, *parts, &mut rng);
+            let q = partition::quality(&g, &a, *parts);
+            // cap used by the implementations is ceil(n/parts)(+1)
+            let cap = g.n.div_ceil(*parts) + 1;
+            if q.sizes.iter().any(|&s| s > cap) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+// ---------------------------------------------------------------------------
+// batching invariants
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_batch_iter_partitions_ids() {
+    let strat = Pair(UsizeRange(1, 200), UsizeRange(1, 40));
+    check(106, 100, &strat, |(n, b)| {
+        let ids: Vec<u32> = (0..*n as u32).collect();
+        let mut rng = Pcg64::new(23);
+        let batches: Vec<Vec<u32>> = BatchIter::new(&ids, *b, &mut rng).collect();
+        // all batches <= b, only last may be short
+        for (i, batch) in batches.iter().enumerate() {
+            if batch.len() > *b {
+                return false;
+            }
+            if i + 1 < batches.len() && batch.len() != *b {
+                return false;
+            }
+        }
+        // exact cover
+        let mut all: Vec<u32> = batches.into_iter().flatten().collect();
+        all.sort_unstable();
+        all == ids
+    });
+}
+
+// ---------------------------------------------------------------------------
+// block-builder invariants (state fed to the HLO step)
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_blocks_are_well_formed() {
+    let strat = Pair(
+        GraphStrategy {
+            max_n: 60,
+            max_extra_edges: 200,
+        },
+        Pair(UsizeRange(1, 8), Pair(UsizeRange(1, 5), UsizeRange(1, 5))),
+    );
+    check(107, 40, &strat, |(case, (b, (f1, f2)))| {
+        let g = graph_of(case);
+        let ds = dataset_of(g, 6, 3, 31);
+        let bb = BlockBuilder::new(*b, *f1, *f2, 6, 3, false);
+        let mut rng = Pcg64::new(37);
+        let k = (*b).min(ds.n());
+        let targets: Vec<u32> = (0..k as u32).collect();
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+
+        // shape invariants
+        if blk.a1.len() != blk.b * blk.n1 || blk.a2.len() != blk.n1 * blk.n2 {
+            return false;
+        }
+        // rows: real targets sum to 1, padding rows to 0
+        for i in 0..blk.b {
+            let s: f32 = blk.a1[i * blk.n1..(i + 1) * blk.n1].iter().sum();
+            let want_real = i < k;
+            if want_real && (s - 1.0).abs() > 1e-4 {
+                return false;
+            }
+            if !want_real && s != 0.0 {
+                return false;
+            }
+        }
+        // every level-2 row of a real slot sums to 1
+        for j in 0..blk.n1 {
+            let s: f32 = blk.a2[j * blk.n2..(j + 1) * blk.n2].iter().sum();
+            if blk.nodes_l1[j] == EMPTY {
+                if s != 0.0 {
+                    return false;
+                }
+            } else if (s - 1.0).abs() > 1e-4 {
+                return false;
+            }
+        }
+        // slot nodes must be real neighbors (or self)
+        for (i, &t) in targets.iter().enumerate() {
+            for s in 0..*f1 {
+                let v = blk.nodes_l1[i * f1 + s];
+                if v == EMPTY {
+                    continue;
+                }
+                if s == 0 {
+                    if v != t {
+                        return false;
+                    }
+                } else if !ds.graph.neighbors(t).contains(&v) {
+                    return false;
+                }
+            }
+        }
+        // features of EMPTY slots are zero
+        for (j, &v) in blk.nodes_l2.iter().enumerate() {
+            if v == EMPTY && blk.x2[j * 6..(j + 1) * 6].iter().any(|&x| x != 0.0) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_remote_bytes_monotone_in_parts() {
+    // with more parts, at least as many touched nodes are remote
+    let strat = GraphStrategy {
+        max_n: 60,
+        max_extra_edges: 200,
+    };
+    check(108, 30, &strat, |case| {
+        let g = graph_of(case);
+        let ds = dataset_of(g, 4, 2, 41);
+        let bb = BlockBuilder::new(4, 3, 3, 4, 2, false);
+        let mut rng = Pcg64::new(43);
+        let targets: Vec<u32> = (0..4u32.min(ds.n() as u32)).collect();
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        let a2: Vec<u32> = (0..ds.n() as u32).map(|v| v % 2).collect();
+        let a4: Vec<u32> = (0..ds.n() as u32).map(|v| v % 4).collect();
+        blk.remote_feature_bytes(&a4, 0) >= blk.remote_feature_bytes(&a2, 0)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// model-state invariants
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_param_averaging_is_idempotent_and_linear() {
+    let strat = UsizeRange(1, 64);
+    check(109, 60, &strat, |&len| {
+        let mut rng = Pcg64::new(47);
+        let mut mk = |scale: f32| ModelState {
+            params: vec![Tensor {
+                shape: vec![len],
+                data: (0..len).map(|_| rng.normal_f32() * scale).collect(),
+            }],
+            opt: vec![],
+        };
+        let a = mk(1.0);
+        let b = mk(2.0);
+        // average of identical copies is identity
+        let same = ModelState::average_params(&[&a, &a, &a]);
+        if same[0]
+            .data
+            .iter()
+            .zip(&a.params[0].data)
+            .any(|(&x, &y)| (x - y).abs() > 1e-6)
+        {
+            return false;
+        }
+        // avg(a, b) == (a + b) / 2
+        let avg = ModelState::average_params(&[&a, &b]);
+        avg[0]
+            .data
+            .iter()
+            .zip(a.params[0].data.iter().zip(&b.params[0].data))
+            .all(|(&m, (&x, &y))| (m - (x + y) / 2.0).abs() < 1e-5)
+    });
+}
