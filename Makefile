@@ -1,0 +1,28 @@
+# LLCG build entry points.
+#
+#   make artifacts   AOT-compile the JAX/Pallas models to HLO-text artifacts
+#                    (requires the python env; run once — the Rust runtime
+#                    falls back to its native reference backend without it)
+#   make check       tier-1 gate: release build + tests + clippy
+#   make bench       perf benches; writes BENCH_<section>.json per section
+#   make test        quick test run
+
+.PHONY: artifacts check test bench clean
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+check:
+	cargo build --release
+	cargo test -q
+	cargo clippy -- -D warnings
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+clean:
+	cargo clean
+	rm -f BENCH_*.json

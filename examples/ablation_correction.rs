@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
         .position(|a| a == "--dataset")
         .and_then(|i| args.get(i + 1).cloned())
         .unwrap_or_else(|| "tiny-hetero".to_string());
-    let rt = Runtime::load("artifacts")?;
+    let (rt, _) = Runtime::load_or_native("artifacts")?;
 
     let base = || {
         let mut cfg = ExperimentConfig::default();

@@ -16,7 +16,7 @@ use llcg::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
-    let rt = Runtime::load("artifacts")?;
+    let (rt, _) = Runtime::load_or_native("artifacts")?;
 
     let mk_cfg = |alg: Algorithm| {
         let mut cfg = ExperimentConfig::default();

@@ -23,7 +23,7 @@ use llcg::runtime::Runtime;
 fn main() -> anyhow::Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
     let t0 = std::time::Instant::now();
-    let rt = Runtime::load("artifacts")?;
+    let (rt, _) = Runtime::load_or_native("artifacts")?;
 
     let mk = |alg: Algorithm| {
         let mut cfg = ExperimentConfig::default();

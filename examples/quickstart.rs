@@ -4,8 +4,10 @@
 //! partitioner, and trains a 2-layer GCN with LLCG (local training +
 //! periodic averaging + global server correction) on 4 simulated machines.
 //!
-//!     make artifacts           # once: AOT-compile the models
+//!     make artifacts           # optional: AOT-compile the PJRT models
 //!     cargo run --release --example quickstart
+//!
+//! Without artifacts the run uses the native reference backend.
 
 use llcg::config::ExperimentConfig;
 use llcg::coordinator::{driver, Algorithm, Schedule};
@@ -27,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     // 2. Dataset + runtime (loads AOT artifacts; python is NOT involved).
     let ds = driver::load_dataset(&cfg)?;
     println!("dataset: {}", ds.stats());
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let (rt, _) = Runtime::load_or_native(&cfg.artifacts_dir)?;
 
     // 3. Train.
     let result = driver::run_experiment(&cfg, &ds, &rt)?;

@@ -4,15 +4,25 @@
 //! criterion (DESIGN.md §Substitutions). Reports mean/std/p50/p99 over
 //! timed iterations after warmup, one section per perf-critical component:
 //!
-//!   graph-gen        dataset generator throughput
-//!   partition        partitioners on reddit-s (Fig 1 substrate)
-//!   sampler          block building (the L3 hot path feeding PJRT)
-//!   runtime          HLO train/eval step latency (the compute hot path)
-//!   round            end-to-end round latency (Fig 1 speedup source)
-//!   comm             parameter averaging
+//!   graph-gen          dataset generator throughput
+//!   partition          partitioners on reddit-s (Fig 1 substrate)
+//!   sampler            block building, fresh allocations per batch
+//!   sampler-arena      block building into a reused BlockArena
+//!   runtime            train/eval step via the host-literal path (baseline:
+//!                      full state round-trips host<->device every step)
+//!   runtime-resident   train/eval step on device-resident state
+//!   round              end-to-end round latency (Fig 1 speedup source)
+//!   comm               parameter averaging
 //!
-//! Filter with `cargo bench -- <substring>`.
+//! Filter with `cargo bench -- <substring>`. On exit every section is also
+//! written as machine-readable `BENCH_<section>.json` (mean/p50/p99 per
+//! row) so the perf trajectory can be tracked across commits.
+//!
+//! Runs against `artifacts/` (PJRT) when present and loadable, otherwise
+//! against the generated native-backend manifest — the section layout and
+//! JSON schema are identical either way.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use llcg::config::ExperimentConfig;
@@ -20,8 +30,8 @@ use llcg::coordinator::{driver, Algorithm, Schedule};
 use llcg::graph::generators;
 use llcg::partition;
 use llcg::runtime::{ModelState, Runtime};
-use llcg::sampler::{BlockBuilder, Fanout};
-use llcg::util::{stats::Summary, Pcg64};
+use llcg::sampler::{BlockArena, BlockBuilder, Fanout};
+use llcg::util::{stats::Summary, Json, Pcg64};
 
 struct Bench {
     filter: Option<String>,
@@ -67,6 +77,52 @@ impl Bench {
         );
         self.rows.push((name.to_string(), s));
     }
+
+    fn mean_of(&self, name: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.mean)
+    }
+
+    /// Write one `BENCH_<section>.json` per section (name prefix up to '/').
+    fn write_json(&self) {
+        let mut sections: BTreeMap<&str, Vec<&(String, Summary)>> = BTreeMap::new();
+        for row in &self.rows {
+            let sec = row.0.split('/').next().unwrap_or("misc");
+            sections.entry(sec).or_default().push(row);
+        }
+        for (sec, rows) in sections {
+            let j = Json::obj(vec![
+                ("section", Json::str(sec)),
+                ("unit", Json::str("ms")),
+                (
+                    "rows",
+                    Json::arr(
+                        rows.iter()
+                            .map(|(name, s)| {
+                                Json::obj(vec![
+                                    ("name", Json::str(name.as_str())),
+                                    ("n", Json::num(s.n as f64)),
+                                    ("mean", Json::num(s.mean)),
+                                    ("std", Json::num(s.std)),
+                                    ("p50", Json::num(s.p50)),
+                                    ("p90", Json::num(s.p90)),
+                                    ("p99", Json::num(s.p99)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]);
+            let path = format!("BENCH_{sec}.json");
+            if let Err(e) = std::fs::write(&path, j.to_string_pretty()) {
+                eprintln!("failed to write {path}: {e}");
+            } else {
+                eprintln!("wrote {path}");
+            }
+        }
+    }
 }
 
 fn main() {
@@ -109,81 +165,120 @@ fn main() {
         std::hint::black_box(bb_full.build(&batch, &ds.graph, &ds, &mut rng));
     });
 
-    // ---- runtime: HLO step latency -------------------------------------------
-    let artifacts_ok = std::path::Path::new("artifacts/manifest.json").exists();
-    if artifacts_ok {
-        let rt = Runtime::load("artifacts").unwrap();
-        for (ds_name, arch) in [("tiny", "gcn"), ("reddit-s", "sage"), ("reddit-s", "gat")]
-        {
-            let train_name = Runtime::train_name(arch, "adam", ds_name);
-            if rt.meta(&train_name).is_err() {
-                continue;
-            }
-            let data = generators::by_name(ds_name, 0).unwrap();
-            let meta = rt.meta(&train_name).unwrap().clone();
-            let mut rng = Pcg64::new(3);
-            let mut state = ModelState::init(&meta, &mut rng);
-            let bb = BlockBuilder::new(
-                meta.dims.b,
-                meta.dims.f1,
-                meta.dims.f2,
-                meta.dims.d,
-                meta.dims.c,
-                meta.multilabel(),
-            );
-            let batch = rng.sample_without_replacement(&data.splits.train, meta.dims.b);
-            let blk = bb.build(&batch, &data.graph, &data, &mut rng);
-            rt.warmup(&train_name).unwrap();
-            let iters = if ds_name == "tiny" { 40 } else { 15 };
-            b.run(
-                &format!("runtime/train-step({arch},{ds_name})"),
-                2,
-                iters,
-                || {
+    // same workloads through a reused arena (the driver's hot path)
+    let mut arena = BlockArena::new();
+    b.run("sampler-arena/block-build(B=32,f=8x8,reddit-s)", 3, 50, || {
+        let batch = rng.sample_without_replacement(&train, 32);
+        std::hint::black_box(bb.build_into(&mut arena, &batch, &ds.graph, &ds, &mut rng));
+    });
+    let mut arena_full = BlockArena::new();
+    b.run("sampler-arena/block-build-full-neighbors", 3, 50, || {
+        let batch = rng.sample_without_replacement(&train, 32);
+        std::hint::black_box(bb_full.build_into(
+            &mut arena_full,
+            &batch,
+            &ds.graph,
+            &ds,
+            &mut rng,
+        ));
+    });
+    if let (Some(fresh), Some(reused)) = (
+        b.mean_of("sampler/block-build(B=32,f=8x8,reddit-s)"),
+        b.mean_of("sampler-arena/block-build(B=32,f=8x8,reddit-s)"),
+    ) {
+        println!("  -> arena reuse speedup: {:.2}x", fresh / reused);
+    }
+
+    // ---- runtime: step latency ------------------------------------------------
+    match Runtime::load_or_native("artifacts") {
+        Err(e) => eprintln!("(no runtime available — skipping runtime benches: {e:#})"),
+        Ok((rt, adir)) => {
+            eprintln!("runtime backend: {} (artifacts: {adir})", rt.backend_name());
+            for (ds_name, arch) in [("tiny", "gcn"), ("reddit-s", "sage"), ("reddit-s", "gat")]
+            {
+                let train_name = Runtime::train_name(arch, "adam", ds_name);
+                if rt.meta(&train_name).is_err() || rt.warmup(&train_name).is_err() {
+                    continue;
+                }
+                let data = generators::by_name(ds_name, 0).unwrap();
+                let meta = rt.meta(&train_name).unwrap().clone();
+                let mut rng = Pcg64::new(3);
+                let mut state = ModelState::init(&meta, &mut rng);
+                let bb = BlockBuilder::new(
+                    meta.dims.b,
+                    meta.dims.f1,
+                    meta.dims.f2,
+                    meta.dims.d,
+                    meta.dims.c,
+                    meta.multilabel(),
+                );
+                let batch = rng.sample_without_replacement(&data.splits.train, meta.dims.b);
+                let blk = bb.build(&batch, &data.graph, &data, &mut rng);
+                let iters = if ds_name == "tiny" { 40 } else { 15 };
+
+                // baseline: full state serialized host<->device every step
+                let lit_row = format!("runtime/train-step({arch},{ds_name})");
+                b.run(&lit_row, 2, iters, || {
                     std::hint::black_box(
                         rt.train_step(&train_name, &mut state, &blk, 0.01).unwrap(),
                     );
-                },
-            );
-            let eval_name = Runtime::eval_name(arch, ds_name);
-            if rt.meta(&eval_name).is_ok() {
-                rt.warmup(&eval_name).unwrap();
-                b.run(
-                    &format!("runtime/eval-step({arch},{ds_name})"),
-                    2,
-                    iters,
-                    || {
-                        std::hint::black_box(
-                            rt.eval_step(&eval_name, &state.params, &blk).unwrap(),
-                        );
-                    },
-                );
-            }
-        }
+                });
+                // device-resident: upload once, step in place
+                let mut dev = rt.upload(&train_name, &state).unwrap();
+                let res_row = format!("runtime-resident/train-step({arch},{ds_name})");
+                b.run(&res_row, 2, iters, || {
+                    std::hint::black_box(rt.train_step_device(&mut dev, &blk, 0.01).unwrap());
+                });
+                if let (Some(lit), Some(res)) = (b.mean_of(&lit_row), b.mean_of(&res_row)) {
+                    println!("  -> device-resident speedup: {:.2}x", lit / res);
+                }
 
-        // ---- end-to-end round (Fig 1 / Table 1 substrate) --------------------
-        let rt2 = Runtime::load("artifacts").unwrap();
-        let mut cfg = ExperimentConfig::default();
-        cfg.dataset = "tiny".into();
-        cfg.arch = "gcn".into();
-        cfg.algorithm = Algorithm::Llcg;
-        cfg.parts = 4;
-        cfg.rounds = 1;
-        cfg.schedule = Schedule::Fixed { k: 4 };
-        cfg.eval_max_nodes = 64;
-        let data = generators::by_name("tiny", 0).unwrap();
-        b.run("round/llcg(tiny,P=4,K=4)+eval", 1, 8, || {
-            std::hint::black_box(driver::run_experiment(&cfg, &data, &rt2).unwrap());
-        });
-        let mut cfg_no_eval = cfg.clone();
-        cfg_no_eval.eval_every = 10; // skip eval inside the single round
-        b.run("round/llcg(tiny,P=4,K=4)no-eval", 1, 8, || {
-            std::hint::black_box(
-                driver::run_experiment(&cfg_no_eval, &data, &rt2).unwrap(),
-            );
-        });
-    } else {
-        eprintln!("(artifacts missing — skipping runtime benches; run `make artifacts`)");
+                let eval_name = Runtime::eval_name(arch, ds_name);
+                if rt.meta(&eval_name).is_ok() && rt.warmup(&eval_name).is_ok() {
+                    b.run(
+                        &format!("runtime/eval-step({arch},{ds_name})"),
+                        2,
+                        iters,
+                        || {
+                            std::hint::black_box(
+                                rt.eval_step(&eval_name, &state.params, &blk).unwrap(),
+                            );
+                        },
+                    );
+                    let devp = rt.upload_params(&eval_name, &state.params).unwrap();
+                    b.run(
+                        &format!("runtime-resident/eval-step({arch},{ds_name})"),
+                        2,
+                        iters,
+                        || {
+                            std::hint::black_box(rt.eval_step_device(&devp, &blk).unwrap());
+                        },
+                    );
+                }
+            }
+
+            // ---- end-to-end round (Fig 1 / Table 1 substrate) --------------------
+            let rt2 = Runtime::load(&adir).unwrap();
+            let mut cfg = ExperimentConfig::default();
+            cfg.dataset = "tiny".into();
+            cfg.arch = "gcn".into();
+            cfg.algorithm = Algorithm::Llcg;
+            cfg.parts = 4;
+            cfg.rounds = 1;
+            cfg.schedule = Schedule::Fixed { k: 4 };
+            cfg.eval_max_nodes = 64;
+            let data = generators::by_name("tiny", 0).unwrap();
+            b.run("round/llcg(tiny,P=4,K=4)+eval", 1, 8, || {
+                std::hint::black_box(driver::run_experiment(&cfg, &data, &rt2).unwrap());
+            });
+            let mut cfg_no_eval = cfg.clone();
+            cfg_no_eval.eval_every = 10; // skip eval inside the single round
+            b.run("round/llcg(tiny,P=4,K=4)no-eval", 1, 8, || {
+                std::hint::black_box(
+                    driver::run_experiment(&cfg_no_eval, &data, &rt2).unwrap(),
+                );
+            });
+        }
     }
 
     // ---- comm: parameter averaging -------------------------------------------
@@ -201,6 +296,13 @@ fn main() {
         let refs: Vec<&ModelState> = states.iter().collect();
         std::hint::black_box(ModelState::average_params(&refs));
     });
+    let mut acc: Vec<llcg::runtime::Tensor> = Vec::new();
+    b.run("comm/average-params-into(8 workers, 5k params)", 5, 200, || {
+        let refs: Vec<&ModelState> = states.iter().collect();
+        ModelState::average_params_into(&mut acc, &refs);
+        std::hint::black_box(&acc);
+    });
 
+    b.write_json();
     println!("\n{} benchmarks complete.", b.rows.len());
 }

@@ -16,7 +16,7 @@ use crate::graph::{generators, CsrGraph, Dataset, Labels};
 use crate::metrics;
 use crate::partition;
 use crate::runtime::{ModelState, Runtime, Tensor};
-use crate::sampler::{BatchIter, BlockBuilder, Fanout};
+use crate::sampler::{BatchIter, BlockArena, BlockBuilder, Fanout, NodeScratch};
 use crate::util::{Json, Pcg64};
 
 /// One worker's static setup.
@@ -236,7 +236,9 @@ fn correction_batch(
 }
 
 /// Evaluate `params` on `ids` (chunked, full-neighbor blocks on the full
-/// graph); returns logits in `ids` order.
+/// graph); returns logits in `ids` order. Parameters are uploaded to the
+/// device once for the whole sweep and block buffers are arena-recycled
+/// across chunks.
 pub fn eval_logits(
     rt: &Runtime,
     eval_name: &str,
@@ -251,10 +253,12 @@ pub fn eval_logits(
     let mut full_builder = builder.clone();
     full_builder.fanout = Fanout::Full;
     full_builder.sample_ratio = 1.0;
+    let dev = rt.upload_params(eval_name, params)?;
+    let mut arena = BlockArena::new();
     let mut logits = Vec::with_capacity(ids.len() * c);
     for chunk in ids.chunks(meta.dims.b) {
-        let blk = full_builder.build(chunk, &ds.graph, ds, rng);
-        let out = rt.eval_step(eval_name, params, &blk)?;
+        let blk = full_builder.build_into(&mut arena, chunk, &ds.graph, ds, rng);
+        let out = rt.eval_step_device(&dev, blk)?;
         logits.extend_from_slice(&out[..chunk.len() * c]);
     }
     Ok(logits)
@@ -334,6 +338,12 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
     let mut eval_rng = root_rng.split(4);
     let mut corr_rng = root_rng.split(5);
 
+    // reusable hot-path buffers: block arenas (local + correction shapes)
+    // and the remote-feature dedup scratch — no per-batch allocation
+    let mut arena = BlockArena::new();
+    let mut corr_arena = BlockArena::new();
+    let mut node_scratch = NodeScratch::new();
+
     // --- round loop ---------------------------------------------------------
     for round in 1..=cfg.rounds {
         let k = if is_fullsync {
@@ -354,29 +364,32 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
             let t0 = std::time::Instant::now();
             // receive global params (download)
             comm.down_bytes += param_bytes;
-            workers[p].set_params(global_params.clone());
+            workers[p].copy_params_from(&global_params);
             if info.train_ids.is_empty() {
                 comm.up_bytes += param_bytes;
                 continue;
             }
             let mut rng = super::worker_rng(cfg.seed, p, round);
             let mut batches = BatchIter::new(&info.train_ids, dims.b, &mut rng);
+            // model + optimizer state stay device-resident across all K
+            // local steps (Alg. 2 cadence); host tensors are touched again
+            // only at the round boundary below
+            let mut dev = rt.upload(&train_name, &workers[p])?;
             for _ in 0..k {
-                let batch = match batches.next() {
-                    Some(b) => b,
-                    None => {
-                        batches = BatchIter::new(&info.train_ids, dims.b, &mut rng);
-                        batches.next().unwrap()
-                    }
-                };
-                let blk = local_builder.build(&batch, &info.adj, ds, &mut rng);
-                if cfg.algorithm.uses_global_view() {
-                    comm.feature_bytes += blk.remote_feature_bytes(&assignment, info.part);
+                if batches.remaining() == 0 {
+                    batches.reshuffle(&mut rng);
                 }
-                let loss = rt.train_step(&train_name, &mut workers[p], &blk, cfg.lr)?;
+                let batch = batches.next_batch().expect("train shard is non-empty");
+                let blk = local_builder.build_into(&mut arena, batch, &info.adj, ds, &mut rng);
+                if cfg.algorithm.uses_global_view() {
+                    comm.feature_bytes +=
+                        blk.remote_feature_bytes_with(&mut node_scratch, &assignment, info.part);
+                }
+                let loss = rt.train_step_device(&mut dev, blk, cfg.lr)?;
                 local_loss_sum += loss as f64;
                 local_loss_n += 1;
             }
+            rt.download_into(&dev, &mut workers[p])?;
             // send params to server (upload)
             comm.up_bytes += param_bytes;
             worker_time = worker_time.max(t0.elapsed().as_secs_f64());
@@ -385,10 +398,13 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
         // ---- server: average + correct ------------------------------------
         let t_server = std::time::Instant::now();
         let refs: Vec<&ModelState> = workers.iter().collect();
-        global_params = ModelState::average_params(&refs);
+        ModelState::average_params_into(&mut global_params, &refs);
 
         if cfg.algorithm.corrects() && cfg.correction_steps > 0 {
-            server_state.set_params(global_params.clone());
+            server_state.copy_params_from(&global_params);
+            // server correction also runs device-resident: one upload, S
+            // steps, one download (its Adam state persists across rounds)
+            let mut dev = rt.upload(&server_train_name, &server_state)?;
             for _ in 0..cfg.correction_steps {
                 let batch = correction_batch(
                     cfg.correction_batch,
@@ -397,10 +413,11 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
                     dims.b,
                     &mut corr_rng,
                 );
-                let blk = corr_builder.build(&batch, &ds.graph, ds, &mut corr_rng);
-                rt.train_step(&server_train_name, &mut server_state, &blk, cfg.server_lr)?;
+                let blk = corr_builder.build_into(&mut corr_arena, &batch, &ds.graph, ds, &mut corr_rng);
+                rt.train_step_device(&mut dev, blk, cfg.server_lr)?;
             }
-            global_params = server_state.params.clone();
+            rt.download_into(&dev, &mut server_state)?;
+            Tensor::copy_all(&mut global_params, &server_state.params);
         }
 
         // ---- evaluation -----------------------------------------------------

@@ -90,6 +90,14 @@ impl ReproOpts {
     }
 }
 
+/// Runtime for a repro run: the configured artifacts when loadable,
+/// otherwise the generated native-backend manifest.
+fn load_rt(opts: &ReproOpts) -> Result<Runtime> {
+    let (rt, dir) = Runtime::load_or_native(&opts.artifacts_dir)?;
+    eprintln!("runtime backend: {} (artifacts: {dir})", rt.backend_name());
+    Ok(rt)
+}
+
 fn run_one(cfg: &ExperimentConfig, rt: &Runtime) -> Result<driver::RunResult> {
     let ds = driver::load_dataset(cfg)?;
     driver::run_experiment(cfg, &ds, rt)
@@ -117,7 +125,7 @@ fn setup_llcg(cfg: &mut ExperimentConfig, alg: Algorithm) {
 // Fig 1: speedup + per-machine memory vs number of machines (Reddit analog).
 // ---------------------------------------------------------------------------
 fn fig1(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let dataset = if opts.fast { "tiny" } else { "reddit-s" };
     let arch = if opts.fast { "gcn" } else { "sage" };
     println!("Fig 1 — distributed speedup & memory vs machines ({dataset})");
@@ -182,7 +190,7 @@ fn fig1(opts: &ReproOpts) -> Result<()> {
 // Fig 2: PSGD-PA vs GGS (accuracy per round; bytes per round), Reddit analog.
 // ---------------------------------------------------------------------------
 fn fig2(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let dataset = if opts.fast { "tiny" } else { "reddit-s" };
     let arch = if opts.fast { "gcn" } else { "sage" };
     println!("Fig 2 — PSGD-PA vs GGS vs single-machine ({dataset}, P=8)");
@@ -217,7 +225,7 @@ fn fig2(opts: &ReproOpts) -> Result<()> {
 // byte (g,h) — all captured in the per-round records of each run.
 // ---------------------------------------------------------------------------
 fn fig4(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let datasets: Vec<&str> = if opts.fast {
         vec!["tiny"]
     } else {
@@ -260,7 +268,7 @@ fn fig4(opts: &ReproOpts) -> Result<()> {
 // datasets, mean±std over seeds.
 // ---------------------------------------------------------------------------
 fn table1(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let rows: Vec<(&str, Vec<&str>)> = if opts.fast {
         vec![("tiny", vec!["gcn", "sage"])]
     } else {
@@ -316,7 +324,7 @@ fn table1(opts: &ReproOpts) -> Result<()> {
 // Fig 5: effect of local epoch size K (arxiv analog).
 // ---------------------------------------------------------------------------
 fn fig5(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let dataset = if opts.fast { "tiny" } else { "arxiv-s" };
     let ks: Vec<usize> = if opts.fast {
         vec![1, 4]
@@ -351,7 +359,7 @@ fn fig5(opts: &ReproOpts) -> Result<()> {
 // Fig 6: neighbor-sampling ratio × correction steps (reddit analog).
 // ---------------------------------------------------------------------------
 fn fig6(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let dataset = if opts.fast { "tiny" } else { "reddit-s" };
     let grid: Vec<(f64, usize)> = if opts.fast {
         vec![(1.0, 1), (0.2, 1)]
@@ -392,7 +400,7 @@ fn fig6(opts: &ReproOpts) -> Result<()> {
 // Fig 7/8: full vs sampled neighbors in the correction step.
 // ---------------------------------------------------------------------------
 fn fig78(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let datasets: Vec<&str> = if opts.fast {
         vec!["tiny"]
     } else {
@@ -427,7 +435,7 @@ fn fig78(opts: &ReproOpts) -> Result<()> {
 // Fig 9: uniform vs max-cut-edge correction batches.
 // ---------------------------------------------------------------------------
 fn fig9(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let datasets: Vec<&str> = if opts.fast {
         vec!["tiny"]
     } else {
@@ -459,7 +467,7 @@ fn fig9(opts: &ReproOpts) -> Result<()> {
 // MLP ≈ GCN there; products analog shows no gap either (small cut + split).
 // ---------------------------------------------------------------------------
 fn fig10(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let mut out = Vec::new();
     let yelp = if opts.fast { "tiny" } else { "yelp-s" };
     println!("Fig 10a — PSGD-PA vs GGS on {yelp}");
@@ -496,7 +504,7 @@ fn fig10(opts: &ReproOpts) -> Result<()> {
 // Fig 11: 16 machines, PSGD-PA vs SubgraphApprox vs FullSync vs LLCG.
 // ---------------------------------------------------------------------------
 fn fig11(opts: &ReproOpts) -> Result<()> {
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let dataset = if opts.fast { "tiny" } else { "products-s" };
     println!("Fig 11 — large-scale setting ({dataset}, P=16)");
     let mut out = Vec::new();
@@ -527,7 +535,7 @@ fn fig11(opts: &ReproOpts) -> Result<()> {
 // ---------------------------------------------------------------------------
 fn theory(opts: &ReproOpts) -> Result<()> {
     use crate::coordinator::discrepancy;
-    let rt = Runtime::load(&opts.artifacts_dir)?;
+    let rt = load_rt(opts)?;
     let dataset = if opts.fast { "tiny" } else { "arxiv-s" };
     let ds = generators::by_name(dataset, opts.seed).unwrap();
     let arch = "gcn";

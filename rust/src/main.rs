@@ -63,15 +63,16 @@ fn build_config(flags: &[(String, String)]) -> Result<ExperimentConfig> {
 fn cmd_run(flags: &[(String, String)]) -> Result<()> {
     let cfg = build_config(flags)?;
     let ds = driver::load_dataset(&cfg)?;
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let (rt, _adir) = Runtime::load_or_native(&cfg.artifacts_dir)?;
     eprintln!(
-        "run: {} on {} ({} parts, {} rounds, arch={}, opt={})",
+        "run: {} on {} ({} parts, {} rounds, arch={}, opt={}, backend={})",
         cfg.algorithm.name(),
         cfg.dataset,
         cfg.parts,
         cfg.rounds,
         cfg.arch,
-        cfg.optimizer
+        cfg.optimizer,
+        rt.backend_name()
     );
     let result = driver::run_experiment(&cfg, &ds, &rt)?;
     println!(

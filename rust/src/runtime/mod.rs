@@ -1,10 +1,49 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts (built once by
-//! `make artifacts`) and executes train/eval steps from the coordinator's
-//! hot path. Python is never involved at run time.
+//! Runtime: executes train/eval steps for the coordinator's hot path behind
+//! one of two backends, selected by the artifact manifest:
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Executables are compiled lazily on first use and cached per process.
+//! - **`pjrt`** — loads the AOT-compiled HLO-text artifacts (built once by
+//!   `make artifacts`) and executes them on a PJRT client (`xla` crate).
+//!   Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!   Executables compile lazily on first use and are cached per process.
+//! - **`native`** — the pure-Rust reference implementation of the same model
+//!   zoo ([`native`]), used when PJRT or the artifacts are unavailable
+//!   (`manifest.json` carries `"backend": "native"`; see
+//!   [`Runtime::load_or_native`]).
+//!
+//! Python is never involved at run time.
+//!
+//! ## Device-resident execution model
+//!
+//! The legacy path ([`Runtime::train_step`]) serializes the full model +
+//! optimizer state through host literals on **every** step — upload, execute,
+//! download. That is wasteful at Algorithm 2's cadence, where a worker runs
+//! `K·ρ^r` consecutive local steps between synchronizations.
+//!
+//! [`DeviceState`] instead keeps parameters + optimizer state resident on the
+//! execution device across steps:
+//!
+//! ```text
+//! round r:   upload once          Runtime::upload(name, state)
+//!            K local steps        Runtime::train_step_device(&mut dev, ..)
+//!                                   — only the block + lr cross to the
+//!                                     device; only the scalar loss returns
+//!            download once        Runtime::download_into(&dev, state)
+//! ```
+//!
+//! Host `Tensor`s are materialized **only at round boundaries** — exactly
+//! where Algorithm 2 needs them (parameter averaging, server correction
+//! hand-off, eval). Under the PJRT backend the step outputs stay device-side
+//! as `PjRtBuffer`s and are fed straight back in (`execute_b`, untupled
+//! outputs); under the native backend the state lives in host tensors
+//! mutated in place, so the "upload"/"download" are each a single copy and
+//! steps are zero-copy. Both backends produce bit-identical results between
+//! the resident and the legacy literal path — see the parity tests.
+//!
+//! Remaining per-step host↔device traffic: the sampled block inputs and the
+//! scalar loss (tracked in ROADMAP.md "Open items").
+
+pub mod native;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -54,6 +93,18 @@ impl Tensor {
 
     pub fn size_bytes(&self) -> u64 {
         self.numel() as u64 * 4
+    }
+
+    /// Copy `src` tensors into `dst` element-wise, reusing `dst`'s buffers
+    /// when shapes line up (falls back to cloning on first use / reshape).
+    pub fn copy_all(dst: &mut Vec<Tensor>, src: &[Tensor]) {
+        if dst.len() != src.len() || dst.iter().zip(src).any(|(a, b)| a.shape != b.shape) {
+            *dst = src.to_vec();
+            return;
+        }
+        for (d, s) in dst.iter_mut().zip(src) {
+            d.data.copy_from_slice(&s.data);
+        }
     }
 
     fn to_literal(&self) -> Result<xla::Literal> {
@@ -206,43 +257,110 @@ impl ModelState {
     /// Elementwise average of many states' *parameters* (Alg. 2 line 12).
     /// Optimizer state is not averaged (it stays local, like FedAvg+Adam).
     pub fn average_params(states: &[&ModelState]) -> Vec<Tensor> {
+        let mut out = Vec::new();
+        Self::average_params_into(&mut out, states);
+        out
+    }
+
+    /// [`average_params`] into reusable accumulators: zero-allocated buffers
+    /// (no clone-then-zero), one accumulation pass, one final scale pass.
+    /// `out` is (re)allocated only on first use or shape change.
+    ///
+    /// [`average_params`]: ModelState::average_params
+    pub fn average_params_into(out: &mut Vec<Tensor>, states: &[&ModelState]) {
         assert!(!states.is_empty());
-        let mut out = states[0].params.clone();
-        for t in out.iter_mut() {
-            for x in t.data.iter_mut() {
-                *x = 0.0;
+        let proto = &states[0].params;
+        if out.len() != proto.len() || out.iter().zip(proto).any(|(a, p)| a.shape != p.shape) {
+            *out = proto.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        } else {
+            for t in out.iter_mut() {
+                t.data.fill(0.0);
             }
         }
-        let scale = 1.0 / states.len() as f32;
         for s in states {
             for (acc, p) in out.iter_mut().zip(&s.params) {
                 debug_assert_eq!(acc.shape, p.shape);
                 for (a, &x) in acc.data.iter_mut().zip(&p.data) {
-                    *a += x * scale;
+                    *a += x;
                 }
             }
         }
-        out
+        let scale = 1.0 / states.len() as f32;
+        for t in out.iter_mut() {
+            for a in t.data.iter_mut() {
+                *a *= scale;
+            }
+        }
     }
 
     pub fn set_params(&mut self, params: Vec<Tensor>) {
         assert_eq!(params.len(), self.params.len());
         self.params = params;
     }
+
+    /// Overwrite parameters in place from `params` (no allocation).
+    pub fn copy_params_from(&mut self, params: &[Tensor]) {
+        assert_eq!(params.len(), self.params.len());
+        for (dst, src) in self.params.iter_mut().zip(params) {
+            debug_assert_eq!(dst.shape, src.shape);
+            dst.data.copy_from_slice(&src.data);
+        }
+    }
 }
 
-/// The PJRT runtime: manifest + lazily compiled executables.
+/// Model + optimizer state resident on the execution device between local
+/// steps. Created by [`Runtime::upload`], advanced by
+/// [`Runtime::train_step_device`], materialized back to host tensors at
+/// round boundaries by [`Runtime::download_into`].
+pub struct DeviceState {
+    name: String,
+    n_params: usize,
+    n_opt: usize,
+    steps: u64,
+    slots: DeviceSlots,
+}
+
+enum DeviceSlots {
+    /// Native backend: host tensors mutated in place (params then opt).
+    Native(Vec<Tensor>),
+    /// PJRT backend: device buffers, replaced by each step's outputs.
+    Pjrt(Vec<xla::PjRtBuffer>),
+}
+
+impl DeviceState {
+    /// Artifact this state was uploaded for.
+    pub fn artifact(&self) -> &str {
+        &self.name
+    }
+
+    /// Local steps executed since upload.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// The runtime: manifest + backend + lazily prepared executables.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Backend,
     dir: PathBuf,
     metas: HashMap<String, ArtifactMeta>,
-    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     /// executions performed (profiling)
     pub exec_count: RefCell<u64>,
 }
 
+enum Backend {
+    Pjrt {
+        client: xla::PjRtClient,
+        execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    },
+    Native {
+        execs: RefCell<HashMap<String, Rc<native::NativeExec>>>,
+    },
+}
+
 impl Runtime {
     /// Load `dir/manifest.json`; artifacts compile lazily on first use.
+    /// The manifest's `"backend"` key ("pjrt" default) selects the engine.
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
@@ -261,14 +379,61 @@ impl Runtime {
             let meta = ArtifactMeta::from_json(a)?;
             metas.insert(meta.name.clone(), meta);
         }
-        let client = xla::PjRtClient::cpu()?;
+        let backend = match j.get("backend").and_then(|b| b.as_str()).unwrap_or("pjrt") {
+            "native" => Backend::Native {
+                execs: RefCell::new(HashMap::new()),
+            },
+            "pjrt" => Backend::Pjrt {
+                client: xla::PjRtClient::cpu()
+                    .with_context(|| "creating PJRT client for a pjrt-backend manifest")?,
+                execs: RefCell::new(HashMap::new()),
+            },
+            other => bail!("unknown manifest backend {other:?}"),
+        };
         Ok(Runtime {
-            client,
+            backend,
             dir,
             metas,
-            execs: RefCell::new(HashMap::new()),
             exec_count: RefCell::new(0),
         })
+    }
+
+    /// Load `preferred` if its manifest exists *and* is executable in this
+    /// build; otherwise (re)generate the native-backend manifest under
+    /// `target/native-artifacts` and load that. Returns the runtime and the
+    /// artifact dir actually used.
+    pub fn load_or_native(preferred: impl AsRef<Path>) -> Result<(Runtime, String)> {
+        let p = preferred.as_ref();
+        if p.join("manifest.json").exists() {
+            match Runtime::load(p) {
+                Ok(rt) => return Ok((rt, p.display().to_string())),
+                Err(e) => eprintln!(
+                    "note: artifacts at {p:?} not usable here ({e:#}); \
+                     falling back to the native backend"
+                ),
+            }
+        }
+        let dir = Path::new("target/native-artifacts");
+        // reuse an existing manifest when it is current (parallel test
+        // threads all land here; regenerating every call is wasted I/O)
+        if dir.join("manifest.json").exists() {
+            if let Ok(rt) = Runtime::load(dir) {
+                if rt.backend_name() == "native" && rt.meta("gcn_adam_tiny").is_ok() {
+                    return Ok((rt, dir.display().to_string()));
+                }
+            }
+        }
+        native::write_native_manifest(dir)?;
+        let rt = Runtime::load(dir)?;
+        Ok((rt, dir.display().to_string()))
+    }
+
+    /// Backend actually in use ("pjrt" | "native").
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Pjrt { .. } => "pjrt",
+            Backend::Native { .. } => "native",
+        }
     }
 
     pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
@@ -291,24 +456,46 @@ impl Runtime {
         format!("{arch}_eval_{dataset}")
     }
 
-    fn exec(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.execs.borrow().get(name) {
+    fn exec_pjrt(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let Backend::Pjrt { client, execs } = &self.backend else {
+            bail!("{name}: runtime backend is not pjrt");
+        };
+        if let Some(e) = execs.borrow().get(name) {
             return Ok(e.clone());
         }
         let meta = self.meta(name)?;
+        if meta.file.is_empty() {
+            bail!("artifact {name} carries no HLO file (native manifest?)");
+        }
         let path = self.dir.join(&meta.file);
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("bad path"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
-        self.execs.borrow_mut().insert(name.to_string(), exe.clone());
+        let exe = Rc::new(client.compile(&comp)?);
+        execs.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
-    /// Pre-compile an artifact (so timing loops exclude compilation).
+    fn exec_native(&self, name: &str) -> Result<Rc<native::NativeExec>> {
+        let Backend::Native { execs } = &self.backend else {
+            bail!("{name}: runtime backend is not native");
+        };
+        if let Some(e) = execs.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.meta(name)?;
+        let exe = Rc::new(native::NativeExec::new(meta)?);
+        execs.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile / pre-validate an artifact (so timing loops exclude it).
     pub fn warmup(&self, name: &str) -> Result<()> {
-        self.exec(name).map(|_| ())
+        match &self.backend {
+            Backend::Pjrt { .. } => self.exec_pjrt(name).map(|_| ()),
+            Backend::Native { .. } => self.exec_native(name).map(|_| ()),
+        }
     }
 
     fn block_literals(&self, meta: &ArtifactMeta, block: &Block) -> Result<Vec<xla::Literal>> {
@@ -340,8 +527,53 @@ impl Runtime {
         Ok(vec![y, mask])
     }
 
-    /// Run one train step; mutates `state` in place; returns the batch loss.
+    // -- legacy host-literal path ------------------------------------------
+
+    /// Run one train step through the host-literal path: the full model +
+    /// optimizer state round-trips host↔device on every call. Retained as
+    /// the reference/baseline; the round loop uses the device-resident path
+    /// below. Mutates `state` in place; returns the batch loss.
     pub fn train_step(
+        &self,
+        name: &str,
+        state: &mut ModelState,
+        block: &Block,
+        lr: f32,
+    ) -> Result<f32> {
+        match &self.backend {
+            Backend::Pjrt { .. } => self.train_step_pjrt_literal(name, state, block, lr),
+            Backend::Native { .. } => {
+                let meta = self.meta(name)?;
+                if meta.kind != "train" {
+                    bail!("{name} is not a train artifact");
+                }
+                let exe = self.exec_native(name)?;
+                // faithful literal-path cost model: state is copied in and
+                // out around the step, as the PJRT literal path does
+                let mut staged: Vec<Tensor> = state
+                    .params
+                    .iter()
+                    .chain(state.opt.iter())
+                    .cloned()
+                    .collect();
+                let n = state.params.len();
+                *self.exec_count.borrow_mut() += 1;
+                let (p, o) = staged.split_at_mut(n);
+                let loss = exe.train_step(p, o, block, lr)?;
+                for (dst, src) in state
+                    .params
+                    .iter_mut()
+                    .chain(state.opt.iter_mut())
+                    .zip(&staged)
+                {
+                    dst.data.copy_from_slice(&src.data);
+                }
+                Ok(loss)
+            }
+        }
+    }
+
+    fn train_step_pjrt_literal(
         &self,
         name: &str,
         state: &mut ModelState,
@@ -352,7 +584,7 @@ impl Runtime {
         if meta.kind != "train" {
             bail!("{name} is not a train artifact");
         }
-        let exe = self.exec(name)?;
+        let exe = self.exec_pjrt(name)?;
         let mut inputs: Vec<xla::Literal> = Vec::with_capacity(
             state.params.len() + state.opt.len() + 8,
         );
@@ -384,22 +616,230 @@ impl Runtime {
         Ok(loss)
     }
 
-    /// Run one eval step; returns logits `[b * c]`.
+    /// Run one eval step through the host-literal path; returns logits
+    /// `[b * c]`.
     pub fn eval_step(&self, name: &str, params: &[Tensor], block: &Block) -> Result<Vec<f32>> {
         let meta = self.meta(name)?.clone();
         if meta.kind != "eval" {
             bail!("{name} is not an eval artifact");
         }
-        let exe = self.exec(name)?;
-        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 5);
-        for p in params {
-            inputs.push(p.to_literal()?);
+        match &self.backend {
+            Backend::Pjrt { .. } => {
+                let exe = self.exec_pjrt(name)?;
+                let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 5);
+                for p in params {
+                    inputs.push(p.to_literal()?);
+                }
+                inputs.extend(self.block_literals(&meta, block)?);
+                *self.exec_count.borrow_mut() += 1;
+                let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+                let logits = result.to_tuple1()?;
+                Ok(logits.to_vec::<f32>()?)
+            }
+            Backend::Native { .. } => {
+                let exe = self.exec_native(name)?;
+                // literal-path cost model: params staged per call
+                let staged: Vec<Tensor> = params.to_vec();
+                *self.exec_count.borrow_mut() += 1;
+                exe.eval_step(&staged, block)
+            }
         }
-        inputs.extend(self.block_literals(&meta, block)?);
+    }
+
+    // -- device-resident path ----------------------------------------------
+
+    /// Upload model + optimizer state to the device once; subsequent
+    /// [`train_step_device`] calls run without host round-trips.
+    ///
+    /// [`train_step_device`]: Runtime::train_step_device
+    pub fn upload(&self, name: &str, state: &ModelState) -> Result<DeviceState> {
+        self.upload_tensors(name, &state.params, &state.opt)
+    }
+
+    /// Upload parameters only (eval artifacts carry no optimizer state).
+    pub fn upload_params(&self, name: &str, params: &[Tensor]) -> Result<DeviceState> {
+        self.upload_tensors(name, params, &[])
+    }
+
+    fn upload_tensors(
+        &self,
+        name: &str,
+        params: &[Tensor],
+        opt: &[Tensor],
+    ) -> Result<DeviceState> {
+        let meta = self.meta(name)?;
+        if params.len() != meta.params.len() {
+            bail!(
+                "{name}: uploading {} params, artifact has {}",
+                params.len(),
+                meta.params.len()
+            );
+        }
+        if meta.kind == "train" && opt.len() != meta.n_opt {
+            bail!(
+                "{name}: uploading {} opt tensors, artifact has {}",
+                opt.len(),
+                meta.n_opt
+            );
+        }
+        let slots = match &self.backend {
+            Backend::Native { .. } => {
+                // the upload copy: state becomes device-owned until download
+                DeviceSlots::Native(params.iter().chain(opt.iter()).cloned().collect())
+            }
+            Backend::Pjrt { client, .. } => {
+                let mut bufs = Vec::with_capacity(params.len() + opt.len());
+                for t in params.iter().chain(opt.iter()) {
+                    bufs.push(client.buffer_from_host_literal(&t.to_literal()?)?);
+                }
+                DeviceSlots::Pjrt(bufs)
+            }
+        };
+        Ok(DeviceState {
+            name: name.to_string(),
+            n_params: params.len(),
+            n_opt: opt.len(),
+            steps: 0,
+            slots,
+        })
+    }
+
+    /// One train step on device-resident state: only the block + learning
+    /// rate cross to the device; only the scalar loss syncs back.
+    pub fn train_step_device(
+        &self,
+        dev: &mut DeviceState,
+        block: &Block,
+        lr: f32,
+    ) -> Result<f32> {
+        let meta = self.meta(&dev.name)?.clone();
+        if meta.kind != "train" {
+            bail!("{} is not a train artifact", dev.name);
+        }
         *self.exec_count.borrow_mut() += 1;
-        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
-        let logits = result.to_tuple1()?;
-        Ok(logits.to_vec::<f32>()?)
+        let loss = match (&self.backend, &mut dev.slots) {
+            (Backend::Native { .. }, DeviceSlots::Native(tensors)) => {
+                let exe = self.exec_native(&dev.name)?;
+                let (p, o) = tensors.split_at_mut(dev.n_params);
+                exe.train_step(p, o, block, lr)?
+            }
+            (Backend::Pjrt { client, .. }, DeviceSlots::Pjrt(bufs)) => {
+                let exe = self.exec_pjrt(&dev.name)?;
+                let block_lits = self.block_literals(&meta, block)?;
+                let label_lits = self.label_literals(&meta, block)?;
+                let mut staged: Vec<xla::PjRtBuffer> = Vec::with_capacity(8);
+                for lit in block_lits.iter().chain(label_lits.iter()) {
+                    staged.push(client.buffer_from_host_literal(lit)?);
+                }
+                staged.push(client.buffer_from_host_literal(&xla::Literal::scalar(lr))?);
+                let mut args: Vec<&xla::PjRtBuffer> =
+                    Vec::with_capacity(bufs.len() + staged.len());
+                args.extend(bufs.iter());
+                args.extend(staged.iter());
+                let mut replicas = exe.execute_b(&args)?;
+                if replicas.is_empty() {
+                    bail!("{}: no replica outputs", dev.name);
+                }
+                let outs = replicas.swap_remove(0);
+                let expect = 1 + dev.n_params + dev.n_opt;
+                if outs.len() != expect {
+                    bail!(
+                        "{}: expected {expect} untupled outputs, got {} \
+                         (compile with untuple_result)",
+                        dev.name,
+                        outs.len()
+                    );
+                }
+                let mut it = outs.into_iter();
+                let loss_buf = it.next().expect("length checked");
+                // the one per-step host sync: a scalar
+                let loss = loss_buf.to_literal_sync()?.to_vec::<f32>()?[0];
+                *bufs = it.collect();
+                loss
+            }
+            _ => bail!(
+                "{}: DeviceState backend does not match this runtime",
+                dev.name
+            ),
+        };
+        dev.steps += 1;
+        Ok(loss)
+    }
+
+    /// Eval on device-resident parameters (uploaded once per eval sweep).
+    pub fn eval_step_device(&self, dev: &DeviceState, block: &Block) -> Result<Vec<f32>> {
+        let meta = self.meta(&dev.name)?.clone();
+        if meta.kind != "eval" {
+            bail!("{} is not an eval artifact", dev.name);
+        }
+        *self.exec_count.borrow_mut() += 1;
+        match (&self.backend, &dev.slots) {
+            (Backend::Native { .. }, DeviceSlots::Native(tensors)) => {
+                let exe = self.exec_native(&dev.name)?;
+                exe.eval_step(&tensors[..dev.n_params], block)
+            }
+            (Backend::Pjrt { client, .. }, DeviceSlots::Pjrt(bufs)) => {
+                let exe = self.exec_pjrt(&dev.name)?;
+                let block_lits = self.block_literals(&meta, block)?;
+                let mut staged: Vec<xla::PjRtBuffer> = Vec::with_capacity(block_lits.len());
+                for lit in &block_lits {
+                    staged.push(client.buffer_from_host_literal(lit)?);
+                }
+                let mut args: Vec<&xla::PjRtBuffer> =
+                    Vec::with_capacity(bufs.len() + staged.len());
+                args.extend(bufs.iter());
+                args.extend(staged.iter());
+                let mut replicas = exe.execute_b(&args)?;
+                if replicas.is_empty() || replicas[0].is_empty() {
+                    bail!("{}: no outputs", dev.name);
+                }
+                let out = replicas.swap_remove(0).swap_remove(0);
+                Ok(out.to_literal_sync()?.to_tuple1()?.to_vec::<f32>()?)
+            }
+            _ => bail!(
+                "{}: DeviceState backend does not match this runtime",
+                dev.name
+            ),
+        }
+    }
+
+    /// Materialize device-resident state back into host tensors — the
+    /// round-boundary download (averaging / correction / eval hand-off).
+    pub fn download_into(&self, dev: &DeviceState, state: &mut ModelState) -> Result<()> {
+        if state.params.len() != dev.n_params || state.opt.len() != dev.n_opt {
+            bail!(
+                "{}: download into state with {}+{} tensors, device has {}+{}",
+                dev.name,
+                state.params.len(),
+                state.opt.len(),
+                dev.n_params,
+                dev.n_opt
+            );
+        }
+        match &dev.slots {
+            DeviceSlots::Native(tensors) => {
+                for (dst, src) in state
+                    .params
+                    .iter_mut()
+                    .chain(state.opt.iter_mut())
+                    .zip(tensors)
+                {
+                    dst.data.copy_from_slice(&src.data);
+                }
+                Ok(())
+            }
+            DeviceSlots::Pjrt(bufs) => {
+                for (dst, buf) in state
+                    .params
+                    .iter_mut()
+                    .chain(state.opt.iter_mut())
+                    .zip(bufs)
+                {
+                    dst.data = buf.to_literal_sync()?.to_vec::<f32>()?;
+                }
+                Ok(())
+            }
+        }
     }
 }
 
@@ -436,6 +876,52 @@ mod tests {
         };
         let avg = ModelState::average_params(&[&a, &b]);
         assert_eq!(avg[0].data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn average_params_into_reuses_accumulators() {
+        let mk = |x: f32| ModelState {
+            params: vec![Tensor {
+                shape: vec![3],
+                data: vec![x, 2.0 * x, -x],
+            }],
+            opt: vec![],
+        };
+        let (a, b, c) = (mk(1.0), mk(2.0), mk(6.0));
+        let mut acc = Vec::new();
+        ModelState::average_params_into(&mut acc, &[&a, &b, &c]);
+        assert_eq!(acc[0].data, vec![3.0, 6.0, -3.0]);
+        let ptr = acc[0].data.as_ptr();
+        // second round must reuse the same buffer and fully overwrite it
+        ModelState::average_params_into(&mut acc, &[&a, &b]);
+        assert_eq!(acc[0].data, vec![1.5, 3.0, -1.5]);
+        assert_eq!(acc[0].data.as_ptr(), ptr, "accumulator was reallocated");
+    }
+
+    #[test]
+    fn copy_helpers_overwrite_in_place() {
+        let src = vec![Tensor {
+            shape: vec![2],
+            data: vec![5.0, 6.0],
+        }];
+        let mut state = ModelState {
+            params: vec![Tensor {
+                shape: vec![2],
+                data: vec![0.0, 0.0],
+            }],
+            opt: vec![],
+        };
+        let ptr = state.params[0].data.as_ptr();
+        state.copy_params_from(&src);
+        assert_eq!(state.params[0].data, vec![5.0, 6.0]);
+        assert_eq!(state.params[0].data.as_ptr(), ptr);
+
+        let mut dst: Vec<Tensor> = Vec::new();
+        Tensor::copy_all(&mut dst, &src); // first call clones
+        let p2 = dst[0].data.as_ptr();
+        Tensor::copy_all(&mut dst, &src); // second reuses
+        assert_eq!(dst[0].data.as_ptr(), p2);
+        assert_eq!(dst[0].data, vec![5.0, 6.0]);
     }
 
     #[test]

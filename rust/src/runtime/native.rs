@@ -1,0 +1,938 @@
+//! Native reference backend: pure-Rust forward/backward/optimizer for the
+//! AOT model zoo, mirroring `python/compile/model.py` op-for-op.
+//!
+//! Two jobs:
+//!
+//! 1. **Reference semantics** — the HLO artifacts are opaque; this module is
+//!    the readable specification of what they compute (GCN / SAGE / APPNP /
+//!    MLP, masked softmax-CE / sigmoid-BCE, SGD / bias-corrected Adam).
+//! 2. **Executable fallback** — environments without a real PJRT client
+//!    (the vendored `xla` facade) still train, test, and bench through this
+//!    backend; [`write_native_manifest`] emits a `manifest.json` with
+//!    `"backend": "native"` and the same dataset shape table as
+//!    `python/compile/aot.py`, so the whole coordinator stack runs unchanged.
+//!
+//! GAT is PJRT-only (attention backward is deliberately out of scope for
+//! the reference implementation); [`NativeExec::new`] rejects it.
+//!
+//! Aggregation matmuls skip zero left-operand entries, which makes the
+//! dense-banded `A1`/`A2` products effectively O(nnz) — the same work the
+//! Pallas aggregation kernels do on device.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::sampler::Block;
+use crate::util::Json;
+
+use super::{ArtifactMeta, Tensor};
+
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+pub const APPNP_TELEPORT: f32 = 0.1;
+
+/// Architectures the native backend implements.
+pub const NATIVE_ARCHS: &[&str] = &["mlp", "gcn", "sage", "appnp"];
+
+/// Ordered `(name, shape)` parameter specs — must match
+/// `python/compile/model.py::param_specs` (the manifest records this order
+/// and all packing/averaging is positional).
+pub fn param_specs(
+    arch: &str,
+    d: usize,
+    h: usize,
+    c: usize,
+) -> Result<Vec<(&'static str, Vec<usize>)>> {
+    Ok(match arch {
+        "mlp" | "gcn" | "appnp" => vec![
+            ("w1", vec![d, h]),
+            ("b1", vec![h]),
+            ("w2", vec![h, c]),
+            ("b2", vec![c]),
+        ],
+        "sage" => vec![
+            ("ws1", vec![d, h]),
+            ("wn1", vec![d, h]),
+            ("b1", vec![h]),
+            ("ws2", vec![h, c]),
+            ("wn2", vec![h, c]),
+            ("b2", vec![c]),
+        ],
+        other => bail!("native backend has no param specs for arch {other:?}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// dense kernels (row-major f32)
+// ---------------------------------------------------------------------------
+
+/// `out[m,n] = a[m,k] @ b[k,n]`, skipping zero entries of `a` (banded
+/// adjacency operators are mostly structural zeros).
+fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,n] (+)= a[r,m]ᵀ @ b[r,n]`; zeroes `out` first unless `acc`.
+#[allow(clippy::too_many_arguments)]
+fn matmul_at_b(a: &[f32], b: &[f32], out: &mut [f32], r: usize, m: usize, n: usize, acc: bool) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    debug_assert_eq!(out.len(), m * n);
+    if !acc {
+        out.fill(0.0);
+    }
+    for row in 0..r {
+        let arow = &a[row * m..(row + 1) * m];
+        let brow = &b[row * n..(row + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,n] = a[m,k] @ b[n,k]ᵀ` (row-by-row dot products).
+fn matmul_a_bt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            out[i * n + j] = s;
+        }
+    }
+}
+
+/// `out[r,n] += bias[n]` broadcast over rows.
+fn add_bias(out: &mut [f32], bias: &[f32], r: usize, n: usize) {
+    debug_assert_eq!(out.len(), r * n);
+    debug_assert_eq!(bias.len(), n);
+    for row in 0..r {
+        for (o, &bv) in out[row * n..(row + 1) * n].iter_mut().zip(bias) {
+            *o += bv;
+        }
+    }
+}
+
+fn relu_inplace(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// `dz = dh ⊙ (h > 0)` in place on `dh` (relu backward; `h` is post-act).
+fn relu_backward_inplace(dh: &mut [f32], h: &[f32]) {
+    for (d, &hv) in dh.iter_mut().zip(h) {
+        if hv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// `out[n] (+)= column sums of g[r,n]`.
+fn colsum(g: &[f32], out: &mut [f32], r: usize, n: usize, acc: bool) {
+    debug_assert_eq!(g.len(), r * n);
+    debug_assert_eq!(out.len(), n);
+    if !acc {
+        out.fill(0.0);
+    }
+    for row in 0..r {
+        for (o, &gv) in out.iter_mut().zip(&g[row * n..(row + 1) * n]) {
+            *o += gv;
+        }
+    }
+}
+
+/// Parameter tensor `i`'s data (positional, manifest order).
+fn pd(params: &[Tensor], i: usize) -> &[f32] {
+    &params[i].data
+}
+
+/// `h = relu?(x @ w + bias?)` — the `ops.linear` analog.
+#[allow(clippy::too_many_arguments)]
+fn linear(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    matmul(x, w, out, m, k, n);
+    if let Some(b) = bias {
+        add_bias(out, b, m, n);
+    }
+    if relu {
+        relu_inplace(out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// executor
+// ---------------------------------------------------------------------------
+
+/// One artifact's native executor: validates shapes once, then runs
+/// train/eval steps on host tensors in place.
+pub struct NativeExec {
+    meta: ArtifactMeta,
+}
+
+impl NativeExec {
+    pub fn new(meta: &ArtifactMeta) -> Result<NativeExec> {
+        if !NATIVE_ARCHS.contains(&meta.arch.as_str()) {
+            bail!(
+                "arch {:?} is not implemented by the native backend (have {:?}); \
+                 build PJRT artifacts via `make artifacts` and link the real xla crate",
+                meta.arch,
+                NATIVE_ARCHS
+            );
+        }
+        if !matches!(meta.loss.as_str(), "softmax_ce" | "sigmoid_bce") {
+            bail!("unknown loss {:?}", meta.loss);
+        }
+        if !matches!(meta.optimizer.as_str(), "sgd" | "adam" | "none") {
+            bail!("unknown optimizer {:?}", meta.optimizer);
+        }
+        let specs = param_specs(&meta.arch, meta.dims.d, meta.dims.h, meta.dims.c)?;
+        if specs.len() != meta.params.len()
+            || specs
+                .iter()
+                .zip(&meta.params)
+                .any(|((_, s), (_, ms))| s != ms)
+        {
+            bail!(
+                "artifact {} param shapes {:?} do not match native specs {:?}",
+                meta.name,
+                meta.params,
+                specs
+            );
+        }
+        Ok(NativeExec { meta: meta.clone() })
+    }
+
+    fn check_block(&self, block: &Block) -> Result<()> {
+        let dims = &self.meta.dims;
+        if block.b != dims.b || block.n1 != dims.n1 || block.n2 != dims.n2 || block.d != dims.d {
+            bail!(
+                "block dims ({},{},{},d={}) do not match artifact {} ({},{},{},d={})",
+                block.b,
+                block.n1,
+                block.n2,
+                block.d,
+                self.meta.name,
+                dims.b,
+                dims.n1,
+                dims.n2,
+                dims.d
+            );
+        }
+        Ok(())
+    }
+
+    /// One optimizer step on `params`/`opt` in place; returns the batch loss.
+    pub fn train_step(
+        &self,
+        params: &mut [Tensor],
+        opt: &mut [Tensor],
+        block: &Block,
+        lr: f32,
+    ) -> Result<f32> {
+        self.check_block(block)?;
+        let (loss, grads) = self.loss_and_grads(params, block)?;
+        self.apply_update(params, opt, &grads, lr)?;
+        Ok(loss)
+    }
+
+    /// Forward only; returns logits `[b * c]`.
+    pub fn eval_step(&self, params: &[Tensor], block: &Block) -> Result<Vec<f32>> {
+        self.check_block(block)?;
+        let (logits, _caches) = self.forward(params, block)?;
+        Ok(logits)
+    }
+
+    // -- forward -----------------------------------------------------------
+
+    /// Runs the arch forward; returns logits and the activation caches the
+    /// backward pass needs (arch-specific layout).
+    fn forward(&self, params: &[Tensor], block: &Block) -> Result<(Vec<f32>, Caches)> {
+        let d = self.meta.dims.d;
+        let h = self.meta.dims.h;
+        let c = self.meta.dims.c;
+        let (b, n1, n2) = (block.b, block.n1, block.n2);
+
+        match self.meta.arch.as_str() {
+            "mlp" => {
+                // h1 = relu(x0 @ w1 + b1); logits = h1 @ w2 + b2
+                let mut h1 = vec![0.0; b * h];
+                linear(&block.x0, pd(params, 0), Some(pd(params, 1)), &mut h1, b, d, h, true);
+                let mut logits = vec![0.0; b * c];
+                linear(&h1, pd(params, 2), Some(pd(params, 3)), &mut logits, b, h, c, false);
+                Ok((logits, Caches::Mlp { h1 }))
+            }
+            "gcn" => {
+                // h1 = relu((A2 @ x2) @ w1 + b1); logits = (A1 @ h1) @ w2 + b2
+                let mut agg2 = vec![0.0; n1 * d];
+                matmul(&block.a2, &block.x2, &mut agg2, n1, n2, d);
+                let mut h1 = vec![0.0; n1 * h];
+                linear(&agg2, pd(params, 0), Some(pd(params, 1)), &mut h1, n1, d, h, true);
+                let mut agg1 = vec![0.0; b * h];
+                matmul(&block.a1, &h1, &mut agg1, b, n1, h);
+                let mut logits = vec![0.0; b * c];
+                linear(&agg1, pd(params, 2), Some(pd(params, 3)), &mut logits, b, h, c, false);
+                Ok((logits, Caches::Gcn { agg2, h1, agg1 }))
+            }
+            "sage" => {
+                // n1v = A2 @ x2
+                let mut n1v = vec![0.0; n1 * d];
+                matmul(&block.a2, &block.x2, &mut n1v, n1, n2, d);
+                // h1 = relu(x1 @ ws1 + b1 + n1v @ wn1)
+                let mut h1 = vec![0.0; n1 * h];
+                matmul(&block.x1, pd(params, 0), &mut h1, n1, d, h);
+                let mut tmp = vec![0.0; n1 * h];
+                matmul(&n1v, pd(params, 1), &mut tmp, n1, d, h);
+                for (a, &t) in h1.iter_mut().zip(&tmp) {
+                    *a += t;
+                }
+                add_bias(&mut h1, pd(params, 2), n1, h);
+                relu_inplace(&mut h1);
+                // n0 = A1 @ h1 ; m0 = A1 @ x1
+                let mut n0 = vec![0.0; b * h];
+                matmul(&block.a1, &h1, &mut n0, b, n1, h);
+                let mut m0 = vec![0.0; b * d];
+                matmul(&block.a1, &block.x1, &mut m0, b, n1, d);
+                // h0 = relu(x0 @ ws1 + b1 + m0 @ wn1)
+                let mut h0 = vec![0.0; b * h];
+                matmul(&block.x0, pd(params, 0), &mut h0, b, d, h);
+                let mut tmp0 = vec![0.0; b * h];
+                matmul(&m0, pd(params, 1), &mut tmp0, b, d, h);
+                for (a, &t) in h0.iter_mut().zip(&tmp0) {
+                    *a += t;
+                }
+                add_bias(&mut h0, pd(params, 2), b, h);
+                relu_inplace(&mut h0);
+                // logits = h0 @ ws2 + b2 + n0 @ wn2
+                let mut logits = vec![0.0; b * c];
+                matmul(&h0, pd(params, 3), &mut logits, b, h, c);
+                let mut tmpl = vec![0.0; b * c];
+                matmul(&n0, pd(params, 4), &mut tmpl, b, h, c);
+                for (a, &t) in logits.iter_mut().zip(&tmpl) {
+                    *a += t;
+                }
+                add_bias(&mut logits, pd(params, 5), b, c);
+                Ok((
+                    logits,
+                    Caches::Sage {
+                        n1v,
+                        h1,
+                        n0,
+                        m0,
+                        h0,
+                    },
+                ))
+            }
+            "appnp" => {
+                // mlp(x) at each level; then 2 personalized-PageRank steps
+                let beta = APPNP_TELEPORT;
+                let mlp = |x: &[f32], rows: usize| -> (Vec<f32>, Vec<f32>) {
+                    let mut u = vec![0.0; rows * h];
+                    linear(x, pd(params, 0), Some(pd(params, 1)), &mut u, rows, d, h, true);
+                    let mut out = vec![0.0; rows * c];
+                    linear(&u, pd(params, 2), Some(pd(params, 3)), &mut out, rows, h, c, false);
+                    (out, u)
+                };
+                let (h2, u2) = mlp(&block.x2, n2);
+                let (h1v, u1) = mlp(&block.x1, n1);
+                let (h0, u0) = mlp(&block.x0, b);
+                // p1 = beta*h1v + (1-beta)*A2@h2
+                let mut p1 = vec![0.0; n1 * c];
+                matmul(&block.a2, &h2, &mut p1, n1, n2, c);
+                for (o, &hv) in p1.iter_mut().zip(&h1v) {
+                    *o = beta * hv + (1.0 - beta) * *o;
+                }
+                // logits = beta*h0 + (1-beta)*A1@p1
+                let mut logits = vec![0.0; b * c];
+                matmul(&block.a1, &p1, &mut logits, b, n1, c);
+                for (o, &hv) in logits.iter_mut().zip(&h0) {
+                    *o = beta * hv + (1.0 - beta) * *o;
+                }
+                Ok((logits, Caches::Appnp { u2, u1, u0 }))
+            }
+            other => bail!("native forward: unsupported arch {other:?}"),
+        }
+    }
+
+    // -- loss + gradients --------------------------------------------------
+
+    fn loss_and_grads(&self, params: &[Tensor], block: &Block) -> Result<(f32, Vec<Tensor>)> {
+        let (logits, caches) = self.forward(params, block)?;
+        let (loss, g) = self.loss_grad(&logits, block)?;
+        let grads = self.backward(params, block, &caches, &g)?;
+        Ok((loss, grads))
+    }
+
+    /// Masked mean loss and dL/dlogits `[b,c]`.
+    fn loss_grad(&self, logits: &[f32], block: &Block) -> Result<(f32, Vec<f32>)> {
+        let c = self.meta.dims.c;
+        let b = block.b;
+        let denom = block.mask.iter().sum::<f32>().max(1.0);
+        let mut g = vec![0.0f32; b * c];
+        let mut loss = 0.0f32;
+        match self.meta.loss.as_str() {
+            "softmax_ce" => {
+                if block.y_class.len() != b {
+                    bail!("softmax_ce needs y_class[{b}], got {}", block.y_class.len());
+                }
+                for i in 0..b {
+                    let mask = block.mask[i];
+                    if mask == 0.0 {
+                        continue;
+                    }
+                    let row = &logits[i * c..(i + 1) * c];
+                    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let sum: f32 = row.iter().map(|&z| (z - max).exp()).sum();
+                    let y = block.y_class[i] as usize;
+                    if y >= c {
+                        bail!("label {y} out of range c={c}");
+                    }
+                    loss += mask * (sum.ln() - (row[y] - max));
+                    let scale = mask / denom;
+                    let grow = &mut g[i * c..(i + 1) * c];
+                    for (j, (gv, &z)) in grow.iter_mut().zip(row).enumerate() {
+                        let p = (z - max).exp() / sum;
+                        *gv = scale * (p - if j == y { 1.0 } else { 0.0 });
+                    }
+                }
+            }
+            "sigmoid_bce" => {
+                if block.y_multi.len() != b * c {
+                    bail!(
+                        "sigmoid_bce needs y_multi[{}], got {}",
+                        b * c,
+                        block.y_multi.len()
+                    );
+                }
+                for i in 0..b {
+                    let mask = block.mask[i];
+                    if mask == 0.0 {
+                        continue;
+                    }
+                    let row = &logits[i * c..(i + 1) * c];
+                    let yrow = &block.y_multi[i * c..(i + 1) * c];
+                    let mut row_bce = 0.0f32;
+                    let grow = &mut g[i * c..(i + 1) * c];
+                    for ((gv, &z), &y) in grow.iter_mut().zip(row).zip(yrow) {
+                        row_bce += z.max(0.0) - z * y + (-z.abs()).exp().ln_1p();
+                        let sig = 1.0 / (1.0 + (-z).exp());
+                        *gv = mask / denom * (sig - y) / c as f32;
+                    }
+                    loss += mask * row_bce / c as f32;
+                }
+            }
+            other => bail!("unknown loss {other:?}"),
+        }
+        Ok((loss / denom, g))
+    }
+
+    /// Backprop `g = dL/dlogits` to parameter gradients (same order/shapes
+    /// as `params`).
+    fn backward(
+        &self,
+        params: &[Tensor],
+        block: &Block,
+        caches: &Caches,
+        g: &[f32],
+    ) -> Result<Vec<Tensor>> {
+        let d = self.meta.dims.d;
+        let h = self.meta.dims.h;
+        let c = self.meta.dims.c;
+        let (b, n1, n2) = (block.b, block.n1, block.n2);
+        let mut grads: Vec<Tensor> = params.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+
+        match (self.meta.arch.as_str(), caches) {
+            ("mlp", Caches::Mlp { h1 }) => {
+                // [w1, b1, w2, b2]
+                matmul_at_b(h1, g, &mut grads[2].data, b, h, c, false);
+                colsum(g, &mut grads[3].data, b, c, false);
+                let mut dh1 = vec![0.0; b * h];
+                matmul_a_bt(g, pd(params, 2), &mut dh1, b, c, h);
+                relu_backward_inplace(&mut dh1, h1);
+                matmul_at_b(&block.x0, &dh1, &mut grads[0].data, b, d, h, false);
+                colsum(&dh1, &mut grads[1].data, b, h, false);
+            }
+            ("gcn", Caches::Gcn { agg2, h1, agg1 }) => {
+                // [w1, b1, w2, b2]
+                matmul_at_b(agg1, g, &mut grads[2].data, b, h, c, false);
+                colsum(g, &mut grads[3].data, b, c, false);
+                let mut dagg1 = vec![0.0; b * h];
+                matmul_a_bt(g, pd(params, 2), &mut dagg1, b, c, h);
+                let mut dh1 = vec![0.0; n1 * h];
+                matmul_at_b(&block.a1, &dagg1, &mut dh1, b, n1, h, false);
+                relu_backward_inplace(&mut dh1, h1);
+                matmul_at_b(agg2, &dh1, &mut grads[0].data, n1, d, h, false);
+                colsum(&dh1, &mut grads[1].data, n1, h, false);
+            }
+            (
+                "sage",
+                Caches::Sage {
+                    n1v,
+                    h1,
+                    n0,
+                    m0,
+                    h0,
+                },
+            ) => {
+                // [ws1, wn1, b1, ws2, wn2, b2]
+                matmul_at_b(h0, g, &mut grads[3].data, b, h, c, false);
+                matmul_at_b(n0, g, &mut grads[4].data, b, h, c, false);
+                colsum(g, &mut grads[5].data, b, c, false);
+                // self path at level 0
+                let mut dh0 = vec![0.0; b * h];
+                matmul_a_bt(g, pd(params, 3), &mut dh0, b, c, h);
+                relu_backward_inplace(&mut dh0, h0);
+                // neighbor path through the level-1 embeddings
+                let mut dn0 = vec![0.0; b * h];
+                matmul_a_bt(g, pd(params, 4), &mut dn0, b, c, h);
+                let mut dh1 = vec![0.0; n1 * h];
+                matmul_at_b(&block.a1, &dn0, &mut dh1, b, n1, h, false);
+                relu_backward_inplace(&mut dh1, h1);
+                // shared layer-1 weights accumulate from both levels
+                matmul_at_b(&block.x0, &dh0, &mut grads[0].data, b, d, h, false);
+                matmul_at_b(&block.x1, &dh1, &mut grads[0].data, n1, d, h, true);
+                matmul_at_b(m0, &dh0, &mut grads[1].data, b, d, h, false);
+                matmul_at_b(n1v, &dh1, &mut grads[1].data, n1, d, h, true);
+                colsum(&dh0, &mut grads[2].data, b, h, false);
+                colsum(&dh1, &mut grads[2].data, n1, h, true);
+            }
+            ("appnp", Caches::Appnp { u2, u1, u0 }) => {
+                // [w1, b1, w2, b2]; dL/dmlp-out at each level, then the
+                // shared MLP accumulates over the three calls.
+                let beta = APPNP_TELEPORT;
+                let mut dp1 = vec![0.0; n1 * c];
+                matmul_at_b(&block.a1, g, &mut dp1, b, n1, c, false);
+                for v in dp1.iter_mut() {
+                    *v *= 1.0 - beta;
+                }
+                let mut dh2 = vec![0.0; n2 * c];
+                matmul_at_b(&block.a2, &dp1, &mut dh2, n1, n2, c, false);
+                for v in dh2.iter_mut() {
+                    *v *= 1.0 - beta;
+                }
+                let dh1: Vec<f32> = dp1.iter().map(|&v| beta * v).collect();
+                let dh0: Vec<f32> = g.iter().map(|&v| beta * v).collect();
+                let mut first = true;
+                for (x, u, dh, rows) in [
+                    (&block.x2, u2, &dh2, n2),
+                    (&block.x1, u1, &dh1, n1),
+                    (&block.x0, u0, &dh0, b),
+                ] {
+                    matmul_at_b(u, dh, &mut grads[2].data, rows, h, c, !first);
+                    colsum(dh, &mut grads[3].data, rows, c, !first);
+                    let mut du = vec![0.0; rows * h];
+                    matmul_a_bt(dh, pd(params, 2), &mut du, rows, c, h);
+                    relu_backward_inplace(&mut du, u);
+                    matmul_at_b(x, &du, &mut grads[0].data, rows, d, h, !first);
+                    colsum(&du, &mut grads[1].data, rows, h, !first);
+                    first = false;
+                }
+            }
+            (arch, _) => bail!("native backward: cache/arch mismatch for {arch:?}"),
+        }
+        Ok(grads)
+    }
+
+    // -- optimizer ---------------------------------------------------------
+
+    fn apply_update(
+        &self,
+        params: &mut [Tensor],
+        opt: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+    ) -> Result<()> {
+        match self.meta.optimizer.as_str() {
+            "sgd" => {
+                for (pt, gt) in params.iter_mut().zip(grads) {
+                    for (pv, &gv) in pt.data.iter_mut().zip(&gt.data) {
+                        *pv -= lr * gv;
+                    }
+                }
+            }
+            "adam" => {
+                let n = params.len();
+                if opt.len() != 2 * n + 1 {
+                    bail!("adam expects {} opt tensors, got {}", 2 * n + 1, opt.len());
+                }
+                let (ms, rest) = opt.split_at_mut(n);
+                let (vs, tt) = rest.split_at_mut(n);
+                let t1 = tt[0].data[0] + 1.0;
+                tt[0].data[0] = t1;
+                let bc1 = 1.0 - ADAM_B1.powf(t1);
+                let bc2 = 1.0 - ADAM_B2.powf(t1);
+                for (((pt, gt), mt), vt) in
+                    params.iter_mut().zip(grads).zip(ms).zip(vs)
+                {
+                    for (((pv, &gv), mv), vv) in pt
+                        .data
+                        .iter_mut()
+                        .zip(&gt.data)
+                        .zip(mt.data.iter_mut())
+                        .zip(vt.data.iter_mut())
+                    {
+                        *mv = ADAM_B1 * *mv + (1.0 - ADAM_B1) * gv;
+                        *vv = ADAM_B2 * *vv + (1.0 - ADAM_B2) * gv * gv;
+                        let mhat = *mv / bc1;
+                        let vhat = *vv / bc2;
+                        *pv -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+                    }
+                }
+            }
+            other => bail!("apply_update on optimizer {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+/// Per-arch activation caches threaded from forward to backward.
+enum Caches {
+    Mlp {
+        h1: Vec<f32>,
+    },
+    Gcn {
+        agg2: Vec<f32>,
+        h1: Vec<f32>,
+        agg1: Vec<f32>,
+    },
+    Sage {
+        n1v: Vec<f32>,
+        h1: Vec<f32>,
+        n0: Vec<f32>,
+        m0: Vec<f32>,
+        h0: Vec<f32>,
+    },
+    Appnp {
+        u2: Vec<f32>,
+        u1: Vec<f32>,
+        u0: Vec<f32>,
+    },
+}
+
+// ---------------------------------------------------------------------------
+// native manifest (the `make artifacts` substitute)
+// ---------------------------------------------------------------------------
+
+struct ShapeCfg {
+    name: &'static str,
+    d: usize,
+    c: usize,
+    h: usize,
+    b: usize,
+    f1: usize,
+    f2: usize,
+    loss: &'static str,
+    archs: &'static [&'static str],
+}
+
+/// Dataset shape table — `python/compile/aot.py::DATASETS` minus GAT
+/// (PJRT-only).
+const SHAPES: &[ShapeCfg] = &[
+    ShapeCfg { name: "tiny", d: 16, c: 4, h: 16, b: 8, f1: 4, f2: 4, loss: "softmax_ce", archs: &["gcn", "sage", "mlp"] },
+    ShapeCfg { name: "tiny-hetero", d: 16, c: 4, h: 16, b: 8, f1: 4, f2: 4, loss: "softmax_ce", archs: &["gcn", "sage"] },
+    ShapeCfg { name: "flickr-s", d: 64, c: 7, h: 64, b: 32, f1: 8, f2: 8, loss: "softmax_ce", archs: &["gcn", "sage", "appnp"] },
+    ShapeCfg { name: "proteins-s", d: 16, c: 16, h: 64, b: 32, f1: 8, f2: 8, loss: "sigmoid_bce", archs: &["gcn", "sage", "appnp"] },
+    ShapeCfg { name: "arxiv-s", d: 32, c: 16, h: 64, b: 32, f1: 8, f2: 8, loss: "softmax_ce", archs: &["gcn", "sage", "appnp"] },
+    ShapeCfg { name: "reddit-s", d: 64, c: 16, h: 64, b: 32, f1: 8, f2: 8, loss: "softmax_ce", archs: &["gcn", "sage", "appnp"] },
+    ShapeCfg { name: "yelp-s", d: 32, c: 12, h: 64, b: 32, f1: 8, f2: 8, loss: "sigmoid_bce", archs: &["gcn", "mlp"] },
+    ShapeCfg { name: "products-s", d: 32, c: 12, h: 64, b: 32, f1: 8, f2: 8, loss: "softmax_ce", archs: &["sage", "gcn"] },
+];
+
+fn artifact_json(
+    name: &str,
+    kind: &str,
+    arch: &str,
+    optimizer: &str,
+    cfg: &ShapeCfg,
+    n_opt: usize,
+) -> Result<Json> {
+    let n1 = cfg.b * cfg.f1;
+    let n2 = cfg.b * cfg.f1 * cfg.f2;
+    let params = param_specs(arch, cfg.d, cfg.h, cfg.c)?
+        .into_iter()
+        .map(|(pname, shape)| {
+            Json::obj(vec![
+                ("name", Json::str(pname)),
+                (
+                    "shape",
+                    Json::arr(shape.into_iter().map(|s| Json::num(s as f64)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("name", Json::str(name)),
+        ("file", Json::str("")),
+        ("kind", Json::str(kind)),
+        ("arch", Json::str(arch)),
+        ("optimizer", Json::str(optimizer)),
+        ("loss", Json::str(cfg.loss)),
+        ("dataset", Json::str(cfg.name)),
+        (
+            "dims",
+            Json::obj(vec![
+                ("b", Json::num(cfg.b as f64)),
+                ("n1", Json::num(n1 as f64)),
+                ("n2", Json::num(n2 as f64)),
+                ("d", Json::num(cfg.d as f64)),
+                ("h", Json::num(cfg.h as f64)),
+                ("c", Json::num(cfg.c as f64)),
+                ("f1", Json::num(cfg.f1 as f64)),
+                ("f2", Json::num(cfg.f2 as f64)),
+            ]),
+        ),
+        ("params", Json::arr(params)),
+        ("n_opt", Json::num(n_opt as f64)),
+    ]))
+}
+
+/// Write a `"backend": "native"` manifest covering the full shape table
+/// into `dir/manifest.json` (atomic rename, safe under parallel tests).
+pub fn write_native_manifest(dir: impl AsRef<Path>) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let mut artifacts = Vec::new();
+    for cfg in SHAPES {
+        for &arch in cfg.archs {
+            let n_params = param_specs(arch, cfg.d, cfg.h, cfg.c)?.len();
+            for opt in ["adam", "sgd"] {
+                let name = format!("{arch}_{opt}_{}", cfg.name);
+                let n_opt = if opt == "adam" { 2 * n_params + 1 } else { 0 };
+                artifacts.push(artifact_json(&name, "train", arch, opt, cfg, n_opt)?);
+            }
+            let name = format!("{arch}_eval_{}", cfg.name);
+            artifacts.push(artifact_json(&name, "eval", arch, "none", cfg, 0)?);
+        }
+    }
+    let manifest = Json::obj(vec![
+        ("format", Json::num(1.0)),
+        ("backend", Json::str("native")),
+        ("artifacts", Json::arr(artifacts)),
+    ]);
+    // unique tmp per call (pid + counter): parallel test threads may write
+    // concurrently, and rename() is atomic, so last writer wins cleanly
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = dir.join(format!("manifest.json.tmp.{}.{seq}", std::process::id()));
+    std::fs::write(&tmp, manifest.to_string_pretty())?;
+    std::fs::rename(&tmp, dir.join("manifest.json"))
+        .map_err(|e| anyhow!("installing native manifest: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::runtime::{ModelState, Runtime};
+    use crate::sampler::BlockBuilder;
+    use crate::util::Pcg64;
+
+    fn tiny_exec(arch: &str, optimizer: &str) -> (NativeExec, ArtifactMeta) {
+        let specs = param_specs(arch, 16, 16, 4).unwrap();
+        let n_params = specs.len();
+        let meta = ArtifactMeta {
+            name: format!("{arch}_{optimizer}_tiny"),
+            file: String::new(),
+            kind: "train".into(),
+            arch: arch.into(),
+            optimizer: optimizer.into(),
+            loss: "softmax_ce".into(),
+            dataset: "tiny".into(),
+            dims: super::super::Dims {
+                b: 8,
+                n1: 32,
+                n2: 128,
+                d: 16,
+                h: 16,
+                c: 4,
+                f1: 4,
+                f2: 4,
+            },
+            params: specs
+                .into_iter()
+                .map(|(n, s)| (n.to_string(), s))
+                .collect(),
+            n_opt: if optimizer == "adam" { 2 * n_params + 1 } else { 0 },
+        };
+        (NativeExec::new(&meta).unwrap(), meta)
+    }
+
+    fn tiny_block(meta: &ArtifactMeta, seed: u64) -> (crate::graph::Dataset, crate::sampler::Block) {
+        let ds = generators::by_name("tiny", 0).unwrap();
+        let bb = BlockBuilder::new(
+            meta.dims.b,
+            meta.dims.f1,
+            meta.dims.f2,
+            meta.dims.d,
+            meta.dims.c,
+            false,
+        );
+        let mut rng = Pcg64::new(seed);
+        let targets: Vec<u32> = ds.splits.train[..meta.dims.b].to_vec();
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        (ds, blk)
+    }
+
+    #[test]
+    fn gradcheck_all_archs_and_losses() {
+        // central finite differences on a handful of coordinates per tensor
+        for arch in ["mlp", "gcn", "sage", "appnp"] {
+            let (exec, meta) = tiny_exec(arch, "sgd");
+            let (_ds, blk) = tiny_block(&meta, 3);
+            let mut rng = Pcg64::new(5);
+            let state = ModelState::init(&meta, &mut rng);
+            let (_, grads) = exec.loss_and_grads(&state.params, &blk).unwrap();
+            let eps = 1e-2f32;
+            for (ti, t) in state.params.iter().enumerate() {
+                let probes = [0usize, t.data.len() / 2, t.data.len() - 1];
+                for &j in probes.iter() {
+                    let mut plus = state.params.clone();
+                    plus[ti].data[j] += eps;
+                    let (lp, _) = exec.loss_and_grads(&plus, &blk).unwrap();
+                    let mut minus = state.params.clone();
+                    minus[ti].data[j] -= eps;
+                    let (lm, _) = exec.loss_and_grads(&minus, &blk).unwrap();
+                    let fd = (lp - lm) / (2.0 * eps);
+                    let an = grads[ti].data[j];
+                    assert!(
+                        (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                        "{arch} tensor {ti} coord {j}: fd={fd} analytic={an}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_training_reduces_loss_on_fixed_batch() {
+        for arch in ["mlp", "gcn", "sage", "appnp"] {
+            let (exec, meta) = tiny_exec(arch, "sgd");
+            let (_ds, blk) = tiny_block(&meta, 7);
+            let mut rng = Pcg64::new(11);
+            let mut state = ModelState::init(&meta, &mut rng);
+            let first = exec
+                .train_step(&mut state.params, &mut state.opt, &blk, 0.1)
+                .unwrap();
+            let mut last = first;
+            for _ in 0..30 {
+                last = exec
+                    .train_step(&mut state.params, &mut state.opt, &blk, 0.1)
+                    .unwrap();
+            }
+            assert!(last < first * 0.8, "{arch}: loss {first} -> {last}");
+        }
+    }
+
+    #[test]
+    fn adam_counter_and_convergence() {
+        let (exec, meta) = tiny_exec("gcn", "adam");
+        let (_ds, blk) = tiny_block(&meta, 9);
+        let mut rng = Pcg64::new(13);
+        let mut state = ModelState::init(&meta, &mut rng);
+        assert_eq!(state.opt.len(), 2 * state.params.len() + 1);
+        let first = exec
+            .train_step(&mut state.params, &mut state.opt, &blk, 0.01)
+            .unwrap();
+        for i in 1..=20 {
+            exec.train_step(&mut state.params, &mut state.opt, &blk, 0.01)
+                .unwrap();
+            assert_eq!(state.opt.last().unwrap().data[0], (i + 1) as f32);
+        }
+        let last = exec
+            .train_step(&mut state.params, &mut state.opt, &blk, 0.01)
+            .unwrap();
+        assert!(last < first, "adam: {first} -> {last}");
+    }
+
+    #[test]
+    fn lr_zero_is_noop_on_params() {
+        let (exec, meta) = tiny_exec("sage", "sgd");
+        let (_ds, blk) = tiny_block(&meta, 15);
+        let mut rng = Pcg64::new(17);
+        let mut state = ModelState::init(&meta, &mut rng);
+        let before = state.params.clone();
+        exec.train_step(&mut state.params, &mut state.opt, &blk, 0.0)
+            .unwrap();
+        for (a, b) in state.params.iter().zip(&before) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn gat_is_rejected() {
+        let meta = ArtifactMeta {
+            name: "gat_sgd_tiny".into(),
+            file: String::new(),
+            kind: "train".into(),
+            arch: "gat".into(),
+            optimizer: "sgd".into(),
+            loss: "softmax_ce".into(),
+            dataset: "tiny".into(),
+            dims: super::super::Dims {
+                b: 8,
+                n1: 32,
+                n2: 128,
+                d: 16,
+                h: 16,
+                c: 4,
+                f1: 4,
+                f2: 4,
+            },
+            params: vec![],
+            n_opt: 0,
+        };
+        assert!(NativeExec::new(&meta).is_err());
+    }
+
+    #[test]
+    fn native_manifest_loads() {
+        let dir = std::env::temp_dir().join(format!("llcg-native-{}", std::process::id()));
+        write_native_manifest(&dir).unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(rt.meta("gcn_adam_tiny").is_ok());
+        assert!(rt.meta("sage_eval_reddit-s").is_ok());
+        assert!(rt.meta("gat_adam_reddit-s").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

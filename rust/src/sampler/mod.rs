@@ -15,6 +15,17 @@
 //! The *same* builder serves local training (induced-subgraph adjacency =
 //! "ignore cut-edges"), GGS (full adjacency + remote-feature accounting) and
 //! server correction (full adjacency, full-neighbor-up-to-cap sampling).
+//!
+//! ## Zero-allocation pipeline
+//!
+//! The hot path builds one block per local step; at `reddit-s` shape that is
+//! ~`n1*n2 + (b+n1+n2)*d` fresh floats per mini-batch. [`BlockArena`] recycles
+//! all of that: [`BlockBuilder::build_into`] reuses the arena's block buffers
+//! and sampling scratch, clearing only the slot bands that can ever hold
+//! non-zeros (`n1 + n2` adjacency entries instead of `b*n1 + n1*n2`). The
+//! allocating [`BlockBuilder::build`] is a thin wrapper over a throwaway
+//! arena and consumes the identical RNG stream, so arena users and
+//! fresh-allocation users stay bit-reproducible with each other.
 
 use crate::graph::{CsrGraph, Dataset, Labels};
 use crate::util::Pcg64;
@@ -50,6 +61,27 @@ pub struct Block {
 }
 
 impl Block {
+    fn empty() -> Block {
+        Block {
+            b: 0,
+            n1: 0,
+            n2: 0,
+            d: 0,
+            c: 0,
+            a1: Vec::new(),
+            a2: Vec::new(),
+            x0: Vec::new(),
+            x1: Vec::new(),
+            x2: Vec::new(),
+            y_class: Vec::new(),
+            y_multi: Vec::new(),
+            mask: Vec::new(),
+            nodes_l1: Vec::new(),
+            nodes_l2: Vec::new(),
+            targets: Vec::new(),
+        }
+    }
+
     /// Unique real node ids touched by this block (targets + both levels).
     pub fn unique_nodes(&self) -> Vec<u32> {
         let mut all: Vec<u32> = self
@@ -67,13 +99,77 @@ impl Block {
 
     /// Bytes of feature data for nodes whose part != `part` under
     /// `assignment` — the GGS per-batch feature-communication cost.
+    ///
+    /// Convenience wrapper over [`remote_feature_bytes_with`]; allocates a
+    /// fresh [`NodeScratch`] per call. Hot-path callers (the driver's
+    /// per-batch accounting) should hold one scratch across batches.
+    ///
+    /// [`remote_feature_bytes_with`]: Block::remote_feature_bytes_with
     pub fn remote_feature_bytes(&self, assignment: &[u32], part: u32) -> u64 {
-        let remote = self
-            .unique_nodes()
-            .into_iter()
-            .filter(|&v| assignment[v as usize] != part)
-            .count() as u64;
+        let mut scratch = NodeScratch::new();
+        self.remote_feature_bytes_with(&mut scratch, assignment, part)
+    }
+
+    /// [`remote_feature_bytes`] with caller-owned dedup scratch: a single
+    /// stamped-bitmap pass over the slot arrays, no sort/dedup allocation.
+    ///
+    /// [`remote_feature_bytes`]: Block::remote_feature_bytes
+    pub fn remote_feature_bytes_with(
+        &self,
+        scratch: &mut NodeScratch,
+        assignment: &[u32],
+        part: u32,
+    ) -> u64 {
+        scratch.begin(assignment.len());
+        let mut remote = 0u64;
+        for &v in self
+            .targets
+            .iter()
+            .chain(self.nodes_l1.iter())
+            .chain(self.nodes_l2.iter())
+        {
+            if v != EMPTY && scratch.insert(v) && assignment[v as usize] != part {
+                remote += 1;
+            }
+        }
         remote * (self.d as u64) * 4
+    }
+}
+
+/// Reusable "seen this node yet?" set over dense node ids: an epoch-stamped
+/// array, so clearing between batches is O(1) instead of O(n).
+#[derive(Clone, Debug, Default)]
+pub struct NodeScratch {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl NodeScratch {
+    pub fn new() -> NodeScratch {
+        NodeScratch::default()
+    }
+
+    /// Start a new membership epoch for ids in `0..n`.
+    pub fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, self.epoch);
+        }
+        if self.epoch == u32::MAX {
+            self.stamp.fill(0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+
+    /// Mark `v` seen; returns true iff it was new this epoch.
+    pub fn insert(&mut self, v: u32) -> bool {
+        let slot = &mut self.stamp[v as usize];
+        if *slot == self.epoch {
+            false
+        } else {
+            *slot = self.epoch;
+            true
+        }
     }
 }
 
@@ -85,6 +181,37 @@ pub enum Fanout {
     /// take neighbors in order up to the slot cap ("full neighbors", capped
     /// by the static block shape — see DESIGN.md on the correction step)
     Full,
+}
+
+/// Reusable storage for the block-build hot path: the dense block buffers
+/// plus the neighbor-sampling scratch. After the first build, subsequent
+/// [`BlockBuilder::build_into`] calls are allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct BlockArena {
+    block: Option<Block>,
+    /// previous build's (b, n1, n2) — gates the banded adjacency clear
+    prev_dims: Option<(usize, usize, usize)>,
+    /// sampled-neighbor output scratch (fill_slots)
+    chosen: Vec<u32>,
+    /// Fisher–Yates index scratch (Pcg64::sample_without_replacement_into)
+    idx: Vec<u32>,
+}
+
+impl BlockArena {
+    pub fn new() -> BlockArena {
+        BlockArena::default()
+    }
+
+    /// The most recently built block, if any.
+    pub fn block(&self) -> Option<&Block> {
+        self.block.as_ref()
+    }
+
+    /// Move the built block out (the arena re-allocates on next use).
+    pub fn take_block(&mut self) -> Option<Block> {
+        self.prev_dims = None;
+        self.block.take()
+    }
 }
 
 /// Block builder bound to one artifact's static dims.
@@ -127,6 +254,7 @@ impl BlockBuilder {
 
     /// Fill one level: node `u`'s slot group of width `f`; slot 0 is `u`
     /// itself, the rest sampled/capped neighbors. Returns filled count.
+    #[allow(clippy::too_many_arguments)]
     fn fill_slots(
         &self,
         adj: &CsrGraph,
@@ -134,6 +262,8 @@ impl BlockBuilder {
         f: usize,
         out_nodes: &mut [u32],
         rng: &mut Pcg64,
+        chosen: &mut Vec<u32>,
+        idx: &mut Vec<u32>,
     ) -> usize {
         debug_assert_eq!(out_nodes.len(), f);
         out_nodes.fill(EMPTY);
@@ -143,19 +273,31 @@ impl BlockBuilder {
             return 1;
         }
         let neigh = adj.neighbors(u);
-        let chosen: Vec<u32> = match self.fanout {
-            Fanout::Sample => rng.sample_without_replacement(neigh, budget),
-            Fanout::Full => neigh.iter().copied().take(budget).collect(),
-        };
         let mut cnt = 1;
-        for (i, v) in chosen.into_iter().enumerate() {
-            out_nodes[1 + i] = v;
-            cnt += 1;
+        match self.fanout {
+            Fanout::Sample => {
+                rng.sample_without_replacement_into(neigh, budget, chosen, idx);
+                for (i, &v) in chosen.iter().enumerate() {
+                    out_nodes[1 + i] = v;
+                    cnt += 1;
+                }
+            }
+            Fanout::Full => {
+                for (i, &v) in neigh.iter().take(budget).enumerate() {
+                    out_nodes[1 + i] = v;
+                    cnt += 1;
+                }
+            }
         }
         cnt
     }
 
     /// Build a block for `targets` (≤ B; short batches are padded + masked).
+    ///
+    /// Allocating convenience wrapper over [`build_into`]; both variants
+    /// consume the same RNG stream and produce identical blocks.
+    ///
+    /// [`build_into`]: BlockBuilder::build_into
     pub fn build(
         &self,
         targets: &[u32],
@@ -163,103 +305,144 @@ impl BlockBuilder {
         ds: &Dataset,
         rng: &mut Pcg64,
     ) -> Block {
+        let mut arena = BlockArena::new();
+        self.build_into(&mut arena, targets, adj, ds, rng);
+        arena.take_block().expect("build_into always fills the arena")
+    }
+
+    /// Build a block for `targets` into `arena`, recycling its buffers.
+    /// Returns a borrow of the arena's block; the borrow ends before the
+    /// next `build_into`, which overwrites it in place.
+    pub fn build_into<'a>(
+        &self,
+        arena: &'a mut BlockArena,
+        targets: &[u32],
+        adj: &CsrGraph,
+        ds: &Dataset,
+        rng: &mut Pcg64,
+    ) -> &'a Block {
         assert!(targets.len() <= self.b, "batch larger than block B");
         assert_eq!(ds.d, self.d, "dataset d mismatch");
         let (b, f1, f2, d, c) = (self.b, self.f1, self.f2, self.d, self.c);
         let (n1, n2) = (self.n1(), self.n2());
 
-        let mut nodes_l1 = vec![EMPTY; n1];
-        let mut nodes_l2 = vec![EMPTY; n2];
-        let mut a1 = vec![0f32; b * n1];
-        let mut a2 = vec![0f32; n1 * n2];
-        let mut mask = vec![0f32; b];
-        let mut padded_targets = vec![EMPTY; b];
+        let BlockArena {
+            block,
+            prev_dims,
+            chosen,
+            idx,
+        } = arena;
+        let blk = block.get_or_insert_with(Block::empty);
 
+        // -- (re)shape + clear -------------------------------------------
+        // Adjacency non-zeros only ever land in the per-slot-group bands
+        // (row i of A1 in cols [i*f1, (i+1)*f1); row j of A2 in cols
+        // [j*f2, (j+1)*f2)), so on same-shape reuse clearing those bands —
+        // n1 + n2 floats — replaces zeroing the full b*n1 + n1*n2 matrices.
+        let same_shape = *prev_dims == Some((b, n1, n2));
+        blk.b = b;
+        blk.n1 = n1;
+        blk.n2 = n2;
+        blk.d = d;
+        blk.c = c;
+        blk.a1.resize(b * n1, 0.0);
+        blk.a2.resize(n1 * n2, 0.0);
+        blk.x0.resize(b * d, 0.0);
+        blk.x1.resize(n1 * d, 0.0);
+        blk.x2.resize(n2 * d, 0.0);
+        blk.mask.resize(b, 0.0);
+        blk.targets.resize(b, EMPTY);
+        blk.nodes_l1.resize(n1, EMPTY);
+        blk.nodes_l2.resize(n2, EMPTY);
+        if same_shape {
+            for i in 0..b {
+                blk.a1[i * n1 + i * f1..i * n1 + (i + 1) * f1].fill(0.0);
+            }
+            for j in 0..n1 {
+                blk.a2[j * n2 + j * f2..j * n2 + (j + 1) * f2].fill(0.0);
+            }
+        } else {
+            blk.a1.fill(0.0);
+            blk.a2.fill(0.0);
+        }
+        *prev_dims = Some((b, n1, n2));
+        blk.mask.fill(0.0);
+        blk.targets.fill(EMPTY);
+        blk.nodes_l1.fill(EMPTY);
+        blk.nodes_l2.fill(EMPTY);
+
+        // -- sample + adjacency ------------------------------------------
         for (i, &t) in targets.iter().enumerate() {
-            padded_targets[i] = t;
-            mask[i] = 1.0;
-            let slots = &mut nodes_l1[i * f1..(i + 1) * f1];
-            let cnt = self.fill_slots(adj, t, f1, slots, rng);
+            blk.targets[i] = t;
+            blk.mask[i] = 1.0;
+            let slots = &mut blk.nodes_l1[i * f1..(i + 1) * f1];
+            let cnt = self.fill_slots(adj, t, f1, slots, rng, chosen, idx);
             let w = 1.0 / cnt as f32;
             for s in 0..f1 {
-                if nodes_l1[i * f1 + s] != EMPTY {
-                    a1[i * n1 + i * f1 + s] = w;
+                if blk.nodes_l1[i * f1 + s] != EMPTY {
+                    blk.a1[i * n1 + i * f1 + s] = w;
                 }
             }
         }
         for j in 0..n1 {
-            let u = nodes_l1[j];
+            let u = blk.nodes_l1[j];
             if u == EMPTY {
                 continue;
             }
             let slots_start = j * f2;
             let cnt = {
-                let slots = &mut nodes_l2[slots_start..slots_start + f2];
-                self.fill_slots(adj, u, f2, slots, rng)
+                let slots = &mut blk.nodes_l2[slots_start..slots_start + f2];
+                self.fill_slots(adj, u, f2, slots, rng, chosen, idx)
             };
             let w = 1.0 / cnt as f32;
             for s in 0..f2 {
-                if nodes_l2[slots_start + s] != EMPTY {
-                    a2[j * n2 + slots_start + s] = w;
+                if blk.nodes_l2[slots_start + s] != EMPTY {
+                    blk.a2[j * n2 + slots_start + s] = w;
                 }
             }
         }
 
-        // feature gathers (zeros for EMPTY slots)
-        let gather = |nodes: &[u32]| {
-            let mut out = vec![0f32; nodes.len() * d];
+        // -- feature gathers (every slot written; zeros for EMPTY) --------
+        fn gather_into(out: &mut [f32], nodes: &[u32], ds: &Dataset, d: usize) {
             for (i, &v) in nodes.iter().enumerate() {
-                if v != EMPTY {
-                    out[i * d..(i + 1) * d].copy_from_slice(ds.feature(v));
+                let dst = &mut out[i * d..(i + 1) * d];
+                if v == EMPTY {
+                    dst.fill(0.0);
+                } else {
+                    dst.copy_from_slice(ds.feature(v));
                 }
             }
-            out
-        };
-        let x0 = gather(&padded_targets);
-        let x1 = gather(&nodes_l1);
-        let x2 = gather(&nodes_l2);
+        }
+        gather_into(&mut blk.x0, &blk.targets, ds, d);
+        gather_into(&mut blk.x1, &blk.nodes_l1, ds, d);
+        gather_into(&mut blk.x2, &blk.nodes_l2, ds, d);
 
-        // labels
-        let mut y_class = Vec::new();
-        let mut y_multi = Vec::new();
+        // -- labels (every row written) ----------------------------------
         match (&ds.labels, self.multilabel) {
             (Labels::MultiClass(y), false) => {
-                y_class = padded_targets
-                    .iter()
-                    .map(|&t| if t == EMPTY { 0 } else { y[t as usize] as i32 })
-                    .collect();
+                blk.y_multi.clear();
+                blk.y_class.resize(b, 0);
+                for (i, &t) in blk.targets.iter().enumerate() {
+                    blk.y_class[i] = if t == EMPTY { 0 } else { y[t as usize] as i32 };
+                }
             }
             (Labels::MultiLabel { data, c: dc }, true) => {
                 assert_eq!(*dc, c, "label dim mismatch");
-                y_multi = vec![0f32; b * c];
-                for (i, &t) in padded_targets.iter().enumerate() {
-                    if t != EMPTY {
-                        y_multi[i * c..(i + 1) * c]
-                            .copy_from_slice(&data[t as usize * c..(t as usize + 1) * c]);
+                blk.y_class.clear();
+                blk.y_multi.resize(b * c, 0.0);
+                for (i, &t) in blk.targets.iter().enumerate() {
+                    let dst = &mut blk.y_multi[i * c..(i + 1) * c];
+                    if t == EMPTY {
+                        dst.fill(0.0);
+                    } else {
+                        dst.copy_from_slice(&data[t as usize * c..(t as usize + 1) * c]);
                     }
                 }
             }
             _ => panic!("label kind / builder multilabel flag mismatch"),
         }
 
-        Block {
-            b,
-            n1,
-            n2,
-            d,
-            c,
-            a1,
-            a2,
-            x0,
-            x1,
-            x2,
-            y_class,
-            y_multi,
-            mask,
-            nodes_l1,
-            nodes_l2,
-            targets: padded_targets,
-        }
+        blk
     }
 }
 
@@ -276,19 +459,38 @@ impl BatchIter {
         rng.shuffle(&mut ids);
         BatchIter { ids, pos: 0, b }
     }
+
+    /// Batches left before the iterator is exhausted.
+    pub fn remaining(&self) -> usize {
+        (self.ids.len() - self.pos).div_ceil(self.b)
+    }
+
+    /// Restart a fresh epoch: reshuffle in place and rewind. Draws the same
+    /// *amount* of RNG state as constructing a new `BatchIter`, but permutes
+    /// the already-shuffled order (not the caller's original id order), so
+    /// epoch ≥ 2 batch sequences differ from repeated `BatchIter::new`.
+    pub fn reshuffle(&mut self, rng: &mut Pcg64) {
+        rng.shuffle(&mut self.ids);
+        self.pos = 0;
+    }
+
+    /// Borrowing, allocation-free variant of `next`.
+    pub fn next_batch(&mut self) -> Option<&[u32]> {
+        if self.pos >= self.ids.len() {
+            return None;
+        }
+        let end = (self.pos + self.b).min(self.ids.len());
+        let out = &self.ids[self.pos..end];
+        self.pos = end;
+        Some(out)
+    }
 }
 
 impl Iterator for BatchIter {
     type Item = Vec<u32>;
 
     fn next(&mut self) -> Option<Vec<u32>> {
-        if self.pos >= self.ids.len() {
-            return None;
-        }
-        let end = (self.pos + self.b).min(self.ids.len());
-        let out = self.ids[self.pos..end].to_vec();
-        self.pos = end;
-        Some(out)
+        self.next_batch().map(|s| s.to_vec())
     }
 }
 
@@ -301,6 +503,23 @@ mod tests {
         let ds = generators::by_name("tiny", 0).unwrap();
         let bb = BlockBuilder::new(8, 4, 4, ds.d, ds.c(), false);
         (ds, bb, Pcg64::new(1))
+    }
+
+    fn assert_blocks_equal(a: &Block, b: &Block, what: &str) {
+        assert_eq!(a.b, b.b, "{what}: b");
+        assert_eq!(a.n1, b.n1, "{what}: n1");
+        assert_eq!(a.n2, b.n2, "{what}: n2");
+        assert_eq!(a.a1, b.a1, "{what}: a1");
+        assert_eq!(a.a2, b.a2, "{what}: a2");
+        assert_eq!(a.x0, b.x0, "{what}: x0");
+        assert_eq!(a.x1, b.x1, "{what}: x1");
+        assert_eq!(a.x2, b.x2, "{what}: x2");
+        assert_eq!(a.y_class, b.y_class, "{what}: y_class");
+        assert_eq!(a.y_multi, b.y_multi, "{what}: y_multi");
+        assert_eq!(a.mask, b.mask, "{what}: mask");
+        assert_eq!(a.nodes_l1, b.nodes_l1, "{what}: nodes_l1");
+        assert_eq!(a.nodes_l2, b.nodes_l2, "{what}: nodes_l2");
+        assert_eq!(a.targets, b.targets, "{what}: targets");
     }
 
     #[test]
@@ -399,6 +618,72 @@ mod tests {
     }
 
     #[test]
+    fn remote_bytes_scratch_reuse_matches_fresh() {
+        // independent oracle: the sort+dedup path (unique_nodes), not the
+        // stamped bitmap comparing against itself
+        let (ds, bb, mut rng) = setup();
+        let assignment: Vec<u32> = (0..ds.n() as u32).map(|v| v % 4).collect();
+        let mut scratch = NodeScratch::new();
+        for round in 0..5 {
+            let targets: Vec<u32> = (round * 8..round * 8 + 8).map(|v| v as u32).collect();
+            let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+            for part in 0..4 {
+                let expected = blk
+                    .unique_nodes()
+                    .iter()
+                    .filter(|&&v| assignment[v as usize] != part)
+                    .count() as u64
+                    * (blk.d as u64)
+                    * 4;
+                assert_eq!(
+                    blk.remote_feature_bytes_with(&mut scratch, &assignment, part),
+                    expected,
+                    "round {round} part {part} (reused scratch)"
+                );
+                assert_eq!(
+                    blk.remote_feature_bytes(&assignment, part),
+                    expected,
+                    "round {round} part {part} (fresh scratch)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn arena_reuse_produces_identical_blocks() {
+        // two consecutive builds into one arena == two fresh allocations,
+        // including the RNG stream (sampled neighbors must match too)
+        let (ds, bb, mut rng_fresh) = setup();
+        let mut rng_arena = Pcg64::new(1);
+        let mut arena = BlockArena::new();
+        let batches: [Vec<u32>; 3] = [
+            (0..8).collect(),
+            (100..105).collect(), // short batch: padding must be re-cleared
+            (40..48).collect(),
+        ];
+        for (k, batch) in batches.iter().enumerate() {
+            let fresh = bb.build(batch, &ds.graph, &ds, &mut rng_fresh);
+            let reused = bb.build_into(&mut arena, batch, &ds.graph, &ds, &mut rng_arena);
+            assert_blocks_equal(&fresh, reused, &format!("batch {k}"));
+        }
+    }
+
+    #[test]
+    fn arena_survives_builder_and_fanout_changes() {
+        let (ds, bb, mut rng) = setup();
+        let mut arena = BlockArena::new();
+        bb.build_into(&mut arena, &[0, 1, 2], &ds.graph, &ds, &mut rng);
+        // a different (smaller) shape + full fanout through the same arena
+        let mut bb2 = BlockBuilder::new(4, 3, 2, ds.d, ds.c(), false);
+        bb2.fanout = Fanout::Full;
+        let mut rng_fresh = Pcg64::new(77);
+        let mut rng_arena = Pcg64::new(77);
+        let fresh = bb2.build(&[5, 6], &ds.graph, &ds, &mut rng_fresh);
+        let reused = bb2.build_into(&mut arena, &[5, 6], &ds.graph, &ds, &mut rng_arena);
+        assert_blocks_equal(&fresh, reused, "after shape change");
+    }
+
+    #[test]
     fn sample_ratio_shrinks_fanout() {
         let (ds, mut bb, mut rng) = setup();
         bb.sample_ratio = 0.34; // 1 of 3 neighbor slots
@@ -435,6 +720,25 @@ mod tests {
         assert_eq!(seen.len(), 23);
         seen.sort_unstable();
         assert_eq!(seen, ids);
+    }
+
+    #[test]
+    fn batch_iter_reshuffle_matches_fresh_iter() {
+        let ids: Vec<u32> = (0..17).collect();
+        let mut rng_a = Pcg64::new(4);
+        let mut rng_b = Pcg64::new(4);
+        let mut it = BatchIter::new(&ids, 5, &mut rng_a);
+        while it.next_batch().is_some() {}
+        assert_eq!(it.remaining(), 0);
+        it.reshuffle(&mut rng_a);
+        // a fresh iter over the *shuffled* order with the same rng stream
+        let mut ids_b = ids.clone();
+        rng_b.shuffle(&mut ids_b);
+        let fresh = BatchIter::new(&ids_b, 5, &mut rng_b);
+        let a: Vec<Vec<u32>> = std::iter::from_fn(|| it.next_batch().map(|s| s.to_vec())).collect();
+        let b: Vec<Vec<u32>> = fresh.collect();
+        assert_eq!(a, b);
+        assert!(a.iter().flatten().count() == 17);
     }
 
     #[test]

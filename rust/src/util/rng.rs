@@ -112,27 +112,48 @@ impl Pcg64 {
     /// Uses partial Fisher–Yates over an index buffer for small `xs`,
     /// reservoir ("Algorithm R") when `xs` is large relative to `k`.
     pub fn sample_without_replacement<T: Copy>(&mut self, xs: &[T], k: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        let mut idx_scratch = Vec::new();
+        self.sample_without_replacement_into(xs, k, &mut out, &mut idx_scratch);
+        out
+    }
+
+    /// Allocation-free form of [`sample_without_replacement`]: writes the
+    /// sample into `out` (cleared first) and reuses `idx_scratch` for the
+    /// Fisher–Yates index buffer. Consumes the *identical* RNG stream as
+    /// the allocating variant, so arena-based callers stay bit-reproducible
+    /// with fresh-allocation callers.
+    ///
+    /// [`sample_without_replacement`]: Pcg64::sample_without_replacement
+    pub fn sample_without_replacement_into<T: Copy>(
+        &mut self,
+        xs: &[T],
+        k: usize,
+        out: &mut Vec<T>,
+        idx_scratch: &mut Vec<u32>,
+    ) {
+        out.clear();
         let n = xs.len();
         let k = k.min(n);
         if k == 0 {
-            return Vec::new();
+            return;
         }
         if n <= 64 || k * 4 >= n {
-            let mut idx: Vec<u32> = (0..n as u32).collect();
+            idx_scratch.clear();
+            idx_scratch.extend(0..n as u32);
             for i in 0..k {
                 let j = i + self.gen_range((n - i) as u64) as usize;
-                idx.swap(i, j);
+                idx_scratch.swap(i, j);
             }
-            idx[..k].iter().map(|&i| xs[i as usize]).collect()
+            out.extend(idx_scratch[..k].iter().map(|&i| xs[i as usize]));
         } else {
-            let mut res: Vec<T> = xs[..k].to_vec();
+            out.extend_from_slice(&xs[..k]);
             for i in k..n {
                 let j = self.gen_range(i as u64 + 1) as usize;
                 if j < k {
-                    res[j] = xs[i];
+                    out[j] = xs[i];
                 }
             }
-            res
         }
     }
 
@@ -229,6 +250,23 @@ mod tests {
         }
         let hit = counts.iter().filter(|&&c| c > 0).count();
         assert!(hit > 950, "coverage {hit}/1000");
+    }
+
+    #[test]
+    fn sample_into_matches_allocating_variant() {
+        // both fisher-yates (small n) and reservoir (large n, small k) paths
+        for &(n, k) in &[(40usize, 7usize), (1000, 10), (1000, 800)] {
+            let xs: Vec<u32> = (0..n as u32).collect();
+            let mut a = Pcg64::new(21);
+            let mut b = Pcg64::new(21);
+            let mut out = Vec::new();
+            let mut idx = Vec::new();
+            for _ in 0..5 {
+                let fresh = a.sample_without_replacement(&xs, k);
+                b.sample_without_replacement_into(&xs, k, &mut out, &mut idx);
+                assert_eq!(fresh, out, "stream diverged at n={n} k={k}");
+            }
+        }
     }
 
     #[test]

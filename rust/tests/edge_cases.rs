@@ -12,11 +12,9 @@ use llcg::sampler::{BlockBuilder, EMPTY};
 use llcg::util::{Json, Pcg64};
 
 fn artifacts() -> Option<Runtime> {
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        Runtime::load("artifacts").ok()
-    } else {
-        None
-    }
+    // PJRT artifacts when available, else the generated native manifest —
+    // these tests run in every environment
+    Runtime::load_or_native("artifacts").ok().map(|(rt, _)| rt)
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,311 @@
+//! Offline facade over the `xla` (PJRT) crate.
+//!
+//! The offline build environment does not ship the real `xla` crate (it
+//! links `xla_extension`, a large C++ PJRT distribution). This vendored
+//! facade keeps `llcg` compiling and testable everywhere:
+//!
+//! - **`Literal`** is fully functional (host-side shape + bytes container,
+//!   tuple support) — it is plain data and needs no PJRT.
+//! - **`PjRtClient` / `PjRtLoadedExecutable` / `PjRtBuffer`** are
+//!   *uninhabited*: `PjRtClient::cpu()` returns an error, so no value of
+//!   these types can ever exist in a stub build, and their methods are
+//!   statically unreachable (`match self._never {}`). The `llcg` runtime
+//!   detects this and falls back to its native reference backend.
+//!
+//! To run real HLO artifacts, replace this path dependency with the actual
+//! `xla` crate in the workspace `Cargo.toml`; `llcg` uses only the API
+//! surface below, matched to xla-rs:
+//!
+//! ```text
+//! PjRtClient::cpu() -> Result<PjRtClient>
+//! client.compile(&XlaComputation) -> Result<PjRtLoadedExecutable>
+//! client.buffer_from_host_literal(&Literal) -> Result<PjRtBuffer>
+//! exe.execute::<Literal>(&[Literal]) -> Result<Vec<Vec<PjRtBuffer>>>
+//! exe.execute_b(&[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>>   (untupled outputs)
+//! buffer.to_literal_sync() -> Result<Literal>
+//! HloModuleProto::from_text_file, XlaComputation::from_proto
+//! Literal::{create_from_shape_and_untyped_data, scalar, to_vec, to_tuple, to_tuple1}
+//! ```
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (message-only here).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// The element dtypes llcg's artifacts use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn element_size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Host-side conversion for `Literal::to_vec`.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le_bytes4(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes4(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes4(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host literal: dense array (shape + row-major bytes) or a tuple.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Build a dense literal from raw little-endian bytes (one copy).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let expect = shape.iter().product::<usize>() * ty.element_size_bytes();
+        if data.len() != expect {
+            return Err(Error(format!(
+                "literal data is {} bytes, shape {:?} needs {}",
+                data.len(),
+                shape,
+                expect
+            )));
+        }
+        Ok(Literal {
+            ty,
+            shape: shape.to_vec(),
+            bytes: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal {
+            ty: ElementType::F32,
+            shape: Vec::new(),
+            bytes: v.to_le_bytes().to_vec(),
+            tuple: None,
+        }
+    }
+
+    /// Pack literals into a tuple literal.
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal {
+            ty: ElementType::F32, // unused for tuples
+            shape: Vec::new(),
+            bytes: Vec::new(),
+            tuple: Some(elems),
+        }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("to_vec on a tuple literal".into()));
+        }
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "to_vec type mismatch: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le_bytes4([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Unpack a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple
+            .ok_or_else(|| Error("to_tuple on a non-tuple literal".into()))
+    }
+
+    /// Unpack a 1-element tuple (or pass a dense literal through).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        match self.tuple {
+            None => Ok(self),
+            Some(mut elems) => {
+                if elems.len() != 1 {
+                    return Err(Error(format!(
+                        "to_tuple1 on a {}-element tuple",
+                        elems.len()
+                    )));
+                }
+                Ok(elems.pop().expect("len checked"))
+            }
+        }
+    }
+}
+
+/// Parsed HLO module (text is retained verbatim; parsing/verification is
+/// the real backend's job).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation ready to compile.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    pub proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            proto: proto.clone(),
+        }
+    }
+}
+
+/// Statically-uninhabited marker: stub PJRT values cannot be constructed.
+#[derive(Clone, Copy)]
+enum Never {}
+
+/// PJRT client handle. In this stub build `cpu()` always errors, so the
+/// type is uninhabited and every method below is unreachable.
+pub struct PjRtClient {
+    _never: Never,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(
+            "PJRT backend unavailable: built against the vendored xla facade \
+             (vendor/xla). Use the native runtime backend, or swap in the \
+             real `xla` crate to execute HLO artifacts."
+                .into(),
+        ))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self._never {}
+    }
+
+    /// Copy a host literal into a device buffer.
+    pub fn buffer_from_host_literal(&self, _lit: &Literal) -> Result<PjRtBuffer> {
+        match self._never {}
+    }
+}
+
+/// Compiled executable handle (uninhabited in the stub build).
+pub struct PjRtLoadedExecutable {
+    _never: Never,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals; outputs per replica.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self._never {}
+    }
+
+    /// Execute with device-resident buffers; tuple outputs come back
+    /// **untupled** (one buffer per tuple element), so they can be fed
+    /// straight back in as the next step's inputs without a host visit.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self._never {}
+    }
+}
+
+/// Device buffer handle (uninhabited in the stub build).
+pub struct PjRtBuffer {
+    _never: Never,
+}
+
+impl PjRtBuffer {
+    /// Synchronous device→host copy.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self._never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert_eq!(lit.shape(), &[3]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn tuple_pack_unpack() {
+        let a = Literal::scalar(1.0);
+        let b = Literal::scalar(2.0);
+        let t = Literal::tuple(vec![a, b]);
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert_eq!(elems[1].to_vec::<f32>().unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn client_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
