@@ -5,9 +5,11 @@
 #                    falls back to its native reference backend without it)
 #   make check       tier-1 gate: release build + tests + clippy
 #   make bench       perf benches; writes BENCH_<section>.json per section
+#   make bench-cluster  just the sequential-vs-threaded engine benches
+#                    (writes BENCH_cluster.json)
 #   make test        quick test run
 
-.PHONY: artifacts check test bench clean
+.PHONY: artifacts check test bench bench-cluster clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -22,6 +24,9 @@ test:
 
 bench:
 	cargo bench
+
+bench-cluster:
+	cargo bench -- cluster
 
 clean:
 	cargo clean

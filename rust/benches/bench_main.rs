@@ -303,6 +303,75 @@ fn main() {
         std::hint::black_box(&acc);
     });
 
+    // ---- cluster: sequential vs threaded engine wall-clock -------------------
+    // Measured end-to-end run time of the same LLCG workload under the
+    // sequential driver vs the multi-threaded cluster engine, at P = 2/4/8.
+    // `net=ideal` shows pure compute overlap (bounded by the machine's
+    // cores); `net=wan,scale=1` injects the modeled transfer times as real
+    // sleeps, so the threaded engine's communication overlap shows up in
+    // measured wall-clock the way it would on a real cluster.
+    // (setup is skipped entirely when the filter excludes the section)
+    if b.enabled("cluster/") {
+        match Runtime::load_or_native("artifacts") {
+            Err(e) => eprintln!("(no runtime available — skipping cluster benches: {e:#})"),
+            Ok((rt, _adir)) => {
+                if rt.backend_name() != "native" {
+                    eprintln!("(cluster engine needs the native backend — skipping cluster benches)");
+                } else if rt.meta("sage_adam_reddit-s").is_err() {
+                    eprintln!("(no sage/reddit-s artifact — skipping cluster benches)");
+                } else {
+                    eprintln!(
+                        "cluster benches: {} cpu cores available (ideal-net speedup is capped by this)",
+                        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+                    );
+                    let data = generators::by_name("reddit-s", 0).unwrap();
+                    for &netspec in &["ideal", "wan,scale=1"] {
+                        let label = if netspec == "ideal" { "ideal" } else { "wan" };
+                        for &pn in &[2usize, 4, 8] {
+                            let mk = |engine: llcg::cluster::Engine| {
+                                let mut cfg = ExperimentConfig::default();
+                                cfg.dataset = "reddit-s".into();
+                                cfg.arch = "sage".into();
+                                cfg.algorithm = Algorithm::Llcg;
+                                cfg.parts = pn;
+                                cfg.rounds = 2;
+                                cfg.schedule = Schedule::Fixed { k: 4 };
+                                cfg.correction_steps = 2;
+                                cfg.eval_every = 100; // no per-round eval
+                                cfg.eval_max_nodes = 32;
+                                cfg.engine = engine;
+                                cfg.net = netspec.into();
+                                cfg
+                            };
+                            let seq_cfg = mk(llcg::cluster::Engine::Sequential);
+                            let clu_cfg = mk(llcg::cluster::Engine::Cluster);
+                            let seq_row = format!("cluster/sequential(P={pn},net={label})");
+                            b.run(&seq_row, 1, 3, || {
+                                std::hint::black_box(
+                                    driver::run_experiment(&seq_cfg, &data, &rt).unwrap(),
+                                );
+                            });
+                            let clu_row = format!("cluster/threaded(P={pn},net={label})");
+                            b.run(&clu_row, 1, 3, || {
+                                std::hint::black_box(
+                                    driver::run_experiment(&clu_cfg, &data, &rt).unwrap(),
+                                );
+                            });
+                            if let (Some(seq), Some(clu)) =
+                                (b.mean_of(&seq_row), b.mean_of(&clu_row))
+                            {
+                                println!(
+                                    "  -> threaded speedup at P={pn}, net={label}: {:.2}x",
+                                    seq / clu
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     b.write_json();
     println!("\n{} benchmarks complete.", b.rows.len());
 }

@@ -1,0 +1,772 @@
+//! The threaded parameter-server engine (see the [`crate::cluster`] module
+//! docs for the execution/accounting model).
+//!
+//! Layout: [`run_cluster`] validates the backend and dispatches on the
+//! round mode; `run_rounds` covers sync + pipelined-correction (lock-step
+//! rounds, correction inline vs. on a dedicated overlapped thread);
+//! `run_async` implements bounded-staleness averaging. All numeric work
+//! goes through the same `coordinator::driver` helpers the sequential
+//! engine uses, so sync mode is bit-compatible with it by construction.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{Engine, NetModel, RoundMode, StalenessGate};
+use crate::config::ExperimentConfig;
+use crate::coordinator::driver::{self, PartInfo, RoundRecord, RunResult, RunSetup};
+use crate::coordinator::{Algorithm, CommStats};
+use crate::graph::Dataset;
+use crate::runtime::{ModelState, Runtime, Tensor};
+use crate::sampler::{BlockArena, BlockBuilder, NodeScratch};
+use crate::util::Pcg64;
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+/// Server → worker.
+enum Down {
+    /// `ParamsDown`: run local round `round` (`k` steps) from `params`.
+    Round {
+        round: usize,
+        k: usize,
+        params: Vec<Tensor>,
+    },
+    /// Terminal: the run is over; exit the worker loop.
+    Shutdown,
+}
+
+/// Worker → server (one shared channel, tagged by worker).
+enum Up {
+    /// `RemoteFeatures`: a mini-batch fetched remote node features (GGS);
+    /// the server folds the bytes into the current round's accounting.
+    Features { bytes: u64 },
+    /// `ParamsUp`: end-of-round parameter upload + round stats.
+    Round(ParamsUp),
+    /// Unrecoverable worker error; the server aborts the run.
+    Failed { part: u32, err: String },
+}
+
+/// Payload of [`Up::Round`].
+struct ParamsUp {
+    part: u32,
+    round: usize,
+    params: Vec<Tensor>,
+    loss_sum: f64,
+    loss_n: usize,
+    net_s: f64,
+    elapsed_s: f64,
+}
+
+// ---------------------------------------------------------------------------
+// worker / correction threads
+// ---------------------------------------------------------------------------
+
+/// Everything a worker thread needs; refs point at run-owned data that
+/// outlives the thread scope.
+struct WorkerSpec<'a> {
+    cfg: &'a ExperimentConfig,
+    ds: &'a Dataset,
+    assignment: &'a [u32],
+    info: &'a PartInfo,
+    netm: &'a NetModel,
+    dir: PathBuf,
+    train_name: String,
+    builder: BlockBuilder,
+    param_bytes: u64,
+}
+
+/// Worker thread body: build a private native `Runtime`, then serve
+/// `Down::Round` requests until shutdown / disconnect. Model + optimizer
+/// state, block arena, and sampling scratch live here for the whole run.
+fn worker_main(spec: WorkerSpec<'_>, rx: Receiver<Down>, up: Sender<Up>, mut state: ModelState) {
+    let rt = match Runtime::load(&spec.dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = up.send(Up::Failed {
+                part: spec.info.part,
+                err: format!("{e:#}"),
+            });
+            return;
+        }
+    };
+    let mut arena = BlockArena::new();
+    let mut scratch = NodeScratch::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Down::Round { round, k, params } => {
+                let out = driver::run_worker_round(
+                    &rt,
+                    &spec.train_name,
+                    spec.cfg,
+                    spec.ds,
+                    spec.assignment,
+                    spec.info,
+                    &spec.builder,
+                    spec.netm,
+                    spec.param_bytes,
+                    &mut state,
+                    &params,
+                    round,
+                    k,
+                    &mut arena,
+                    &mut scratch,
+                    |fb| {
+                        let _ = up.send(Up::Features { bytes: fb });
+                    },
+                );
+                let reply = match out {
+                    Ok(o) => Up::Round(ParamsUp {
+                        part: spec.info.part,
+                        round,
+                        params: state.params.clone(),
+                        loss_sum: o.loss_sum,
+                        loss_n: o.loss_n,
+                        net_s: o.net_s,
+                        elapsed_s: o.elapsed_s,
+                    }),
+                    Err(e) => Up::Failed {
+                        part: spec.info.part,
+                        err: format!("{e:#}"),
+                    },
+                };
+                let fatal = matches!(reply, Up::Failed { .. });
+                if up.send(reply).is_err() || fatal {
+                    break;
+                }
+            }
+            Down::Shutdown => break,
+        }
+    }
+}
+
+/// Result of one overlapped correction: the parameter delta
+/// `correct(θ_r) − θ_r` plus the measured correction time.
+type CorrReply = std::result::Result<(Vec<Tensor>, f64), String>;
+
+/// Pipelined-correction thread body: for each base-params snapshot the
+/// server sends, run the S correction steps on a private runtime and send
+/// back the correction *delta* (applied by the server on top of the fresh
+/// average). The server's correction optimizer state persists here across
+/// rounds, as in sync mode.
+#[allow(clippy::too_many_arguments)]
+fn correction_main(
+    req: Receiver<Vec<Tensor>>,
+    res: Sender<CorrReply>,
+    dir: PathBuf,
+    server_train_name: String,
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    assignment: &[u32],
+    b: usize,
+    mut state: ModelState,
+    builder: BlockBuilder,
+    mut rng: Pcg64,
+) {
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = res.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let mut arena = BlockArena::new();
+    while let Ok(base) = req.recv() {
+        let t0 = Instant::now();
+        match driver::run_correction_steps(
+            &rt,
+            &server_train_name,
+            cfg,
+            ds,
+            assignment,
+            b,
+            &mut state,
+            &base,
+            &builder,
+            &mut arena,
+            &mut rng,
+        ) {
+            Ok(()) => {
+                let delta: Vec<Tensor> = state
+                    .params
+                    .iter()
+                    .zip(&base)
+                    .map(|(c, b0)| Tensor {
+                        shape: c.shape.clone(),
+                        data: c
+                            .data
+                            .iter()
+                            .zip(&b0.data)
+                            .map(|(cv, bv)| cv - bv)
+                            .collect(),
+                    })
+                    .collect();
+                if res.send(Ok((delta, t0.elapsed().as_secs_f64()))).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                let _ = res.send(Err(format!("{e:#}")));
+                break;
+            }
+        }
+    }
+}
+
+/// A failed `Down` send means the worker is gone; it usually queued an
+/// `Up::Failed` with the root cause (e.g. its `Runtime::load` error) before
+/// exiting — surface that instead of a generic channel error.
+fn worker_send_error(up_rx: &Receiver<Up>, fallback: &str) -> anyhow::Error {
+    while let Ok(msg) = up_rx.try_recv() {
+        if let Up::Failed { part, err } = msg {
+            return anyhow!("worker {part} failed: {err}");
+        }
+    }
+    anyhow!("{fallback}")
+}
+
+/// Spawn one worker thread per part; returns the per-worker `Down` senders
+/// (index = part id).
+#[allow(clippy::too_many_arguments)]
+fn spawn_workers<'scope, 'env>(
+    s: &'scope std::thread::Scope<'scope, 'env>,
+    cfg: &'env ExperimentConfig,
+    ds: &'env Dataset,
+    assignment: &'env [u32],
+    netm: &'env NetModel,
+    parts: &'env [PartInfo],
+    workers: Vec<ModelState>,
+    dir: &std::path::Path,
+    train_name: &str,
+    builder: &BlockBuilder,
+    param_bytes: u64,
+    up_tx: &Sender<Up>,
+) -> Vec<Sender<Down>> {
+    let mut down_txs = Vec::with_capacity(parts.len());
+    for (info, state) in parts.iter().zip(workers) {
+        let (dtx, drx) = channel::<Down>();
+        down_txs.push(dtx);
+        let spec = WorkerSpec {
+            cfg,
+            ds,
+            assignment,
+            info,
+            netm,
+            dir: dir.to_path_buf(),
+            train_name: train_name.to_string(),
+            builder: builder.clone(),
+            param_bytes,
+        };
+        let up = up_tx.clone();
+        s.spawn(move || worker_main(spec, drx, up, state));
+    }
+    down_txs
+}
+
+// ---------------------------------------------------------------------------
+// engine front door
+// ---------------------------------------------------------------------------
+
+/// Run one experiment on the threaded cluster engine. Requires the native
+/// backend (each worker thread builds its own `Runtime`; the PJRT client
+/// cannot leave its thread — use the sequential engine there).
+pub fn run_cluster(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<RunResult> {
+    if rt.backend_name() != "native" {
+        bail!(
+            "engine=cluster needs the native backend (the PJRT client is not \
+             Send); use --engine=sequential with PJRT artifacts"
+        );
+    }
+    if cfg.parts == 0 || cfg.rounds == 0 {
+        bail!("engine=cluster needs parts >= 1 and rounds >= 1");
+    }
+    let setup = driver::setup_run(cfg, ds, rt)?;
+    match cfg.round_mode {
+        RoundMode::Sync => run_rounds(cfg, ds, rt, setup, false),
+        RoundMode::PipelinedCorrection => run_rounds(cfg, ds, rt, setup, true),
+        RoundMode::AsyncStaleness { tau } => run_async(cfg, ds, rt, setup, tau),
+    }
+}
+
+/// Lock-step rounds: sync mode (correction inline on the server thread,
+/// bit-compatible with the sequential driver) or pipelined mode (correction
+/// overlapped on its own thread, applied as a delta).
+fn run_rounds(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    rt: &Runtime,
+    setup: RunSetup,
+    pipelined: bool,
+) -> Result<RunResult> {
+    let RunSetup {
+        train_name,
+        server_train_name,
+        eval_name,
+        dims,
+        assignment,
+        cut_ratio,
+        parts,
+        workers,
+        mut global_params,
+        server_state,
+        local_builder,
+        corr_builder,
+        param_bytes,
+        mut eval_rng,
+        corr_rng,
+        net: netm,
+    } = setup;
+    let dir = rt.artifacts_dir().to_path_buf();
+    let is_fullsync = cfg.algorithm == Algorithm::FullSync;
+    let do_correct = cfg.algorithm.corrects() && cfg.correction_steps > 0;
+    let pipe_corr = pipelined && do_correct;
+    let storage_sum: u64 = parts.iter().map(|p| p.storage_bytes).sum();
+    let parts_n = parts.len();
+
+    std::thread::scope(|s| -> Result<RunResult> {
+        let (up_tx, up_rx) = channel::<Up>();
+        let down_txs = spawn_workers(
+            s,
+            cfg,
+            ds,
+            &assignment,
+            &netm,
+            &parts,
+            workers,
+            &dir,
+            &train_name,
+            &local_builder,
+            param_bytes,
+            &up_tx,
+        );
+        drop(up_tx);
+
+        // sync mode corrects inline and keeps these; pipelined mode moves
+        // them onto the correction thread
+        let mut inline_server_state = Some(server_state);
+        let mut inline_corr_rng = Some(corr_rng);
+        let (creq_tx, creq_rx) = channel::<Vec<Tensor>>();
+        let (cres_tx, cres_rx) = channel::<CorrReply>();
+        if pipe_corr {
+            let st = inline_server_state.take().expect("taken once");
+            let crng = inline_corr_rng.take().expect("taken once");
+            let res = cres_tx.clone();
+            let cdir = dir.clone();
+            let cname = server_train_name.clone();
+            let cb = corr_builder.clone();
+            let assign: &[u32] = &assignment;
+            let b = dims.b;
+            s.spawn(move || {
+                correction_main(creq_rx, res, cdir, cname, cfg, ds, assign, b, st, cb, crng)
+            });
+        }
+        drop(cres_tx);
+
+        let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
+        // storage bytes ride round 1's comm (see the sequential driver)
+        let mut cum_bytes: u64 = 0;
+        let mut corr_arena = BlockArena::new();
+
+        for round in 1..=cfg.rounds {
+            let t_round = Instant::now();
+            let k = if is_fullsync {
+                1
+            } else {
+                cfg.schedule.steps_for_round(round)
+            };
+            let mut comm = CommStats::default();
+            if round == 1 {
+                comm.feature_bytes += storage_sum;
+            }
+
+            // ---- broadcast ParamsDown (and the correction snapshot) -------
+            for tx in &down_txs {
+                if tx
+                    .send(Down::Round {
+                        round,
+                        k,
+                        params: global_params.clone(),
+                    })
+                    .is_err()
+                {
+                    return Err(worker_send_error(&up_rx, "a worker thread terminated early"));
+                }
+                comm.down_bytes += param_bytes;
+            }
+            if pipe_corr {
+                // correct θ_r concurrently with the local epoch on θ_r
+                creq_tx
+                    .send(global_params.clone())
+                    .map_err(|_| anyhow!("correction thread terminated early"))?;
+            }
+
+            // ---- collect ParamsUp + RemoteFeatures ------------------------
+            let mut ups: Vec<Option<ParamsUp>> = (0..parts_n).map(|_| None).collect();
+            let mut got = 0usize;
+            while got < parts_n {
+                match up_rx.recv() {
+                    Err(_) => bail!("all worker threads disconnected mid-round"),
+                    Ok(Up::Features { bytes }) => comm.feature_bytes += bytes,
+                    Ok(Up::Failed { part, err }) => bail!("worker {part} failed: {err}"),
+                    Ok(Up::Round(u)) => {
+                        if u.round != round {
+                            bail!(
+                                "worker {} answered round {} during round {round}",
+                                u.part,
+                                u.round
+                            );
+                        }
+                        comm.up_bytes += param_bytes;
+                        got += 1;
+                        let p = u.part as usize;
+                        ups[p] = Some(u);
+                    }
+                }
+            }
+            // fold per-worker stats in part order (float sums must not
+            // depend on message arrival order — bit parity with sequential)
+            let mut worker_time = 0f64;
+            let mut net_time = 0f64;
+            let mut loss_sum = 0f64;
+            let mut loss_n = 0usize;
+            for u in ups.iter().flatten() {
+                worker_time = worker_time.max(u.elapsed_s);
+                net_time = net_time.max(u.net_s);
+                loss_sum += u.loss_sum;
+                loss_n += u.loss_n;
+            }
+
+            // ---- server: average (+ correct) + eval -----------------------
+            let t_server = Instant::now();
+            let states: Vec<ModelState> = ups
+                .into_iter()
+                .map(|u| ModelState {
+                    params: u.expect("all ups collected").params,
+                    opt: Vec::new(),
+                })
+                .collect();
+            let refs: Vec<&ModelState> = states.iter().collect();
+            ModelState::average_params_into(&mut global_params, &refs);
+
+            let (val_score, global_loss) = if pipe_corr {
+                // the correction of θ_r overlapped the local epoch; apply
+                // its delta on top of the fresh average
+                match cres_rx.recv() {
+                    Ok(Ok((delta, _corr_s))) => {
+                        for (g, d) in global_params.iter_mut().zip(&delta) {
+                            for (gv, dv) in g.data.iter_mut().zip(&d.data) {
+                                *gv += dv;
+                            }
+                        }
+                    }
+                    Ok(Err(msg)) => bail!("server correction failed: {msg}"),
+                    Err(_) => bail!("correction thread disconnected mid-round"),
+                }
+                driver::eval_if_due(
+                    rt,
+                    &eval_name,
+                    &global_params,
+                    ds,
+                    cfg,
+                    &local_builder,
+                    dims.c,
+                    &mut eval_rng,
+                    round,
+                )?
+            } else {
+                // sync path: the exact epilogue the sequential driver runs
+                driver::server_round_epilogue(
+                    rt,
+                    cfg,
+                    ds,
+                    &assignment,
+                    dims,
+                    &server_train_name,
+                    &eval_name,
+                    &local_builder,
+                    &corr_builder,
+                    inline_server_state.as_mut().expect("sync keeps state"),
+                    &mut global_params,
+                    &mut corr_arena,
+                    inline_corr_rng.as_mut().expect("sync keeps rng"),
+                    &mut eval_rng,
+                    round,
+                )?
+            };
+            let server_time = t_server.elapsed().as_secs_f64();
+
+            cum_bytes += comm.total();
+            records.push(RoundRecord {
+                round,
+                local_steps: k,
+                local_loss: if loss_n > 0 {
+                    loss_sum / loss_n as f64
+                } else {
+                    f64::NAN
+                },
+                global_loss,
+                val_score,
+                comm,
+                cum_bytes,
+                worker_time_s: worker_time,
+                server_time_s: server_time,
+                net_time_s: net_time,
+                wall_time_s: t_round.elapsed().as_secs_f64(),
+            });
+        }
+
+        for tx in &down_txs {
+            let _ = tx.send(Down::Shutdown);
+        }
+        driver::finish_run(
+            rt,
+            &eval_name,
+            &global_params,
+            ds,
+            cfg,
+            &local_builder,
+            dims.c,
+            &mut eval_rng,
+            cut_ratio,
+            records,
+            Engine::Cluster,
+            None,
+        )
+    })
+}
+
+/// Bounded-staleness asynchronous averaging: workers pull/push at their own
+/// pace, the server folds each push into a running average with weight
+/// `1/P`, and [`StalenessGate`] defers a worker's next pull while it is
+/// more than `tau` rounds ahead of the slowest. One `RoundRecord` is
+/// emitted per `P` pushes (the correction + eval cadence).
+fn run_async(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    rt: &Runtime,
+    setup: RunSetup,
+    tau: usize,
+) -> Result<RunResult> {
+    let RunSetup {
+        train_name,
+        server_train_name,
+        eval_name,
+        dims,
+        assignment,
+        cut_ratio,
+        parts,
+        workers,
+        mut global_params,
+        mut server_state,
+        local_builder,
+        corr_builder,
+        param_bytes,
+        mut eval_rng,
+        mut corr_rng,
+        net: netm,
+    } = setup;
+    let dir = rt.artifacts_dir().to_path_buf();
+    let is_fullsync = cfg.algorithm == Algorithm::FullSync;
+    let storage_sum: u64 = parts.iter().map(|p| p.storage_bytes).sum();
+    let parts_n = parts.len();
+    let k_for = |round: usize| {
+        if is_fullsync {
+            1
+        } else {
+            cfg.schedule.steps_for_round(round)
+        }
+    };
+
+    std::thread::scope(|s| -> Result<RunResult> {
+        let (up_tx, up_rx) = channel::<Up>();
+        let down_txs = spawn_workers(
+            s,
+            cfg,
+            ds,
+            &assignment,
+            &netm,
+            &parts,
+            workers,
+            &dir,
+            &train_name,
+            &local_builder,
+            param_bytes,
+            &up_tx,
+        );
+        drop(up_tx);
+
+        let mut gate = StalenessGate::new(parts_n, tau);
+        let mut waiting: Vec<usize> = Vec::new();
+        let mut max_staleness = 0u64;
+        let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
+        // storage bytes ride the first window's comm (see sequential driver)
+        let mut cum_bytes: u64 = 0;
+        let mut corr_arena = BlockArena::new();
+
+        // window accumulators (one window = P pushes = one RoundRecord)
+        let mut comm = CommStats::default();
+        comm.feature_bytes += storage_sum;
+        let mut loss_sum = 0f64;
+        let mut loss_n = 0usize;
+        let mut k_sum = 0usize;
+        let mut worker_time = 0f64;
+        let mut net_time = 0f64;
+        // per-push averaging folds happen throughout the window; accumulate
+        // them so server_time_s keeps its "averaging + correction + eval"
+        // meaning from the sync engines
+        let mut fold_time = 0f64;
+        let mut pushes = 0usize;
+        let mut t_window = Instant::now();
+
+        // everyone starts round 1 (staleness 0)
+        for tx in &down_txs {
+            if tx
+                .send(Down::Round {
+                    round: 1,
+                    k: k_for(1),
+                    params: global_params.clone(),
+                })
+                .is_err()
+            {
+                return Err(worker_send_error(
+                    &up_rx,
+                    "a worker thread terminated before the run",
+                ));
+            }
+            comm.down_bytes += param_bytes;
+        }
+
+        while records.len() < cfg.rounds {
+            match up_rx.recv() {
+                Err(_) => bail!("all worker threads disconnected mid-run"),
+                Ok(Up::Features { bytes }) => comm.feature_bytes += bytes,
+                Ok(Up::Failed { part, err }) => bail!("worker {part} failed: {err}"),
+                Ok(Up::Round(u)) => {
+                    let p = u.part as usize;
+                    comm.up_bytes += param_bytes;
+                    loss_sum += u.loss_sum;
+                    loss_n += u.loss_n;
+                    k_sum += k_for(u.round);
+                    worker_time = worker_time.max(u.elapsed_s);
+                    net_time = net_time.max(u.net_s);
+                    // fold the push into the running average (weight 1/P)
+                    let t_fold = Instant::now();
+                    let alpha = 1.0 / parts_n as f32;
+                    for (g, w) in global_params.iter_mut().zip(&u.params) {
+                        for (gv, &wv) in g.data.iter_mut().zip(&w.data) {
+                            *gv += alpha * (wv - *gv);
+                        }
+                    }
+                    fold_time += t_fold.elapsed().as_secs_f64();
+                    gate.push(p);
+                    waiting.push(p);
+                    pushes += 1;
+
+                    if pushes == parts_n {
+                        pushes = 0;
+                        let round = records.len() + 1;
+                        let t_server = Instant::now();
+                        let (val_score, global_loss) = driver::server_round_epilogue(
+                            rt,
+                            cfg,
+                            ds,
+                            &assignment,
+                            dims,
+                            &server_train_name,
+                            &eval_name,
+                            &local_builder,
+                            &corr_builder,
+                            &mut server_state,
+                            &mut global_params,
+                            &mut corr_arena,
+                            &mut corr_rng,
+                            &mut eval_rng,
+                            round,
+                        )?;
+                        cum_bytes += comm.total();
+                        records.push(RoundRecord {
+                            round,
+                            // mean steps actually granted to this window's
+                            // pushes (workers drift across schedule rounds
+                            // under tau > 0), rounded to nearest
+                            local_steps: (k_sum as f64 / parts_n as f64).round()
+                                as usize,
+                            local_loss: if loss_n > 0 {
+                                loss_sum / loss_n as f64
+                            } else {
+                                f64::NAN
+                            },
+                            global_loss,
+                            val_score,
+                            comm,
+                            cum_bytes,
+                            worker_time_s: worker_time,
+                            server_time_s: fold_time + t_server.elapsed().as_secs_f64(),
+                            net_time_s: net_time,
+                            wall_time_s: t_window.elapsed().as_secs_f64(),
+                        });
+                        comm = CommStats::default();
+                        loss_sum = 0.0;
+                        loss_n = 0;
+                        k_sum = 0;
+                        worker_time = 0.0;
+                        net_time = 0.0;
+                        fold_time = 0.0;
+                        t_window = Instant::now();
+                    }
+
+                    // admit waiting workers within the staleness bound
+                    let mut i = 0;
+                    while i < waiting.len() {
+                        let q = waiting[i];
+                        if gate.done(q) >= cfg.rounds || records.len() >= cfg.rounds {
+                            let _ = down_txs[q].send(Down::Shutdown);
+                            waiting.swap_remove(i);
+                        } else if gate.may_start(q) {
+                            max_staleness = max_staleness.max(gate.staleness(q) as u64);
+                            let next = gate.done(q) + 1;
+                            if down_txs[q]
+                                .send(Down::Round {
+                                    round: next,
+                                    k: k_for(next),
+                                    params: global_params.clone(),
+                                })
+                                .is_err()
+                            {
+                                return Err(worker_send_error(
+                                    &up_rx,
+                                    &format!("worker {q} terminated early"),
+                                ));
+                            }
+                            comm.down_bytes += param_bytes;
+                            waiting.swap_remove(i);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        for tx in &down_txs {
+            let _ = tx.send(Down::Shutdown);
+        }
+        driver::finish_run(
+            rt,
+            &eval_name,
+            &global_params,
+            ds,
+            cfg,
+            &local_builder,
+            dims.c,
+            &mut eval_rng,
+            cut_ratio,
+            records,
+            Engine::Cluster,
+            Some(max_staleness),
+        )
+    })
+}

@@ -1,0 +1,240 @@
+//! Cluster execution engine: real multi-threaded workers + a parameter
+//! server, exchanging typed messages through a modeled network.
+//!
+//! The sequential driver ([`crate::coordinator::driver`]) runs every worker
+//! on one thread and *back-computes* the parallel round time as
+//! `max_p(worker compute)`. That reproduces the paper's byte/round figures
+//! but cannot show the systems effects a real deployment lives or dies by:
+//! compute/communication overlap, stragglers, and server-correction
+//! pipelining. This module is the execution substrate for those.
+//!
+//! ## Execution model
+//!
+//! ```text
+//!   server (caller thread, shared Runtime `rt`)
+//!     │  Down::Round { round, k, params }          ... one mpsc pair per worker
+//!     ▼
+//!   worker p (OS thread, own native Runtime + BlockArena + ModelState)
+//!     │  Up::Features { bytes }                    ... per GGS mini-batch
+//!     │  Up::Round(ParamsUp { params, losses.. })  ... once per local round
+//!     ▼
+//!   server: average → correct → eval → RoundRecord
+//! ```
+//!
+//! Each worker thread owns a *private* `Runtime` (the native backend;
+//! `Runtime` is deliberately not `Send`, and the PJRT client cannot leave
+//! its thread — PJRT runs only under the legacy sequential engine). Worker
+//! state — model + optimizer tensors, the block arena, the sampling
+//! scratch — lives on the worker thread for the whole run, exactly like a
+//! real cluster node; only parameter vectors and byte counters cross the
+//! channels.
+//!
+//! ## Accounting model
+//!
+//! Byte counters are identical to the sequential driver's (`CommStats`).
+//! Time is reported three ways per [`crate::coordinator::RoundRecord`]:
+//!
+//! - `worker_time_s` — measured: slowest worker's local round (compute +
+//!   any injected network sleeps);
+//! - `net_time_s` — modeled: the slowest worker's link time this round,
+//!   from [`NetModel::transfer_s`], a pure function of (bytes, link,
+//!   round, leg) so the sequential and cluster engines agree bit-for-bit;
+//! - `wall_time_s` — measured: the whole round end-to-end on the server.
+//!
+//! ## Round modes
+//!
+//! - [`RoundMode::Sync`] — Algorithm 1/2 exactly as the sequential driver
+//!   runs them. Same seeds, same RNG streams, same accumulation order ⇒
+//!   the per-round losses and bytes reproduce the sequential engine
+//!   *bit-for-bit* (asserted by `tests/cluster.rs`); only the measured
+//!   wall-clock changes.
+//! - [`RoundMode::AsyncStaleness`] — bounded-staleness parameter averaging:
+//!   each worker pulls/pushes at its own pace; the server folds each push
+//!   into a running average (weight `1/P`) and defers a worker's next pull
+//!   while it is more than `tau` rounds ahead of the slowest
+//!   ([`StalenessGate`]). One `RoundRecord` is emitted per `P` pushes.
+//! - [`RoundMode::PipelinedCorrection`] — the server-correction steps of
+//!   Alg. 2 run on a dedicated thread *overlapped* with the next local
+//!   epoch: round `r` corrects the broadcast params `θ_r` while workers
+//!   train on them, then applies the correction as a delta on top of the
+//!   fresh average (`θ_{r+1} = mean_p(θ_p) + (correct(θ_r) − θ_r)`). The
+//!   correction leaves the critical path at the cost of applying it one
+//!   average "late" — the classic pipelining trade.
+//!
+//! The front-end [`crate::coordinator::driver::run_experiment`] dispatches
+//! on [`crate::config::ExperimentConfig::engine`]; both engines share the
+//! same setup, worker-round, correction, and eval code paths (see
+//! `coordinator::driver`), and emit the same `RoundRecord`/`RunResult`
+//! schema, so every figure, bench, and test runs on either.
+
+pub mod engine;
+pub mod net;
+
+pub use engine::run_cluster;
+pub use net::NetModel;
+
+/// Which execution substrate runs the round loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// legacy single-thread driver (works on every backend, incl. PJRT)
+    Sequential,
+    /// one OS thread per worker + parameter-server loop (native backend)
+    Cluster,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => Some(Engine::Sequential),
+            "cluster" | "threaded" => Some(Engine::Cluster),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Sequential => "sequential",
+            Engine::Cluster => "cluster",
+        }
+    }
+}
+
+/// Synchronization discipline of the cluster engine's round loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundMode {
+    /// lock-step rounds (Alg. 1/2 as written; bit-compatible with the
+    /// sequential driver)
+    Sync,
+    /// bounded-staleness asynchronous averaging: a worker may run at most
+    /// `tau` rounds ahead of the slowest worker
+    AsyncStaleness { tau: usize },
+    /// server correction overlapped with the next local epoch
+    PipelinedCorrection,
+}
+
+impl RoundMode {
+    /// Parse `"sync"`, `"async"` / `"async:<tau>"`, `"pipelined"`.
+    pub fn parse(s: &str) -> Option<RoundMode> {
+        let s = s.to_ascii_lowercase().replace('_', "-");
+        match s.as_str() {
+            "sync" => Some(RoundMode::Sync),
+            "pipelined" | "pipelined-correction" => Some(RoundMode::PipelinedCorrection),
+            "async" => Some(RoundMode::AsyncStaleness { tau: 1 }),
+            _ => {
+                let tau = s.strip_prefix("async:")?.parse::<usize>().ok()?;
+                Some(RoundMode::AsyncStaleness { tau })
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            RoundMode::Sync => "sync".to_string(),
+            RoundMode::AsyncStaleness { tau } => format!("async:{tau}"),
+            RoundMode::PipelinedCorrection => "pipelined".to_string(),
+        }
+    }
+}
+
+/// Bounded-staleness admission control for [`RoundMode::AsyncStaleness`]:
+/// tracks how many local rounds each worker has completed and admits a
+/// worker's next round only while it is at most `tau` rounds ahead of the
+/// slowest worker. The slowest worker is always admissible (staleness 0),
+/// so the gate cannot deadlock.
+#[derive(Clone, Debug)]
+pub struct StalenessGate {
+    tau: usize,
+    done: Vec<usize>,
+}
+
+impl StalenessGate {
+    pub fn new(parts: usize, tau: usize) -> StalenessGate {
+        StalenessGate {
+            tau,
+            done: vec![0; parts],
+        }
+    }
+
+    /// Record that worker `p` completed (pushed) one more round.
+    pub fn push(&mut self, p: usize) {
+        self.done[p] += 1;
+    }
+
+    /// Rounds completed by worker `p`.
+    pub fn done(&self, p: usize) -> usize {
+        self.done[p]
+    }
+
+    /// Rounds completed by the slowest worker.
+    pub fn min_done(&self) -> usize {
+        self.done.iter().copied().min().unwrap_or(0)
+    }
+
+    /// How far ahead of the slowest worker `p` currently is.
+    pub fn staleness(&self, p: usize) -> usize {
+        self.done[p] - self.min_done()
+    }
+
+    /// May worker `p` start its next round now?
+    pub fn may_start(&self, p: usize) -> bool {
+        self.staleness(p) <= self.tau
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_and_round_mode_parse() {
+        assert_eq!(Engine::parse("cluster"), Some(Engine::Cluster));
+        assert_eq!(Engine::parse("SEQ"), Some(Engine::Sequential));
+        assert_eq!(Engine::parse("gpu"), None);
+        assert_eq!(RoundMode::parse("sync"), Some(RoundMode::Sync));
+        assert_eq!(
+            RoundMode::parse("async:3"),
+            Some(RoundMode::AsyncStaleness { tau: 3 })
+        );
+        assert_eq!(
+            RoundMode::parse("async"),
+            Some(RoundMode::AsyncStaleness { tau: 1 })
+        );
+        assert_eq!(
+            RoundMode::parse("pipelined"),
+            Some(RoundMode::PipelinedCorrection)
+        );
+        assert_eq!(RoundMode::parse("async:x"), None);
+        assert_eq!(RoundMode::parse("turbo"), None);
+        assert_eq!(RoundMode::AsyncStaleness { tau: 2 }.name(), "async:2");
+    }
+
+    #[test]
+    fn staleness_gate_enforces_bound() {
+        let mut g = StalenessGate::new(3, 1);
+        // everyone at round 0: all admissible
+        assert!(g.may_start(0) && g.may_start(1) && g.may_start(2));
+        // worker 0 races ahead by one round: still within tau = 1
+        g.push(0);
+        assert_eq!(g.staleness(0), 1);
+        assert!(g.may_start(0));
+        // two rounds ahead: blocked until the slowest catches up
+        g.push(0);
+        assert_eq!(g.staleness(0), 2);
+        assert!(!g.may_start(0));
+        assert!(g.may_start(1), "slowest is never blocked");
+        g.push(1);
+        assert!(!g.may_start(0), "min unchanged while worker 2 lags");
+        g.push(2);
+        assert_eq!(g.min_done(), 1);
+        assert!(g.may_start(0), "released once the bound holds again");
+    }
+
+    #[test]
+    fn staleness_gate_tau_zero_is_lockstep() {
+        let mut g = StalenessGate::new(2, 0);
+        g.push(0);
+        assert!(!g.may_start(0));
+        g.push(1);
+        assert!(g.may_start(0) && g.may_start(1));
+    }
+}

@@ -1,0 +1,267 @@
+//! Modeled network: turns the byte counters the coordinator already tracks
+//! into per-transfer wall-clock, deterministically.
+//!
+//! Every message between the parameter server and worker `p` crosses a
+//! point-to-point link with a latency + bandwidth cost, optional
+//! multiplicative jitter, and an optional straggler distribution (with
+//! probability `straggle_p` a transfer takes `straggle_mult`× longer —
+//! the tail-latency events the distributed-GNN surveys identify as the
+//! dominant systems effect).
+//!
+//! Two uses:
+//!
+//! - **modeling** — [`NetModel::transfer_s`] is a pure function of
+//!   `(bytes, link, round, leg)`: the jitter/straggler draw comes from a
+//!   PRNG seeded by those coordinates, *not* from thread timing, so the
+//!   sequential driver and the threaded cluster engine compute bit-identical
+//!   modeled times for the same run.
+//! - **injection** — with `sleep_scale > 0`, [`NetModel::sleep`] turns the
+//!   modeled time into a real `thread::sleep`, so the *measured* wall-clock
+//!   of an engine shows overlap (cluster workers sleep concurrently) vs
+//!   serialization (the sequential driver sleeps one worker at a time).
+//!   The default (`sleep_scale = 0`) never sleeps, keeping tests and the
+//!   paper-repro figures timing-neutral.
+//!
+//! Specs are parsed from strings: a preset (`ideal` | `lan` | `wan`)
+//! optionally followed by `key=value` overrides, comma-separated —
+//! e.g. `"lan,scale=1"` or `"lat=2e-2,bw=1.25e8,jitter=0.1,scale=1"`.
+
+use crate::util::Pcg64;
+
+/// Leg tags decorrelate the jitter draws of the transfers inside one
+/// (link, round): params down, params up, one-time storage, and the
+/// per-step remote-feature fetches.
+pub const LEG_DOWN: u64 = 0;
+pub const LEG_UP: u64 = 1;
+pub const LEG_STORAGE: u64 = 2;
+/// feature fetch for local step `i` uses leg `LEG_FEATURES + i`
+pub const LEG_FEATURES: u64 = 16;
+
+/// A symmetric point-to-point link model between the server and each worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetModel {
+    /// per-message one-way latency (seconds)
+    pub latency_s: f64,
+    /// link bandwidth (bytes/second); `f64::INFINITY` = unmetered
+    pub bytes_per_s: f64,
+    /// multiplicative jitter amplitude: transfer time is scaled by a
+    /// uniform factor in `[1 - jitter, 1 + jitter]`
+    pub jitter: f64,
+    /// probability that a transfer straggles
+    pub straggle_p: f64,
+    /// multiplier applied to a straggling transfer
+    pub straggle_mult: f64,
+    /// real-sleep factor for [`NetModel::sleep`] (0 = model only)
+    pub sleep_scale: f64,
+    /// decorrelates the jitter stream between runs (set from the run seed)
+    pub seed: u64,
+}
+
+impl NetModel {
+    /// Zero-cost network: every transfer is instantaneous.
+    pub fn ideal() -> NetModel {
+        NetModel {
+            latency_s: 0.0,
+            bytes_per_s: f64::INFINITY,
+            jitter: 0.0,
+            straggle_p: 0.0,
+            straggle_mult: 1.0,
+            sleep_scale: 0.0,
+            seed: 0,
+        }
+    }
+
+    /// Datacenter LAN: 0.5 ms latency, 10 Gb/s, light jitter.
+    pub fn lan() -> NetModel {
+        NetModel {
+            latency_s: 5e-4,
+            bytes_per_s: 1.25e9,
+            jitter: 0.05,
+            ..NetModel::ideal()
+        }
+    }
+
+    /// Cross-site WAN: 20 ms latency, 1 Gb/s, jitter + 2% 4x stragglers.
+    pub fn wan() -> NetModel {
+        NetModel {
+            latency_s: 2e-2,
+            bytes_per_s: 1.25e8,
+            jitter: 0.1,
+            straggle_p: 0.02,
+            straggle_mult: 4.0,
+            ..NetModel::ideal()
+        }
+    }
+
+    /// Parse a spec string: `preset[,key=value]*` (see module docs).
+    pub fn parse(spec: &str) -> Result<NetModel, String> {
+        let mut net = NetModel::ideal();
+        for tok in spec.split(',').map(str::trim) {
+            if tok.is_empty() {
+                continue;
+            }
+            match tok {
+                "ideal" => net = NetModel::ideal(),
+                "lan" => net = NetModel::lan(),
+                "wan" => net = NetModel::wan(),
+                _ => {
+                    let (k, v) = tok
+                        .split_once('=')
+                        .ok_or_else(|| format!("net spec token {tok:?} is not a preset (ideal|lan|wan) or key=value"))?;
+                    let num = v
+                        .parse::<f64>()
+                        .map_err(|_| format!("net spec {k}={v:?}: not a number"))?;
+                    match k {
+                        "lat" => net.latency_s = num,
+                        "bw" => net.bytes_per_s = num,
+                        "jitter" => net.jitter = num,
+                        "straggle" => net.straggle_p = num,
+                        "straggle_mult" => net.straggle_mult = num,
+                        "scale" => net.sleep_scale = num,
+                        other => return Err(format!("unknown net spec key {other:?}")),
+                    }
+                }
+            }
+        }
+        // NaN compares false everywhere, so spell the valid ranges positively
+        let lat_ok = net.latency_s.is_finite() && net.latency_s >= 0.0;
+        let bw_ok = net.bytes_per_s > 0.0 && !net.bytes_per_s.is_nan(); // inf = unmetered
+        if !lat_ok || !bw_ok || !(0.0..=1.0).contains(&net.jitter) {
+            return Err(format!(
+                "net spec {spec:?}: need finite lat >= 0, bw > 0, 0 <= jitter <= 1"
+            ));
+        }
+        let mult_ok = net.straggle_mult.is_finite() && net.straggle_mult >= 1.0;
+        let scale_ok = net.sleep_scale.is_finite() && net.sleep_scale >= 0.0;
+        if !(0.0..=1.0).contains(&net.straggle_p) || !mult_ok || !scale_ok {
+            return Err(format!(
+                "net spec {spec:?}: need 0 <= straggle <= 1, finite straggle_mult >= 1, \
+                 finite scale >= 0"
+            ));
+        }
+        Ok(net)
+    }
+
+    /// Bind the model to a run seed (jitter stream decorrelation).
+    pub fn with_seed(mut self, seed: u64) -> NetModel {
+        self.seed = seed;
+        self
+    }
+
+    /// No latency and unmetered bandwidth: all transfers cost 0.
+    pub fn is_ideal(&self) -> bool {
+        self.latency_s == 0.0 && self.bytes_per_s.is_infinite()
+    }
+
+    /// Modeled seconds to move `bytes` over worker `link`'s connection in
+    /// `round`, transfer `leg`. Pure in its arguments (see module docs), so
+    /// both engines agree bit-for-bit.
+    pub fn transfer_s(&self, bytes: u64, link: u32, round: u64, leg: u64) -> f64 {
+        if self.is_ideal() || bytes == 0 {
+            return 0.0;
+        }
+        let base = self.latency_s + bytes as f64 / self.bytes_per_s;
+        if self.jitter == 0.0 && self.straggle_p == 0.0 {
+            return base;
+        }
+        let mut rng = Pcg64::new(
+            self.seed
+                ^ (link as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ round.wrapping_mul(0xc2b2_ae3d_27d4_eb4f)
+                ^ leg.wrapping_mul(0x1656_67b1_9e37_79f9),
+        );
+        let mut t = base * (1.0 + self.jitter * (2.0 * rng.f64() - 1.0));
+        if self.straggle_p > 0.0 && rng.bernoulli(self.straggle_p) {
+            t *= self.straggle_mult;
+        }
+        t.max(0.0)
+    }
+
+    /// Inject `modeled_s` as real wall-clock, scaled by `sleep_scale`
+    /// (no-op at the default scale of 0).
+    pub fn sleep(&self, modeled_s: f64) {
+        if self.sleep_scale > 0.0 && modeled_s > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                modeled_s * self.sleep_scale,
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_costs_nothing() {
+        let net = NetModel::ideal();
+        assert!(net.is_ideal());
+        assert_eq!(net.transfer_s(1 << 30, 3, 7, LEG_DOWN), 0.0);
+    }
+
+    #[test]
+    fn transfer_math_without_jitter() {
+        let net = NetModel::parse("lat=1e-3,bw=1e6").unwrap();
+        // 1 ms latency + 500_000 bytes at 1 MB/s = 0.501 s
+        let t = net.transfer_s(500_000, 0, 1, LEG_UP);
+        assert!((t - 0.501).abs() < 1e-12, "t={t}");
+        // zero-byte transfers send no message
+        assert_eq!(net.transfer_s(0, 0, 1, LEG_UP), 0.0);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let net = NetModel::parse("lat=1e-2,bw=1e9,jitter=0.1").unwrap().with_seed(5);
+        let base = 1e-2 + 1000.0 / 1e9;
+        for link in 0..4 {
+            for round in 1..10u64 {
+                let a = net.transfer_s(1000, link, round, LEG_DOWN);
+                let b = net.transfer_s(1000, link, round, LEG_DOWN);
+                assert_eq!(a.to_bits(), b.to_bits(), "not deterministic");
+                assert!(
+                    (base * 0.9 - 1e-15..=base * 1.1 + 1e-15).contains(&a),
+                    "a={a}"
+                );
+            }
+        }
+        // different legs draw different jitter (almost surely)
+        let a = net.transfer_s(1000, 0, 1, LEG_DOWN);
+        let b = net.transfer_s(1000, 0, 1, LEG_UP);
+        assert_ne!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn stragglers_appear_at_roughly_their_rate() {
+        let net = NetModel::parse("lat=1e-3,bw=1e9,straggle=0.2,straggle_mult=10")
+            .unwrap()
+            .with_seed(11);
+        let base = 1e-3 + 100.0 / 1e9;
+        let n = 2000;
+        let slow = (0..n)
+            .filter(|&r| net.transfer_s(100, 0, r as u64, LEG_DOWN) > base * 5.0)
+            .count();
+        let rate = slow as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.05, "straggle rate {rate}");
+    }
+
+    #[test]
+    fn presets_and_overrides_parse() {
+        assert_eq!(NetModel::parse("ideal").unwrap(), NetModel::ideal());
+        assert_eq!(NetModel::parse("lan").unwrap(), NetModel::lan());
+        let n = NetModel::parse("wan,scale=1").unwrap();
+        assert_eq!(n.sleep_scale, 1.0);
+        assert_eq!(n.latency_s, NetModel::wan().latency_s);
+        assert!(NetModel::parse("dsl").is_err());
+        assert!(NetModel::parse("lat=abc").is_err());
+        assert!(NetModel::parse("lan,jitter=2").is_err());
+        assert!(NetModel::parse("bw=0").is_err());
+        // non-finite / negative knobs are rejected (inf bw = unmetered is ok)
+        assert!(NetModel::parse("lat=inf").is_err());
+        assert!(NetModel::parse("lat=nan").is_err());
+        assert!(NetModel::parse("bw=nan").is_err());
+        assert!(NetModel::parse("lan,scale=-1").is_err());
+        assert!(NetModel::parse("lan,scale=inf").is_err());
+        assert!(NetModel::parse("lan,straggle=0.1,straggle_mult=nan").is_err());
+        assert!(NetModel::parse("bw=inf").is_ok());
+    }
+}

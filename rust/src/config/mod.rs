@@ -1,6 +1,7 @@
 //! Run configuration: JSON-file + CLI-flag configuration for distributed
 //! training runs, with dataset/algorithm/partitioner registries.
 
+use crate::cluster::{Engine, NetModel, RoundMode};
 use crate::coordinator::{Algorithm, CorrectionBatch, Schedule};
 use crate::util::Json;
 
@@ -36,6 +37,13 @@ pub struct ExperimentConfig {
     /// cap on validation nodes scored per eval (0 = all)
     pub eval_max_nodes: usize,
     pub artifacts_dir: String,
+    /// execution engine: legacy sequential driver vs threaded cluster
+    pub engine: Engine,
+    /// cluster round discipline: sync | async:<tau> | pipelined
+    pub round_mode: RoundMode,
+    /// modeled-network spec (`ideal` | `lan` | `wan` | `key=value,...`);
+    /// validated at parse time, bound to the seed at engine start
+    pub net: String,
 }
 
 impl Default for ExperimentConfig {
@@ -61,6 +69,9 @@ impl Default for ExperimentConfig {
             eval_every: 1,
             eval_max_nodes: 512,
             artifacts_dir: "artifacts".into(),
+            engine: Engine::Sequential,
+            round_mode: RoundMode::Sync,
+            net: "ideal".into(),
         }
     }
 }
@@ -116,6 +127,20 @@ impl ExperimentConfig {
                 "eval_every" => cfg.eval_every = req_num(v, k)? as usize,
                 "eval_max_nodes" => cfg.eval_max_nodes = req_num(v, k)? as usize,
                 "artifacts_dir" => cfg.artifacts_dir = req_str(v, k)?,
+                "engine" => {
+                    cfg.engine = Engine::parse(&req_str(v, k)?)
+                        .ok_or_else(|| format!("unknown engine {v} (sequential|cluster)"))?
+                }
+                "round_mode" => {
+                    cfg.round_mode = RoundMode::parse(&req_str(v, k)?).ok_or_else(|| {
+                        format!("unknown round_mode {v} (sync|async:<tau>|pipelined)")
+                    })?
+                }
+                "net" => {
+                    let spec = req_str(v, k)?;
+                    NetModel::parse(&spec)?; // validate here, re-parse at engine start
+                    cfg.net = spec;
+                }
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -128,13 +153,14 @@ impl ExperimentConfig {
         Self::from_json(&j)
     }
 
-    /// Apply `--key=value` CLI overrides on top of this config.
+    /// Apply `--key=value` CLI overrides on top of this config. CLI-style
+    /// dashes are accepted (`--round-mode` == `round_mode`).
     pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), String> {
-        let j = match key {
+        let key = key.replace('-', "_");
+        let j = match key.as_str() {
             "dataset" | "arch" | "algorithm" | "optimizer" | "server_optimizer"
-            | "partitioner" | "correction_batch" | "artifacts_dir" => {
-                Json::Str(value.to_string())
-            }
+            | "partitioner" | "correction_batch" | "artifacts_dir" | "engine"
+            | "round_mode" | "net" => Json::Str(value.to_string()),
             "correction_full_neighbors" => Json::Bool(value == "true" || value == "1"),
             _ => Json::Num(
                 value
@@ -190,6 +216,9 @@ impl ExperimentConfig {
                 "eval_every" => cfg.eval_every = parsed.eval_every,
                 "eval_max_nodes" => cfg.eval_max_nodes = parsed.eval_max_nodes,
                 "artifacts_dir" => cfg.artifacts_dir = parsed.artifacts_dir,
+                "engine" => cfg.engine = parsed.engine,
+                "round_mode" => cfg.round_mode = parsed.round_mode,
+                "net" => cfg.net = parsed.net,
                 _ => unreachable!("from_json validated keys"),
             }
         }
@@ -245,5 +274,39 @@ mod tests {
         assert_eq!(cfg.algorithm, Algorithm::PsgdPa);
         assert!((cfg.lr - 0.05).abs() < 1e-9);
         assert!(cfg.apply_override("nope", "1").is_err());
+    }
+
+    #[test]
+    fn engine_round_mode_net_keys() {
+        let j = Json::parse(
+            r#"{"engine":"cluster","round_mode":"async:2","net":"lan,scale=1"}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.engine, Engine::Cluster);
+        assert_eq!(cfg.round_mode, RoundMode::AsyncStaleness { tau: 2 });
+        assert_eq!(cfg.net, "lan,scale=1");
+        // defaults keep legacy behavior
+        let d = ExperimentConfig::default();
+        assert_eq!(d.engine, Engine::Sequential);
+        assert_eq!(d.round_mode, RoundMode::Sync);
+        assert_eq!(d.net, "ideal");
+        // bad values are rejected at parse time
+        for bad in [
+            r#"{"engine":"warp"}"#,
+            r#"{"round_mode":"async:-1"}"#,
+            r#"{"net":"adsl"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        // CLI spelling with dashes reaches the same keys
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_override("round-mode", "pipelined").unwrap();
+        cfg.apply_override("engine", "cluster").unwrap();
+        cfg.apply_override("net", "wan").unwrap();
+        assert_eq!(cfg.round_mode, RoundMode::PipelinedCorrection);
+        assert_eq!(cfg.engine, Engine::Cluster);
+        assert!(cfg.apply_override("net", "nope=1").is_err());
     }
 }

@@ -1,21 +1,34 @@
 //! The distributed-training driver: partitions the graph, sets up workers
 //! and the parameter server, and runs the round loop of Algorithm 1/2.
 //!
-//! Execution model: the paper itself simulates distribution on one box and
-//! reports *communication rounds and bytes*, not wall-clock (Section 5,
-//! "Real-world simulation"). We do the same: workers execute sequentially on
-//! the single PJRT CPU client (the `xla` crate client is not `Send`), and
-//! the *simulated parallel* round time is `max_p(worker compute) + server
-//! compute` — recorded per round alongside the byte counters.
+//! [`run_experiment`] is a thin front-end over two execution engines that
+//! share all of the setup, per-worker round, correction, and eval code in
+//! this module (so their numerics cannot drift):
+//!
+//! - **sequential** ([`run_sequential`], the default) — every worker runs
+//!   on the caller's thread against the shared `Runtime`. This is the only
+//!   engine that works on the PJRT backend (the `xla` client is not
+//!   `Send`), and it is what the paper itself does (Section 5, "Real-world
+//!   simulation"): report *communication rounds and bytes*, with the
+//!   simulated-parallel round time back-computed as `max_p(worker time)`.
+//! - **cluster** ([`crate::cluster`]) — one OS thread per worker plus a
+//!   parameter-server loop, typed message channels, and a modeled network;
+//!   sync mode reproduces this driver's per-round losses/bytes bit-for-bit
+//!   while actually measuring overlap, stragglers, and pipelining.
+//!
+//! Either way, every round also passes its byte counters through the run's
+//! [`NetModel`], so `RoundRecord` carries modeled network time next to the
+//! measured wall-clock.
 
 use anyhow::{bail, Result};
 
 use super::{Algorithm, CommStats, CorrectionBatch};
+use crate::cluster::{net, Engine, NetModel, RoundMode};
 use crate::config::ExperimentConfig;
 use crate::graph::{generators, CsrGraph, Dataset, Labels};
 use crate::metrics;
 use crate::partition;
-use crate::runtime::{ModelState, Runtime, Tensor};
+use crate::runtime::{Dims, ModelState, Runtime, Tensor};
 use crate::sampler::{BatchIter, BlockArena, BlockBuilder, Fanout, NodeScratch};
 use crate::util::{Json, Pcg64};
 
@@ -44,10 +57,17 @@ pub struct RoundRecord {
     pub comm: CommStats,
     /// cumulative bytes including this round
     pub cum_bytes: u64,
-    /// simulated parallel compute time: max over workers
+    /// parallel worker time: max over workers (measured; sequential engine
+    /// runs workers one after another and takes the max)
     pub worker_time_s: f64,
-    /// server averaging + correction + eval time
+    /// server averaging + correction + eval time (pipelined mode: the
+    /// overlapped correction is excluded — see `cluster` docs)
     pub server_time_s: f64,
+    /// modeled network time on the round's critical path: the slowest
+    /// worker's link time under the run's `NetModel`
+    pub net_time_s: f64,
+    /// measured end-to-end wall-clock of the round on the server
+    pub wall_time_s: f64,
 }
 
 /// Complete result of one distributed run.
@@ -56,6 +76,8 @@ pub struct RunResult {
     pub dataset: String,
     pub arch: String,
     pub parts: usize,
+    /// execution engine that produced this result ("sequential" | "cluster")
+    pub engine: &'static str,
     pub records: Vec<RoundRecord>,
     pub final_val: f64,
     pub final_test: f64,
@@ -63,6 +85,8 @@ pub struct RunResult {
     /// avg bytes communicated per round
     pub avg_round_bytes: f64,
     pub total_steps: usize,
+    /// max observed round-staleness (async-staleness mode only)
+    pub max_staleness: Option<u64>,
 }
 
 impl RunResult {
@@ -76,6 +100,7 @@ impl RunResult {
             ("dataset", Json::str(&self.dataset)),
             ("arch", Json::str(&self.arch)),
             ("parts", Json::num(self.parts as f64)),
+            ("engine", Json::str(self.engine)),
             ("final_val", Json::num(self.final_val)),
             ("final_test", Json::num(self.final_test)),
             ("cut_ratio", Json::num(self.cut_ratio)),
@@ -97,6 +122,8 @@ impl RunResult {
                                 ("cum_bytes", Json::num(r.cum_bytes as f64)),
                                 ("worker_time_s", Json::num(r.worker_time_s)),
                                 ("server_time_s", Json::num(r.server_time_s)),
+                                ("net_time_s", Json::num(r.net_time_s)),
+                                ("wall_time_s", Json::num(r.wall_time_s)),
                             ])
                         })
                         .collect(),
@@ -273,8 +300,39 @@ pub fn score(ds: &Dataset, logits: &[f32], c: usize, ids: &[u32]) -> f64 {
     }
 }
 
-/// Run one complete distributed-training experiment.
-pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<RunResult> {
+/// Everything both engines need, derived from `(cfg, ds, rt)` with one RNG
+/// stream discipline. Centralizing this is what makes the cluster engine's
+/// sync mode bit-compatible with the sequential driver: there is a single
+/// place that draws the partition/init/eval/correction streams, in a fixed
+/// order.
+pub(crate) struct RunSetup {
+    pub train_name: String,
+    pub server_train_name: String,
+    pub eval_name: String,
+    pub dims: Dims,
+    pub assignment: Vec<u32>,
+    pub cut_ratio: f64,
+    pub parts: Vec<PartInfo>,
+    /// one per-worker state, all starting from the same global init (their
+    /// optimizer state stays local across rounds, like FedAvg+Adam)
+    pub workers: Vec<ModelState>,
+    pub global_params: Vec<Tensor>,
+    /// server correction state (its optimizer state persists across rounds)
+    pub server_state: ModelState,
+    pub local_builder: BlockBuilder,
+    pub corr_builder: BlockBuilder,
+    pub param_bytes: u64,
+    pub eval_rng: Pcg64,
+    pub corr_rng: Pcg64,
+    pub net: NetModel,
+}
+
+/// Shared prologue: artifacts, partition, states, builders, RNG streams.
+pub(crate) fn setup_run(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    rt: &Runtime,
+) -> Result<RunSetup> {
     let mut root_rng = Pcg64::new(cfg.seed);
 
     // --- artifacts --------------------------------------------------------
@@ -306,11 +364,10 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
     // --- states ------------------------------------------------------------
     let mut init_rng = root_rng.split(3);
     let global_init = ModelState::init(&meta, &mut init_rng);
-    let mut workers: Vec<ModelState> = (0..cfg.parts).map(|_| global_init.clone()).collect();
-    let mut global_params: Vec<Tensor> = global_init.params.clone();
-    // server correction state (its optimizer state persists across rounds)
+    let workers: Vec<ModelState> = (0..cfg.parts).map(|_| global_init.clone()).collect();
+    let global_params: Vec<Tensor> = global_init.params.clone();
     let server_meta = rt.meta(&server_train_name)?.clone();
-    let mut server_state = ModelState::init(&server_meta, &mut init_rng.split(9));
+    let server_state = ModelState::init(&server_meta, &mut init_rng.split(9));
 
     // --- builders ----------------------------------------------------------
     let mut local_builder = BlockBuilder::new(
@@ -331,12 +388,410 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
     };
 
     let param_bytes: u64 = global_params.iter().map(|t| t.size_bytes()).sum();
+    let eval_rng = root_rng.split(4);
+    let corr_rng = root_rng.split(5);
+    let net = NetModel::parse(&cfg.net)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .with_seed(cfg.seed);
+
+    Ok(RunSetup {
+        train_name,
+        server_train_name,
+        eval_name,
+        dims,
+        assignment,
+        cut_ratio,
+        parts,
+        workers,
+        global_params,
+        server_state,
+        local_builder,
+        corr_builder,
+        param_bytes,
+        eval_rng,
+        corr_rng,
+        net,
+    })
+}
+
+/// What one worker's local round produced (losses/bytes are engine-
+/// independent; times are measured on whichever thread ran it).
+pub(crate) struct WorkerRoundOut {
+    pub loss_sum: f64,
+    pub loss_n: usize,
+    /// modeled link time for this worker's round (down + features + up)
+    pub net_s: f64,
+    /// measured elapsed, including any injected network sleeps
+    pub elapsed_s: f64,
+}
+
+/// One worker's local round (Alg. 2 lines 5-10): receive the global params,
+/// run `k` device-resident local steps, hand the params back. Runs
+/// identically on the sequential driver's thread and on a cluster worker
+/// thread — per-(run, worker, round) RNG streams keep it engine-independent.
+/// `on_feature_bytes` fires once per mini-batch that touched remote
+/// features (GGS accounting); the cluster engine forwards it as a
+/// `RemoteFeatures` message.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_worker_round(
+    rt: &Runtime,
+    train_name: &str,
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    assignment: &[u32],
+    info: &PartInfo,
+    builder: &BlockBuilder,
+    netm: &NetModel,
+    param_bytes: u64,
+    state: &mut ModelState,
+    global: &[Tensor],
+    round: usize,
+    k: usize,
+    arena: &mut BlockArena,
+    scratch: &mut NodeScratch,
+    mut on_feature_bytes: impl FnMut(u64),
+) -> Result<WorkerRoundOut> {
+    let t0 = std::time::Instant::now();
+    let mut net_s = 0f64;
+
+    // receive global params over the modeled link
+    let t_down = netm.transfer_s(param_bytes, info.part, round as u64, net::LEG_DOWN);
+    netm.sleep(t_down);
+    net_s += t_down;
+    if round == 1 && info.storage_bytes > 0 {
+        // SubgraphApprox one-time feature storage rides the first download
+        let t_store =
+            netm.transfer_s(info.storage_bytes, info.part, round as u64, net::LEG_STORAGE);
+        netm.sleep(t_store);
+        net_s += t_store;
+    }
+    state.copy_params_from(global);
+
+    let mut loss_sum = 0f64;
+    let mut loss_n = 0usize;
+    if !info.train_ids.is_empty() {
+        let mut rng = super::worker_rng(cfg.seed, info.part as usize, round);
+        let mut batches = BatchIter::new(&info.train_ids, builder.b, &mut rng);
+        // model + optimizer state stay device-resident across all K local
+        // steps (Alg. 2 cadence); host tensors are touched again only at
+        // the round boundary below
+        let mut dev = rt.upload(train_name, state)?;
+        for step in 0..k {
+            if batches.remaining() == 0 {
+                batches.reshuffle(&mut rng);
+            }
+            let batch = batches.next_batch().expect("train shard is non-empty");
+            let blk = builder.build_into(arena, batch, &info.adj, ds, &mut rng);
+            if cfg.algorithm.uses_global_view() {
+                let fb = blk.remote_feature_bytes_with(scratch, assignment, info.part);
+                let t_feat = netm.transfer_s(
+                    fb,
+                    info.part,
+                    round as u64,
+                    net::LEG_FEATURES + step as u64,
+                );
+                netm.sleep(t_feat);
+                net_s += t_feat;
+                on_feature_bytes(fb);
+            }
+            rt.train_step_device_queued(&mut dev, blk, cfg.lr)?;
+        }
+        rt.download_into(&dev, state)?;
+        // the per-round (not per-step) loss readback
+        for loss in dev.take_losses()? {
+            loss_sum += loss as f64;
+            loss_n += 1;
+        }
+    }
+
+    // send params back over the modeled link
+    let t_up = netm.transfer_s(param_bytes, info.part, round as u64, net::LEG_UP);
+    netm.sleep(t_up);
+    net_s += t_up;
+
+    Ok(WorkerRoundOut {
+        loss_sum,
+        loss_n,
+        net_s,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// S server-correction steps (Alg. 2 lines 13-18) starting from `base`,
+/// device-resident: one upload, S steps, one download. Leaves the corrected
+/// parameters in `server_state.params`; the caller decides whether they
+/// replace the global params (sync) or become a delta (pipelined).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_correction_steps(
+    rt: &Runtime,
+    server_train_name: &str,
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    assignment: &[u32],
+    b: usize,
+    server_state: &mut ModelState,
+    base: &[Tensor],
+    corr_builder: &BlockBuilder,
+    corr_arena: &mut BlockArena,
+    corr_rng: &mut Pcg64,
+) -> Result<()> {
+    server_state.copy_params_from(base);
+    let mut dev = rt.upload(server_train_name, server_state)?;
+    for _ in 0..cfg.correction_steps {
+        let batch = correction_batch(cfg.correction_batch, ds, assignment, b, corr_rng);
+        let blk = corr_builder.build_into(corr_arena, &batch, &ds.graph, ds, corr_rng);
+        rt.train_step_device_queued(&mut dev, blk, cfg.server_lr)?;
+    }
+    rt.download_into(&dev, server_state)?;
+    dev.take_losses()?; // drain: correction losses are not reported
+    Ok(())
+}
+
+/// Server-side round epilogue shared by every engine's sync-style path:
+/// run the correction steps (when the algorithm has them) on the freshly
+/// averaged `global_params`, then the cadenced evaluation. Keeping this in
+/// one place is part of the bit-parity contract between the sequential
+/// driver and the cluster engine's sync mode. Returns
+/// `(val_score, global_loss)` (NaN on non-eval rounds).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn server_round_epilogue(
+    rt: &Runtime,
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    assignment: &[u32],
+    dims: Dims,
+    server_train_name: &str,
+    eval_name: &str,
+    local_builder: &BlockBuilder,
+    corr_builder: &BlockBuilder,
+    server_state: &mut ModelState,
+    global_params: &mut Vec<Tensor>,
+    corr_arena: &mut BlockArena,
+    corr_rng: &mut Pcg64,
+    eval_rng: &mut Pcg64,
+    round: usize,
+) -> Result<(f64, f64)> {
+    if cfg.algorithm.corrects() && cfg.correction_steps > 0 {
+        run_correction_steps(
+            rt,
+            server_train_name,
+            cfg,
+            ds,
+            assignment,
+            dims.b,
+            server_state,
+            global_params,
+            corr_builder,
+            corr_arena,
+            corr_rng,
+        )?;
+        Tensor::copy_all(global_params, &server_state.params);
+    }
+    eval_if_due(
+        rt,
+        eval_name,
+        global_params,
+        ds,
+        cfg,
+        local_builder,
+        dims.c,
+        eval_rng,
+        round,
+    )
+}
+
+/// The eval-cadence rule in one place: evaluate on `eval_every` rounds and
+/// on the final round, otherwise report NaNs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn eval_if_due(
+    rt: &Runtime,
+    eval_name: &str,
+    global_params: &[Tensor],
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    builder: &BlockBuilder,
+    c: usize,
+    eval_rng: &mut Pcg64,
+    round: usize,
+) -> Result<(f64, f64)> {
+    if round % cfg.eval_every == 0 || round == cfg.rounds {
+        eval_round(rt, eval_name, global_params, ds, cfg, builder, c, eval_rng)
+    } else {
+        Ok((f64::NAN, f64::NAN))
+    }
+}
+
+/// Round-boundary evaluation of the global model: (val_score, global_loss)
+/// on seeded samples of the val / train splits.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn eval_round(
+    rt: &Runtime,
+    eval_name: &str,
+    global_params: &[Tensor],
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    builder: &BlockBuilder,
+    c: usize,
+    eval_rng: &mut Pcg64,
+) -> Result<(f64, f64)> {
+    let val_ids: Vec<u32> = if cfg.eval_max_nodes > 0 && ds.splits.val.len() > cfg.eval_max_nodes
+    {
+        eval_rng.sample_without_replacement(&ds.splits.val, cfg.eval_max_nodes)
+    } else {
+        ds.splits.val.clone()
+    };
+    let logits = eval_logits(rt, eval_name, global_params, ds, &val_ids, builder, eval_rng)?;
+    let val_score = score(ds, &logits, c, &val_ids);
+
+    let train_sample: Vec<u32> =
+        if cfg.eval_max_nodes > 0 && ds.splits.train.len() > cfg.eval_max_nodes {
+            eval_rng.sample_without_replacement(&ds.splits.train, cfg.eval_max_nodes)
+        } else {
+            ds.splits.train.clone()
+        };
+    let tr_logits = eval_logits(
+        rt,
+        eval_name,
+        global_params,
+        ds,
+        &train_sample,
+        builder,
+        eval_rng,
+    )?;
+    let global_loss = metrics::mean_loss(&tr_logits, c, &ds.labels, &train_sample);
+    Ok((val_score, global_loss))
+}
+
+/// Final test-split score of the run's global model.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn final_test_score(
+    rt: &Runtime,
+    eval_name: &str,
+    global_params: &[Tensor],
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    builder: &BlockBuilder,
+    c: usize,
+    eval_rng: &mut Pcg64,
+) -> Result<f64> {
+    let test_ids: Vec<u32> =
+        if cfg.eval_max_nodes > 0 && ds.splits.test.len() > cfg.eval_max_nodes * 2 {
+            eval_rng.sample_without_replacement(&ds.splits.test, cfg.eval_max_nodes * 2)
+        } else {
+            ds.splits.test.clone()
+        };
+    if test_ids.is_empty() {
+        return Ok(f64::NAN);
+    }
+    let logits = eval_logits(rt, eval_name, global_params, ds, &test_ids, builder, eval_rng)?;
+    Ok(score(ds, &logits, c, &test_ids))
+}
+
+/// Last non-NaN validation score + avg bytes/round over `records`.
+pub(crate) fn summarize(records: &[RoundRecord]) -> (f64, f64) {
+    let final_val = records
+        .iter()
+        .rev()
+        .find(|r| !r.val_score.is_nan())
+        .map(|r| r.val_score)
+        .unwrap_or(f64::NAN);
+    let total_rounds = records.len().max(1) as f64;
+    let avg_round_bytes =
+        records.iter().map(|r| r.comm.total()).sum::<u64>() as f64 / total_rounds;
+    (final_val, avg_round_bytes)
+}
+
+/// Total optimizer steps the schedule implies for this config.
+pub(crate) fn planned_total_steps(cfg: &ExperimentConfig) -> usize {
+    if cfg.algorithm == Algorithm::FullSync {
+        cfg.rounds
+    } else {
+        cfg.schedule.total_steps(cfg.rounds)
+    }
+}
+
+/// Shared run epilogue for every engine: final test score + summary stats,
+/// assembled into the `RunResult`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn finish_run(
+    rt: &Runtime,
+    eval_name: &str,
+    global_params: &[Tensor],
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    builder: &BlockBuilder,
+    c: usize,
+    eval_rng: &mut Pcg64,
+    cut_ratio: f64,
+    records: Vec<RoundRecord>,
+    engine: Engine,
+    max_staleness: Option<u64>,
+) -> Result<RunResult> {
+    let final_test =
+        final_test_score(rt, eval_name, global_params, ds, cfg, builder, c, eval_rng)?;
+    let (final_val, avg_round_bytes) = summarize(&records);
+    Ok(RunResult {
+        algorithm: cfg.algorithm,
+        dataset: cfg.dataset.clone(),
+        arch: cfg.arch.clone(),
+        parts: cfg.parts,
+        engine: engine.name(),
+        records,
+        final_val,
+        final_test,
+        cut_ratio,
+        avg_round_bytes,
+        total_steps: planned_total_steps(cfg),
+        max_staleness,
+    })
+}
+
+/// Run one complete distributed-training experiment, dispatching to the
+/// engine named in `cfg.engine` (see the module docs).
+pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<RunResult> {
+    match cfg.engine {
+        Engine::Sequential => {
+            if cfg.round_mode != RoundMode::Sync {
+                bail!(
+                    "round_mode {} requires the cluster engine — the sequential \
+                     driver is always sync; rerun with --engine cluster",
+                    cfg.round_mode.name()
+                );
+            }
+            run_sequential(cfg, ds, rt)
+        }
+        Engine::Cluster => crate::cluster::run_cluster(cfg, ds, rt),
+    }
+}
+
+/// The legacy single-thread engine: workers run one after another on the
+/// caller's `Runtime` (the only option under PJRT), with the parallel round
+/// time back-computed as `max_p(worker time)`.
+fn run_sequential(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<RunResult> {
+    let RunSetup {
+        train_name,
+        server_train_name,
+        eval_name,
+        dims,
+        assignment,
+        cut_ratio,
+        parts,
+        mut workers,
+        mut global_params,
+        mut server_state,
+        local_builder,
+        corr_builder,
+        param_bytes,
+        mut eval_rng,
+        mut corr_rng,
+        net: netm,
+    } = setup_run(cfg, ds, rt)?;
     let is_fullsync = cfg.algorithm == Algorithm::FullSync;
 
     let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
-    let mut cum_bytes: u64 = parts.iter().map(|p| p.storage_bytes).sum();
-    let mut eval_rng = root_rng.split(4);
-    let mut corr_rng = root_rng.split(5);
+    // one-time storage bytes ride round 1's comm, so the cumulative counter
+    // starts at zero (counting them here too would double-book them)
+    let mut cum_bytes: u64 = 0;
 
     // reusable hot-path buffers: block arenas (local + correction shapes)
     // and the remote-feature dedup scratch — no per-batch allocation
@@ -346,6 +801,7 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
 
     // --- round loop ---------------------------------------------------------
     for round in 1..=cfg.rounds {
+        let t_round = std::time::Instant::now();
         let k = if is_fullsync {
             1
         } else {
@@ -356,109 +812,59 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
             comm.feature_bytes += parts.iter().map(|p| p.storage_bytes).sum::<u64>();
         }
         let mut worker_time = 0f64;
+        let mut net_time = 0f64;
         let mut local_loss_sum = 0f64;
         let mut local_loss_n = 0usize;
 
         // ---- local training (simulated-parallel) --------------------------
         for (p, info) in parts.iter().enumerate() {
-            let t0 = std::time::Instant::now();
-            // receive global params (download)
             comm.down_bytes += param_bytes;
-            workers[p].copy_params_from(&global_params);
-            if info.train_ids.is_empty() {
-                comm.up_bytes += param_bytes;
-                continue;
-            }
-            let mut rng = super::worker_rng(cfg.seed, p, round);
-            let mut batches = BatchIter::new(&info.train_ids, dims.b, &mut rng);
-            // model + optimizer state stay device-resident across all K
-            // local steps (Alg. 2 cadence); host tensors are touched again
-            // only at the round boundary below
-            let mut dev = rt.upload(&train_name, &workers[p])?;
-            for _ in 0..k {
-                if batches.remaining() == 0 {
-                    batches.reshuffle(&mut rng);
-                }
-                let batch = batches.next_batch().expect("train shard is non-empty");
-                let blk = local_builder.build_into(&mut arena, batch, &info.adj, ds, &mut rng);
-                if cfg.algorithm.uses_global_view() {
-                    comm.feature_bytes +=
-                        blk.remote_feature_bytes_with(&mut node_scratch, &assignment, info.part);
-                }
-                let loss = rt.train_step_device(&mut dev, blk, cfg.lr)?;
-                local_loss_sum += loss as f64;
-                local_loss_n += 1;
-            }
-            rt.download_into(&dev, &mut workers[p])?;
-            // send params to server (upload)
+            let out = run_worker_round(
+                rt,
+                &train_name,
+                cfg,
+                ds,
+                &assignment,
+                info,
+                &local_builder,
+                &netm,
+                param_bytes,
+                &mut workers[p],
+                &global_params,
+                round,
+                k,
+                &mut arena,
+                &mut node_scratch,
+                |fb| comm.feature_bytes += fb,
+            )?;
             comm.up_bytes += param_bytes;
-            worker_time = worker_time.max(t0.elapsed().as_secs_f64());
+            local_loss_sum += out.loss_sum;
+            local_loss_n += out.loss_n;
+            worker_time = worker_time.max(out.elapsed_s);
+            net_time = net_time.max(out.net_s);
         }
 
-        // ---- server: average + correct ------------------------------------
+        // ---- server: average + correct + eval -----------------------------
         let t_server = std::time::Instant::now();
         let refs: Vec<&ModelState> = workers.iter().collect();
         ModelState::average_params_into(&mut global_params, &refs);
-
-        if cfg.algorithm.corrects() && cfg.correction_steps > 0 {
-            server_state.copy_params_from(&global_params);
-            // server correction also runs device-resident: one upload, S
-            // steps, one download (its Adam state persists across rounds)
-            let mut dev = rt.upload(&server_train_name, &server_state)?;
-            for _ in 0..cfg.correction_steps {
-                let batch = correction_batch(
-                    cfg.correction_batch,
-                    ds,
-                    &assignment,
-                    dims.b,
-                    &mut corr_rng,
-                );
-                let blk = corr_builder.build_into(&mut corr_arena, &batch, &ds.graph, ds, &mut corr_rng);
-                rt.train_step_device(&mut dev, blk, cfg.server_lr)?;
-            }
-            rt.download_into(&dev, &mut server_state)?;
-            Tensor::copy_all(&mut global_params, &server_state.params);
-        }
-
-        // ---- evaluation -----------------------------------------------------
-        let (mut val_score, mut global_loss) = (f64::NAN, f64::NAN);
-        if round % cfg.eval_every == 0 || round == cfg.rounds {
-            let val_ids: Vec<u32> = if cfg.eval_max_nodes > 0
-                && ds.splits.val.len() > cfg.eval_max_nodes
-            {
-                eval_rng.sample_without_replacement(&ds.splits.val, cfg.eval_max_nodes)
-            } else {
-                ds.splits.val.clone()
-            };
-            let logits = eval_logits(
-                rt,
-                &eval_name,
-                &global_params,
-                ds,
-                &val_ids,
-                &local_builder,
-                &mut eval_rng,
-            )?;
-            val_score = score(ds, &logits, dims.c, &val_ids);
-
-            let train_sample: Vec<u32> = if cfg.eval_max_nodes > 0
-                && ds.splits.train.len() > cfg.eval_max_nodes
-            {
-                eval_rng.sample_without_replacement(&ds.splits.train, cfg.eval_max_nodes)
-            } else {
-                ds.splits.train.clone()
-            };
-            let tr_logits = eval_logits(
-                rt,
-                &eval_name,
-                &global_params,
-                ds,
-                &train_sample,
-                &local_builder,
-                &mut eval_rng,
-            )?;
-            global_loss = metrics::mean_loss(&tr_logits, dims.c, &ds.labels, &train_sample);
-        }
+        let (val_score, global_loss) = server_round_epilogue(
+            rt,
+            cfg,
+            ds,
+            &assignment,
+            dims,
+            &server_train_name,
+            &eval_name,
+            &local_builder,
+            &corr_builder,
+            &mut server_state,
+            &mut global_params,
+            &mut corr_arena,
+            &mut corr_rng,
+            &mut eval_rng,
+            round,
+        )?;
         let server_time = t_server.elapsed().as_secs_f64();
 
         cum_bytes += comm.total();
@@ -476,57 +882,25 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
             cum_bytes,
             worker_time_s: worker_time,
             server_time_s: server_time,
+            net_time_s: net_time,
+            wall_time_s: t_round.elapsed().as_secs_f64(),
         });
     }
 
-    // --- final test score ----------------------------------------------------
-    let test_ids: Vec<u32> = if cfg.eval_max_nodes > 0
-        && ds.splits.test.len() > cfg.eval_max_nodes * 2
-    {
-        eval_rng.sample_without_replacement(&ds.splits.test, cfg.eval_max_nodes * 2)
-    } else {
-        ds.splits.test.clone()
-    };
-    let final_test = if test_ids.is_empty() {
-        f64::NAN
-    } else {
-        let logits = eval_logits(
-            rt,
-            &eval_name,
-            &global_params,
-            ds,
-            &test_ids,
-            &local_builder,
-            &mut eval_rng,
-        )?;
-        score(ds, &logits, dims.c, &test_ids)
-    };
-    let final_val = records
-        .iter()
-        .rev()
-        .find(|r| !r.val_score.is_nan())
-        .map(|r| r.val_score)
-        .unwrap_or(f64::NAN);
-
-    let total_rounds = records.len().max(1) as f64;
-    let avg_round_bytes =
-        records.iter().map(|r| r.comm.total()).sum::<u64>() as f64 / total_rounds;
-    Ok(RunResult {
-        algorithm: cfg.algorithm,
-        dataset: cfg.dataset.clone(),
-        arch: cfg.arch.clone(),
-        parts: cfg.parts,
-        records,
-        final_val,
-        final_test,
+    finish_run(
+        rt,
+        &eval_name,
+        &global_params,
+        ds,
+        cfg,
+        &local_builder,
+        dims.c,
+        &mut eval_rng,
         cut_ratio,
-        avg_round_bytes,
-        total_steps: if is_fullsync {
-            cfg.rounds
-        } else {
-            cfg.schedule.total_steps(cfg.rounds)
-        },
-    })
+        records,
+        Engine::Sequential,
+        None,
+    )
 }
 
 /// Convenience: generate the dataset named in `cfg` (registry lookup).

@@ -8,7 +8,11 @@
 //! - **L3 (this crate)** — the coordinator: graph substrate, METIS-like
 //!   partitioner, neighbor sampler / block builder, parameter server with
 //!   *global server correction*, workers, communication accounting, and the
-//!   algorithms (LLCG, PSGD-PA, GGS, FullSync, SubgraphApprox).
+//!   algorithms (LLCG, PSGD-PA, GGS, FullSync, SubgraphApprox). Two
+//!   execution engines run the round loop: the legacy sequential driver and
+//!   the threaded `cluster` engine (per-worker OS threads + a parameter
+//!   server over a modeled network; sync / bounded-staleness / pipelined
+//!   round modes).
 //! - **L2/L1 (`python/`, build-time only)** — JAX GNN models on Pallas
 //!   aggregation kernels, AOT-lowered to HLO text artifacts.
 //! - **runtime** — PJRT CPU client (`xla` crate) loading `artifacts/*.hlo.txt`.
@@ -16,6 +20,7 @@
 //! Python never runs on the training path: `make artifacts` once, then the
 //! `llcg` binary is self-contained.
 
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
@@ -27,6 +32,7 @@ pub mod sampler;
 pub mod testkit;
 pub mod util;
 
+pub use cluster::{Engine, NetModel, RoundMode};
 pub use config::ExperimentConfig;
 pub use coordinator::{Algorithm, RunResult};
 pub use graph::{CsrGraph, Dataset};

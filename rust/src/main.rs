@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   run [--config file.json] [--key=value ...]   one distributed run
+//!       engine flags: --engine sequential|cluster
+//!                     --round-mode sync|async:<tau>|pipelined
+//!                     --net ideal|lan|wan|lat=..,bw=..,jitter=..,scale=..
 //!   datasets                                     Table-2-style stats
 //!   partition --dataset D --parts P              partitioner comparison
 //!   repro-<exp>                                  regenerate a paper table/figure
@@ -65,14 +68,18 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
     let ds = driver::load_dataset(&cfg)?;
     let (rt, _adir) = Runtime::load_or_native(&cfg.artifacts_dir)?;
     eprintln!(
-        "run: {} on {} ({} parts, {} rounds, arch={}, opt={}, backend={})",
+        "run: {} on {} ({} parts, {} rounds, arch={}, opt={}, backend={}, \
+         engine={}, mode={}, net={})",
         cfg.algorithm.name(),
         cfg.dataset,
         cfg.parts,
         cfg.rounds,
         cfg.arch,
         cfg.optimizer,
-        rt.backend_name()
+        rt.backend_name(),
+        cfg.engine.name(),
+        cfg.round_mode.name(),
+        cfg.net
     );
     let result = driver::run_experiment(&cfg, &ds, &rt)?;
     println!(
@@ -97,6 +104,15 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
         result.cut_ratio,
         result.avg_round_mb()
     );
+    let wall: f64 = result.records.iter().map(|r| r.wall_time_s).sum();
+    let net: f64 = result.records.iter().map(|r| r.net_time_s).sum();
+    println!(
+        "time: measured wall {:.3}s, modeled net {:.3}s (engine={})",
+        wall, net, result.engine
+    );
+    if let Some(s) = result.max_staleness {
+        println!("staleness: max observed {s}");
+    }
     for (k, v) in flags {
         if k == "out" {
             std::fs::create_dir_all(

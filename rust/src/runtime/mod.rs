@@ -40,8 +40,11 @@
 //! steps are zero-copy. Both backends produce bit-identical results between
 //! the resident and the legacy literal path — see the parity tests.
 //!
-//! Remaining per-step host↔device traffic: the sampled block inputs and the
-//! scalar loss (tracked in ROADMAP.md "Open items").
+//! The queued-loss variant ([`Runtime::train_step_device_queued`] +
+//! [`DeviceState::take_losses`]) removes even the per-step scalar-loss sync:
+//! losses accumulate device-side and are drained in one batch per round.
+//! Remaining per-step host↔device traffic: the sampled block inputs
+//! (tracked in ROADMAP.md "Open items").
 
 pub mod native;
 
@@ -310,14 +313,18 @@ impl ModelState {
 
 /// Model + optimizer state resident on the execution device between local
 /// steps. Created by [`Runtime::upload`], advanced by
-/// [`Runtime::train_step_device`], materialized back to host tensors at
-/// round boundaries by [`Runtime::download_into`].
+/// [`Runtime::train_step_device`] (immediate loss) or
+/// [`Runtime::train_step_device_queued`] (loss stays device-side),
+/// materialized back to host tensors at round boundaries by
+/// [`Runtime::download_into`] / [`DeviceState::take_losses`].
 pub struct DeviceState {
     name: String,
     n_params: usize,
     n_opt: usize,
     steps: u64,
     slots: DeviceSlots,
+    /// per-step losses not yet synced to the host (queued path)
+    pending_losses: Vec<PendingLoss>,
 }
 
 enum DeviceSlots {
@@ -325,6 +332,14 @@ enum DeviceSlots {
     Native(Vec<Tensor>),
     /// PJRT backend: device buffers, replaced by each step's outputs.
     Pjrt(Vec<xla::PjRtBuffer>),
+}
+
+/// A step's loss before the host has synced it.
+enum PendingLoss {
+    /// native backend: already host-side, zero cost
+    Host(f32),
+    /// PJRT backend: still a device buffer; synced in [`DeviceState::take_losses`]
+    Pjrt(xla::PjRtBuffer),
 }
 
 impl DeviceState {
@@ -336,6 +351,21 @@ impl DeviceState {
     /// Local steps executed since upload.
     pub fn steps(&self) -> u64 {
         self.steps
+    }
+
+    /// Losses queued by [`Runtime::train_step_device_queued`], in step order.
+    /// This is the *one* per-round loss readback: under PJRT each queued
+    /// step left its scalar loss on the device, and this drains them all in
+    /// a single host sync pass at the round boundary.
+    pub fn take_losses(&mut self) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.pending_losses.len());
+        for l in self.pending_losses.drain(..) {
+            out.push(match l {
+                PendingLoss::Host(v) => v,
+                PendingLoss::Pjrt(buf) => buf.to_literal_sync()?.to_vec::<f32>()?[0],
+            });
+        }
+        Ok(out)
     }
 }
 
@@ -426,6 +456,14 @@ impl Runtime {
         native::write_native_manifest(dir)?;
         let rt = Runtime::load(dir)?;
         Ok((rt, dir.display().to_string()))
+    }
+
+    /// Directory the manifest was loaded from — lets another thread build
+    /// its own `Runtime` over the same artifacts (the cluster engine gives
+    /// every worker thread a private runtime; `Runtime` itself is not
+    /// `Send`).
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
     }
 
     /// Backend actually in use ("pjrt" | "native").
@@ -701,6 +739,7 @@ impl Runtime {
             n_opt: opt.len(),
             steps: 0,
             slots,
+            pending_losses: Vec::new(),
         })
     }
 
@@ -712,6 +751,33 @@ impl Runtime {
         block: &Block,
         lr: f32,
     ) -> Result<f32> {
+        match self.train_step_device_inner(dev, block, lr)? {
+            PendingLoss::Host(v) => Ok(v),
+            PendingLoss::Pjrt(buf) => Ok(buf.to_literal_sync()?.to_vec::<f32>()?[0]),
+        }
+    }
+
+    /// One train step on device-resident state with *no* per-step host sync:
+    /// the scalar loss is queued device-side and drained in one batch at the
+    /// round boundary by [`DeviceState::take_losses`]. This removes the last
+    /// per-step host round-trip of the Alg. 2 inner loop.
+    pub fn train_step_device_queued(
+        &self,
+        dev: &mut DeviceState,
+        block: &Block,
+        lr: f32,
+    ) -> Result<()> {
+        let loss = self.train_step_device_inner(dev, block, lr)?;
+        dev.pending_losses.push(loss);
+        Ok(())
+    }
+
+    fn train_step_device_inner(
+        &self,
+        dev: &mut DeviceState,
+        block: &Block,
+        lr: f32,
+    ) -> Result<PendingLoss> {
         let meta = self.meta(&dev.name)?.clone();
         if meta.kind != "train" {
             bail!("{} is not a train artifact", dev.name);
@@ -721,7 +787,7 @@ impl Runtime {
             (Backend::Native { .. }, DeviceSlots::Native(tensors)) => {
                 let exe = self.exec_native(&dev.name)?;
                 let (p, o) = tensors.split_at_mut(dev.n_params);
-                exe.train_step(p, o, block, lr)?
+                PendingLoss::Host(exe.train_step(p, o, block, lr)?)
             }
             (Backend::Pjrt { client, .. }, DeviceSlots::Pjrt(bufs)) => {
                 let exe = self.exec_pjrt(&dev.name)?;
@@ -752,10 +818,10 @@ impl Runtime {
                 }
                 let mut it = outs.into_iter();
                 let loss_buf = it.next().expect("length checked");
-                // the one per-step host sync: a scalar
-                let loss = loss_buf.to_literal_sync()?.to_vec::<f32>()?[0];
                 *bufs = it.collect();
-                loss
+                // the loss stays a device buffer; callers decide whether to
+                // sync it now (train_step_device) or queue it (…_queued)
+                PendingLoss::Pjrt(loss_buf)
             }
             _ => bail!(
                 "{}: DeviceState backend does not match this runtime",

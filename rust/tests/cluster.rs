@@ -1,0 +1,284 @@
+//! Cluster-engine tests: sync-mode bit parity with the sequential driver,
+//! bounded staleness, pipelined correction, queued-loss readback, and the
+//! modeled network's engine-independence.
+//!
+//! Always runs against the native backend (the cluster engine requires it);
+//! the manifest is generated under `target/` if absent.
+
+use llcg::cluster::{Engine, RoundMode};
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::graph::generators;
+use llcg::runtime::{ModelState, Runtime};
+use llcg::sampler::BlockBuilder;
+use llcg::util::Pcg64;
+
+/// A native-backend runtime (cluster workers must be able to rebuild it on
+/// their own threads, which PJRT cannot do). Asking `load_or_native` for the
+/// native dir directly routes around any PJRT artifacts in the checkout.
+fn native_rt() -> Runtime {
+    let (rt, _dir) =
+        Runtime::load_or_native("target/native-artifacts").expect("native runtime");
+    assert_eq!(rt.backend_name(), "native");
+    rt
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.arch = "gcn".into();
+    cfg.algorithm = Algorithm::Llcg;
+    cfg.parts = 4;
+    cfg.rounds = 4;
+    cfg.schedule = Schedule::Fixed { k: 3 };
+    cfg.correction_steps = 2;
+    cfg.eval_every = 2;
+    cfg.eval_max_nodes = 64;
+    cfg.seed = 7;
+    cfg
+}
+
+fn run_with(cfg: &ExperimentConfig, rt: &Runtime) -> driver::RunResult {
+    let ds = generators::by_name(&cfg.dataset, cfg.seed).unwrap();
+    driver::run_experiment(cfg, &ds, rt).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// sync mode: exact reproduction of the sequential driver
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cluster_sync_matches_sequential_bit_for_bit() {
+    let rt = native_rt();
+    let mut seq_cfg = base_cfg();
+    // a non-ideal (but non-sleeping) net also checks that the modeled time
+    // is engine-independent: same bytes, same deterministic jitter stream
+    seq_cfg.net = "lan".into();
+    let mut clu_cfg = seq_cfg.clone();
+    clu_cfg.engine = Engine::Cluster;
+
+    let a = run_with(&seq_cfg, &rt);
+    let b = run_with(&clu_cfg, &rt);
+    assert_eq!(a.engine, "sequential");
+    assert_eq!(b.engine, "cluster");
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.local_steps, rb.local_steps);
+        assert_eq!(
+            ra.local_loss.to_bits(),
+            rb.local_loss.to_bits(),
+            "round {}: local loss {} vs {}",
+            ra.round,
+            ra.local_loss,
+            rb.local_loss
+        );
+        assert_eq!(
+            ra.global_loss.to_bits(),
+            rb.global_loss.to_bits(),
+            "round {}: global loss",
+            ra.round
+        );
+        assert_eq!(
+            ra.val_score.to_bits(),
+            rb.val_score.to_bits(),
+            "round {}: val",
+            ra.round
+        );
+        assert_eq!(ra.comm.down_bytes, rb.comm.down_bytes, "round {}", ra.round);
+        assert_eq!(ra.comm.up_bytes, rb.comm.up_bytes, "round {}", ra.round);
+        assert_eq!(
+            ra.comm.feature_bytes, rb.comm.feature_bytes,
+            "round {}",
+            ra.round
+        );
+        assert_eq!(ra.cum_bytes, rb.cum_bytes, "round {}", ra.round);
+        assert_eq!(
+            ra.net_time_s.to_bits(),
+            rb.net_time_s.to_bits(),
+            "round {}: modeled net time must be engine-independent",
+            ra.round
+        );
+    }
+    assert_eq!(a.final_val.to_bits(), b.final_val.to_bits());
+    assert_eq!(a.final_test.to_bits(), b.final_test.to_bits());
+    assert_eq!(a.total_steps, b.total_steps);
+    assert_eq!(a.cut_ratio.to_bits(), b.cut_ratio.to_bits());
+}
+
+#[test]
+fn cluster_sync_matches_sequential_for_ggs_feature_bytes() {
+    // GGS exercises the RemoteFeatures message path
+    let rt = native_rt();
+    let mut seq_cfg = base_cfg();
+    seq_cfg.algorithm = Algorithm::Ggs;
+    seq_cfg.rounds = 2;
+    let mut clu_cfg = seq_cfg.clone();
+    clu_cfg.engine = Engine::Cluster;
+    let a = run_with(&seq_cfg, &rt);
+    let b = run_with(&clu_cfg, &rt);
+    assert!(a.records.iter().any(|r| r.comm.feature_bytes > 0));
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.comm.feature_bytes, rb.comm.feature_bytes);
+        assert_eq!(ra.local_loss.to_bits(), rb.local_loss.to_bits());
+    }
+}
+
+#[test]
+fn cluster_survives_empty_worker_shards() {
+    // more parts than train clusters -> some workers own no train nodes
+    let rt = native_rt();
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+    cfg.parts = 32;
+    cfg.rounds = 2;
+    cfg.eval_max_nodes = 32;
+    let res = run_with(&cfg, &rt);
+    assert_eq!(res.records.len(), 2);
+    assert!(res.final_val.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// async-staleness mode
+// ---------------------------------------------------------------------------
+
+#[test]
+fn async_mode_completes_and_respects_staleness_bound() {
+    let rt = native_rt();
+    for tau in [0usize, 1, 3] {
+        let mut cfg = base_cfg();
+        cfg.engine = Engine::Cluster;
+        cfg.round_mode = RoundMode::AsyncStaleness { tau };
+        // mild per-link jitter via injected sleeps makes workers genuinely
+        // drift; the gate must still hold the bound
+        cfg.net = "lat=2e-3,bw=1e9,jitter=0.5,scale=1".into();
+        let res = run_with(&cfg, &rt);
+        assert_eq!(res.records.len(), cfg.rounds, "tau={tau}");
+        let max_staleness = res.max_staleness.expect("async reports staleness");
+        assert!(
+            max_staleness <= tau as u64,
+            "tau={tau}: observed staleness {max_staleness}"
+        );
+        assert!(res.final_val.is_finite(), "tau={tau}");
+        let pb = rt.meta("gcn_adam_tiny").unwrap().param_bytes();
+        for r in &res.records {
+            assert!(r.local_loss.is_finite(), "tau={tau} round {}", r.round);
+            // every window closes on exactly P parameter pushes
+            assert_eq!(r.comm.up_bytes, cfg.parts as u64 * pb, "tau={tau}");
+        }
+        // every local round was granted exactly once (P*rounds downloads),
+        // though grants may land in a neighboring window under tau > 0
+        let down_total: u64 = res.records.iter().map(|r| r.comm.down_bytes).sum();
+        assert_eq!(down_total, (cfg.parts * cfg.rounds) as u64 * pb, "tau={tau}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pipelined-correction mode
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipelined_correction_matches_sync_byte_accounting() {
+    let rt = native_rt();
+    let mut sync_cfg = base_cfg();
+    sync_cfg.engine = Engine::Cluster;
+    let mut pipe_cfg = sync_cfg.clone();
+    pipe_cfg.round_mode = RoundMode::PipelinedCorrection;
+    let a = run_with(&sync_cfg, &rt);
+    let b = run_with(&pipe_cfg, &rt);
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        // the overlap changes *when* correction runs, never what moves on
+        // the wire
+        assert_eq!(ra.comm.total(), rb.comm.total(), "round {}", ra.round);
+    }
+    assert!(b.final_val.is_finite());
+    assert!(b.records.iter().all(|r| r.local_loss.is_finite()));
+    // pipelined correction differs numerically from sync (it corrects the
+    // stale broadcast params), but must stay in the same ballpark
+    assert!((a.final_val - b.final_val).abs() < 0.5);
+}
+
+// ---------------------------------------------------------------------------
+// queued (per-round) loss readback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn queued_losses_match_per_step_losses() {
+    let rt = native_rt();
+    let ds = generators::by_name("tiny", 0).unwrap();
+    let name = "gcn_adam_tiny";
+    let meta = rt.meta(name).unwrap().clone();
+    let bb = BlockBuilder::new(
+        meta.dims.b,
+        meta.dims.f1,
+        meta.dims.f2,
+        meta.dims.d,
+        meta.dims.c,
+        meta.multilabel(),
+    );
+    let mut init_rng = Pcg64::new(3);
+    let mut state_a = ModelState::init(&meta, &mut init_rng);
+    let state_b = state_a.clone();
+    // two identical block streams, one per device state
+    let mut rng_a = Pcg64::new(11);
+    let mut rng_b = Pcg64::new(11);
+
+    let targets: Vec<u32> = ds.splits.train[..meta.dims.b].to_vec();
+    let mut dev_a = rt.upload(name, &state_a).unwrap();
+    let mut dev_b = rt.upload(name, &state_b).unwrap();
+    let mut immediate = Vec::new();
+    for _ in 0..5 {
+        let blk_a = bb.build(&targets, &ds.graph, &ds, &mut rng_a);
+        immediate.push(rt.train_step_device(&mut dev_a, &blk_a, 0.01).unwrap());
+        let blk_b = bb.build(&targets, &ds.graph, &ds, &mut rng_b);
+        rt.train_step_device_queued(&mut dev_b, &blk_b, 0.01).unwrap();
+    }
+    let queued = dev_b.take_losses().unwrap();
+    assert_eq!(immediate, queued, "queued loss stream differs");
+    assert!(dev_b.take_losses().unwrap().is_empty(), "drain must clear");
+    // and the resulting states agree bit-for-bit
+    let mut out_a = state_a.clone();
+    rt.download_into(&dev_a, &mut out_a).unwrap();
+    rt.download_into(&dev_b, &mut state_a).unwrap();
+    for (ta, tb) in out_a.params.iter().zip(&state_a.params) {
+        assert_eq!(ta.data, tb.data);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// guard rails
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cluster_rejects_zero_rounds() {
+    let rt = native_rt();
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+    cfg.rounds = 0;
+    let ds = generators::by_name(&cfg.dataset, cfg.seed).unwrap();
+    assert!(driver::run_experiment(&cfg, &ds, &rt).is_err());
+}
+
+#[test]
+fn sequential_engine_rejects_non_sync_round_modes() {
+    // the sequential driver is always sync; a non-sync round_mode must be
+    // an error, not a silent downgrade
+    let rt = native_rt();
+    let ds = generators::by_name("tiny", 7).unwrap();
+    for mode in [
+        RoundMode::AsyncStaleness { tau: 2 },
+        RoundMode::PipelinedCorrection,
+    ] {
+        let mut cfg = base_cfg();
+        cfg.round_mode = mode;
+        let err = match driver::run_experiment(&cfg, &ds, &rt) {
+            Ok(_) => panic!("non-sync round_mode accepted on the sequential engine"),
+            Err(e) => e,
+        };
+        assert!(
+            format!("{err:#}").contains("cluster engine"),
+            "unhelpful error: {err:#}"
+        );
+    }
+}
