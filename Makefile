@@ -9,7 +9,7 @@
 #                    (writes BENCH_cluster.json)
 #   make test        quick test run
 
-.PHONY: artifacts check test bench bench-cluster clean
+.PHONY: artifacts check fmt test bench bench-cluster clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -18,6 +18,9 @@ check:
 	cargo build --release
 	cargo test -q
 	cargo clippy -- -D warnings
+
+fmt:
+	cargo fmt --all -- --check
 
 test:
 	cargo test -q

@@ -6,10 +6,15 @@
 //!   3. correction batch: uniform vs max-cut    (Fig 9 — uniform should win
 //!      or tie: biased batches give biased correction gradients)
 //!
+//! Each ablation is a single-axis `Sweep::over`; the dataset and the
+//! partition assignment are loaded/computed once and reused across every
+//! point of every sweep axis.
+//!
 //!     cargo run --release --example ablation_correction [--dataset tiny-hetero]
 
+use llcg::api::Sweep;
 use llcg::config::ExperimentConfig;
-use llcg::coordinator::{driver, Algorithm, CorrectionBatch, Schedule};
+use llcg::coordinator::{Algorithm, Schedule};
 use llcg::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -21,7 +26,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or_else(|| "tiny-hetero".to_string());
     let (rt, _) = Runtime::load_or_native("artifacts")?;
 
-    let base = || {
+    let base = {
         let mut cfg = ExperimentConfig::default();
         cfg.dataset = dataset.clone();
         cfg.arch = "sage".into();
@@ -34,39 +39,42 @@ fn main() -> anyhow::Result<()> {
         cfg
     };
 
-    let ds = driver::load_dataset(&base())?;
-    println!("dataset: {}", ds.stats());
-
     println!("\n-- 1. correction steps S (S=0 == PSGD-PA) --");
-    for s in [0usize, 1, 2, 4] {
-        let mut cfg = base();
-        cfg.correction_steps = s;
-        let res = driver::run_experiment(&cfg, &ds, &rt)?;
-        println!("  S={s}: val={:.4} test={:.4}", res.final_val, res.final_test);
-    }
+    Sweep::over(&base, "correction_steps", &[0usize, 1, 2, 4]).run(&rt, |_i, exp, res| {
+        println!(
+            "  S={}: val={:.4} test={:.4}",
+            exp.config().correction_steps,
+            res.final_val,
+            res.final_test
+        );
+    })?;
 
     println!("\n-- 2. local epoch size K (same round budget) --");
-    for k in [1usize, 4, 16] {
-        let mut cfg = base();
-        cfg.schedule = Schedule::Fixed { k };
-        cfg.correction_steps = 1;
-        let res = driver::run_experiment(&cfg, &ds, &rt)?;
+    let mut k_base = base.clone();
+    k_base.correction_steps = 1;
+    Sweep::over(&k_base, "local_steps", &[1usize, 4, 16]).run(&rt, |_i, exp, res| {
+        let k = match exp.config().schedule {
+            Schedule::Fixed { k } => k,
+            Schedule::Exponential { k0, .. } => k0,
+        };
         println!(
             "  K={k:<3}: total-steps={:<4} val={:.4}",
             res.total_steps, res.final_val
         );
-    }
+    })?;
 
     println!("\n-- 3. correction mini-batch selection (Fig 9) --");
-    for (name, batch) in [
-        ("uniform", CorrectionBatch::Uniform),
-        ("max-cut-edges", CorrectionBatch::MaxCutEdges),
-    ] {
-        let mut cfg = base();
-        cfg.correction_steps = 2;
-        cfg.correction_batch = batch;
-        let res = driver::run_experiment(&cfg, &ds, &rt)?;
-        println!("  {name:<14}: val={:.4}", res.final_val);
-    }
+    let mut b_base = base.clone();
+    b_base.correction_steps = 2;
+    Sweep::over(&b_base, "correction_batch", &["uniform", "max_cut"]).run(
+        &rt,
+        |_i, exp, res| {
+            println!(
+                "  {:<14?}: val={:.4}",
+                exp.config().correction_batch,
+                res.final_val
+            );
+        },
+    )?;
     Ok(())
 }

@@ -14,29 +14,29 @@
 //! engine overlaps the per-worker transfers and compute; the sequential one
 //! serializes them).
 //!
+//! Both comparisons are `Sweep`s: the dataset is loaded once and the
+//! partition assignment is computed once, shared across every point.
+//!
 //!     cargo run --release --example distributed_training [--fast]
 
-use llcg::cluster::Engine;
+use llcg::api::Sweep;
 use llcg::config::ExperimentConfig;
-use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::coordinator::{Algorithm, Schedule};
 use llcg::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
     let (rt, _) = Runtime::load_or_native("artifacts")?;
 
-    let mk_cfg = |alg: Algorithm| {
+    // fast mode uses tiny artifacts (the artifact key is
+    // {arch}_{opt}_{dataset}; tiny-hetero shares the tiny shape config)
+    let base = {
         let mut cfg = ExperimentConfig::default();
         cfg.dataset = if fast { "tiny-hetero" } else { "reddit-s" }.into();
-        cfg.arch = "sage".into(); // paper's Reddit base arch (Table 2)
-        cfg.algorithm = alg;
+        cfg.arch = if fast { "gcn" } else { "sage" }.into();
         cfg.parts = 8;
         cfg.rounds = if fast { 8 } else { 30 };
-        cfg.schedule = match alg {
-            // LLCG uses the exponentially growing local epochs of Alg. 2
-            Algorithm::Llcg => Schedule::Exponential { k0: 8, rho: 1.1 },
-            _ => Schedule::Fixed { k: 8 },
-        };
+        cfg.schedule = Schedule::Fixed { k: 8 };
         cfg.correction_steps = 2;
         cfg.server_lr = 0.05;
         cfg.eval_every = 5;
@@ -44,35 +44,29 @@ fn main() -> anyhow::Result<()> {
         cfg
     };
 
-    // fast mode uses tiny artifacts (gcn/sage only built for tiny* = gcn…)
-    // tiny-hetero shares the tiny shape config; its artifacts are "…_tiny".
-    println!("scenario: {} machines, dataset={}", 8, mk_cfg(Algorithm::Llcg).dataset);
+    println!("scenario: {} machines, dataset={}", base.parts, base.dataset);
     println!(
         "\n{:<12} {:>9} {:>9} {:>14} {:>12}",
         "algorithm", "val", "test", "MB/round", "cut-ratio"
     );
-    let mut results = Vec::new();
-    for alg in [Algorithm::PsgdPa, Algorithm::Ggs, Algorithm::Llcg] {
-        let mut cfg = mk_cfg(alg);
-        if fast {
-            // tiny-hetero uses the tiny-shaped artifacts via its dims; the
-            // artifact key is {arch}_{opt}_{dataset}; for the fast path we
-            // run the gcn/tiny artifacts on the tiny-hetero graph.
-            cfg.dataset = "tiny-hetero".into();
-            cfg.arch = "gcn".into();
-        }
-        let ds = driver::load_dataset(&cfg)?;
-        let res = driver::run_experiment(&cfg, &ds, &rt)?;
+    // LLCG uses the exponentially growing local epochs of Alg. 2
+    let sweep = Sweep::points(&base)
+        .point(&[("algorithm", "psgd-pa".to_string())])
+        .point(&[("algorithm", "ggs".to_string())])
+        .point(&[
+            ("algorithm", "llcg".to_string()),
+            ("rho", "1.1".to_string()),
+        ]);
+    let results = sweep.run(&rt, |_i, exp, res| {
         println!(
             "{:<12} {:>9.4} {:>9.4} {:>14.3} {:>12.3}",
-            alg.name(),
+            exp.config().algorithm.name(),
             res.final_val,
             res.final_test,
             res.avg_round_mb(),
             res.cut_ratio
         );
-        results.push(res);
-    }
+    })?;
 
     let (psgd, ggs, llcg) = (&results[0], &results[1], &results[2]);
     println!("\npaper-shape checks:");
@@ -95,22 +89,14 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     println!("\nengine comparison: LLCG on a modeled WAN (20ms links, sleeps injected)");
-    let mut base = mk_cfg(Algorithm::Llcg);
-    if fast {
-        base.dataset = "tiny-hetero".into();
-        base.arch = "gcn".into();
-    }
-    base.rounds = if fast { 4 } else { 6 };
-    base.eval_every = base.rounds; // eval once at the end
-    base.net = "wan,scale=1".into();
-    let ds = driver::load_dataset(&base)?;
-    let mut engine_results = Vec::new();
-    for engine in [Engine::Sequential, Engine::Cluster] {
-        let mut cfg = base.clone();
-        cfg.engine = engine;
-        let res = driver::run_experiment(&cfg, &ds, &rt)?;
-        engine_results.push(res);
-    }
+    let mut wan_base = base.clone();
+    wan_base.algorithm = Algorithm::Llcg;
+    wan_base.schedule = Schedule::Exponential { k0: 8, rho: 1.1 };
+    wan_base.rounds = if fast { 4 } else { 6 };
+    wan_base.eval_every = wan_base.rounds; // eval once at the end
+    wan_base.net = "wan,scale=1".into();
+    let engine_results = Sweep::over(&wan_base, "engine", &["sequential", "cluster"])
+        .run(&rt, |_i, _exp, _res| {})?;
     let (seq, clu) = (&engine_results[0], &engine_results[1]);
     println!(
         "\n{:<7} {:>14} {:>14} {:>14} {:>14}",

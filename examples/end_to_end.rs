@@ -5,18 +5,22 @@
 //! machines with the METIS-like partitioner, trains a 2-layer GraphSAGE
 //! (the paper's Reddit base arch) with LLCG for a full round budget via the
 //! AOT-compiled PJRT artifacts, logs the loss curve + val score per round
-//! to `runs/end_to_end.csv`, and asserts the paper-shape acceptance
-//! criteria:
+//! to `runs/end_to_end.csv` straight from the event stream, and asserts the
+//! paper-shape acceptance criteria:
 //!
 //!   (1) training loss decreases monotonically-ish (learning happens),
 //!   (2) LLCG final score beats PSGD-PA (the correction earns its keep),
 //!   (3) LLCG communicates the same bytes/round as PSGD-PA,
 //!       orders of magnitude less than GGS.
 //!
+//! The baselines run through a `Sweep` (shared dataset + partition); the
+//! LLCG run streams its events into the CSV logger as they happen.
+//!
 //!     cargo run --release --example end_to_end [--fast]
 
+use llcg::api::{Event, ExperimentBuilder, Sweep};
 use llcg::config::ExperimentConfig;
-use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::coordinator::{Algorithm, Schedule};
 use llcg::metrics::CsvLogger;
 use llcg::runtime::Runtime;
 
@@ -25,54 +29,45 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let (rt, _) = Runtime::load_or_native("artifacts")?;
 
-    let mk = |alg: Algorithm| {
+    let base = {
         let mut cfg = ExperimentConfig::default();
         cfg.dataset = if fast { "tiny-hetero" } else { "reddit-s" }.into();
-        cfg.arch = if fast { "sage" } else { "sage" }.into();
-        cfg.algorithm = alg;
+        cfg.arch = "sage".into();
         cfg.parts = 8;
         cfg.rounds = if fast { 10 } else { 40 };
-        cfg.schedule = match alg {
-            Algorithm::Llcg => Schedule::Exponential {
-                k0: 8,
-                rho: 1.1, // the paper's ρ
-            },
-            _ => Schedule::Fixed { k: 8 },
-        };
+        cfg.schedule = Schedule::Fixed { k: 8 };
         cfg.correction_steps = 4;
         cfg.eval_every = if fast { 2 } else { 4 };
         cfg.eval_max_nodes = 384;
         cfg
     };
 
-    let ds = driver::load_dataset(&mk(Algorithm::Llcg))?;
-    println!("end-to-end workload: {}", ds.stats());
+    // ---- baselines through a sweep (dataset + partition loaded once) -------
+    println!("\n[1/2] baselines via sweep: PSGD-PA (Alg. 1), then GGS…");
+    let mut shared_ds = None;
+    let baselines = Sweep::over(&base, "algorithm", &["psgd-pa", "ggs"])
+        .run(&rt, |_i, exp, res| {
+            shared_ds.get_or_insert_with(|| exp.dataset().clone());
+            println!(
+                "      {:<8} val={:.4} MB/round={:.3}",
+                exp.config().algorithm.name(),
+                res.final_val,
+                res.avg_round_mb()
+            );
+        })?;
+    let (psgd, ggs) = (&baselines[0], &baselines[1]);
 
-    println!("\n[1/3] PSGD-PA (Alg. 1 baseline)…");
-    let psgd = driver::run_experiment(&mk(Algorithm::PsgdPa), &ds, &rt)?;
-    println!(
-        "      val={:.4} MB/round={:.3}",
-        psgd.final_val,
-        psgd.avg_round_mb()
-    );
-
-    println!("[2/3] GGS (feature-transfer upper baseline)…");
-    let ggs = driver::run_experiment(&mk(Algorithm::Ggs), &ds, &rt)?;
-    println!(
-        "      val={:.4} MB/round={:.3}",
-        ggs.final_val,
-        ggs.avg_round_mb()
-    );
-
-    println!("[3/3] LLCG (Alg. 2)…");
-    let llcg = driver::run_experiment(&mk(Algorithm::Llcg), &ds, &rt)?;
-    println!(
-        "      val={:.4} MB/round={:.3}",
-        llcg.final_val,
-        llcg.avg_round_mb()
-    );
-
-    // ---- log the LLCG curve ------------------------------------------------
+    // ---- LLCG with the paper's exponential schedule, events -> CSV ---------
+    println!("[2/2] LLCG (Alg. 2)…");
+    let exp = ExperimentBuilder::from_config(base.clone())
+        .with_dataset(shared_ds.expect("baselines loaded the dataset"))
+        .algorithm(Algorithm::Llcg)
+        .schedule(Schedule::Exponential {
+            k0: 8,
+            rho: 1.1, // the paper's ρ
+        })
+        .build()?;
+    println!("end-to-end workload: {}", exp.dataset().stats());
     let mut log = CsvLogger::create("runs/end_to_end.csv")?;
     let header = [
         "round",
@@ -82,19 +77,33 @@ fn main() -> anyhow::Result<()> {
         "val",
         "cum_bytes",
     ];
-    for r in &llcg.records {
-        log.row(
-            &header,
-            &[
-                r.round.to_string(),
-                r.local_steps.to_string(),
-                format!("{:.6}", r.local_loss),
-                format!("{:.6}", r.global_loss),
-                format!("{:.6}", r.val_score),
-                r.cum_bytes.to_string(),
-            ],
-        )?;
+    let mut log_err = None;
+    let llcg = exp.launch(&rt).stream(|ev| {
+        if let Event::RoundCompleted(r) = ev {
+            let res = log.row(
+                &header,
+                &[
+                    r.round.to_string(),
+                    r.local_steps.to_string(),
+                    format!("{:.6}", r.local_loss),
+                    format!("{:.6}", r.global_loss),
+                    format!("{:.6}", r.val_score),
+                    r.cum_bytes.to_string(),
+                ],
+            );
+            if let Err(e) = res {
+                log_err.get_or_insert(e);
+            }
+        }
+    })?;
+    if let Some(e) = log_err {
+        return Err(e.into());
     }
+    println!(
+        "      val={:.4} MB/round={:.3}",
+        llcg.final_val,
+        llcg.avg_round_mb()
+    );
     println!("\nloss curve -> runs/end_to_end.csv");
 
     // ---- acceptance criteria -------------------------------------------------
@@ -133,7 +142,7 @@ fn main() -> anyhow::Result<()> {
     println!("(3) PASS  comm: LLCG == PSGD-PA, GGS moves {ratio:.0}x more");
 
     println!(
-        "\nend-to-end OK in {:.1}s ({} train steps executed via PJRT)",
+        "\nend-to-end OK in {:.1}s ({} train steps executed)",
         t0.elapsed().as_secs_f64(),
         psgd.total_steps + ggs.total_steps + llcg.total_steps
     );

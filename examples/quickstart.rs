@@ -1,49 +1,54 @@
-//! Quickstart: the smallest complete LLCG run.
+//! Quickstart: the smallest complete LLCG run, through the typed
+//! experiment API.
 //!
 //! Generates the `tiny` synthetic dataset, partitions it with the METIS-like
 //! partitioner, and trains a 2-layer GCN with LLCG (local training +
-//! periodic averaging + global server correction) on 4 simulated machines.
+//! periodic averaging + global server correction) on 4 simulated machines,
+//! printing each round as its event streams in.
 //!
 //!     make artifacts           # optional: AOT-compile the PJRT models
 //!     cargo run --release --example quickstart
 //!
 //! Without artifacts the run uses the native reference backend.
 
-use llcg::config::ExperimentConfig;
-use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::api::{Event, ExperimentBuilder};
+use llcg::coordinator::{Algorithm, Schedule};
 use llcg::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Configure the run. Everything is also reachable via the `llcg run`
-    //    CLI and JSON config files; the API mirrors those knobs.
-    let mut cfg = ExperimentConfig::default();
-    cfg.dataset = "tiny".into();
-    cfg.arch = "gcn".into();
-    cfg.algorithm = Algorithm::Llcg;
-    cfg.parts = 4; // simulated machines
-    cfg.rounds = 12; // communication rounds
-    cfg.schedule = Schedule::Exponential { k0: 4, rho: 1.1 }; // K·ρ^r (Alg. 2)
-    cfg.correction_steps = 1; // S (Alg. 2, server correction)
-    cfg.lr = 0.01;
+    // 1. Describe the run. Every knob is also reachable via the `llcg run`
+    //    CLI and JSON config files (`llcg run --help` lists the keys); the
+    //    builder validates dataset/partitioner/arch names against the
+    //    registries and loads the dataset.
+    let exp = ExperimentBuilder::new()
+        .dataset("tiny")
+        .arch("gcn")
+        .algorithm(Algorithm::Llcg)
+        .parts(4) // simulated machines
+        .rounds(12) // communication rounds
+        .schedule(Schedule::Exponential { k0: 4, rho: 1.1 }) // K·ρ^r (Alg. 2)
+        .correction_steps(1) // S (Alg. 2, server correction)
+        .lr(0.01)
+        .build()?;
+    println!("dataset: {}", exp.dataset().stats());
 
-    // 2. Dataset + runtime (loads AOT artifacts; python is NOT involved).
-    let ds = driver::load_dataset(&cfg)?;
-    println!("dataset: {}", ds.stats());
-    let (rt, _) = Runtime::load_or_native(&cfg.artifacts_dir)?;
+    // 2. Runtime (loads AOT artifacts; python is NOT involved).
+    let (rt, _) = Runtime::load_or_native(&exp.config().artifacts_dir)?;
 
-    // 3. Train.
-    let result = driver::run_experiment(&cfg, &ds, &rt)?;
-
-    // 4. Inspect.
+    // 3. Train, consuming the event stream as it happens.
     println!("\nround  steps  local-loss  global-loss  val-F1");
-    for r in &result.records {
-        println!(
+    let result = exp.launch(&rt).stream(|ev| match ev {
+        Event::RoundCompleted(r) => println!(
             "{:>5} {:>6} {:>11.4} {:>12.4} {:>7.4}",
             r.round, r.local_steps, r.local_loss, r.global_loss, r.val_score
-        );
-    }
+        ),
+        Event::Finished(res) => println!("\n(run finished: {} rounds)", res.records.len()),
+        _ => {}
+    })?;
+
+    // 4. Inspect the final result.
     println!(
-        "\nfinal: val={:.4} test={:.4}  edge-cut={:.1}%  comm={:.3} MB/round",
+        "final: val={:.4} test={:.4}  edge-cut={:.1}%  comm={:.3} MB/round",
         result.final_val,
         result.final_test,
         result.cut_ratio * 100.0,

@@ -23,10 +23,11 @@
 //! JSON schema are identical either way.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
-use llcg::config::ExperimentConfig;
-use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::api::ExperimentBuilder;
+use llcg::coordinator::Algorithm;
 use llcg::graph::generators;
 use llcg::partition;
 use llcg::runtime::{ModelState, Runtime};
@@ -258,25 +259,31 @@ fn main() {
             }
 
             // ---- end-to-end round (Fig 1 / Table 1 substrate) --------------------
+            // built once through the session API (dataset loaded one time,
+            // shared by both variants); each timed iteration is launch+run
             let rt2 = Runtime::load(&adir).unwrap();
-            let mut cfg = ExperimentConfig::default();
-            cfg.dataset = "tiny".into();
-            cfg.arch = "gcn".into();
-            cfg.algorithm = Algorithm::Llcg;
-            cfg.parts = 4;
-            cfg.rounds = 1;
-            cfg.schedule = Schedule::Fixed { k: 4 };
-            cfg.eval_max_nodes = 64;
-            let data = generators::by_name("tiny", 0).unwrap();
+            let data = Arc::new(generators::by_name("tiny", 0).unwrap());
+            let mk_round = |eval_every: usize| {
+                ExperimentBuilder::new()
+                    .with_dataset(data.clone())
+                    .arch("gcn")
+                    .algorithm(Algorithm::Llcg)
+                    .parts(4)
+                    .rounds(1)
+                    .set("local_steps", "4")
+                    .unwrap()
+                    .eval_every(eval_every)
+                    .eval_max_nodes(64)
+                    .build()
+                    .unwrap()
+            };
+            let exp_eval = mk_round(1);
             b.run("round/llcg(tiny,P=4,K=4)+eval", 1, 8, || {
-                std::hint::black_box(driver::run_experiment(&cfg, &data, &rt2).unwrap());
+                std::hint::black_box(exp_eval.launch(&rt2).finish().unwrap());
             });
-            let mut cfg_no_eval = cfg.clone();
-            cfg_no_eval.eval_every = 10; // skip eval inside the single round
+            let exp_no_eval = mk_round(10); // skip eval inside the single round
             b.run("round/llcg(tiny,P=4,K=4)no-eval", 1, 8, || {
-                std::hint::black_box(
-                    driver::run_experiment(&cfg_no_eval, &data, &rt2).unwrap(),
-                );
+                std::hint::black_box(exp_no_eval.launch(&rt2).finish().unwrap());
             });
         }
     }
@@ -324,38 +331,38 @@ fn main() {
                         "cluster benches: {} cpu cores available (ideal-net speedup is capped by this)",
                         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
                     );
-                    let data = generators::by_name("reddit-s", 0).unwrap();
+                    // the dataset is loaded once and shared by all 12
+                    // (engine, P, net) experiments via the session API
+                    let data = Arc::new(generators::by_name("reddit-s", 0).unwrap());
                     for &netspec in &["ideal", "wan,scale=1"] {
                         let label = if netspec == "ideal" { "ideal" } else { "wan" };
                         for &pn in &[2usize, 4, 8] {
                             let mk = |engine: llcg::cluster::Engine| {
-                                let mut cfg = ExperimentConfig::default();
-                                cfg.dataset = "reddit-s".into();
-                                cfg.arch = "sage".into();
-                                cfg.algorithm = Algorithm::Llcg;
-                                cfg.parts = pn;
-                                cfg.rounds = 2;
-                                cfg.schedule = Schedule::Fixed { k: 4 };
-                                cfg.correction_steps = 2;
-                                cfg.eval_every = 100; // no per-round eval
-                                cfg.eval_max_nodes = 32;
-                                cfg.engine = engine;
-                                cfg.net = netspec.into();
-                                cfg
+                                ExperimentBuilder::new()
+                                    .with_dataset(data.clone())
+                                    .arch("sage")
+                                    .algorithm(Algorithm::Llcg)
+                                    .parts(pn)
+                                    .rounds(2)
+                                    .set("local_steps", "4")
+                                    .unwrap()
+                                    .correction_steps(2)
+                                    .eval_every(100) // no per-round eval
+                                    .eval_max_nodes(32)
+                                    .engine(engine)
+                                    .net(netspec)
+                                    .build()
+                                    .unwrap()
                             };
-                            let seq_cfg = mk(llcg::cluster::Engine::Sequential);
-                            let clu_cfg = mk(llcg::cluster::Engine::Cluster);
+                            let seq_exp = mk(llcg::cluster::Engine::Sequential);
+                            let clu_exp = mk(llcg::cluster::Engine::Cluster);
                             let seq_row = format!("cluster/sequential(P={pn},net={label})");
                             b.run(&seq_row, 1, 3, || {
-                                std::hint::black_box(
-                                    driver::run_experiment(&seq_cfg, &data, &rt).unwrap(),
-                                );
+                                std::hint::black_box(seq_exp.launch(&rt).finish().unwrap());
                             });
                             let clu_row = format!("cluster/threaded(P={pn},net={label})");
                             b.run(&clu_row, 1, 3, || {
-                                std::hint::black_box(
-                                    driver::run_experiment(&clu_cfg, &data, &rt).unwrap(),
-                                );
+                                std::hint::black_box(clu_exp.launch(&rt).finish().unwrap());
                             });
                             if let (Some(seq), Some(clu)) =
                                 (b.mean_of(&seq_row), b.mean_of(&clu_row))

@@ -1,0 +1,528 @@
+//! Single-source config schema: every `ExperimentConfig` key is declared
+//! exactly once as a [`KeySpec`] row in [`KEYS`]. JSON parsing
+//! (`ExperimentConfig::from_json`), CLI overrides (`apply_override`),
+//! unknown-key errors, and the `llcg run --help` key listing are all
+//! derived from this one table — adding a config key is a one-row change.
+
+use crate::cluster::{Engine, NetModel, RoundMode};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Algorithm, CorrectionBatch, Schedule};
+use crate::util::Json;
+
+/// The value class of a key — drives CLI string -> JSON conversion and the
+/// type column in the generated help.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyKind {
+    Str,
+    Num,
+    Bool,
+}
+
+impl KeyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KeyKind::Str => "str",
+            KeyKind::Num => "num",
+            KeyKind::Bool => "bool",
+        }
+    }
+}
+
+/// One config key: the only place its name, type, doc line, parse/validate
+/// logic, and help-display live.
+pub struct KeySpec {
+    pub name: &'static str,
+    pub kind: KeyKind,
+    pub doc: &'static str,
+    /// parse + validate `v`, then write the field(s) onto `cfg`
+    apply: fn(&mut ExperimentConfig, &Json) -> Result<(), String>,
+    /// render the key's current value (used with defaults for `--help`)
+    show: fn(&ExperimentConfig) -> String,
+}
+
+fn req_str(v: &Json, k: &str) -> Result<String, String> {
+    v.as_str()
+        .map(String::from)
+        .ok_or(format!("{k} must be a string"))
+}
+
+fn req_num(v: &Json, k: &str) -> Result<f64, String> {
+    v.as_f64().ok_or(format!("{k} must be a number"))
+}
+
+fn req_bool(v: &Json, k: &str) -> Result<bool, String> {
+    v.as_bool()
+        .ok_or(format!("{k} must be a bool (true|false)"))
+}
+
+/// Non-negative integer with a lower bound — rejects fractions and
+/// negatives instead of letting an `as usize` cast saturate them to 0 and
+/// panic deep inside the run (e.g. `parts=0` averaging an empty worker
+/// set, `eval_every=0` dividing by zero).
+fn req_count(v: &Json, k: &str, min: usize) -> Result<usize, String> {
+    let x = req_num(v, k)?;
+    if !x.is_finite() || x.fract() != 0.0 || x < min as f64 {
+        return Err(format!("{k} must be an integer >= {min}, got {x}"));
+    }
+    Ok(x as usize)
+}
+
+/// Strict boolean literal set for CLI/string values. Anything else — `yes`,
+/// `TRUE`, `on`, ... — is an error, never a silent `false`.
+pub fn parse_bool_str(s: &str) -> Option<bool> {
+    match s {
+        "true" | "1" => Some(true),
+        "false" | "0" => Some(false),
+        _ => None,
+    }
+}
+
+/// The schema. One row per key; alphabetical-ish by topic. JSON objects are
+/// applied in `BTreeMap` order, so `local_steps` always lands before `rho`
+/// (which reads the schedule's current `k0`).
+static KEYS: &[KeySpec] = &[
+    KeySpec {
+        name: "dataset",
+        kind: KeyKind::Str,
+        doc: "dataset name (see `llcg datasets`)",
+        apply: |cfg, v| {
+            cfg.dataset = req_str(v, "dataset")?;
+            Ok(())
+        },
+        show: |cfg| cfg.dataset.clone(),
+    },
+    KeySpec {
+        name: "arch",
+        kind: KeyKind::Str,
+        doc: "model architecture: mlp|gcn|sage|appnp|gat",
+        apply: |cfg, v| {
+            cfg.arch = req_str(v, "arch")?;
+            Ok(())
+        },
+        show: |cfg| cfg.arch.clone(),
+    },
+    KeySpec {
+        name: "algorithm",
+        kind: KeyKind::Str,
+        doc: "llcg|psgd-pa|ggs|full-sync|subgraph-approx",
+        apply: |cfg, v| {
+            cfg.algorithm = Algorithm::parse(&req_str(v, "algorithm")?)
+                .ok_or_else(|| format!("unknown algorithm {v}"))?;
+            Ok(())
+        },
+        show: |cfg| cfg.algorithm.name().to_string(),
+    },
+    KeySpec {
+        name: "parts",
+        kind: KeyKind::Num,
+        doc: "number of workers / graph partitions P (>= 1)",
+        apply: |cfg, v| {
+            cfg.parts = req_count(v, "parts", 1)?;
+            Ok(())
+        },
+        show: |cfg| cfg.parts.to_string(),
+    },
+    KeySpec {
+        name: "rounds",
+        kind: KeyKind::Num,
+        doc: "communication rounds R",
+        apply: |cfg, v| {
+            cfg.rounds = req_count(v, "rounds", 0)?;
+            Ok(())
+        },
+        show: |cfg| cfg.rounds.to_string(),
+    },
+    KeySpec {
+        name: "local_steps",
+        kind: KeyKind::Num,
+        doc: "local steps per round (K; sets k0 when a rho schedule is active)",
+        apply: |cfg, v| {
+            let k = req_count(v, "local_steps", 1)?;
+            // compose with `rho` in either order: an active exponential
+            // schedule keeps its growth factor and only moves k0
+            cfg.schedule = match cfg.schedule {
+                Schedule::Exponential { rho, .. } => Schedule::Exponential { k0: k, rho },
+                Schedule::Fixed { .. } => Schedule::Fixed { k },
+            };
+            Ok(())
+        },
+        show: |cfg| match cfg.schedule {
+            Schedule::Fixed { k } => k.to_string(),
+            Schedule::Exponential { k0, .. } => k0.to_string(),
+        },
+    },
+    KeySpec {
+        name: "rho",
+        kind: KeyKind::Num,
+        doc: "exponential local-epoch growth K·rho^r (Alg. 2)",
+        apply: |cfg, v| {
+            let rho = req_num(v, "rho")?;
+            let k0 = match cfg.schedule {
+                Schedule::Fixed { k } => k,
+                Schedule::Exponential { k0, .. } => k0,
+            };
+            cfg.schedule = Schedule::Exponential { k0, rho };
+            Ok(())
+        },
+        show: |cfg| match cfg.schedule {
+            Schedule::Fixed { .. } => "-".to_string(),
+            Schedule::Exponential { rho, .. } => rho.to_string(),
+        },
+    },
+    KeySpec {
+        name: "correction_steps",
+        kind: KeyKind::Num,
+        doc: "server correction steps per round S (LLCG)",
+        apply: |cfg, v| {
+            cfg.correction_steps = req_count(v, "correction_steps", 0)?;
+            Ok(())
+        },
+        show: |cfg| cfg.correction_steps.to_string(),
+    },
+    KeySpec {
+        name: "correction_batch",
+        kind: KeyKind::Str,
+        doc: "correction mini-batch selection: uniform|max_cut",
+        apply: |cfg, v| {
+            cfg.correction_batch = match req_str(v, "correction_batch")?.as_str() {
+                "uniform" => CorrectionBatch::Uniform,
+                "max_cut" => CorrectionBatch::MaxCutEdges,
+                other => return Err(format!("unknown correction_batch {other}")),
+            };
+            Ok(())
+        },
+        show: |cfg| match cfg.correction_batch {
+            CorrectionBatch::Uniform => "uniform".to_string(),
+            CorrectionBatch::MaxCutEdges => "max_cut".to_string(),
+        },
+    },
+    KeySpec {
+        name: "correction_full_neighbors",
+        kind: KeyKind::Bool,
+        doc: "full (capped) vs sampled neighbors in correction (Fig 7/8)",
+        apply: |cfg, v| {
+            cfg.correction_full_neighbors = req_bool(v, "correction_full_neighbors")?;
+            Ok(())
+        },
+        show: |cfg| cfg.correction_full_neighbors.to_string(),
+    },
+    KeySpec {
+        name: "optimizer",
+        kind: KeyKind::Str,
+        doc: "worker optimizer: sgd|adam",
+        apply: |cfg, v| {
+            cfg.optimizer = req_str(v, "optimizer")?;
+            Ok(())
+        },
+        show: |cfg| cfg.optimizer.clone(),
+    },
+    KeySpec {
+        name: "server_optimizer",
+        kind: KeyKind::Str,
+        doc: "server-correction optimizer: sgd|adam",
+        apply: |cfg, v| {
+            cfg.server_optimizer = req_str(v, "server_optimizer")?;
+            Ok(())
+        },
+        show: |cfg| cfg.server_optimizer.clone(),
+    },
+    KeySpec {
+        name: "lr",
+        kind: KeyKind::Num,
+        doc: "worker learning rate",
+        apply: |cfg, v| {
+            cfg.lr = req_num(v, "lr")? as f32;
+            Ok(())
+        },
+        show: |cfg| cfg.lr.to_string(),
+    },
+    KeySpec {
+        name: "server_lr",
+        kind: KeyKind::Num,
+        doc: "server correction learning rate (gamma in Alg. 2)",
+        apply: |cfg, v| {
+            cfg.server_lr = req_num(v, "server_lr")? as f32;
+            Ok(())
+        },
+        show: |cfg| cfg.server_lr.to_string(),
+    },
+    KeySpec {
+        name: "partitioner",
+        kind: KeyKind::Str,
+        doc: "graph partitioner (see `llcg partition`)",
+        apply: |cfg, v| {
+            cfg.partitioner = req_str(v, "partitioner")?;
+            Ok(())
+        },
+        show: |cfg| cfg.partitioner.clone(),
+    },
+    KeySpec {
+        name: "sample_ratio",
+        kind: KeyKind::Num,
+        doc: "local neighbor-sampling ratio (Fig 6)",
+        apply: |cfg, v| {
+            cfg.sample_ratio = req_num(v, "sample_ratio")?;
+            Ok(())
+        },
+        show: |cfg| cfg.sample_ratio.to_string(),
+    },
+    KeySpec {
+        name: "approx_storage",
+        kind: KeyKind::Num,
+        doc: "extra-storage fraction for subgraph-approx (Fig 11)",
+        apply: |cfg, v| {
+            cfg.approx_storage = req_num(v, "approx_storage")?;
+            Ok(())
+        },
+        show: |cfg| cfg.approx_storage.to_string(),
+    },
+    KeySpec {
+        name: "seed",
+        kind: KeyKind::Num,
+        doc: "root RNG seed (whole run is reproducible from it)",
+        apply: |cfg, v| {
+            cfg.seed = req_count(v, "seed", 0)? as u64;
+            Ok(())
+        },
+        show: |cfg| cfg.seed.to_string(),
+    },
+    KeySpec {
+        name: "eval_every",
+        kind: KeyKind::Num,
+        doc: "validate every N rounds (1 = every round)",
+        apply: |cfg, v| {
+            cfg.eval_every = req_count(v, "eval_every", 1)?;
+            Ok(())
+        },
+        show: |cfg| cfg.eval_every.to_string(),
+    },
+    KeySpec {
+        name: "eval_max_nodes",
+        kind: KeyKind::Num,
+        doc: "cap on validation nodes scored per eval (0 = all)",
+        apply: |cfg, v| {
+            cfg.eval_max_nodes = req_count(v, "eval_max_nodes", 0)?;
+            Ok(())
+        },
+        show: |cfg| cfg.eval_max_nodes.to_string(),
+    },
+    KeySpec {
+        name: "artifacts_dir",
+        kind: KeyKind::Str,
+        doc: "compiled-artifact directory (native fallback if absent)",
+        apply: |cfg, v| {
+            cfg.artifacts_dir = req_str(v, "artifacts_dir")?;
+            Ok(())
+        },
+        show: |cfg| cfg.artifacts_dir.clone(),
+    },
+    KeySpec {
+        name: "engine",
+        kind: KeyKind::Str,
+        doc: "execution engine: sequential|cluster",
+        apply: |cfg, v| {
+            cfg.engine = Engine::parse(&req_str(v, "engine")?)
+                .ok_or_else(|| format!("unknown engine {v} (sequential|cluster)"))?;
+            Ok(())
+        },
+        show: |cfg| cfg.engine.name().to_string(),
+    },
+    KeySpec {
+        name: "round_mode",
+        kind: KeyKind::Str,
+        doc: "cluster round discipline: sync|async:<tau>|pipelined",
+        apply: |cfg, v| {
+            cfg.round_mode = RoundMode::parse(&req_str(v, "round_mode")?)
+                .ok_or_else(|| format!("unknown round_mode {v} (sync|async:<tau>|pipelined)"))?;
+            Ok(())
+        },
+        show: |cfg| cfg.round_mode.name(),
+    },
+    KeySpec {
+        name: "net",
+        kind: KeyKind::Str,
+        doc: "network model: ideal|lan|wan|lat=..,bw=..,jitter=..,scale=..",
+        apply: |cfg, v| {
+            let spec = req_str(v, "net")?;
+            NetModel::parse(&spec)?; // validate here, re-parse at engine start
+            cfg.net = spec;
+            Ok(())
+        },
+        show: |cfg| cfg.net.clone(),
+    },
+];
+
+/// Look up a key by its canonical (underscore) name.
+pub fn spec(name: &str) -> Option<&'static KeySpec> {
+    KEYS.iter().find(|k| k.name == name)
+}
+
+/// All config key names, in table order.
+pub fn key_names() -> Vec<&'static str> {
+    KEYS.iter().map(|k| k.name).collect()
+}
+
+/// The error every unknown-key path reports — names the full key set so a
+/// typo is a one-glance fix.
+pub fn unknown_key_error(key: &str) -> String {
+    format!(
+        "unknown config key {key:?} (known keys: {})",
+        key_names().join(", ")
+    )
+}
+
+/// Apply one already-typed JSON value onto `cfg`.
+pub fn apply_json(cfg: &mut ExperimentConfig, key: &str, v: &Json) -> Result<(), String> {
+    let s = spec(key).ok_or_else(|| unknown_key_error(key))?;
+    (s.apply)(cfg, v)
+}
+
+/// Apply one CLI-style `key=value` string override onto `cfg`. CLI dashes
+/// are accepted (`round-mode` == `round_mode`); the value is converted to
+/// the key's declared kind first, so an unknown key is always reported as
+/// such (never as a bad value), and boolean values outside
+/// `true|false|1|0` are rejected.
+pub fn apply_str(cfg: &mut ExperimentConfig, key: &str, value: &str) -> Result<(), String> {
+    let key = key.replace('-', "_");
+    let s = spec(&key).ok_or_else(|| unknown_key_error(&key))?;
+    let v = match s.kind {
+        KeyKind::Str => Json::Str(value.to_string()),
+        KeyKind::Bool => Json::Bool(parse_bool_str(value).ok_or_else(|| {
+            format!("bad boolean value for {}: {value:?} (use true|false|1|0)", s.name)
+        })?),
+        KeyKind::Num => Json::Num(
+            value
+                .parse::<f64>()
+                .map_err(|_| format!("bad numeric value for {}: {value}", s.name))?,
+        ),
+    };
+    (s.apply)(cfg, &v)
+}
+
+/// Parse a whole JSON object onto the default config (unknown keys rejected
+/// to catch typos).
+pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
+    let obj = j.as_object().ok_or("config must be a json object")?;
+    let mut cfg = ExperimentConfig::default();
+    for (k, v) in obj {
+        apply_json(&mut cfg, k, v)?;
+    }
+    Ok(cfg)
+}
+
+/// The `llcg run --help` key table, generated from [`KEYS`] with the
+/// compiled-in defaults.
+pub fn help_table() -> String {
+    let d = ExperimentConfig::default();
+    let mut out = String::new();
+    for k in KEYS {
+        out.push_str(&format!(
+            "  --{:<28} {:<5} [default: {}]\n      {}\n",
+            k.name.replace('_', "-"),
+            k.kind.as_str(),
+            (k.show)(&d),
+            k.doc
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_key_is_declared_once() {
+        let names = key_names();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len(), "duplicate KeySpec rows");
+        // one row per ExperimentConfig knob (schedule takes two)
+        assert_eq!(names.len(), 24);
+    }
+
+    #[test]
+    fn unknown_key_reports_key_not_value() {
+        let mut cfg = ExperimentConfig::default();
+        let err = apply_str(&mut cfg, "foo", "bar").unwrap_err();
+        assert!(err.contains("unknown config key"), "got: {err}");
+        assert!(err.contains("dataset"), "error must list known keys: {err}");
+        assert!(!err.contains("bad numeric"), "got the old misleading error: {err}");
+    }
+
+    #[test]
+    fn bool_literals_are_strict() {
+        let mut cfg = ExperimentConfig::default();
+        for (val, want) in [("true", true), ("1", true), ("false", false), ("0", false)] {
+            apply_str(&mut cfg, "correction_full_neighbors", val).unwrap();
+            assert_eq!(cfg.correction_full_neighbors, want, "literal {val}");
+        }
+        for bad in ["TRUE", "yes", "on", "no", ""] {
+            let err = apply_str(&mut cfg, "correction_full_neighbors", bad).unwrap_err();
+            assert!(err.contains("bad boolean"), "{bad:?} -> {err}");
+        }
+        // JSON path: only a real bool is accepted
+        let j = Json::parse(r#"{"correction_full_neighbors":"yes"}"#).unwrap();
+        assert!(from_json(&j).is_err());
+        let j = Json::parse(r#"{"correction_full_neighbors":false}"#).unwrap();
+        assert!(!from_json(&j).unwrap().correction_full_neighbors);
+    }
+
+    #[test]
+    fn help_table_covers_every_key() {
+        let help = help_table();
+        for name in key_names() {
+            assert!(
+                help.contains(&format!("--{}", name.replace('_', "-"))),
+                "help table misses {name}"
+            );
+        }
+    }
+
+    #[test]
+    fn count_keys_reject_zero_negative_and_fractional() {
+        let mut cfg = ExperimentConfig::default();
+        for (k, bad) in [
+            ("parts", "0"),
+            ("parts", "-1"),
+            ("parts", "2.5"),
+            ("eval_every", "0"),
+            ("local_steps", "0"),
+            ("rounds", "-3"),
+            ("seed", "1.5"),
+        ] {
+            let err = apply_str(&mut cfg, k, bad).unwrap_err();
+            assert!(err.contains("must be an integer"), "{k}={bad}: {err}");
+        }
+        apply_str(&mut cfg, "rounds", "0").unwrap(); // rounds=0 is legal
+        apply_str(&mut cfg, "eval_max_nodes", "0").unwrap(); // 0 = all
+    }
+
+    #[test]
+    fn rho_and_local_steps_compose_in_either_order() {
+        let mut a = ExperimentConfig::default();
+        apply_str(&mut a, "local_steps", "8").unwrap();
+        apply_str(&mut a, "rho", "1.2").unwrap();
+        let mut b = ExperimentConfig::default();
+        apply_str(&mut b, "rho", "1.2").unwrap();
+        apply_str(&mut b, "local_steps", "8").unwrap();
+        for cfg in [&a, &b] {
+            assert!(
+                matches!(cfg.schedule, Schedule::Exponential { k0: 8, rho }
+                    if (rho - 1.2).abs() < 1e-9),
+                "{:?}",
+                cfg.schedule
+            );
+        }
+    }
+
+    #[test]
+    fn dashes_normalize_on_the_cli_path() {
+        let mut cfg = ExperimentConfig::default();
+        apply_str(&mut cfg, "round-mode", "async:3").unwrap();
+        assert_eq!(cfg.round_mode, crate::cluster::RoundMode::AsyncStaleness { tau: 3 });
+        apply_str(&mut cfg, "eval-max-nodes", "99").unwrap();
+        assert_eq!(cfg.eval_max_nodes, 99);
+    }
+}

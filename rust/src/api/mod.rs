@@ -1,0 +1,43 @@
+//! `llcg::api` — the crate's public experiment API.
+//!
+//! Four pieces, layered over the coordinator/cluster engines:
+//!
+//! - [`keys`] — the single-source config schema: every `ExperimentConfig`
+//!   key is one [`keys::KeySpec`] row; JSON parsing, CLI overrides,
+//!   unknown-key errors, and the `llcg run --help` table derive from it.
+//! - [`registry`] — name-keyed, pluggable registries for datasets,
+//!   partitioners, and architectures, with `list()`-backed validation
+//!   errors and CLI listings.
+//! - [`session`] — typed construction ([`ExperimentBuilder`] → validated
+//!   [`Experiment`]) and streaming execution ([`Experiment::launch`] →
+//!   [`Run`] emitting [`Event`]s, with [`RunControl`] early-stop). Both
+//!   engines emit the identical sync-mode event sequence through shared
+//!   driver helpers.
+//! - [`sweep`] — config grids ([`Sweep`]) that reuse the loaded dataset
+//!   and partition assignment across points.
+//!
+//! ```text
+//! let (rt, _) = Runtime::load_or_native("artifacts")?;
+//! let exp = ExperimentBuilder::new()
+//!     .dataset("tiny")
+//!     .algorithm(Algorithm::Llcg)
+//!     .parts(4)
+//!     .rounds(10)
+//!     .build()?;
+//! let result = exp.launch(&rt).stream(|ev| {
+//!     if let Event::RoundCompleted(r) = ev {
+//!         println!("round {}: loss {:.4}", r.round, r.local_loss);
+//!     }
+//! })?;
+//! println!("final val {:.4}", result.final_val);
+//! ```
+
+pub mod keys;
+pub mod registry;
+pub mod session;
+pub mod sweep;
+
+pub use keys::{KeyKind, KeySpec};
+pub use registry::{ArchEntry, DatasetProvider, PartitionerProvider, Registry};
+pub use session::{Event, Experiment, ExperimentBuilder, Run, RunControl, TablePrinter};
+pub use sweep::Sweep;

@@ -1,0 +1,392 @@
+//! Name-keyed registries for the experiment axes: datasets, partitioners,
+//! and model architectures. The built-in entries wrap the crate's synthetic
+//! generators and partitioners; downstream code can register additional
+//! providers at startup ([`register_dataset`] / [`register_partitioner`] /
+//! [`register_arch`]) and every lookup, CLI listing (`llcg datasets`,
+//! `llcg partition`), and validation error ("unknown dataset X, have
+//! [...]") picks them up.
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::graph::{generators, Dataset};
+use crate::partition::{self, Partitioner};
+
+/// A loadable dataset, keyed by name.
+pub trait DatasetProvider: Send + Sync {
+    fn name(&self) -> &str;
+    fn doc(&self) -> &str;
+    fn load(&self, seed: u64) -> Result<Dataset, String>;
+}
+
+/// A constructible partitioner, keyed by name (plus optional aliases).
+pub trait PartitionerProvider: Send + Sync {
+    fn name(&self) -> &str;
+    fn doc(&self) -> &str;
+    fn aliases(&self) -> &[&str] {
+        &[]
+    }
+    fn build(&self) -> Box<dyn Partitioner>;
+}
+
+/// A known model architecture (artifact availability is still checked per
+/// `(arch, optimizer, dataset)` at runtime load).
+#[derive(Clone, Debug)]
+pub struct ArchEntry {
+    pub name: String,
+    pub doc: String,
+}
+
+// ---------------------------------------------------------------------------
+// built-in providers
+// ---------------------------------------------------------------------------
+
+/// Synthetic-dataset provider backed by `graph::generators`.
+struct SynthDataset {
+    name: &'static str,
+    doc: &'static str,
+}
+
+impl DatasetProvider for SynthDataset {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn doc(&self) -> &str {
+        self.doc
+    }
+
+    fn load(&self, seed: u64) -> Result<Dataset, String> {
+        generators::by_name(self.name, seed)
+            .ok_or_else(|| format!("generator missing for registered dataset {}", self.name))
+    }
+}
+
+/// Partitioner provider backed by `partition::by_name`.
+struct BuiltinPartitioner {
+    name: &'static str,
+    doc: &'static str,
+    aliases: &'static [&'static str],
+}
+
+impl PartitionerProvider for BuiltinPartitioner {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn doc(&self) -> &str {
+        self.doc
+    }
+
+    fn aliases(&self) -> &[&str] {
+        self.aliases
+    }
+
+    fn build(&self) -> Box<dyn Partitioner> {
+        partition::by_name(self.name).expect("builtin partitioner exists")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the registry
+// ---------------------------------------------------------------------------
+
+/// All pluggable experiment axes in one place. Providers are `Arc`ed so
+/// lookups can hand a clone out of the global lock — dataset generation
+/// never runs with the registry locked.
+pub struct Registry {
+    datasets: Vec<Arc<dyn DatasetProvider>>,
+    partitioners: Vec<Arc<dyn PartitionerProvider>>,
+    archs: Vec<ArchEntry>,
+}
+
+impl Registry {
+    /// The compiled-in entries.
+    pub fn builtin() -> Registry {
+        let datasets: Vec<Arc<dyn DatasetProvider>> = vec![
+            Arc::new(SynthDataset {
+                name: "tiny",
+                doc: "300-node coupled SBM; fast unit-test workload",
+            }),
+            Arc::new(SynthDataset {
+                name: "tiny-hetero",
+                doc: "600-node decoupled SBM; small cut-sensitivity smoke",
+            }),
+            Arc::new(SynthDataset {
+                name: "flickr-s",
+                doc: "Flickr analog (Table 2)",
+            }),
+            Arc::new(SynthDataset {
+                name: "proteins-s",
+                doc: "Proteins analog; multilabel, ROC-AUC scored",
+            }),
+            Arc::new(SynthDataset {
+                name: "arxiv-s",
+                doc: "OGB-Arxiv analog (Table 2)",
+            }),
+            Arc::new(SynthDataset {
+                name: "reddit-s",
+                doc: "Reddit analog; the paper's headline substrate",
+            }),
+            Arc::new(SynthDataset {
+                name: "yelp-s",
+                doc: "Yelp analog; structure-independent labels (Fig 10)",
+            }),
+            Arc::new(SynthDataset {
+                name: "products-s",
+                doc: "OGB-Products analog; the 16-machine setting (Fig 11)",
+            }),
+        ];
+        let partitioners: Vec<Arc<dyn PartitionerProvider>> = vec![
+            Arc::new(BuiltinPartitioner {
+                name: "metis",
+                doc: "multilevel coarsen + KL/FM refine (METIS-like default)",
+                aliases: &["multilevel"],
+            }),
+            Arc::new(BuiltinPartitioner {
+                name: "ldg",
+                doc: "linear deterministic greedy streaming partitioner",
+                aliases: &[],
+            }),
+            Arc::new(BuiltinPartitioner {
+                name: "bfs",
+                doc: "BFS region growing",
+                aliases: &[],
+            }),
+            Arc::new(BuiltinPartitioner {
+                name: "hash",
+                doc: "id-hash assignment (naive baseline)",
+                aliases: &[],
+            }),
+            Arc::new(BuiltinPartitioner {
+                name: "random",
+                doc: "balanced random (worst-case cut baseline)",
+                aliases: &[],
+            }),
+        ];
+        let archs = [
+            ("mlp", "2-layer MLP (graph-free lower bound, Fig 10b)"),
+            ("gcn", "2-layer GCN (Kipf & Welling)"),
+            ("sage", "2-layer GraphSAGE-mean (the paper's base arch)"),
+            ("appnp", "APPNP: MLP + personalized-PageRank propagation"),
+            ("gat", "2-layer GAT (attention backward is PJRT-only)"),
+        ]
+        .iter()
+        .map(|(n, d)| ArchEntry {
+            name: n.to_string(),
+            doc: d.to_string(),
+        })
+        .collect();
+        Registry {
+            datasets,
+            partitioners,
+            archs,
+        }
+    }
+
+    // ------------------------------------------------------------- lookups
+    pub fn dataset(&self, name: &str) -> Option<&dyn DatasetProvider> {
+        self.datasets
+            .iter()
+            .find(|p| p.name() == name)
+            .map(|p| p.as_ref())
+    }
+
+    pub fn partitioner(&self, name: &str) -> Option<&dyn PartitionerProvider> {
+        self.partitioners
+            .iter()
+            .find(|p| p.name() == name || p.aliases().contains(&name))
+            .map(|p| p.as_ref())
+    }
+
+    pub fn arch(&self, name: &str) -> Option<&ArchEntry> {
+        self.archs.iter().find(|a| a.name == name)
+    }
+
+    // ------------------------------------------------------------- listing
+    pub fn dataset_names(&self) -> Vec<String> {
+        self.datasets.iter().map(|p| p.name().to_string()).collect()
+    }
+
+    pub fn partitioner_names(&self) -> Vec<String> {
+        self.partitioners
+            .iter()
+            .map(|p| p.name().to_string())
+            .collect()
+    }
+
+    pub fn arch_names(&self) -> Vec<String> {
+        self.archs.iter().map(|a| a.name.clone()).collect()
+    }
+
+    pub fn dataset_docs(&self) -> Vec<(String, String)> {
+        self.datasets
+            .iter()
+            .map(|p| (p.name().to_string(), p.doc().to_string()))
+            .collect()
+    }
+
+    pub fn partitioner_docs(&self) -> Vec<(String, String)> {
+        self.partitioners
+            .iter()
+            .map(|p| (p.name().to_string(), p.doc().to_string()))
+            .collect()
+    }
+
+    // ------------------------------------------------ owning-clone lookups
+    /// `Arc` clone of a dataset provider — lets callers load *after*
+    /// releasing the global lock.
+    pub fn dataset_provider(&self, name: &str) -> Option<Arc<dyn DatasetProvider>> {
+        self.datasets.iter().find(|p| p.name() == name).cloned()
+    }
+
+    /// `Arc` clone of a partitioner provider (name or alias).
+    pub fn partitioner_provider(&self, name: &str) -> Option<Arc<dyn PartitionerProvider>> {
+        self.partitioners
+            .iter()
+            .find(|p| p.name() == name || p.aliases().contains(&name))
+            .cloned()
+    }
+
+    // -------------------------------------------------------- registration
+    pub fn register_dataset(&mut self, p: Box<dyn DatasetProvider>) {
+        self.datasets.retain(|q| q.name() != p.name());
+        self.datasets.push(Arc::from(p));
+    }
+
+    pub fn register_partitioner(&mut self, p: Box<dyn PartitionerProvider>) {
+        self.partitioners.retain(|q| q.name() != p.name());
+        self.partitioners.push(Arc::from(p));
+    }
+
+    pub fn register_arch(&mut self, name: &str, doc: &str) {
+        self.archs.retain(|a| a.name != name);
+        self.archs.push(ArchEntry {
+            name: name.to_string(),
+            doc: doc.to_string(),
+        });
+    }
+}
+
+/// "unknown dataset \"x\", have [a, b, ...]" — the one place validation
+/// error wording lives.
+pub fn unknown(kind: &str, name: &str, have: &[String]) -> String {
+    format!("unknown {kind} {name:?}, have [{}]", have.join(", "))
+}
+
+// ---------------------------------------------------------------------------
+// process-global instance
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<RwLock<Registry>> = OnceLock::new();
+
+/// The process-global registry (built-ins plus anything registered).
+pub fn global() -> &'static RwLock<Registry> {
+    GLOBAL.get_or_init(|| RwLock::new(Registry::builtin()))
+}
+
+/// Read-access helper: `with(|r| r.dataset_names())`.
+pub fn with<R>(f: impl FnOnce(&Registry) -> R) -> R {
+    f(&global().read().expect("registry lock poisoned"))
+}
+
+/// Register a dataset provider on the global registry (replaces same-name).
+pub fn register_dataset(p: Box<dyn DatasetProvider>) {
+    global()
+        .write()
+        .expect("registry lock poisoned")
+        .register_dataset(p);
+}
+
+/// Register a partitioner provider on the global registry.
+pub fn register_partitioner(p: Box<dyn PartitionerProvider>) {
+    global()
+        .write()
+        .expect("registry lock poisoned")
+        .register_partitioner(p);
+}
+
+/// Register an architecture name on the global registry.
+pub fn register_arch(name: &str, doc: &str) {
+    global()
+        .write()
+        .expect("registry lock poisoned")
+        .register_arch(name, doc);
+}
+
+/// Load a dataset by registry name; unknown names report the available
+/// set. The provider is resolved under the lock but `load` runs after it
+/// is released — generation can take seconds and custom providers may
+/// touch the registry themselves.
+pub fn load_dataset(name: &str, seed: u64) -> Result<Dataset, String> {
+    let p = with(|r| {
+        r.dataset_provider(name)
+            .ok_or_else(|| unknown("dataset", name, &r.dataset_names()))
+    })?;
+    p.load(seed)
+}
+
+/// Build a partitioner by registry name; unknown names report the set.
+/// Construction runs outside the lock, like [`load_dataset`].
+pub fn build_partitioner(name: &str) -> Result<Box<dyn Partitioner>, String> {
+    let p = with(|r| {
+        r.partitioner_provider(name)
+            .ok_or_else(|| unknown("partitioner", name, &r.partitioner_names()))
+    })?;
+    Ok(p.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_lookups_and_lists() {
+        let r = Registry::builtin();
+        assert!(r.dataset("tiny").is_some());
+        assert!(r.dataset("imagenet").is_none());
+        assert!(r.partitioner("metis").is_some());
+        assert!(r.partitioner("multilevel").is_some(), "alias resolves");
+        assert!(r.arch("sage").is_some());
+        assert_eq!(
+            r.dataset_names(),
+            generators::SynthConfig::all_names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+        );
+        // every listed partitioner actually constructs
+        for name in r.partitioner_names() {
+            let p = r.partitioner(&name).unwrap().build();
+            assert_eq!(p.name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_errors_name_the_available_set() {
+        let err = load_dataset("nope", 0).unwrap_err();
+        assert!(err.contains("unknown dataset"), "{err}");
+        assert!(err.contains("reddit-s"), "must list what exists: {err}");
+        let err = build_partitioner("kway?").unwrap_err();
+        assert!(err.contains("unknown partitioner") && err.contains("metis"), "{err}");
+    }
+
+    #[test]
+    fn registration_extends_the_global_registry() {
+        struct Echo;
+        impl DatasetProvider for Echo {
+            fn name(&self) -> &str {
+                "echo-test-ds"
+            }
+            fn doc(&self) -> &str {
+                "test-only"
+            }
+            fn load(&self, seed: u64) -> Result<Dataset, String> {
+                generators::by_name("tiny", seed).ok_or_else(|| "tiny missing".into())
+            }
+        }
+        register_dataset(Box::new(Echo));
+        let ds = load_dataset("echo-test-ds", 3).unwrap();
+        assert_eq!(ds.name, "tiny");
+        assert!(with(|r| r.dataset_names()).contains(&"echo-test-ds".to_string()));
+    }
+}

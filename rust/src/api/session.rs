@@ -1,0 +1,497 @@
+//! Run sessions: typed experiment construction ([`ExperimentBuilder`] →
+//! validated [`Experiment`]), launching ([`Experiment::launch`] → [`Run`]),
+//! and a streaming event interface ([`Event`]) with cooperative early-stop
+//! ([`RunControl`]).
+//!
+//! Both execution engines (the sequential driver and the threaded cluster
+//! engine) emit their events through the same `coordinator::driver` helpers,
+//! so in sync mode the two streams are identical — kinds *and* payloads —
+//! which `tests/cluster.rs` asserts. The legacy
+//! `driver::run_experiment(cfg, ds, rt)` entry point survives as a thin
+//! wrapper over this API.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::api::{keys, registry};
+use crate::cluster::{Engine, RoundMode};
+use crate::config::ExperimentConfig;
+use crate::coordinator::driver::{self, RoundRecord, RunResult};
+use crate::coordinator::{Algorithm, CorrectionBatch, Schedule};
+use crate::graph::Dataset;
+use crate::runtime::Runtime;
+
+// ---------------------------------------------------------------------------
+// events
+// ---------------------------------------------------------------------------
+
+/// One step of a run's lifecycle, streamed to the consumer as it happens.
+/// Sync-mode sequence per round: `RoundStarted`, then (when the algorithm
+/// corrects) `CorrectionApplied`, then (on eval-cadence rounds)
+/// `EvalCompleted`, then `RoundCompleted`; the stream ends with `Finished`.
+#[derive(Clone, Debug)]
+pub enum Event {
+    RoundStarted {
+        round: usize,
+        local_steps: usize,
+    },
+    CorrectionApplied {
+        round: usize,
+        steps: usize,
+    },
+    EvalCompleted {
+        round: usize,
+        val_score: f64,
+        global_loss: f64,
+    },
+    RoundCompleted(RoundRecord),
+    Finished(RunResult),
+}
+
+impl Event {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RoundStarted { .. } => "round_started",
+            Event::CorrectionApplied { .. } => "correction_applied",
+            Event::EvalCompleted { .. } => "eval_completed",
+            Event::RoundCompleted(_) => "round_completed",
+            Event::Finished(_) => "finished",
+        }
+    }
+}
+
+/// Cooperative early-stop handle. Cloneable; `stop()` from any thread (or
+/// from inside the event sink) ends the run at the next round boundary with
+/// a well-formed partial [`RunResult`].
+#[derive(Clone, Debug, Default)]
+pub struct RunControl {
+    stop: Arc<AtomicBool>,
+}
+
+impl RunControl {
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// Engine-side plumbing: where events go and whether to keep going. Lives
+/// on the server thread for the whole run (worker threads never emit).
+pub(crate) struct RunCtx<'a> {
+    pub sink: &'a mut dyn FnMut(Event),
+    pub stop: &'a RunControl,
+}
+
+impl RunCtx<'_> {
+    pub fn emit(&mut self, ev: Event) {
+        (self.sink)(ev);
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.stop_requested()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// builder
+// ---------------------------------------------------------------------------
+
+/// Typed, chainable construction of an [`Experiment`]. Every knob is also
+/// settable by config-key string ([`ExperimentBuilder::set`]) through the
+/// same [`keys`] schema the JSON/CLI paths use.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+    preloaded: Option<Arc<Dataset>>,
+}
+
+impl ExperimentBuilder {
+    pub fn new() -> ExperimentBuilder {
+        ExperimentBuilder::default()
+    }
+
+    /// Start from an existing config (e.g. parsed from JSON/CLI).
+    pub fn from_config(cfg: ExperimentConfig) -> ExperimentBuilder {
+        ExperimentBuilder {
+            cfg,
+            preloaded: None,
+        }
+    }
+
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.cfg.dataset = name.to_string();
+        self
+    }
+
+    pub fn arch(mut self, name: &str) -> Self {
+        self.cfg.arch = name.to_string();
+        self
+    }
+
+    pub fn algorithm(mut self, alg: Algorithm) -> Self {
+        self.cfg.algorithm = alg;
+        self
+    }
+
+    pub fn parts(mut self, parts: usize) -> Self {
+        self.cfg.parts = parts;
+        self
+    }
+
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        self.cfg.rounds = rounds;
+        self
+    }
+
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.cfg.schedule = schedule;
+        self
+    }
+
+    pub fn correction_steps(mut self, s: usize) -> Self {
+        self.cfg.correction_steps = s;
+        self
+    }
+
+    pub fn correction_batch(mut self, b: CorrectionBatch) -> Self {
+        self.cfg.correction_batch = b;
+        self
+    }
+
+    pub fn correction_full_neighbors(mut self, full: bool) -> Self {
+        self.cfg.correction_full_neighbors = full;
+        self
+    }
+
+    pub fn optimizer(mut self, name: &str) -> Self {
+        self.cfg.optimizer = name.to_string();
+        self
+    }
+
+    pub fn server_optimizer(mut self, name: &str) -> Self {
+        self.cfg.server_optimizer = name.to_string();
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.cfg.lr = lr;
+        self
+    }
+
+    pub fn server_lr(mut self, lr: f32) -> Self {
+        self.cfg.server_lr = lr;
+        self
+    }
+
+    pub fn partitioner(mut self, name: &str) -> Self {
+        self.cfg.partitioner = name.to_string();
+        self
+    }
+
+    pub fn sample_ratio(mut self, r: f64) -> Self {
+        self.cfg.sample_ratio = r;
+        self
+    }
+
+    pub fn approx_storage(mut self, s: f64) -> Self {
+        self.cfg.approx_storage = s;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.cfg.eval_every = n;
+        self
+    }
+
+    pub fn eval_max_nodes(mut self, n: usize) -> Self {
+        self.cfg.eval_max_nodes = n;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: &str) -> Self {
+        self.cfg.artifacts_dir = dir.to_string();
+        self
+    }
+
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    pub fn round_mode(mut self, mode: RoundMode) -> Self {
+        self.cfg.round_mode = mode;
+        self
+    }
+
+    pub fn net(mut self, spec: &str) -> Self {
+        self.cfg.net = spec.to_string();
+        self
+    }
+
+    /// Set any key by its config-schema name (same table as JSON/CLI).
+    pub fn set(mut self, key: &str, value: &str) -> Result<Self, String> {
+        keys::apply_str(&mut self.cfg, key, value)?;
+        Ok(self)
+    }
+
+    /// Use an already-loaded dataset instead of loading by name at
+    /// `build()` — sweeps and benches share one `Arc` across many points.
+    pub fn with_dataset(mut self, ds: Arc<Dataset>) -> Self {
+        self.cfg.dataset = ds.name.clone();
+        self.preloaded = Some(ds);
+        self
+    }
+
+    /// Validate every registry-backed name plus the engine/round-mode
+    /// combination, load the dataset (unless preloaded), and return the
+    /// launchable [`Experiment`].
+    pub fn build(self) -> Result<Experiment> {
+        let cfg = self.cfg;
+        registry::with(|r| -> Result<()> {
+            if self.preloaded.is_none() && r.dataset(&cfg.dataset).is_none() {
+                return Err(anyhow!(registry::unknown(
+                    "dataset",
+                    &cfg.dataset,
+                    &r.dataset_names()
+                )));
+            }
+            if r.partitioner(&cfg.partitioner).is_none() {
+                return Err(anyhow!(registry::unknown(
+                    "partitioner",
+                    &cfg.partitioner,
+                    &r.partitioner_names()
+                )));
+            }
+            if r.arch(&cfg.arch).is_none() {
+                return Err(anyhow!(registry::unknown(
+                    "arch",
+                    &cfg.arch,
+                    &r.arch_names()
+                )));
+            }
+            Ok(())
+        })?;
+        if cfg.engine == Engine::Sequential && cfg.round_mode != RoundMode::Sync {
+            return Err(anyhow!(
+                "round_mode {} requires the cluster engine — the sequential \
+                 driver is always sync; use engine=cluster",
+                cfg.round_mode.name()
+            ));
+        }
+        // the schema path (`set`/JSON/CLI) already enforces these; the
+        // typed setters can bypass it, so re-check the run-loop invariants
+        if cfg.parts == 0 {
+            return Err(anyhow!("parts must be >= 1"));
+        }
+        if cfg.eval_every == 0 {
+            return Err(anyhow!("eval_every must be >= 1 (1 = every round)"));
+        }
+        let ds = match self.preloaded {
+            Some(ds) => ds,
+            None => Arc::new(
+                registry::load_dataset(&cfg.dataset, cfg.seed).map_err(|e| anyhow!(e))?,
+            ),
+        };
+        Ok(Experiment {
+            cfg,
+            ds,
+            partition: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// experiment + run
+// ---------------------------------------------------------------------------
+
+/// A validated, launchable experiment: config + loaded dataset (+ an
+/// optional pre-computed partition assignment, shared by sweeps).
+pub struct Experiment {
+    cfg: ExperimentConfig,
+    ds: Arc<Dataset>,
+    partition: Option<Arc<Vec<u32>>>,
+}
+
+impl Experiment {
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn dataset(&self) -> &Arc<Dataset> {
+        &self.ds
+    }
+
+    /// Reuse a pre-computed partition assignment. Must equal what the
+    /// run's `(seed, partitioner, parts)` would produce — the sweep layer
+    /// guarantees this by computing it with the run's exact RNG stream.
+    pub(crate) fn with_partition(mut self, assignment: Arc<Vec<u32>>) -> Experiment {
+        self.partition = Some(assignment);
+        self
+    }
+
+    /// Create a launchable [`Run`]. Nothing executes until
+    /// [`Run::stream`] / [`Run::finish`] is called.
+    pub fn launch<'a>(&'a self, rt: &'a Runtime) -> Run<'a> {
+        Run {
+            exp: self,
+            rt,
+            control: RunControl::default(),
+        }
+    }
+}
+
+/// One launched (but not yet executed) run. `stream` drives it to
+/// completion, delivering every [`Event`] to the sink as it happens.
+pub struct Run<'a> {
+    exp: &'a Experiment,
+    rt: &'a Runtime,
+    control: RunControl,
+}
+
+impl Run<'_> {
+    /// Handle for stopping this run at the next round boundary.
+    pub fn control(&self) -> RunControl {
+        self.control.clone()
+    }
+
+    /// Execute the run, invoking `sink` for every event (ending with
+    /// `Event::Finished`), and return the final result.
+    pub fn stream(self, mut sink: impl FnMut(&Event)) -> Result<RunResult> {
+        let mut deliver = |ev: Event| sink(&ev);
+        let result = {
+            let mut ctx = RunCtx {
+                sink: &mut deliver,
+                stop: &self.control,
+            };
+            driver::run_with_ctx(
+                &self.exp.cfg,
+                &self.exp.ds,
+                self.rt,
+                self.exp.partition.as_ref().map(|a| a.as_slice()),
+                &mut ctx,
+            )?
+        };
+        deliver(Event::Finished(result.clone()));
+        Ok(result)
+    }
+
+    /// Execute the run, discarding events.
+    pub fn finish(self) -> Result<RunResult> {
+        self.stream(|_| {})
+    }
+}
+
+// ---------------------------------------------------------------------------
+// console reporter
+// ---------------------------------------------------------------------------
+
+/// The CLI's per-round table printer, as a reusable event consumer: header
+/// on the first completed round, one row per `RoundCompleted`.
+#[derive(Debug, Default)]
+pub struct TablePrinter {
+    header_printed: bool,
+}
+
+impl TablePrinter {
+    pub fn new() -> TablePrinter {
+        TablePrinter::default()
+    }
+
+    pub fn on_event(&mut self, ev: &Event) {
+        if let Event::RoundCompleted(r) = ev {
+            if !self.header_printed {
+                self.header_printed = true;
+                println!(
+                    "{:>5} {:>6} {:>10} {:>10} {:>9} {:>12}",
+                    "round", "steps", "loc_loss", "glob_loss", "val", "cum_MB"
+                );
+            }
+            println!(
+                "{:>5} {:>6} {:>10.4} {:>10.4} {:>9.4} {:>12.3}",
+                r.round,
+                r.local_steps,
+                r.local_loss,
+                r.global_loss,
+                r.val_score,
+                r.cum_bytes as f64 / 1e6
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_registry_names() {
+        let err = ExperimentBuilder::new()
+            .dataset("no-such-graph")
+            .build()
+            .err()
+            .unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown dataset") && msg.contains("tiny"), "{msg}");
+
+        let err = ExperimentBuilder::new()
+            .partitioner("kway")
+            .build()
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("unknown partitioner"));
+
+        let err = ExperimentBuilder::new()
+            .arch("transformer")
+            .build()
+            .err()
+            .unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown arch") && msg.contains("gcn"), "{msg}");
+
+        // sequential + non-sync round mode is a build-time error now
+        let err = ExperimentBuilder::new()
+            .round_mode(RoundMode::PipelinedCorrection)
+            .build()
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("cluster engine"));
+    }
+
+    #[test]
+    fn builder_set_goes_through_the_key_schema() {
+        let b = ExperimentBuilder::new()
+            .set("algorithm", "ggs")
+            .unwrap()
+            .set("parts", "2")
+            .unwrap();
+        let exp = b.build().unwrap();
+        assert_eq!(exp.config().algorithm, Algorithm::Ggs);
+        assert_eq!(exp.config().parts, 2);
+        assert!(ExperimentBuilder::new().set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn build_loads_the_dataset_once() {
+        let exp = ExperimentBuilder::new().dataset("tiny").seed(5).build().unwrap();
+        assert_eq!(exp.dataset().name, "tiny");
+        // preloaded dataset short-circuits the registry load and renames cfg
+        let ds = exp.dataset().clone();
+        let exp2 = ExperimentBuilder::new()
+            .dataset("reddit-s")
+            .with_dataset(ds.clone())
+            .build()
+            .unwrap();
+        assert_eq!(exp2.config().dataset, "tiny");
+        assert!(Arc::ptr_eq(exp2.dataset(), &ds));
+    }
+}

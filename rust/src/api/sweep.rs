@@ -1,0 +1,194 @@
+//! Config-grid sweeps that reuse the expensive invariants across points:
+//! the loaded dataset (one `Arc` shared by every point with the same
+//! `(dataset, seed)`) and the partition assignment (recomputed only when
+//! `(dataset, seed, partitioner, parts)` changes — previously every repro
+//! figure re-partitioned per config). Each point runs through the session
+//! API and yields the same bit-exact results as a standalone run: the
+//! cached assignment is computed with the run's own RNG stream discipline.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::api::keys;
+use crate::api::registry;
+use crate::api::session::{Experiment, ExperimentBuilder};
+use crate::config::ExperimentConfig;
+use crate::coordinator::driver::RunResult;
+use crate::graph::Dataset;
+use crate::runtime::Runtime;
+use crate::util::Pcg64;
+
+/// One sweep point: `(key, value)` overrides applied (in order) on the base
+/// config through the single-source key schema.
+pub type Patch = Vec<(String, String)>;
+
+/// A list of config points over a shared base.
+pub struct Sweep {
+    base: ExperimentConfig,
+    points: Vec<Patch>,
+}
+
+impl Sweep {
+    /// One point per value of `axis`: the classic single-axis sweep.
+    pub fn over<S: ToString>(base: &ExperimentConfig, axis: &str, values: &[S]) -> Sweep {
+        Sweep {
+            base: base.clone(),
+            points: values
+                .iter()
+                .map(|v| vec![(axis.to_string(), v.to_string())])
+                .collect(),
+        }
+    }
+
+    /// An empty sweep to fill with explicit [`Sweep::point`]s.
+    pub fn points(base: &ExperimentConfig) -> Sweep {
+        Sweep {
+            base: base.clone(),
+            points: Vec::new(),
+        }
+    }
+
+    /// Append one multi-key point (overrides apply in slice order).
+    pub fn point(mut self, patch: &[(&str, String)]) -> Sweep {
+        self.points.push(
+            patch
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        );
+        self
+    }
+
+    /// Cartesian-extend every existing point by `axis` × `values`.
+    pub fn cross<S: ToString>(mut self, axis: &str, values: &[S]) -> Sweep {
+        let mut out = Vec::with_capacity(self.points.len().max(1) * values.len());
+        let seeds: Vec<Patch> = if self.points.is_empty() {
+            vec![Vec::new()]
+        } else {
+            self.points
+        };
+        for p in &seeds {
+            for v in values {
+                let mut q = p.clone();
+                q.push((axis.to_string(), v.to_string()));
+                out.push(q);
+            }
+        }
+        self.points = out;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Resolve point `i`'s full config (base + patch).
+    pub fn config(&self, i: usize) -> Result<ExperimentConfig> {
+        let mut cfg = self.base.clone();
+        for (k, v) in &self.points[i] {
+            keys::apply_str(&mut cfg, k, v).map_err(|e| anyhow!(e))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Run every point in order, reusing the dataset + partition caches;
+    /// `visit` fires after each point with the built experiment and its
+    /// result. Returns all results in point order.
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        mut visit: impl FnMut(usize, &Experiment, &RunResult),
+    ) -> Result<Vec<RunResult>> {
+        let mut ds_cache: Option<((String, u64), Arc<Dataset>)> = None;
+        let mut part_cache: Option<((String, u64, String, usize), Arc<Vec<u32>>)> = None;
+        let mut results = Vec::with_capacity(self.points.len());
+        for i in 0..self.points.len() {
+            let cfg = self.config(i)?;
+
+            let ds_key = (cfg.dataset.clone(), cfg.seed);
+            let ds = match &ds_cache {
+                Some((k, ds)) if *k == ds_key => ds.clone(),
+                _ => {
+                    let ds = Arc::new(
+                        registry::load_dataset(&cfg.dataset, cfg.seed)
+                            .map_err(|e| anyhow!(e))?,
+                    );
+                    ds_cache = Some((ds_key, ds.clone()));
+                    ds
+                }
+            };
+
+            let mut exp = ExperimentBuilder::from_config(cfg.clone())
+                .with_dataset(ds.clone())
+                .build()?;
+            if cfg.parts > 1 {
+                let part_key = (
+                    cfg.dataset.clone(),
+                    cfg.seed,
+                    cfg.partitioner.clone(),
+                    cfg.parts,
+                );
+                let assignment = match &part_cache {
+                    Some((k, a)) if *k == part_key => a.clone(),
+                    _ => {
+                        // exactly the stream setup_run draws: the partition
+                        // stream is split(1) off the root seed
+                        let p = registry::build_partitioner(&cfg.partitioner)
+                            .map_err(|e| anyhow!(e))?;
+                        let mut root_rng = Pcg64::new(cfg.seed);
+                        let a = Arc::new(p.partition(
+                            &ds.graph,
+                            cfg.parts,
+                            &mut root_rng.split(1),
+                        ));
+                        part_cache = Some((part_key, a.clone()));
+                        a
+                    }
+                };
+                exp = exp.with_partition(assignment);
+            }
+
+            let result = exp.launch(rt).finish()?;
+            visit(i, &exp, &result);
+            results.push(result);
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn over_and_cross_build_the_grid() {
+        let base = ExperimentConfig::default();
+        let s = Sweep::over(&base, "parts", &[2usize, 4]).cross("lr", &["0.1", "0.01"]);
+        assert_eq!(s.len(), 4);
+        let c = s.config(3).unwrap();
+        assert_eq!(c.parts, 4);
+        assert!((c.lr - 0.01).abs() < 1e-9);
+        let p = Sweep::points(&base).point(&[
+            ("algorithm", "llcg".to_string()),
+            ("rho", "1.1".to_string()),
+        ]);
+        assert_eq!(p.len(), 1);
+        assert_eq!(
+            p.config(0).unwrap().algorithm,
+            crate::coordinator::Algorithm::Llcg
+        );
+    }
+
+    #[test]
+    fn bad_axis_reports_unknown_key() {
+        let base = ExperimentConfig::default();
+        let s = Sweep::over(&base, "partz", &[2usize]);
+        let err = format!("{:#}", s.config(0).err().unwrap());
+        assert!(err.contains("unknown config key"), "{err}");
+    }
+}

@@ -15,6 +15,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use super::{Engine, NetModel, RoundMode, StalenessGate};
+use crate::api::session::{Event, RunCtx};
 use crate::config::ExperimentConfig;
 use crate::coordinator::driver::{self, PartInfo, RoundRecord, RunResult, RunSetup};
 use crate::coordinator::{Algorithm, CommStats};
@@ -273,7 +274,13 @@ fn spawn_workers<'scope, 'env>(
 /// Run one experiment on the threaded cluster engine. Requires the native
 /// backend (each worker thread builds its own `Runtime`; the PJRT client
 /// cannot leave its thread — use the sequential engine there).
-pub fn run_cluster(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<RunResult> {
+pub(crate) fn run_cluster(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    rt: &Runtime,
+    pre_assignment: Option<&[u32]>,
+    ctx: &mut RunCtx<'_>,
+) -> Result<RunResult> {
     if rt.backend_name() != "native" {
         bail!(
             "engine=cluster needs the native backend (the PJRT client is not \
@@ -283,11 +290,11 @@ pub fn run_cluster(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result
     if cfg.parts == 0 || cfg.rounds == 0 {
         bail!("engine=cluster needs parts >= 1 and rounds >= 1");
     }
-    let setup = driver::setup_run(cfg, ds, rt)?;
+    let setup = driver::setup_run(cfg, ds, rt, pre_assignment)?;
     match cfg.round_mode {
-        RoundMode::Sync => run_rounds(cfg, ds, rt, setup, false),
-        RoundMode::PipelinedCorrection => run_rounds(cfg, ds, rt, setup, true),
-        RoundMode::AsyncStaleness { tau } => run_async(cfg, ds, rt, setup, tau),
+        RoundMode::Sync => run_rounds(cfg, ds, rt, setup, false, ctx),
+        RoundMode::PipelinedCorrection => run_rounds(cfg, ds, rt, setup, true, ctx),
+        RoundMode::AsyncStaleness { tau } => run_async(cfg, ds, rt, setup, tau, ctx),
     }
 }
 
@@ -300,6 +307,7 @@ fn run_rounds(
     rt: &Runtime,
     setup: RunSetup,
     pipelined: bool,
+    ctx: &mut RunCtx<'_>,
 ) -> Result<RunResult> {
     let RunSetup {
         train_name,
@@ -371,12 +379,19 @@ fn run_rounds(
         let mut corr_arena = BlockArena::new();
 
         for round in 1..=cfg.rounds {
+            if ctx.stopped() {
+                break; // RunControl::stop(): end at the round boundary
+            }
             let t_round = Instant::now();
             let k = if is_fullsync {
                 1
             } else {
                 cfg.schedule.steps_for_round(round)
             };
+            ctx.emit(Event::RoundStarted {
+                round,
+                local_steps: k,
+            });
             let mut comm = CommStats::default();
             if round == 1 {
                 comm.feature_bytes += storage_sum;
@@ -461,6 +476,10 @@ fn run_rounds(
                                 *gv += dv;
                             }
                         }
+                        ctx.emit(Event::CorrectionApplied {
+                            round,
+                            steps: cfg.correction_steps,
+                        });
                     }
                     Ok(Err(msg)) => bail!("server correction failed: {msg}"),
                     Err(_) => bail!("correction thread disconnected mid-round"),
@@ -475,6 +494,7 @@ fn run_rounds(
                     dims.c,
                     &mut eval_rng,
                     round,
+                    ctx,
                 )?
             } else {
                 // sync path: the exact epilogue the sequential driver runs
@@ -494,6 +514,7 @@ fn run_rounds(
                     inline_corr_rng.as_mut().expect("sync keeps rng"),
                     &mut eval_rng,
                     round,
+                    ctx,
                 )?
             };
             let server_time = t_server.elapsed().as_secs_f64();
@@ -516,6 +537,9 @@ fn run_rounds(
                 net_time_s: net_time,
                 wall_time_s: t_round.elapsed().as_secs_f64(),
             });
+            ctx.emit(Event::RoundCompleted(
+                records.last().expect("just pushed").clone(),
+            ));
         }
 
         for tx in &down_txs {
@@ -549,6 +573,7 @@ fn run_async(
     rt: &Runtime,
     setup: RunSetup,
     tau: usize,
+    ctx: &mut RunCtx<'_>,
 ) -> Result<RunResult> {
     let RunSetup {
         train_name,
@@ -622,6 +647,10 @@ fn run_async(
         let mut t_window = Instant::now();
 
         // everyone starts round 1 (staleness 0)
+        ctx.emit(Event::RoundStarted {
+            round: 1,
+            local_steps: k_for(1),
+        });
         for tx in &down_txs {
             if tx
                 .send(Down::Round {
@@ -685,6 +714,7 @@ fn run_async(
                             &mut corr_rng,
                             &mut eval_rng,
                             round,
+                            ctx,
                         )?;
                         cum_bytes += comm.total();
                         records.push(RoundRecord {
@@ -708,6 +738,9 @@ fn run_async(
                             net_time_s: net_time,
                             wall_time_s: t_window.elapsed().as_secs_f64(),
                         });
+                        ctx.emit(Event::RoundCompleted(
+                            records.last().expect("just pushed").clone(),
+                        ));
                         comm = CommStats::default();
                         loss_sum = 0.0;
                         loss_n = 0;
@@ -716,6 +749,16 @@ fn run_async(
                         net_time = 0.0;
                         fold_time = 0.0;
                         t_window = Instant::now();
+                        if ctx.stopped() {
+                            break; // end the run at this window boundary
+                        }
+                        if records.len() < cfg.rounds {
+                            let next = records.len() + 1;
+                            ctx.emit(Event::RoundStarted {
+                                round: next,
+                                local_steps: k_for(next),
+                            });
+                        }
                     }
 
                     // admit waiting workers within the staleness bound

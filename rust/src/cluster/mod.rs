@@ -70,7 +70,7 @@
 pub mod engine;
 pub mod net;
 
-pub use engine::run_cluster;
+pub(crate) use engine::run_cluster;
 pub use net::NetModel;
 
 /// Which execution substrate runs the round loop.

@@ -93,14 +93,22 @@ impl NetModel {
         }
     }
 
-    /// Parse a spec string: `preset[,key=value]*` (see module docs).
+    /// Parse a spec string: `preset[,key=value]*` (see module docs). A
+    /// preset is only legal as the first token — later it would silently
+    /// overwrite every override that preceded it, so that is an error.
     pub fn parse(spec: &str) -> Result<NetModel, String> {
         let mut net = NetModel::ideal();
-        for tok in spec.split(',').map(str::trim) {
+        for (i, tok) in spec.split(',').map(str::trim).enumerate() {
             if tok.is_empty() {
                 continue;
             }
             match tok {
+                "ideal" | "lan" | "wan" if i > 0 => {
+                    return Err(format!(
+                        "net spec {spec:?}: preset {tok:?} must come first \
+                         (it would discard the preceding overrides)"
+                    ));
+                }
                 "ideal" => net = NetModel::ideal(),
                 "lan" => net = NetModel::lan(),
                 "wan" => net = NetModel::wan(),
@@ -197,6 +205,15 @@ mod tests {
         let net = NetModel::ideal();
         assert!(net.is_ideal());
         assert_eq!(net.transfer_s(1 << 30, 3, 7, LEG_DOWN), 0.0);
+    }
+
+    #[test]
+    fn preset_after_overrides_is_rejected() {
+        // `scale=1,wan` used to silently discard the scale override
+        assert!(NetModel::parse("scale=1,wan").is_err());
+        assert!(NetModel::parse("jitter=0.2,lan").is_err());
+        let net = NetModel::parse("wan,scale=1").unwrap();
+        assert!(net.sleep_scale > 0.0);
     }
 
     #[test]

@@ -1,7 +1,13 @@
-//! Run configuration: JSON-file + CLI-flag configuration for distributed
-//! training runs, with dataset/algorithm/partitioner registries.
+//! Run configuration: the [`ExperimentConfig`] struct plus its JSON-file
+//! and CLI-flag entry points.
+//!
+//! The parsing/override/help logic lives in one place — the
+//! [`crate::api::keys`] schema table. Each config key is declared exactly
+//! once there (name, kind, doc, parse+apply fn); `from_json`,
+//! `apply_override`, unknown-key errors, and the generated
+//! `llcg run --help` key listing are all derived from that table.
 
-use crate::cluster::{Engine, NetModel, RoundMode};
+use crate::cluster::{Engine, RoundMode};
 use crate::coordinator::{Algorithm, CorrectionBatch, Schedule};
 use crate::util::Json;
 
@@ -79,72 +85,7 @@ impl Default for ExperimentConfig {
 impl ExperimentConfig {
     /// Parse from a JSON object (unknown keys rejected to catch typos).
     pub fn from_json(j: &Json) -> Result<ExperimentConfig, String> {
-        let obj = j.as_object().ok_or("config must be a json object")?;
-        let mut cfg = ExperimentConfig::default();
-        for (k, v) in obj {
-            match k.as_str() {
-                "dataset" => cfg.dataset = req_str(v, k)?,
-                "arch" => cfg.arch = req_str(v, k)?,
-                "algorithm" => {
-                    cfg.algorithm = Algorithm::parse(&req_str(v, k)?)
-                        .ok_or_else(|| format!("unknown algorithm {v}"))?
-                }
-                "parts" => cfg.parts = req_num(v, k)? as usize,
-                "rounds" => cfg.rounds = req_num(v, k)? as usize,
-                "local_steps" => {
-                    cfg.schedule = Schedule::Fixed {
-                        k: req_num(v, k)? as usize,
-                    }
-                }
-                "rho" => {
-                    let rho = req_num(v, k)?;
-                    let k0 = match cfg.schedule {
-                        Schedule::Fixed { k } => k,
-                        Schedule::Exponential { k0, .. } => k0,
-                    };
-                    cfg.schedule = Schedule::Exponential { k0, rho };
-                }
-                "correction_steps" => cfg.correction_steps = req_num(v, k)? as usize,
-                "correction_batch" => {
-                    cfg.correction_batch = match req_str(v, k)?.as_str() {
-                        "uniform" => CorrectionBatch::Uniform,
-                        "max_cut" => CorrectionBatch::MaxCutEdges,
-                        other => return Err(format!("unknown correction_batch {other}")),
-                    }
-                }
-                "correction_full_neighbors" => {
-                    cfg.correction_full_neighbors =
-                        v.as_bool().ok_or(format!("{k} must be bool"))?
-                }
-                "optimizer" => cfg.optimizer = req_str(v, k)?,
-                "server_optimizer" => cfg.server_optimizer = req_str(v, k)?,
-                "lr" => cfg.lr = req_num(v, k)? as f32,
-                "server_lr" => cfg.server_lr = req_num(v, k)? as f32,
-                "partitioner" => cfg.partitioner = req_str(v, k)?,
-                "sample_ratio" => cfg.sample_ratio = req_num(v, k)?,
-                "approx_storage" => cfg.approx_storage = req_num(v, k)?,
-                "seed" => cfg.seed = req_num(v, k)? as u64,
-                "eval_every" => cfg.eval_every = req_num(v, k)? as usize,
-                "eval_max_nodes" => cfg.eval_max_nodes = req_num(v, k)? as usize,
-                "artifacts_dir" => cfg.artifacts_dir = req_str(v, k)?,
-                "engine" => {
-                    cfg.engine = Engine::parse(&req_str(v, k)?)
-                        .ok_or_else(|| format!("unknown engine {v} (sequential|cluster)"))?
-                }
-                "round_mode" => {
-                    cfg.round_mode = RoundMode::parse(&req_str(v, k)?).ok_or_else(|| {
-                        format!("unknown round_mode {v} (sync|async:<tau>|pipelined)")
-                    })?
-                }
-                "net" => {
-                    let spec = req_str(v, k)?;
-                    NetModel::parse(&spec)?; // validate here, re-parse at engine start
-                    cfg.net = spec;
-                }
-                other => return Err(format!("unknown config key {other:?}")),
-            }
-        }
-        Ok(cfg)
+        crate::api::keys::from_json(j)
     }
 
     pub fn from_file(path: &str) -> Result<ExperimentConfig, String> {
@@ -153,87 +94,12 @@ impl ExperimentConfig {
         Self::from_json(&j)
     }
 
-    /// Apply `--key=value` CLI overrides on top of this config. CLI-style
-    /// dashes are accepted (`--round-mode` == `round_mode`).
+    /// Apply a `--key=value` CLI override on top of this config. CLI-style
+    /// dashes are accepted (`--round-mode` == `round_mode`); unknown keys
+    /// report the full key set, bad boolean literals are rejected.
     pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), String> {
-        let key = key.replace('-', "_");
-        let j = match key.as_str() {
-            "dataset" | "arch" | "algorithm" | "optimizer" | "server_optimizer"
-            | "partitioner" | "correction_batch" | "artifacts_dir" | "engine"
-            | "round_mode" | "net" => Json::Str(value.to_string()),
-            "correction_full_neighbors" => Json::Bool(value == "true" || value == "1"),
-            _ => Json::Num(
-                value
-                    .parse::<f64>()
-                    .map_err(|_| format!("bad numeric value for {key}: {value}"))?,
-            ),
-        };
-        let mut obj = std::collections::BTreeMap::new();
-        obj.insert(key.to_string(), j);
-        let patch = Json::Object(obj);
-        let merged = Self::from_json_onto(self.clone(), &patch)?;
-        *self = merged;
-        Ok(())
+        crate::api::keys::apply_str(self, key, value)
     }
-
-    fn from_json_onto(base: ExperimentConfig, j: &Json) -> Result<ExperimentConfig, String> {
-        // Re-parse the patch keys onto an existing config.
-        let mut cfg = base;
-        let obj = j.as_object().ok_or("patch must be object")?;
-        for (k, v) in obj {
-            let mut single = std::collections::BTreeMap::new();
-            single.insert(k.clone(), v.clone());
-            let parsed = Self::from_json(&Json::Object(single))?;
-            match k.as_str() {
-                "dataset" => cfg.dataset = parsed.dataset,
-                "arch" => cfg.arch = parsed.arch,
-                "algorithm" => cfg.algorithm = parsed.algorithm,
-                "parts" => cfg.parts = parsed.parts,
-                "rounds" => cfg.rounds = parsed.rounds,
-                "local_steps" => cfg.schedule = parsed.schedule,
-                "rho" => {
-                    let k0 = match cfg.schedule {
-                        Schedule::Fixed { k } => k,
-                        Schedule::Exponential { k0, .. } => k0,
-                    };
-                    if let Schedule::Exponential { rho, .. } = parsed.schedule {
-                        cfg.schedule = Schedule::Exponential { k0, rho };
-                    }
-                }
-                "correction_steps" => cfg.correction_steps = parsed.correction_steps,
-                "correction_batch" => cfg.correction_batch = parsed.correction_batch,
-                "correction_full_neighbors" => {
-                    cfg.correction_full_neighbors = parsed.correction_full_neighbors
-                }
-                "optimizer" => cfg.optimizer = parsed.optimizer,
-                "server_optimizer" => cfg.server_optimizer = parsed.server_optimizer,
-                "lr" => cfg.lr = parsed.lr,
-                "server_lr" => cfg.server_lr = parsed.server_lr,
-                "partitioner" => cfg.partitioner = parsed.partitioner,
-                "sample_ratio" => cfg.sample_ratio = parsed.sample_ratio,
-                "approx_storage" => cfg.approx_storage = parsed.approx_storage,
-                "seed" => cfg.seed = parsed.seed,
-                "eval_every" => cfg.eval_every = parsed.eval_every,
-                "eval_max_nodes" => cfg.eval_max_nodes = parsed.eval_max_nodes,
-                "artifacts_dir" => cfg.artifacts_dir = parsed.artifacts_dir,
-                "engine" => cfg.engine = parsed.engine,
-                "round_mode" => cfg.round_mode = parsed.round_mode,
-                "net" => cfg.net = parsed.net,
-                _ => unreachable!("from_json validated keys"),
-            }
-        }
-        Ok(cfg)
-    }
-}
-
-fn req_str(v: &Json, k: &str) -> Result<String, String> {
-    v.as_str()
-        .map(String::from)
-        .ok_or(format!("{k} must be a string"))
-}
-
-fn req_num(v: &Json, k: &str) -> Result<f64, String> {
-    v.as_f64().ok_or(format!("{k} must be a number"))
 }
 
 #[cfg(test)]
@@ -261,7 +127,9 @@ mod tests {
     #[test]
     fn rejects_unknown_keys() {
         let j = Json::parse(r#"{"datset":"typo"}"#).unwrap();
-        assert!(ExperimentConfig::from_json(&j).is_err());
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+        assert!(err.contains("dataset"), "error lists the key table: {err}");
     }
 
     #[test]
@@ -273,7 +141,10 @@ mod tests {
         assert_eq!(cfg.parts, 8);
         assert_eq!(cfg.algorithm, Algorithm::PsgdPa);
         assert!((cfg.lr - 0.05).abs() < 1e-9);
-        assert!(cfg.apply_override("nope", "1").is_err());
+        // an unknown string-valued key is reported as unknown, not as a
+        // bad numeric value
+        let err = cfg.apply_override("foo", "bar").unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
     }
 
     #[test]

@@ -23,11 +23,14 @@
 use anyhow::{bail, Result};
 
 use super::{Algorithm, CommStats, CorrectionBatch};
+use crate::api::registry;
+use crate::api::session::{Event, RunControl, RunCtx};
 use crate::cluster::{net, Engine, NetModel, RoundMode};
 use crate::config::ExperimentConfig;
-use crate::graph::{generators, CsrGraph, Dataset, Labels};
+use crate::graph::{CsrGraph, Dataset, Labels};
+#[cfg(test)]
+use crate::graph::generators;
 use crate::metrics;
-use crate::partition;
 use crate::runtime::{Dims, ModelState, Runtime, Tensor};
 use crate::sampler::{BatchIter, BlockArena, BlockBuilder, Fanout, NodeScratch};
 use crate::util::{Json, Pcg64};
@@ -71,6 +74,7 @@ pub struct RoundRecord {
 }
 
 /// Complete result of one distributed run.
+#[derive(Clone, Debug)]
 pub struct RunResult {
     pub algorithm: Algorithm,
     pub dataset: String,
@@ -328,10 +332,15 @@ pub(crate) struct RunSetup {
 }
 
 /// Shared prologue: artifacts, partition, states, builders, RNG streams.
+/// `pre_assignment` short-circuits the partitioner with an already-computed
+/// assignment (sweep reuse); it must equal what this run's
+/// `(seed, partitioner, parts)` would produce, and the partition RNG
+/// stream is still burned so every downstream stream stays bit-identical.
 pub(crate) fn setup_run(
     cfg: &ExperimentConfig,
     ds: &Dataset,
     rt: &Runtime,
+    pre_assignment: Option<&[u32]>,
 ) -> Result<RunSetup> {
     let mut root_rng = Pcg64::new(cfg.seed);
 
@@ -352,9 +361,12 @@ pub(crate) fn setup_run(
     // --- partition ---------------------------------------------------------
     let assignment = if cfg.parts <= 1 {
         vec![0u32; ds.n()]
+    } else if let Some(pre) = pre_assignment {
+        let _ = root_rng.split(1); // burn the partition stream
+        pre.to_vec()
     } else {
-        let p = partition::by_name(&cfg.partitioner)
-            .ok_or_else(|| anyhow::anyhow!("unknown partitioner {}", cfg.partitioner))?;
+        let p = registry::build_partitioner(&cfg.partitioner)
+            .map_err(|e| anyhow::anyhow!(e))?;
         p.partition(&ds.graph, cfg.parts, &mut root_rng.split(1))
     };
     let cut_ratio = ds.graph.cut_ratio(&assignment);
@@ -551,8 +563,9 @@ pub(crate) fn run_correction_steps(
 /// run the correction steps (when the algorithm has them) on the freshly
 /// averaged `global_params`, then the cadenced evaluation. Keeping this in
 /// one place is part of the bit-parity contract between the sequential
-/// driver and the cluster engine's sync mode. Returns
-/// `(val_score, global_loss)` (NaN on non-eval rounds).
+/// driver and the cluster engine's sync mode — including the event
+/// sequence: `CorrectionApplied` then (on eval rounds) `EvalCompleted`.
+/// Returns `(val_score, global_loss)` (NaN on non-eval rounds).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn server_round_epilogue(
     rt: &Runtime,
@@ -570,6 +583,7 @@ pub(crate) fn server_round_epilogue(
     corr_rng: &mut Pcg64,
     eval_rng: &mut Pcg64,
     round: usize,
+    ctx: &mut RunCtx<'_>,
 ) -> Result<(f64, f64)> {
     if cfg.algorithm.corrects() && cfg.correction_steps > 0 {
         run_correction_steps(
@@ -586,6 +600,10 @@ pub(crate) fn server_round_epilogue(
             corr_rng,
         )?;
         Tensor::copy_all(global_params, &server_state.params);
+        ctx.emit(Event::CorrectionApplied {
+            round,
+            steps: cfg.correction_steps,
+        });
     }
     eval_if_due(
         rt,
@@ -597,11 +615,12 @@ pub(crate) fn server_round_epilogue(
         dims.c,
         eval_rng,
         round,
+        ctx,
     )
 }
 
 /// The eval-cadence rule in one place: evaluate on `eval_every` rounds and
-/// on the final round, otherwise report NaNs.
+/// on the final round (emitting `EvalCompleted`), otherwise report NaNs.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn eval_if_due(
     rt: &Runtime,
@@ -613,9 +632,17 @@ pub(crate) fn eval_if_due(
     c: usize,
     eval_rng: &mut Pcg64,
     round: usize,
+    ctx: &mut RunCtx<'_>,
 ) -> Result<(f64, f64)> {
     if round % cfg.eval_every == 0 || round == cfg.rounds {
-        eval_round(rt, eval_name, global_params, ds, cfg, builder, c, eval_rng)
+        let (val_score, global_loss) =
+            eval_round(rt, eval_name, global_params, ds, cfg, builder, c, eval_rng)?;
+        ctx.emit(Event::EvalCompleted {
+            round,
+            val_score,
+            global_loss,
+        });
+        Ok((val_score, global_loss))
     } else {
         Ok((f64::NAN, f64::NAN))
     }
@@ -748,7 +775,30 @@ pub(crate) fn finish_run(
 
 /// Run one complete distributed-training experiment, dispatching to the
 /// engine named in `cfg.engine` (see the module docs).
+///
+/// This is the legacy run-to-completion entry point, kept as a thin
+/// wrapper over the session machinery: no events are observed and no
+/// early-stop is possible. Use `api::ExperimentBuilder` → `launch` →
+/// `Run::stream` for the streaming interface.
 pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<RunResult> {
+    let control = RunControl::default();
+    let mut sink = |_: Event| {};
+    let mut ctx = RunCtx {
+        sink: &mut sink,
+        stop: &control,
+    };
+    run_with_ctx(cfg, ds, rt, None, &mut ctx)
+}
+
+/// Engine dispatch with full session plumbing: the optional pre-computed
+/// partition (sweep reuse) and the event/stop context.
+pub(crate) fn run_with_ctx(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    rt: &Runtime,
+    pre_assignment: Option<&[u32]>,
+    ctx: &mut RunCtx<'_>,
+) -> Result<RunResult> {
     match cfg.engine {
         Engine::Sequential => {
             if cfg.round_mode != RoundMode::Sync {
@@ -758,16 +808,22 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
                     cfg.round_mode.name()
                 );
             }
-            run_sequential(cfg, ds, rt)
+            run_sequential(cfg, ds, rt, pre_assignment, ctx)
         }
-        Engine::Cluster => crate::cluster::run_cluster(cfg, ds, rt),
+        Engine::Cluster => crate::cluster::run_cluster(cfg, ds, rt, pre_assignment, ctx),
     }
 }
 
 /// The legacy single-thread engine: workers run one after another on the
 /// caller's `Runtime` (the only option under PJRT), with the parallel round
 /// time back-computed as `max_p(worker time)`.
-fn run_sequential(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<RunResult> {
+fn run_sequential(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    rt: &Runtime,
+    pre_assignment: Option<&[u32]>,
+    ctx: &mut RunCtx<'_>,
+) -> Result<RunResult> {
     let RunSetup {
         train_name,
         server_train_name,
@@ -785,7 +841,7 @@ fn run_sequential(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<
         mut eval_rng,
         mut corr_rng,
         net: netm,
-    } = setup_run(cfg, ds, rt)?;
+    } = setup_run(cfg, ds, rt, pre_assignment)?;
     let is_fullsync = cfg.algorithm == Algorithm::FullSync;
 
     let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
@@ -801,12 +857,19 @@ fn run_sequential(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<
 
     // --- round loop ---------------------------------------------------------
     for round in 1..=cfg.rounds {
+        if ctx.stopped() {
+            break; // RunControl::stop(): end at the round boundary
+        }
         let t_round = std::time::Instant::now();
         let k = if is_fullsync {
             1
         } else {
             cfg.schedule.steps_for_round(round)
         };
+        ctx.emit(Event::RoundStarted {
+            round,
+            local_steps: k,
+        });
         let mut comm = CommStats::default();
         if round == 1 {
             comm.feature_bytes += parts.iter().map(|p| p.storage_bytes).sum::<u64>();
@@ -864,6 +927,7 @@ fn run_sequential(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<
             &mut corr_rng,
             &mut eval_rng,
             round,
+            ctx,
         )?;
         let server_time = t_server.elapsed().as_secs_f64();
 
@@ -885,6 +949,9 @@ fn run_sequential(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<
             net_time_s: net_time,
             wall_time_s: t_round.elapsed().as_secs_f64(),
         });
+        ctx.emit(Event::RoundCompleted(
+            records.last().expect("just pushed").clone(),
+        ));
     }
 
     finish_run(
@@ -903,10 +970,10 @@ fn run_sequential(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Result<
     )
 }
 
-/// Convenience: generate the dataset named in `cfg` (registry lookup).
+/// Convenience: load the dataset named in `cfg` (registry lookup; unknown
+/// names report the available set).
 pub fn load_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
-    generators::by_name(&cfg.dataset, cfg.seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.dataset))
+    registry::load_dataset(&cfg.dataset, cfg.seed).map_err(|e| anyhow::anyhow!(e))
 }
 
 /// Label-distribution skew across parts: mean total-variation distance

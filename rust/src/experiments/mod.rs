@@ -1,11 +1,18 @@
 //! Reproduction harness: one function per paper table/figure (DESIGN.md
 //! experiment index). Each prints the paper's rows/series and writes a JSON
 //! record under `runs/` for EXPERIMENTS.md.
+//!
+//! Every figure is a [`Sweep`] over a shared base config: the loaded
+//! dataset and the partition assignment are reused across the sweep's
+//! points (they used to be recomputed per config), and each point runs
+//! through the session API — this module never touches the run loop or
+//! dataset plumbing directly.
 
 use anyhow::{bail, Result};
 
+use crate::api::Sweep;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{driver, Algorithm, CorrectionBatch, Schedule};
+use crate::coordinator::{driver, Algorithm, Schedule};
 use crate::graph::generators;
 use crate::runtime::Runtime;
 use crate::util::Json;
@@ -98,27 +105,20 @@ fn load_rt(opts: &ReproOpts) -> Result<Runtime> {
     Ok(rt)
 }
 
-fn run_one(cfg: &ExperimentConfig, rt: &Runtime) -> Result<driver::RunResult> {
-    let ds = driver::load_dataset(cfg)?;
-    driver::run_experiment(cfg, &ds, rt)
-}
-
 /// Algorithms compared in the headline figures.
 fn algos3() -> Vec<Algorithm> {
     vec![Algorithm::PsgdPa, Algorithm::Ggs, Algorithm::Llcg]
 }
 
-fn setup_llcg(cfg: &mut ExperimentConfig, alg: Algorithm) {
-    cfg.algorithm = alg;
+/// Sweep-point patch selecting `alg`; LLCG gets the paper defaults on top
+/// (rho = 1.1 exponential local epochs, S = 8 correction steps).
+fn algo_patch(alg: Algorithm) -> Vec<(&'static str, String)> {
+    let mut patch = vec![("algorithm", alg.name().to_string())];
     if alg == Algorithm::Llcg {
-        // paper defaults: rho = 1.1, S = 1
-        let k0 = match cfg.schedule {
-            Schedule::Fixed { k } => k,
-            Schedule::Exponential { k0, .. } => k0,
-        };
-        cfg.schedule = Schedule::Exponential { k0, rho: 1.1 };
-        cfg.correction_steps = 8;
+        patch.push(("rho", "1.1".to_string()));
+        patch.push(("correction_steps", "8".to_string()));
     }
+    patch
 }
 
 // ---------------------------------------------------------------------------
@@ -133,15 +133,22 @@ fn fig1(opts: &ReproOpts) -> Result<()> {
         "{:>9} {:>12} {:>12} {:>12} {:>14}",
         "machines", "epoch_s", "speedup", "mem_MB/mach", "val"
     );
+    let b = rt.meta(&Runtime::train_name(arch, "adam", dataset))?.dims.b;
+    let rounds = if opts.fast { 2 } else { 6 };
+
+    let mut sweep = Sweep::points(&opts.base_cfg(dataset, arch));
+    for &p in &[1usize, 2, 4, 8] {
+        let mut patch = algo_patch(Algorithm::Llcg);
+        patch.push(("parts", p.to_string()));
+        patch.push(("rounds", rounds.to_string()));
+        sweep = sweep.point(&patch);
+    }
+
     let mut rows = Vec::new();
     let mut t1 = 0f64;
-    for &p in &[1usize, 2, 4, 8] {
-        let mut cfg = opts.base_cfg(dataset, arch);
-        cfg.parts = p;
-        cfg.rounds = if opts.fast { 2 } else { 6 };
-        setup_llcg(&mut cfg, Algorithm::Llcg);
-        let ds = driver::load_dataset(&cfg)?;
-        let res = driver::run_experiment(&cfg, &ds, &rt)?;
+    sweep.run(&rt, |_i, exp, res| {
+        let ds = exp.dataset();
+        let p = exp.config().parts;
         // simulated-parallel *epoch* time: (steps to cover the largest
         // local training shard) x measured per-step time + server work.
         let k: usize = res.records.iter().map(|r| r.local_steps).sum();
@@ -151,7 +158,6 @@ fn fig1(opts: &ReproOpts) -> Result<()> {
             .map(|r| r.worker_time_s)
             .sum::<f64>()
             / k as f64;
-        let b = rt.meta(&crate::runtime::Runtime::train_name(arch, "adam", dataset))?.dims.b;
         let shard = ds.splits.train.len().div_ceil(p);
         let epoch_steps = shard.div_ceil(b);
         let server_s: f64 = res
@@ -182,7 +188,7 @@ fn fig1(opts: &ReproOpts) -> Result<()> {
             ("mem_mb", Json::num(mem / 1e6)),
             ("val", Json::num(res.final_val)),
         ]));
-    }
+    })?;
     opts.save("fig1", Json::arr(rows))
 }
 
@@ -194,29 +200,31 @@ fn fig2(opts: &ReproOpts) -> Result<()> {
     let dataset = if opts.fast { "tiny" } else { "reddit-s" };
     let arch = if opts.fast { "gcn" } else { "sage" };
     println!("Fig 2 — PSGD-PA vs GGS vs single-machine ({dataset}, P=8)");
+    let sweep = Sweep::points(&opts.base_cfg(dataset, arch))
+        .point(&[("algorithm", "psgd-pa".to_string())])
+        .point(&[("algorithm", "ggs".to_string())])
+        // single-machine upper bound rides the same sweep (dataset reused)
+        .point(&[
+            ("algorithm", "psgd-pa".to_string()),
+            ("parts", "1".to_string()),
+        ]);
     let mut out = Vec::new();
-    for alg in [Algorithm::PsgdPa, Algorithm::Ggs] {
-        let mut cfg = opts.base_cfg(dataset, arch);
-        cfg.algorithm = alg;
-        let res = run_one(&cfg, &rt)?;
-        println!(
-            "  {:<10} final_val={:.4} avg_MB/round={:.3}",
-            alg.name(),
-            res.final_val,
-            res.avg_round_mb()
-        );
+    sweep.run(&rt, |i, exp, res| {
+        if i < 2 {
+            println!(
+                "  {:<10} final_val={:.4} avg_MB/round={:.3}",
+                exp.config().algorithm.name(),
+                res.final_val,
+                res.avg_round_mb()
+            );
+        } else {
+            println!(
+                "  {:<10} final_val={:.4} (upper bound)",
+                "single", res.final_val
+            );
+        }
         out.push(res.to_json());
-    }
-    // single machine baseline
-    let mut cfg = opts.base_cfg(dataset, arch);
-    cfg.parts = 1;
-    cfg.algorithm = Algorithm::PsgdPa;
-    let res = run_one(&cfg, &rt)?;
-    println!(
-        "  {:<10} final_val={:.4} (upper bound)",
-        "single", res.final_val
-    );
-    out.push(res.to_json());
+    })?;
     opts.save("fig2", Json::arr(out))
 }
 
@@ -231,6 +239,7 @@ fn fig4(opts: &ReproOpts) -> Result<()> {
     } else {
         vec!["flickr-s", "proteins-s", "arxiv-s", "reddit-s"]
     };
+    let arch = if opts.fast { "gcn" } else { "sage" };
     let mut out = Vec::new();
     for ds_name in &datasets {
         println!("Fig 4 — {ds_name} (P=8): val score / loss / bytes per round");
@@ -238,11 +247,11 @@ fn fig4(opts: &ReproOpts) -> Result<()> {
             "  {:<10} {:>9} {:>10} {:>12}",
             "algo", "final", "glob_loss", "avg_MB/round"
         );
+        let mut sweep = Sweep::points(&opts.base_cfg(ds_name, arch));
         for alg in algos3() {
-            let arch = if opts.fast { "gcn" } else { "sage" };
-            let mut cfg = opts.base_cfg(ds_name, arch);
-            setup_llcg(&mut cfg, alg);
-            let res = run_one(&cfg, &rt)?;
+            sweep = sweep.point(&algo_patch(alg));
+        }
+        sweep.run(&rt, |_i, exp, res| {
             let last_loss = res
                 .records
                 .iter()
@@ -252,13 +261,13 @@ fn fig4(opts: &ReproOpts) -> Result<()> {
                 .unwrap_or(f64::NAN);
             println!(
                 "  {:<10} {:>9.4} {:>10.4} {:>12.3}",
-                alg.name(),
+                exp.config().algorithm.name(),
                 res.final_val,
                 last_loss,
                 res.avg_round_mb()
             );
             out.push(res.to_json());
-        }
+        })?;
     }
     opts.save("fig4", Json::arr(out))
 }
@@ -268,6 +277,7 @@ fn fig4(opts: &ReproOpts) -> Result<()> {
 // datasets, mean±std over seeds.
 // ---------------------------------------------------------------------------
 fn table1(opts: &ReproOpts) -> Result<()> {
+    use std::collections::BTreeMap;
     let rt = load_rt(opts)?;
     let rows: Vec<(&str, Vec<&str>)> = if opts.fast {
         vec![("tiny", vec!["gcn", "sage"])]
@@ -283,20 +293,37 @@ fn table1(opts: &ReproOpts) -> Result<()> {
     let mut out = Vec::new();
     println!("Table 1 — score ± std and avg MB/round (seeds={seeds})");
     for (ds_name, archs) in &rows {
+        // one sweep per seed (dataset + partition shared across its
+        // arch × algo grid), results folded per (arch, algo)
+        let mut scores: BTreeMap<(String, String), (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+        for s in 0..seeds {
+            let mut base = opts.base_cfg(ds_name, archs[0]);
+            base.seed = opts.seed + s as u64;
+            let mut sweep = Sweep::points(&base);
+            for arch in archs {
+                for alg in algos3() {
+                    let mut patch: Vec<(&str, String)> =
+                        vec![("arch", arch.to_string())];
+                    patch.extend(algo_patch(alg));
+                    sweep = sweep.point(&patch);
+                }
+            }
+            sweep.run(&rt, |_i, exp, res| {
+                let key = (
+                    exp.config().arch.clone(),
+                    exp.config().algorithm.name().to_string(),
+                );
+                let e = scores.entry(key).or_default();
+                e.0.push(res.final_test);
+                e.1.push(res.avg_round_mb());
+            })?;
+        }
         for arch in archs {
             for alg in algos3() {
-                let mut scores = Vec::new();
-                let mut mbs = Vec::new();
-                for s in 0..seeds {
-                    let mut cfg = opts.base_cfg(ds_name, arch);
-                    cfg.seed = opts.seed + s as u64;
-                    setup_llcg(&mut cfg, alg);
-                    let res = run_one(&cfg, &rt)?;
-                    scores.push(res.final_test);
-                    mbs.push(res.avg_round_mb());
-                }
-                let mean = crate::util::stats::mean(&scores);
-                let std = crate::util::stats::std(&scores);
+                let (sc, mbs) =
+                    &scores[&(arch.to_string(), alg.name().to_string())];
+                let mean = crate::util::stats::mean(sc);
+                let std = crate::util::stats::std(sc);
                 println!(
                     "{:<12} {:<6} {:<10} {:>7.2}±{:<5.2} {:>10.3} MB",
                     ds_name,
@@ -304,7 +331,7 @@ fn table1(opts: &ReproOpts) -> Result<()> {
                     alg.name(),
                     mean * 100.0,
                     std * 100.0,
-                    crate::util::stats::mean(&mbs)
+                    crate::util::stats::mean(mbs)
                 );
                 out.push(Json::obj(vec![
                     ("dataset", Json::str(*ds_name)),
@@ -312,7 +339,7 @@ fn table1(opts: &ReproOpts) -> Result<()> {
                     ("algorithm", Json::str(alg.name())),
                     ("score_mean", Json::num(mean)),
                     ("score_std", Json::num(std)),
-                    ("avg_mb", Json::num(crate::util::stats::mean(&mbs))),
+                    ("avg_mb", Json::num(crate::util::stats::mean(mbs))),
                 ]));
             }
         }
@@ -326,21 +353,28 @@ fn table1(opts: &ReproOpts) -> Result<()> {
 fn fig5(opts: &ReproOpts) -> Result<()> {
     let rt = load_rt(opts)?;
     let dataset = if opts.fast { "tiny" } else { "arxiv-s" };
+    let arch = if opts.fast { "gcn" } else { "sage" };
     let ks: Vec<usize> = if opts.fast {
         vec![1, 4]
     } else {
         vec![1, 4, 16, 64, 128]
     };
     println!("Fig 5 — local epoch size K sweep ({dataset}, LLCG)");
-    let mut out = Vec::new();
+    let base = opts.base_cfg(dataset, arch);
+    let rounds = base.rounds.min(15); // large K makes rounds expensive
+    let mut sweep = Sweep::points(&base);
     for &k in &ks {
-        let arch = if opts.fast { "gcn" } else { "sage" };
-        let mut cfg = opts.base_cfg(dataset, arch);
-        setup_llcg(&mut cfg, Algorithm::Llcg);
-        cfg.schedule = Schedule::Exponential { k0: k, rho: 1.1 };
-        cfg.rounds = cfg.rounds.min(15); // large K makes rounds expensive
         // same *round* budget: more local work per round for larger K
-        let res = run_one(&cfg, &rt)?;
+        // (algo_patch's rho survives the later local_steps — the schema
+        // composes them in either order)
+        let mut patch = algo_patch(Algorithm::Llcg);
+        patch.push(("local_steps", k.to_string()));
+        patch.push(("rounds", rounds.to_string()));
+        sweep = sweep.point(&patch);
+    }
+    let mut out = Vec::new();
+    sweep.run(&rt, |i, _exp, res| {
+        let k = ks[i];
         println!(
             "  K={:<4} total_steps={:<6} final_val={:.4}",
             k, res.total_steps, res.final_val
@@ -349,9 +383,9 @@ fn fig5(opts: &ReproOpts) -> Result<()> {
             ("k", Json::num(k as f64)),
             ("total_steps", Json::num(res.total_steps as f64)),
             ("final_val", Json::num(res.final_val)),
-            ("history", history_json(&res)),
+            ("history", history_json(res)),
         ]));
-    }
+    })?;
     opts.save("fig5", Json::arr(out))
 }
 
@@ -361,6 +395,7 @@ fn fig5(opts: &ReproOpts) -> Result<()> {
 fn fig6(opts: &ReproOpts) -> Result<()> {
     let rt = load_rt(opts)?;
     let dataset = if opts.fast { "tiny" } else { "reddit-s" };
+    let arch = if opts.fast { "gcn" } else { "sage" };
     let grid: Vec<(f64, usize)> = if opts.fast {
         vec![(1.0, 1), (0.2, 1)]
     } else {
@@ -374,14 +409,16 @@ fn fig6(opts: &ReproOpts) -> Result<()> {
         ]
     };
     println!("Fig 6 — sampling ratio × correction steps ({dataset}, LLCG)");
-    let mut out = Vec::new();
+    let mut sweep = Sweep::points(&opts.base_cfg(dataset, arch));
     for &(ratio, s) in &grid {
-        let arch = if opts.fast { "gcn" } else { "sage" };
-        let mut cfg = opts.base_cfg(dataset, arch);
-        setup_llcg(&mut cfg, Algorithm::Llcg);
-        cfg.sample_ratio = ratio;
-        cfg.correction_steps = s;
-        let res = run_one(&cfg, &rt)?;
+        let mut patch = algo_patch(Algorithm::Llcg);
+        patch.push(("sample_ratio", ratio.to_string()));
+        patch.push(("correction_steps", s.to_string()));
+        sweep = sweep.point(&patch);
+    }
+    let mut out = Vec::new();
+    sweep.run(&rt, |i, _exp, res| {
+        let (ratio, s) = grid[i];
         println!(
             "  ratio={:<5} S={} final_val={:.4}",
             ratio, s, res.final_val
@@ -390,9 +427,9 @@ fn fig6(opts: &ReproOpts) -> Result<()> {
             ("sample_ratio", Json::num(ratio)),
             ("correction_steps", Json::num(s as f64)),
             ("final_val", Json::num(res.final_val)),
-            ("history", history_json(&res)),
+            ("history", history_json(res)),
         ]));
-    }
+    })?;
     opts.save("fig6", Json::arr(out))
 }
 
@@ -406,15 +443,18 @@ fn fig78(opts: &ReproOpts) -> Result<()> {
     } else {
         vec!["reddit-s", "arxiv-s"]
     };
+    let arch = if opts.fast { "gcn" } else { "sage" };
     let mut out = Vec::new();
     for ds_name in &datasets {
         println!("Fig 7/8 — correction sampling ({ds_name}, LLCG)");
+        let mut sweep = Sweep::points(&opts.base_cfg(ds_name, arch));
         for full in [true, false] {
-            let arch = if opts.fast { "gcn" } else { "sage" };
-            let mut cfg = opts.base_cfg(ds_name, arch);
-            setup_llcg(&mut cfg, Algorithm::Llcg);
-            cfg.correction_full_neighbors = full;
-            let res = run_one(&cfg, &rt)?;
+            let mut patch = algo_patch(Algorithm::Llcg);
+            patch.push(("correction_full_neighbors", full.to_string()));
+            sweep = sweep.point(&patch);
+        }
+        sweep.run(&rt, |_i, exp, res| {
+            let full = exp.config().correction_full_neighbors;
             println!(
                 "  correction {:<18} final_val={:.4}",
                 if full { "full-neighbors" } else { "sampled-neighbors" },
@@ -424,9 +464,9 @@ fn fig78(opts: &ReproOpts) -> Result<()> {
                 ("dataset", Json::str(*ds_name)),
                 ("full_neighbors", Json::Bool(full)),
                 ("final_val", Json::num(res.final_val)),
-                ("history", history_json(&res)),
+                ("history", history_json(res)),
             ]));
-        }
+        })?;
     }
     opts.save("fig78", Json::arr(out))
 }
@@ -441,23 +481,26 @@ fn fig9(opts: &ReproOpts) -> Result<()> {
     } else {
         vec!["reddit-s", "arxiv-s"]
     };
+    let arch = if opts.fast { "gcn" } else { "sage" };
     let mut out = Vec::new();
     for ds_name in &datasets {
         println!("Fig 9 — correction batch selection ({ds_name}, LLCG)");
-        for batch in [CorrectionBatch::Uniform, CorrectionBatch::MaxCutEdges] {
-            let arch = if opts.fast { "gcn" } else { "sage" };
-            let mut cfg = opts.base_cfg(ds_name, arch);
-            setup_llcg(&mut cfg, Algorithm::Llcg);
-            cfg.correction_batch = batch;
-            let res = run_one(&cfg, &rt)?;
+        let mut sweep = Sweep::points(&opts.base_cfg(ds_name, arch));
+        for batch in ["uniform", "max_cut"] {
+            let mut patch = algo_patch(Algorithm::Llcg);
+            patch.push(("correction_batch", batch.to_string()));
+            sweep = sweep.point(&patch);
+        }
+        sweep.run(&rt, |_i, exp, res| {
+            let batch = exp.config().correction_batch;
             println!("  {:<12?} final_val={:.4}", batch, res.final_val);
             out.push(Json::obj(vec![
                 ("dataset", Json::str(*ds_name)),
                 ("batch", Json::str(format!("{batch:?}"))),
                 ("final_val", Json::num(res.final_val)),
-                ("history", history_json(&res)),
+                ("history", history_json(res)),
             ]));
-        }
+        })?;
     }
     opts.save("fig9", Json::arr(out))
 }
@@ -470,32 +513,55 @@ fn fig10(opts: &ReproOpts) -> Result<()> {
     let rt = load_rt(opts)?;
     let mut out = Vec::new();
     let yelp = if opts.fast { "tiny" } else { "yelp-s" };
+    let base_arch = if opts.fast { "gcn" } else { "sage" };
     println!("Fig 10a — PSGD-PA vs GGS on {yelp}");
-    for alg in [Algorithm::PsgdPa, Algorithm::Ggs] {
-        let mut cfg = opts.base_cfg(yelp, if opts.fast { "gcn" } else { "sage" });
-        cfg.algorithm = alg;
-        let res = run_one(&cfg, &rt)?;
-        println!("  {:<10} final_val={:.4}", alg.name(), res.final_val);
+    let sweep = Sweep::over(
+        &opts.base_cfg(yelp, base_arch),
+        "algorithm",
+        &["psgd-pa", "ggs"],
+    );
+    sweep.run(&rt, |_i, exp, res| {
+        println!(
+            "  {:<10} final_val={:.4}",
+            exp.config().algorithm.name(),
+            res.final_val
+        );
         out.push(res.to_json());
-    }
+    })?;
+
     println!("Fig 10b — GNN vs MLP on {yelp} (single machine)");
-    for arch in if opts.fast { ["gcn", "mlp"] } else { ["sage", "mlp"] } {
-        let mut cfg = opts.base_cfg(yelp, arch);
-        cfg.parts = 1;
-        cfg.algorithm = Algorithm::PsgdPa;
-        let res = run_one(&cfg, &rt)?;
-        println!("  {:<10} final_val={:.4}", arch, res.final_val);
-        out.push(res.to_json());
+    let mut sweep = Sweep::points(&opts.base_cfg(yelp, base_arch));
+    for arch in [base_arch, "mlp"] {
+        sweep = sweep.point(&[
+            ("arch", arch.to_string()),
+            ("parts", "1".to_string()),
+            ("algorithm", "psgd-pa".to_string()),
+        ]);
     }
+    sweep.run(&rt, |_i, exp, res| {
+        println!(
+            "  {:<10} final_val={:.4}",
+            exp.config().arch,
+            res.final_val
+        );
+        out.push(res.to_json());
+    })?;
+
     if !opts.fast {
         println!("Fig 10c — PSGD-PA vs GGS on products-s");
-        for alg in [Algorithm::PsgdPa, Algorithm::Ggs] {
-            let mut cfg = opts.base_cfg("products-s", "sage");
-            cfg.algorithm = alg;
-            let res = run_one(&cfg, &rt)?;
-            println!("  {:<10} final_val={:.4}", alg.name(), res.final_val);
+        let sweep = Sweep::over(
+            &opts.base_cfg("products-s", "sage"),
+            "algorithm",
+            &["psgd-pa", "ggs"],
+        );
+        sweep.run(&rt, |_i, exp, res| {
+            println!(
+                "  {:<10} final_val={:.4}",
+                exp.config().algorithm.name(),
+                res.final_val
+            );
             out.push(res.to_json());
-        }
+        })?;
     }
     opts.save("fig10", Json::arr(out))
 }
@@ -507,25 +573,27 @@ fn fig11(opts: &ReproOpts) -> Result<()> {
     let rt = load_rt(opts)?;
     let dataset = if opts.fast { "tiny" } else { "products-s" };
     println!("Fig 11 — large-scale setting ({dataset}, P=16)");
-    let mut out = Vec::new();
+    let mut base = opts.base_cfg(dataset, if opts.fast { "gcn" } else { "sage" });
+    base.parts = if opts.fast { 4 } else { 16 };
+    let mut sweep = Sweep::points(&base);
     for alg in [
         Algorithm::PsgdPa,
         Algorithm::SubgraphApprox,
         Algorithm::FullSync,
         Algorithm::Llcg,
     ] {
-        let mut cfg = opts.base_cfg(dataset, if opts.fast { "gcn" } else { "sage" });
-        cfg.parts = if opts.fast { 4 } else { 16 };
-        setup_llcg(&mut cfg, alg);
-        let res = run_one(&cfg, &rt)?;
+        sweep = sweep.point(&algo_patch(alg));
+    }
+    let mut out = Vec::new();
+    sweep.run(&rt, |_i, exp, res| {
         println!(
             "  {:<16} final_val={:.4} avg_MB/round={:.3}",
-            alg.name(),
+            exp.config().algorithm.name(),
             res.final_val,
             res.avg_round_mb()
         );
         out.push(res.to_json());
-    }
+    })?;
     opts.save("fig11", Json::arr(out))
 }
 
@@ -549,7 +617,8 @@ fn theory(opts: &ReproOpts) -> Result<()> {
     );
     let mut out = Vec::new();
     for pname in ["metis", "random"] {
-        let p = crate::partition::by_name(pname).unwrap();
+        let p = crate::api::registry::build_partitioner(pname)
+            .map_err(|e| anyhow::anyhow!(e))?;
         let assignment = p.partition(&ds.graph, 8, &mut rng.split(7));
         let d = discrepancy::measure(
             &rt,

@@ -5,6 +5,11 @@
 //! Neural Networks"*.
 //!
 //! Architecture (see `DESIGN.md`):
+//! - **`api`** — the public experiment surface: single-source config
+//!   schema (`api::keys`), pluggable dataset/partitioner/arch registries
+//!   (`api::registry`), typed builder + streaming run sessions
+//!   (`api::session`), and dataset/partition-reusing sweeps
+//!   (`api::sweep`).
 //! - **L3 (this crate)** — the coordinator: graph substrate, METIS-like
 //!   partitioner, neighbor sampler / block builder, parameter server with
 //!   *global server correction*, workers, communication accounting, and the
@@ -20,6 +25,7 @@
 //! Python never runs on the training path: `make artifacts` once, then the
 //! `llcg` binary is self-contained.
 
+pub mod api;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
@@ -32,6 +38,7 @@ pub mod sampler;
 pub mod testkit;
 pub mod util;
 
+pub use api::{Event, Experiment, ExperimentBuilder, Run, RunControl, Sweep};
 pub use cluster::{Engine, NetModel, RoundMode};
 pub use config::ExperimentConfig;
 pub use coordinator::{Algorithm, RunResult};

@@ -2,10 +2,9 @@
 //!
 //! Subcommands:
 //!   run [--config file.json] [--key=value ...]   one distributed run
-//!       engine flags: --engine sequential|cluster
-//!                     --round-mode sync|async:<tau>|pipelined
-//!                     --net ideal|lan|wan|lat=..,bw=..,jitter=..,scale=..
-//!   datasets                                     Table-2-style stats
+//!       `llcg run --help` prints the full config-key table (generated
+//!       from the single-source schema in `api::keys`)
+//!   datasets                                     registry listing + Table-2 stats
 //!   partition --dataset D --parts P              partitioner comparison
 //!   repro-<exp>                                  regenerate a paper table/figure
 //!                                                (fig2, fig4, table1, fig5,
@@ -14,13 +13,16 @@
 //!
 //! Hand-rolled flag parsing (offline environment has no clap; DESIGN.md
 //! §Substitutions). Flags are `--key value` or `--key=value`.
+//!
+//! `run` streams its output through the session API: the per-round table is
+//! printed as `Event`s arrive, not after the run completes.
 
 use anyhow::{bail, Result};
 
+use llcg::api::{keys, registry, ExperimentBuilder, TablePrinter};
 use llcg::config::ExperimentConfig;
 use llcg::coordinator::driver;
 use llcg::experiments;
-use llcg::graph::generators::{self, SynthConfig};
 use llcg::partition;
 use llcg::runtime::Runtime;
 use llcg::util::Pcg64;
@@ -63,10 +65,26 @@ fn build_config(flags: &[(String, String)]) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+fn run_help() {
+    println!(
+        "usage: llcg run [--config file.json] [--key=value ...] [--out result.json]\n\
+         \n\
+         Config keys (generated from the api::keys schema; every key works\n\
+         both as a JSON field and as a --key=value override):\n\
+         {}",
+        keys::help_table()
+    );
+}
+
 fn cmd_run(flags: &[(String, String)]) -> Result<()> {
+    if flags.iter().any(|(k, _)| k == "help") {
+        run_help();
+        return Ok(());
+    }
     let cfg = build_config(flags)?;
-    let ds = driver::load_dataset(&cfg)?;
     let (rt, _adir) = Runtime::load_or_native(&cfg.artifacts_dir)?;
+    let exp = ExperimentBuilder::from_config(cfg).build()?;
+    let cfg = exp.config();
     eprintln!(
         "run: {} on {} ({} parts, {} rounds, arch={}, opt={}, backend={}, \
          engine={}, mode={}, net={})",
@@ -81,22 +99,11 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
         cfg.round_mode.name(),
         cfg.net
     );
-    let result = driver::run_experiment(&cfg, &ds, &rt)?;
-    println!(
-        "{:>5} {:>6} {:>10} {:>10} {:>9} {:>12}",
-        "round", "steps", "loc_loss", "glob_loss", "val", "cum_MB"
-    );
-    for r in &result.records {
-        println!(
-            "{:>5} {:>6} {:>10.4} {:>10.4} {:>9.4} {:>12.3}",
-            r.round,
-            r.local_steps,
-            r.local_loss,
-            r.global_loss,
-            r.val_score,
-            r.cum_bytes as f64 / 1e6
-        );
-    }
+
+    // stream the run: one table row per completed round, as it happens
+    let mut printer = TablePrinter::new();
+    let result = exp.launch(&rt).stream(|ev| printer.on_event(ev))?;
+
     println!(
         "final: val={:.4} test={:.4} cut_ratio={:.3} avg_round_MB={:.3}",
         result.final_val,
@@ -126,10 +133,11 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
 }
 
 fn cmd_datasets() -> Result<()> {
-    println!("Table 2 analogs (synthetic; seeds fixed at 0):");
-    for name in SynthConfig::all_names() {
-        let ds = generators::by_name(name, 0).unwrap();
+    println!("Registered datasets (synthetic; stats at seed 0):");
+    for (name, doc) in registry::with(|r| r.dataset_docs()) {
+        let ds = registry::load_dataset(&name, 0).map_err(|e| anyhow::anyhow!(e))?;
         println!("  {}", ds.stats());
+        println!("      {doc}");
     }
     Ok(())
 }
@@ -146,15 +154,14 @@ fn cmd_partition(flags: &[(String, String)]) -> Result<()> {
             _ => bail!("unknown flag --{k}"),
         }
     }
-    let ds = generators::by_name(&dataset, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let ds = registry::load_dataset(&dataset, seed).map_err(|e| anyhow::anyhow!(e))?;
     println!("{} | {} parts", ds.stats(), parts);
     println!(
         "{:<12} {:>9} {:>10} {:>10} {:>10} {:>9}",
         "method", "edge_cut", "cut_ratio", "imbalance", "label_skew", "time_s"
     );
-    for name in ["random", "hash", "bfs", "ldg", "metis"] {
-        let p = partition::by_name(name).unwrap();
+    for name in registry::with(|r| r.partitioner_names()) {
+        let p = registry::build_partitioner(&name).map_err(|e| anyhow::anyhow!(e))?;
         let mut rng = Pcg64::new(seed);
         let t0 = std::time::Instant::now();
         let a = p.partition(&ds.graph, parts, &mut rng);
@@ -174,6 +181,7 @@ fn main() -> Result<()> {
     let Some(cmd) = args.first() else {
         eprintln!(
             "usage: llcg <run|datasets|partition|repro-*> [--flags]\n\
+             `llcg run --help` lists every config key\n\
              repro commands: {}",
             experiments::REPRO_COMMANDS.join(", ")
         );

@@ -1,0 +1,188 @@
+//! Integration tests for the `llcg::api` layer: builder validation against
+//! the registries, session/event streaming, sweep dataset+partition reuse
+//! (bit-parity with standalone runs), and the single-source config schema.
+
+use std::sync::Arc;
+
+use llcg::api::{keys, registry, Event, ExperimentBuilder, Sweep};
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::graph::generators;
+use llcg::runtime::Runtime;
+
+/// Native-backend runtime (fast, no artifacts needed; manifest generated
+/// under `target/`).
+fn native_rt() -> Runtime {
+    let (rt, _dir) =
+        Runtime::load_or_native("target/native-artifacts").expect("native runtime");
+    assert_eq!(rt.backend_name(), "native");
+    rt
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.arch = "gcn".into();
+    cfg.algorithm = Algorithm::Llcg;
+    cfg.parts = 4;
+    cfg.rounds = 3;
+    cfg.schedule = Schedule::Fixed { k: 2 };
+    cfg.correction_steps = 1;
+    cfg.eval_every = 2;
+    cfg.eval_max_nodes = 64;
+    cfg.seed = 11;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// sweep reuse vs standalone runs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sweep_points_match_standalone_runs_bit_for_bit() {
+    // the sweep shares one loaded dataset + one partition assignment
+    // across its points; every point must still equal a from-scratch
+    // `run_experiment` exactly
+    let rt = native_rt();
+    let base = base_cfg();
+    let algos = ["psgd-pa", "llcg"];
+    let results = Sweep::over(&base, "algorithm", &algos)
+        .run(&rt, |_i, _exp, _res| {})
+        .unwrap();
+    assert_eq!(results.len(), algos.len());
+    for (i, alg) in algos.iter().enumerate() {
+        let mut cfg = base.clone();
+        cfg.apply_override("algorithm", alg).unwrap();
+        let ds = generators::by_name(&cfg.dataset, cfg.seed).unwrap();
+        let direct = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+        assert_eq!(direct.records.len(), results[i].records.len(), "{alg}");
+        for (ra, rb) in direct.records.iter().zip(&results[i].records) {
+            assert_eq!(
+                ra.local_loss.to_bits(),
+                rb.local_loss.to_bits(),
+                "{alg} round {}",
+                ra.round
+            );
+            assert_eq!(ra.val_score.to_bits(), rb.val_score.to_bits(), "{alg}");
+            assert_eq!(ra.comm.total(), rb.comm.total(), "{alg}");
+        }
+        assert_eq!(direct.final_val.to_bits(), results[i].final_val.to_bits());
+        assert_eq!(direct.final_test.to_bits(), results[i].final_test.to_bits());
+        assert_eq!(direct.cut_ratio.to_bits(), results[i].cut_ratio.to_bits());
+    }
+}
+
+#[test]
+fn sweep_cross_covers_the_grid_in_order() {
+    let rt = native_rt();
+    let mut base = base_cfg();
+    base.rounds = 1;
+    base.eval_every = 1;
+    let sweep = Sweep::over(&base, "parts", &[2usize, 4]).cross("local_steps", &[1usize, 2]);
+    assert_eq!(sweep.len(), 4);
+    let mut seen = Vec::new();
+    sweep
+        .run(&rt, |i, exp, res| {
+            seen.push((i, exp.config().parts, res.records[0].local_steps));
+        })
+        .unwrap();
+    assert_eq!(seen, vec![(0, 2, 1), (1, 2, 2), (2, 4, 1), (3, 4, 2)]);
+}
+
+// ---------------------------------------------------------------------------
+// session API shape
+// ---------------------------------------------------------------------------
+
+#[test]
+fn event_stream_is_ordered_and_complete() {
+    let rt = native_rt();
+    let exp = ExperimentBuilder::from_config(base_cfg()).build().unwrap();
+    let mut kinds: Vec<&'static str> = Vec::new();
+    let mut last_round = 0usize;
+    let result = exp
+        .launch(&rt)
+        .stream(|ev| {
+            kinds.push(ev.kind());
+            if let Event::RoundCompleted(r) = ev {
+                assert_eq!(r.round, last_round + 1, "rounds complete in order");
+                last_round = r.round;
+            }
+        })
+        .unwrap();
+    assert_eq!(last_round, 3);
+    assert_eq!(result.records.len(), 3);
+    assert_eq!(kinds.first(), Some(&"round_started"));
+    assert_eq!(kinds.last(), Some(&"finished"));
+    assert_eq!(
+        kinds.iter().filter(|&&k| k == "round_completed").count(),
+        3
+    );
+    // llcg corrects every round; eval fires on rounds 2 and 3 (cadence +
+    // final round)
+    assert_eq!(
+        kinds.iter().filter(|&&k| k == "correction_applied").count(),
+        3
+    );
+    assert_eq!(
+        kinds.iter().filter(|&&k| k == "eval_completed").count(),
+        2
+    );
+}
+
+#[test]
+fn run_experiment_wrapper_matches_the_session_api() {
+    // the legacy entry point is a thin wrapper over the session machinery
+    // and must produce identical numbers
+    let rt = native_rt();
+    let cfg = base_cfg();
+    let ds = generators::by_name(&cfg.dataset, cfg.seed).unwrap();
+    let legacy = driver::run_experiment(&cfg, &ds, &rt).unwrap();
+    let session = ExperimentBuilder::from_config(cfg)
+        .with_dataset(Arc::new(ds))
+        .build()
+        .unwrap()
+        .launch(&rt)
+        .finish()
+        .unwrap();
+    assert_eq!(legacy.final_val.to_bits(), session.final_val.to_bits());
+    assert_eq!(legacy.final_test.to_bits(), session.final_test.to_bits());
+    for (ra, rb) in legacy.records.iter().zip(&session.records) {
+        assert_eq!(ra.local_loss.to_bits(), rb.local_loss.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// schema-driven CLI surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn schema_covers_every_config_knob_and_help_lists_them() {
+    // typo'd keys name the full table; the help text is generated from it
+    let mut cfg = ExperimentConfig::default();
+    let err = cfg.apply_override("foo", "bar").unwrap_err();
+    for name in keys::key_names() {
+        assert!(err.contains(name), "unknown-key error misses {name}");
+        assert!(
+            keys::help_table().contains(&name.replace('_', "-")),
+            "help table misses {name}"
+        );
+    }
+    // strict booleans on the CLI path (satellite: no silent false)
+    assert!(cfg.apply_override("correction_full_neighbors", "TRUE").is_err());
+    assert!(cfg.apply_override("correction-full-neighbors", "1").is_ok());
+    assert!(cfg.correction_full_neighbors);
+}
+
+#[test]
+fn builder_rejects_unknown_names_with_registry_lists() {
+    let err = ExperimentBuilder::new()
+        .dataset("ogbn-papers100M")
+        .build()
+        .err()
+        .unwrap();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown dataset"), "{msg}");
+    for name in registry::with(|r| r.dataset_names()) {
+        assert!(msg.contains(&name), "error misses registered dataset {name}");
+    }
+}

@@ -1,10 +1,14 @@
-//! Cluster-engine tests: sync-mode bit parity with the sequential driver,
-//! bounded staleness, pipelined correction, queued-loss readback, and the
-//! modeled network's engine-independence.
+//! Cluster-engine tests: sync-mode bit parity with the sequential driver —
+//! over both `RunResult`s and the streamed `Event` sequences — bounded
+//! staleness, pipelined correction, `RunControl` early-stop, queued-loss
+//! readback, and the modeled network's engine-independence.
 //!
 //! Always runs against the native backend (the cluster engine requires it);
 //! the manifest is generated under `target/` if absent.
 
+use std::sync::Arc;
+
+use llcg::api::{Event, ExperimentBuilder};
 use llcg::cluster::{Engine, RoundMode};
 use llcg::config::ExperimentConfig;
 use llcg::coordinator::{driver, Algorithm, Schedule};
@@ -136,6 +140,120 @@ fn cluster_survives_empty_worker_shards() {
     let res = run_with(&cfg, &rt);
     assert_eq!(res.records.len(), 2);
     assert!(res.final_val.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// event-level parity + run control (session API)
+// ---------------------------------------------------------------------------
+
+/// Exact digest of an event: kind + full payload (float payloads by bits).
+fn event_summary(ev: &Event) -> String {
+    match ev {
+        Event::RoundStarted { round, local_steps } => {
+            format!("round_started r={round} k={local_steps}")
+        }
+        Event::CorrectionApplied { round, steps } => {
+            format!("correction_applied r={round} s={steps}")
+        }
+        Event::EvalCompleted {
+            round,
+            val_score,
+            global_loss,
+        } => format!(
+            "eval_completed r={round} val={:016x} loss={:016x}",
+            val_score.to_bits(),
+            global_loss.to_bits()
+        ),
+        Event::RoundCompleted(r) => format!(
+            "round_completed r={} k={} ll={:016x} gl={:016x} val={:016x} bytes={} cum={}",
+            r.round,
+            r.local_steps,
+            r.local_loss.to_bits(),
+            r.global_loss.to_bits(),
+            r.val_score.to_bits(),
+            r.comm.total(),
+            r.cum_bytes
+        ),
+        Event::Finished(res) => format!(
+            "finished rounds={} val={:016x} test={:016x}",
+            res.records.len(),
+            res.final_val.to_bits(),
+            res.final_test.to_bits()
+        ),
+    }
+}
+
+fn collect_events(rt: &Runtime, cfg: &ExperimentConfig) -> Vec<String> {
+    let ds = Arc::new(generators::by_name(&cfg.dataset, cfg.seed).unwrap());
+    let exp = ExperimentBuilder::from_config(cfg.clone())
+        .with_dataset(ds)
+        .build()
+        .unwrap();
+    let mut evs = Vec::new();
+    exp.launch(rt)
+        .stream(|ev| evs.push(event_summary(ev)))
+        .unwrap();
+    evs
+}
+
+#[test]
+fn engines_emit_identical_sync_event_streams() {
+    let rt = native_rt();
+    let mut seq_cfg = base_cfg();
+    seq_cfg.net = "lan".into();
+    let mut clu_cfg = seq_cfg.clone();
+    clu_cfg.engine = Engine::Cluster;
+
+    let a = collect_events(&rt, &seq_cfg);
+    let b = collect_events(&rt, &clu_cfg);
+    assert_eq!(a, b, "sync-mode event streams must match kind-for-kind and bit-for-bit");
+
+    // the stream has the documented shape: every round starts and
+    // completes, LLCG corrects every round, eval fires on the cadence,
+    // and the stream ends with `finished`
+    let count = |prefix: &str| a.iter().filter(|s| s.starts_with(prefix)).count();
+    assert_eq!(count("round_started"), seq_cfg.rounds);
+    assert_eq!(count("round_completed"), seq_cfg.rounds);
+    assert_eq!(count("correction_applied"), seq_cfg.rounds);
+    assert_eq!(count("eval_completed"), 2, "eval_every=2 over 4 rounds");
+    assert_eq!(count("finished"), 1);
+    assert!(a.last().unwrap().starts_with("finished"));
+}
+
+#[test]
+fn run_control_stops_at_the_next_round_boundary() {
+    let rt = native_rt();
+    for engine in [Engine::Sequential, Engine::Cluster] {
+        let mut cfg = base_cfg();
+        cfg.engine = engine;
+        cfg.rounds = 6;
+        let ds = Arc::new(generators::by_name(&cfg.dataset, cfg.seed).unwrap());
+        let exp = ExperimentBuilder::from_config(cfg)
+            .with_dataset(ds)
+            .build()
+            .unwrap();
+        let run = exp.launch(&rt);
+        let control = run.control();
+        assert!(!control.stop_requested());
+        let mut completed = 0usize;
+        let res = run
+            .stream(|ev| {
+                if matches!(ev, Event::RoundCompleted(_)) {
+                    completed += 1;
+                    if completed == 2 {
+                        control.stop();
+                    }
+                }
+            })
+            .unwrap();
+        // stopped after round 2: the result is well-formed but partial
+        assert_eq!(res.records.len(), 2, "{engine:?}");
+        assert_eq!(res.records.last().unwrap().round, 2, "{engine:?}");
+        assert_eq!(res.engine, engine.name());
+        assert!(res.final_val.is_finite(), "{engine:?}: eval ran at round 2");
+        assert!(res.final_test.is_finite(), "{engine:?}: final test still runs");
+        assert!(res.avg_round_bytes > 0.0, "{engine:?}");
+    }
 }
 
 // ---------------------------------------------------------------------------
