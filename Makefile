@@ -7,9 +7,12 @@
 #   make bench       perf benches; writes BENCH_<section>.json per section
 #   make bench-cluster  just the sequential-vs-threaded engine benches
 #                    (writes BENCH_cluster.json)
+#   make bench-kernels  just the kernel-layer benches: scalar vs tiled vs
+#                    tiled+pool at 1/2/4/8 threads, step latency per engine,
+#                    staged-vs-pinned block upload (writes BENCH_kernels.json)
 #   make test        quick test run
 
-.PHONY: artifacts check fmt test bench bench-cluster clean
+.PHONY: artifacts check fmt test bench bench-cluster bench-kernels clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -30,6 +33,9 @@ bench:
 
 bench-cluster:
 	cargo bench -- cluster
+
+bench-kernels:
+	cargo bench -- kernels
 
 clean:
 	cargo clean

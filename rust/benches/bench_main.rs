@@ -13,6 +13,10 @@
 //!   runtime-resident   train/eval step on device-resident state
 //!   round              end-to-end round latency (Fig 1 speedup source)
 //!   comm               parameter averaging
+//!   kernels            scalar vs tiled vs tiled+pool kernels at 1/2/4/8
+//!                      threads, whole-step latency per engine, and
+//!                      staged-vs-pinned block-input upload
+//!                      (`make bench-kernels` -> BENCH_kernels.json)
 //!
 //! Filter with `cargo bench -- <substring>`. On exit every section is also
 //! written as machine-readable `BENCH_<section>.json` (mean/p50/p99 per
@@ -246,13 +250,13 @@ fn main() {
                             );
                         },
                     );
-                    let devp = rt.upload_params(&eval_name, &state.params).unwrap();
+                    let mut devp = rt.upload_params(&eval_name, &state.params).unwrap();
                     b.run(
                         &format!("runtime-resident/eval-step({arch},{ds_name})"),
                         2,
                         iters,
                         || {
-                            std::hint::black_box(rt.eval_step_device(&devp, &blk).unwrap());
+                            std::hint::black_box(rt.eval_step_device(&mut devp, &blk).unwrap());
                         },
                     );
                 }
@@ -309,6 +313,164 @@ fn main() {
         ModelState::average_params_into(&mut acc, &refs);
         std::hint::black_box(&acc);
     });
+
+    // ---- kernels: scalar vs tiled vs tiled+pool ------------------------------
+    // Raw kernel shapes from the reddit-s sage hot path (n1=256, d=h=64,
+    // n2=2048, band f2=8), then whole-step latency under each kernel engine,
+    // then the staged-vs-pinned block-input upload. All variants produce
+    // bit-identical results; only the clock differs.
+    if b.enabled("kernels/") {
+        use llcg::runtime::kernels::{self, KernelCtx};
+
+        let mut krng = Pcg64::new(7);
+        let dense = |rng: &mut Pcg64, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+        };
+        let threads: &[usize] = &[1, 2, 4, 8];
+
+        // dense matmul: agg2 @ w1 shape (256x64 @ 64x64)
+        let (m, k, n) = (256usize, 64usize, 64usize);
+        let a = dense(&mut krng, m * k);
+        let w = dense(&mut krng, k * n);
+        let mut out = vec![0.0f32; m * n];
+        b.run("kernels/matmul(256x64x64)-scalar", 3, 60, || {
+            kernels::matmul_ref(&a, &w, &mut out, m, k, n);
+            std::hint::black_box(&out);
+        });
+        for &t in threads {
+            let kc = KernelCtx::new(t);
+            b.run(&format!("kernels/matmul(256x64x64)-tiled(t={t})"), 3, 60, || {
+                kernels::matmul(&kc, &a, &w, &mut out, m, k, n);
+                std::hint::black_box(&out);
+            });
+        }
+
+        // gradient matmul: xᵀ @ dh reduction over 256 rows into 64x64
+        let g = dense(&mut krng, m * n);
+        let mut wgrad = vec![0.0f32; k * n];
+        b.run("kernels/matmul_at_b(256x64x64)-scalar", 3, 60, || {
+            kernels::matmul_at_b_ref(&a, &g, &mut wgrad, m, k, n, false);
+            std::hint::black_box(&wgrad);
+        });
+        for &t in threads {
+            let kc = KernelCtx::new(t);
+            b.run(
+                &format!("kernels/matmul_at_b(256x64x64)-tiled(t={t})"),
+                3,
+                60,
+                || {
+                    kernels::matmul_at_b(&kc, &a, &g, &mut wgrad, m, k, n, false);
+                    std::hint::black_box(&wgrad);
+                },
+            );
+        }
+
+        // banded aggregation: A2 @ x2 at reddit-s shape (256x2048, band 8)
+        let (bm, bband) = (256usize, 8usize);
+        let bk = bm * bband;
+        let mut a2 = vec![0.0f32; bm * bk];
+        for i in 0..bm {
+            for s in 0..bband {
+                a2[i * bk + i * bband + s] = 1.0 / bband as f32;
+            }
+        }
+        let x2 = dense(&mut krng, bk * 64);
+        let mut agg = vec![0.0f32; bm * 64];
+        b.run("kernels/aggregate(256x2048,band=8)-scalar", 3, 30, || {
+            kernels::matmul_ref(&a2, &x2, &mut agg, bm, bk, 64);
+            std::hint::black_box(&agg);
+        });
+        for &t in threads {
+            let kc = KernelCtx::new(t);
+            b.run(
+                &format!("kernels/aggregate(256x2048,band=8)-banded(t={t})"),
+                3,
+                30,
+                || {
+                    kernels::matmul_banded(&kc, &a2, &x2, &mut agg, bm, bk, 64, bband);
+                    std::hint::black_box(&agg);
+                },
+            );
+        }
+
+        // whole-step latency under each kernel engine (the acceptance row:
+        // tiled+pooled vs scalar on the same device-resident sage step)
+        match Runtime::load_or_native("artifacts") {
+            Err(e) => eprintln!("(no runtime — skipping kernel step benches: {e:#})"),
+            Ok((rt, _adir)) => {
+                let train_name = Runtime::train_name("sage", "adam", "reddit-s");
+                if rt.backend_name() != "native" {
+                    eprintln!("(kernel step benches need the native backend — skipped)");
+                } else if rt.meta(&train_name).is_ok() && rt.warmup(&train_name).is_ok() {
+                    let data = generators::by_name("reddit-s", 0).unwrap();
+                    let meta = rt.meta(&train_name).unwrap().clone();
+                    let mut rng = Pcg64::new(9);
+                    let state = ModelState::init(&meta, &mut rng);
+                    let sbb = BlockBuilder::new(
+                        meta.dims.b,
+                        meta.dims.f1,
+                        meta.dims.f2,
+                        meta.dims.d,
+                        meta.dims.c,
+                        meta.multilabel(),
+                    );
+                    let batch =
+                        rng.sample_without_replacement(&data.splits.train, meta.dims.b);
+                    let blk = sbb.build(&batch, &data.graph, &data, &mut rng);
+
+                    rt.set_kernel_scalar(true);
+                    let mut dev = rt.upload(&train_name, &state).unwrap();
+                    let scalar_row = "kernels/train-step(sage,reddit-s)-scalar";
+                    b.run(scalar_row, 2, 20, || {
+                        std::hint::black_box(
+                            rt.train_step_device(&mut dev, &blk, 0.01).unwrap(),
+                        );
+                    });
+                    rt.set_kernel_scalar(false);
+                    let mut best: Option<(usize, f64)> = None;
+                    for &t in threads {
+                        rt.set_kernel_threads(t);
+                        let row = format!("kernels/train-step(sage,reddit-s)-tiled(t={t})");
+                        b.run(&row, 2, 20, || {
+                            std::hint::black_box(
+                                rt.train_step_device(&mut dev, &blk, 0.01).unwrap(),
+                            );
+                        });
+                        if let Some(mean) = b.mean_of(&row) {
+                            if best.map(|(_, m)| mean < m).unwrap_or(true) {
+                                best = Some((t, mean));
+                            }
+                        }
+                    }
+                    if let (Some(scalar), Some((t, tiled))) = (b.mean_of(scalar_row), best) {
+                        println!(
+                            "  -> tiled+pool step speedup vs scalar: {:.2}x (best t={t})",
+                            scalar / tiled
+                        );
+                    }
+
+                    // block-input staging: fresh literals vs pinned overwrite
+                    b.run("kernels/block-upload-staged(reddit-s)", 3, 60, || {
+                        std::hint::black_box(
+                            llcg::runtime::fresh_block_literals(meta.multilabel(), true, &blk)
+                                .unwrap(),
+                        );
+                    });
+                    let mut pinned = llcg::runtime::BlockLits::new();
+                    pinned.stage(meta.multilabel(), true, &blk).unwrap(); // allocate once
+                    b.run("kernels/block-upload-pinned(reddit-s)", 3, 60, || {
+                        std::hint::black_box(pinned.stage(meta.multilabel(), true, &blk).unwrap());
+                    });
+                    if let (Some(staged), Some(pin)) = (
+                        b.mean_of("kernels/block-upload-staged(reddit-s)"),
+                        b.mean_of("kernels/block-upload-pinned(reddit-s)"),
+                    ) {
+                        println!("  -> pinned block staging speedup: {:.2}x", staged / pin);
+                    }
+                }
+            }
+        }
+    }
 
     // ---- cluster: sequential vs threaded engine wall-clock -------------------
     // Measured end-to-end run time of the same LLCG workload under the

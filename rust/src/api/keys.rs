@@ -339,6 +339,17 @@ static KEYS: &[KeySpec] = &[
         show: |cfg| cfg.round_mode.name(),
     },
     KeySpec {
+        name: "kernel_threads",
+        kind: KeyKind::Num,
+        doc: "native kernel-pool lanes (0 = auto: all cores, or cores/P per cluster worker); \
+              results are bit-identical at any setting",
+        apply: |cfg, v| {
+            cfg.kernel_threads = req_count(v, "kernel_threads", 0)?;
+            Ok(())
+        },
+        show: |cfg| cfg.kernel_threads.to_string(),
+    },
+    KeySpec {
         name: "net",
         kind: KeyKind::Str,
         doc: "network model: ideal|lan|wan|lat=..,bw=..,jitter=..,scale=..",
@@ -439,7 +450,7 @@ mod tests {
         dedup.dedup();
         assert_eq!(names.len(), dedup.len(), "duplicate KeySpec rows");
         // one row per ExperimentConfig knob (schedule takes two)
-        assert_eq!(names.len(), 24);
+        assert_eq!(names.len(), 25);
     }
 
     #[test]
@@ -491,12 +502,15 @@ mod tests {
             ("local_steps", "0"),
             ("rounds", "-3"),
             ("seed", "1.5"),
+            ("kernel_threads", "2.5"),
+            ("kernel_threads", "-2"),
         ] {
             let err = apply_str(&mut cfg, k, bad).unwrap_err();
             assert!(err.contains("must be an integer"), "{k}={bad}: {err}");
         }
         apply_str(&mut cfg, "rounds", "0").unwrap(); // rounds=0 is legal
         apply_str(&mut cfg, "eval_max_nodes", "0").unwrap(); // 0 = all
+        apply_str(&mut cfg, "kernel_threads", "0").unwrap(); // 0 = auto
     }
 
     #[test]

@@ -28,14 +28,28 @@ use crate::runtime::Runtime;
 // ---------------------------------------------------------------------------
 
 /// One step of a run's lifecycle, streamed to the consumer as it happens.
-/// Sync-mode sequence per round: `RoundStarted`, then (when the algorithm
-/// corrects) `CorrectionApplied`, then (on eval-cadence rounds)
+/// Sync-mode sequence per round: `RoundStarted`, then one
+/// `WorkerRoundCompleted` per worker (in part order), then (when the
+/// algorithm corrects) `CorrectionApplied`, then (on eval-cadence rounds)
 /// `EvalCompleted`, then `RoundCompleted`; the stream ends with `Finished`.
+/// Under the cluster engine's async mode, `WorkerRoundCompleted` fires in
+/// push-arrival order instead.
 #[derive(Clone, Debug)]
 pub enum Event {
     RoundStarted {
         round: usize,
         local_steps: usize,
+    },
+    /// One worker finished its local round. `compute_s` is the measured
+    /// wall time of the worker's round (including any injected network
+    /// sleeps); `net_s` is the modeled link time. Identity (`round`,
+    /// `part`) is engine-independent; the times are measurements and are
+    /// not part of the sync-mode bit-parity contract.
+    WorkerRoundCompleted {
+        round: usize,
+        part: u32,
+        compute_s: f64,
+        net_s: f64,
     },
     CorrectionApplied {
         round: usize,
@@ -54,6 +68,7 @@ impl Event {
     pub fn kind(&self) -> &'static str {
         match self {
             Event::RoundStarted { .. } => "round_started",
+            Event::WorkerRoundCompleted { .. } => "worker_round_completed",
             Event::CorrectionApplied { .. } => "correction_applied",
             Event::EvalCompleted { .. } => "eval_completed",
             Event::RoundCompleted(_) => "round_completed",
@@ -235,6 +250,13 @@ impl ExperimentBuilder {
 
     pub fn net(mut self, spec: &str) -> Self {
         self.cfg.net = spec.to_string();
+        self
+    }
+
+    /// Native kernel-pool lanes (0 = auto); a pure performance knob —
+    /// results are bit-identical at any setting.
+    pub fn kernel_threads(mut self, threads: usize) -> Self {
+        self.cfg.kernel_threads = threads;
         self
     }
 

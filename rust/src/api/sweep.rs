@@ -87,6 +87,12 @@ impl Sweep {
         self.points.is_empty()
     }
 
+    /// The `(key, value)` overrides of point `i`, in application order —
+    /// e.g. for labeling per-point rows in the `llcg sweep` table.
+    pub fn patch(&self, i: usize) -> &[(String, String)] {
+        &self.points[i]
+    }
+
     /// Resolve point `i`'s full config (base + patch).
     pub fn config(&self, i: usize) -> Result<ExperimentConfig> {
         let mut cfg = self.base.clone();

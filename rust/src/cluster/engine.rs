@@ -78,6 +78,9 @@ struct WorkerSpec<'a> {
     train_name: String,
     builder: BlockBuilder,
     param_bytes: u64,
+    /// kernel-pool lanes for this worker's private runtime, sized so that
+    /// `P workers × T lanes` does not oversubscribe the host
+    kernel_threads: usize,
 }
 
 /// Worker thread body: build a private native `Runtime`, then serve
@@ -94,6 +97,7 @@ fn worker_main(spec: WorkerSpec<'_>, rx: Receiver<Down>, up: Sender<Up>, mut sta
             return;
         }
     };
+    rt.set_kernel_threads(spec.kernel_threads);
     let mut arena = BlockArena::new();
     let mut scratch = NodeScratch::new();
     while let Ok(msg) = rx.recv() {
@@ -166,6 +170,7 @@ fn correction_main(
     mut state: ModelState,
     builder: BlockBuilder,
     mut rng: Pcg64,
+    kernel_threads: usize,
 ) {
     let rt = match Runtime::load(&dir) {
         Ok(rt) => rt,
@@ -174,6 +179,9 @@ fn correction_main(
             return;
         }
     };
+    // the correction overlaps the workers' local epoch: budget it like one
+    // more worker so the host stays un-oversubscribed
+    rt.set_kernel_threads(kernel_threads);
     let mut arena = BlockArena::new();
     while let Ok(base) = req.recv() {
         let t0 = Instant::now();
@@ -245,6 +253,7 @@ fn spawn_workers<'scope, 'env>(
     builder: &BlockBuilder,
     param_bytes: u64,
     up_tx: &Sender<Up>,
+    kernel_threads: usize,
 ) -> Vec<Sender<Down>> {
     let mut down_txs = Vec::with_capacity(parts.len());
     for (info, state) in parts.iter().zip(workers) {
@@ -260,11 +269,25 @@ fn spawn_workers<'scope, 'env>(
             train_name: train_name.to_string(),
             builder: builder.clone(),
             param_bytes,
+            kernel_threads,
         };
         let up = up_tx.clone();
         s.spawn(move || worker_main(spec, drx, up, state));
     }
     down_txs
+}
+
+/// Kernel-pool lanes per compute thread: the explicit `kernel_threads`
+/// setting, or `host cores / concurrent` (min 1), where `concurrent` is the
+/// number of simultaneously-computing threads — `P` workers, plus the
+/// overlapped correction thread in pipelined mode — so the lanes never
+/// oversubscribe the host.
+fn worker_kernel_threads(cfg: &ExperimentConfig, concurrent: usize) -> usize {
+    if cfg.kernel_threads > 0 {
+        cfg.kernel_threads
+    } else {
+        (crate::runtime::pool::host_threads() / concurrent.max(1)).max(1)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -290,6 +313,14 @@ pub(crate) fn run_cluster(
     if cfg.parts == 0 || cfg.rounds == 0 {
         bail!("engine=cluster needs parts >= 1 and rounds >= 1");
     }
+    // In lock-step modes the server's averaging/eval runs while workers are
+    // idle, so its pool may use the whole host. Async mode overlaps server
+    // eval with worker compute — budget the server like one more concurrent
+    // worker there (explicit kernel_threads always wins).
+    rt.set_kernel_threads(match cfg.round_mode {
+        RoundMode::AsyncStaleness { .. } => worker_kernel_threads(cfg, cfg.parts + 1),
+        _ => cfg.kernel_threads,
+    });
     let setup = driver::setup_run(cfg, ds, rt, pre_assignment)?;
     match cfg.round_mode {
         RoundMode::Sync => run_rounds(cfg, ds, rt, setup, false, ctx),
@@ -333,6 +364,9 @@ fn run_rounds(
     let pipe_corr = pipelined && do_correct;
     let storage_sum: u64 = parts.iter().map(|p| p.storage_bytes).sum();
     let parts_n = parts.len();
+    // pipelined mode computes on P workers + the correction thread at once;
+    // budget the kernel lanes over all of them
+    let lanes = worker_kernel_threads(cfg, parts_n + usize::from(pipe_corr));
 
     std::thread::scope(|s| -> Result<RunResult> {
         let (up_tx, up_rx) = channel::<Up>();
@@ -349,6 +383,7 @@ fn run_rounds(
             &local_builder,
             param_bytes,
             &up_tx,
+            lanes,
         );
         drop(up_tx);
 
@@ -368,7 +403,9 @@ fn run_rounds(
             let assign: &[u32] = &assignment;
             let b = dims.b;
             s.spawn(move || {
-                correction_main(creq_rx, res, cdir, cname, cfg, ds, assign, b, st, cb, crng)
+                correction_main(
+                    creq_rx, res, cdir, cname, cfg, ds, assign, b, st, cb, crng, lanes,
+                )
             });
         }
         drop(cres_tx);
@@ -442,7 +479,9 @@ fn run_rounds(
                 }
             }
             // fold per-worker stats in part order (float sums must not
-            // depend on message arrival order — bit parity with sequential)
+            // depend on message arrival order — bit parity with sequential;
+            // worker events are emitted in the same part order so the
+            // sync-mode event stream matches the sequential engine's)
             let mut worker_time = 0f64;
             let mut net_time = 0f64;
             let mut loss_sum = 0f64;
@@ -452,6 +491,12 @@ fn run_rounds(
                 net_time = net_time.max(u.net_s);
                 loss_sum += u.loss_sum;
                 loss_n += u.loss_n;
+                ctx.emit(Event::WorkerRoundCompleted {
+                    round,
+                    part: u.part,
+                    compute_s: u.elapsed_s,
+                    net_s: u.net_s,
+                });
             }
 
             // ---- server: average (+ correct) + eval -----------------------
@@ -491,7 +536,6 @@ fn run_rounds(
                     ds,
                     cfg,
                     &local_builder,
-                    dims.c,
                     &mut eval_rng,
                     round,
                     ctx,
@@ -552,7 +596,6 @@ fn run_rounds(
             ds,
             cfg,
             &local_builder,
-            dims.c,
             &mut eval_rng,
             cut_ratio,
             records,
@@ -604,6 +647,9 @@ fn run_async(
             cfg.schedule.steps_for_round(round)
         }
     };
+    // the server's eval overlaps worker compute in async mode: both sides
+    // are budgeted as parts + 1 concurrent compute threads
+    let lanes = worker_kernel_threads(cfg, parts_n + 1);
 
     std::thread::scope(|s| -> Result<RunResult> {
         let (up_tx, up_rx) = channel::<Up>();
@@ -620,6 +666,7 @@ fn run_async(
             &local_builder,
             param_bytes,
             &up_tx,
+            lanes,
         );
         drop(up_tx);
 
@@ -681,6 +728,13 @@ fn run_async(
                     k_sum += k_for(u.round);
                     worker_time = worker_time.max(u.elapsed_s);
                     net_time = net_time.max(u.net_s);
+                    // async mode streams worker completions as they arrive
+                    ctx.emit(Event::WorkerRoundCompleted {
+                        round: u.round,
+                        part: u.part,
+                        compute_s: u.elapsed_s,
+                        net_s: u.net_s,
+                    });
                     // fold the push into the running average (weight 1/P)
                     let t_fold = Instant::now();
                     let alpha = 1.0 / parts_n as f32;
@@ -804,7 +858,6 @@ fn run_async(
             ds,
             cfg,
             &local_builder,
-            dims.c,
             &mut eval_rng,
             cut_ratio,
             records,

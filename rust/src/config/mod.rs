@@ -50,6 +50,10 @@ pub struct ExperimentConfig {
     /// modeled-network spec (`ideal` | `lan` | `wan` | `key=value,...`);
     /// validated at parse time, bound to the seed at engine start
     pub net: String,
+    /// native-kernel pool lanes per runtime (0 = auto: all host cores on
+    /// the sequential engine, `cores / P` per cluster worker); results are
+    /// bit-identical at any setting
+    pub kernel_threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -78,6 +82,7 @@ impl Default for ExperimentConfig {
             engine: Engine::Sequential,
             round_mode: RoundMode::Sync,
             net: "ideal".into(),
+            kernel_threads: 0,
         }
     }
 }

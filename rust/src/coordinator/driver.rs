@@ -270,6 +270,10 @@ fn correction_batch(
 /// graph); returns logits in `ids` order. Parameters are uploaded to the
 /// device once for the whole sweep and block buffers are arena-recycled
 /// across chunks.
+///
+/// This is the full-logits path, retained for ROC-AUC datasets (the rank
+/// statistic needs every score) and as the reference for
+/// [`eval_split`]'s device-side reductions.
 pub fn eval_logits(
     rt: &Runtime,
     eval_name: &str,
@@ -284,24 +288,104 @@ pub fn eval_logits(
     let mut full_builder = builder.clone();
     full_builder.fanout = Fanout::Full;
     full_builder.sample_ratio = 1.0;
-    let dev = rt.upload_params(eval_name, params)?;
+    let mut dev = rt.upload_params(eval_name, params)?;
     let mut arena = BlockArena::new();
     let mut logits = Vec::with_capacity(ids.len() * c);
     for chunk in ids.chunks(meta.dims.b) {
         let blk = full_builder.build_into(&mut arena, chunk, &ds.graph, ds, rng);
-        let out = rt.eval_step_device(&dev, blk)?;
+        let out = rt.eval_step_device(&mut dev, blk)?;
         logits.extend_from_slice(&out[..chunk.len() * c]);
     }
     Ok(logits)
 }
 
+/// The metric-selection rule, in one place: proteins-style datasets report
+/// ROC-AUC (paper Table 2), everything else micro-F1. Both [`score`] and
+/// [`eval_split`]'s fast-path gate consult this single predicate.
+pub fn scored_by_auc(ds: &Dataset) -> bool {
+    ds.name.starts_with("proteins")
+}
+
 /// Score = ROC-AUC for multilabel-AUC datasets (proteins), micro-F1 otherwise.
 pub fn score(ds: &Dataset, logits: &[f32], c: usize, ids: &[u32]) -> f64 {
-    if ds.name.starts_with("proteins") {
+    if scored_by_auc(ds) {
         metrics::roc_auc(logits, c, &ds.labels, ids)
     } else {
         metrics::micro_f1(logits, c, &ds.labels, ids)
     }
+}
+
+/// Evaluate `params` on `ids` without downloading logits: every chunk is
+/// reduced device-side by [`Runtime::eval_scores_device`] to per-row
+/// predictions + losses, and this function only folds those `O(b)` values.
+/// Returns `(score, mean_loss)` **bit-identical** to
+/// `score(eval_logits(..))` / `metrics::mean_loss(eval_logits(..))`: the
+/// reductions use the same formulas and the same id-order f64 accumulation.
+/// ROC-AUC datasets (and `c > 64`) fall back to the full-logits path;
+/// there, `need_score: false` (loss-only callers) skips the rank-statistic
+/// sort entirely and returns NaN for the score.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_split(
+    rt: &Runtime,
+    eval_name: &str,
+    params: &[Tensor],
+    ds: &Dataset,
+    ids: &[u32],
+    builder: &BlockBuilder,
+    rng: &mut Pcg64,
+    need_score: bool,
+) -> Result<(f64, f64)> {
+    let meta = rt.meta(eval_name)?.clone();
+    let c = meta.dims.c;
+    if scored_by_auc(ds) || c > 64 {
+        let logits = eval_logits(rt, eval_name, params, ds, ids, builder, rng)?;
+        let split_score = if need_score {
+            score(ds, &logits, c, ids)
+        } else {
+            f64::NAN
+        };
+        return Ok((split_score, metrics::mean_loss(&logits, c, &ds.labels, ids)));
+    }
+    let mut full_builder = builder.clone();
+    full_builder.fanout = Fanout::Full;
+    full_builder.sample_ratio = 1.0;
+    let mut dev = rt.upload_params(eval_name, params)?;
+    let mut arena = BlockArena::new();
+    let mut correct = 0usize;
+    let mut f1 = metrics::MicroF1::default();
+    let mut loss_total = 0f64;
+    for chunk in ids.chunks(meta.dims.b) {
+        let blk = full_builder.build_into(&mut arena, chunk, &ds.graph, ds, rng);
+        let s = rt.eval_scores_device(&mut dev, blk)?;
+        for (i, &v) in chunk.iter().enumerate() {
+            loss_total += s.loss[i];
+            match &ds.labels {
+                Labels::MultiClass(y) => {
+                    if s.pred[i] == y[v as usize] as u32 {
+                        correct += 1;
+                    }
+                }
+                Labels::MultiLabel { data, c: dc } => {
+                    for j in 0..c {
+                        let pred = ((s.pos_bits[i] >> j) & 1) == 1;
+                        let truth = data[v as usize * dc + j] > 0.5;
+                        f1.add(pred, truth);
+                    }
+                }
+            }
+        }
+    }
+    let n = ids.len();
+    let split_score = if n == 0 {
+        0.0
+    } else {
+        match &ds.labels {
+            Labels::MultiClass(_) => correct as f64 / n as f64,
+            Labels::MultiLabel { .. } => f1.value(),
+        }
+    };
+    let mean_loss = if n == 0 { 0.0 } else { loss_total / n as f64 };
+    Ok((split_score, mean_loss))
 }
 
 /// Everything both engines need, derived from `(cfg, ds, rt)` with one RNG
@@ -612,7 +696,6 @@ pub(crate) fn server_round_epilogue(
         ds,
         cfg,
         local_builder,
-        dims.c,
         eval_rng,
         round,
         ctx,
@@ -629,14 +712,13 @@ pub(crate) fn eval_if_due(
     ds: &Dataset,
     cfg: &ExperimentConfig,
     builder: &BlockBuilder,
-    c: usize,
     eval_rng: &mut Pcg64,
     round: usize,
     ctx: &mut RunCtx<'_>,
 ) -> Result<(f64, f64)> {
     if round % cfg.eval_every == 0 || round == cfg.rounds {
         let (val_score, global_loss) =
-            eval_round(rt, eval_name, global_params, ds, cfg, builder, c, eval_rng)?;
+            eval_round(rt, eval_name, global_params, ds, cfg, builder, eval_rng)?;
         ctx.emit(Event::EvalCompleted {
             round,
             val_score,
@@ -658,7 +740,6 @@ pub(crate) fn eval_round(
     ds: &Dataset,
     cfg: &ExperimentConfig,
     builder: &BlockBuilder,
-    c: usize,
     eval_rng: &mut Pcg64,
 ) -> Result<(f64, f64)> {
     let val_ids: Vec<u32> = if cfg.eval_max_nodes > 0 && ds.splits.val.len() > cfg.eval_max_nodes
@@ -667,8 +748,16 @@ pub(crate) fn eval_round(
     } else {
         ds.splits.val.clone()
     };
-    let logits = eval_logits(rt, eval_name, global_params, ds, &val_ids, builder, eval_rng)?;
-    let val_score = score(ds, &logits, c, &val_ids);
+    let (val_score, _) = eval_split(
+        rt,
+        eval_name,
+        global_params,
+        ds,
+        &val_ids,
+        builder,
+        eval_rng,
+        true,
+    )?;
 
     let train_sample: Vec<u32> =
         if cfg.eval_max_nodes > 0 && ds.splits.train.len() > cfg.eval_max_nodes {
@@ -676,7 +765,7 @@ pub(crate) fn eval_round(
         } else {
             ds.splits.train.clone()
         };
-    let tr_logits = eval_logits(
+    let (_, global_loss) = eval_split(
         rt,
         eval_name,
         global_params,
@@ -684,8 +773,8 @@ pub(crate) fn eval_round(
         &train_sample,
         builder,
         eval_rng,
+        false, // loss-only: skip the score (AUC fallback sorts are wasted)
     )?;
-    let global_loss = metrics::mean_loss(&tr_logits, c, &ds.labels, &train_sample);
     Ok((val_score, global_loss))
 }
 
@@ -698,7 +787,6 @@ pub(crate) fn final_test_score(
     ds: &Dataset,
     cfg: &ExperimentConfig,
     builder: &BlockBuilder,
-    c: usize,
     eval_rng: &mut Pcg64,
 ) -> Result<f64> {
     let test_ids: Vec<u32> =
@@ -710,8 +798,17 @@ pub(crate) fn final_test_score(
     if test_ids.is_empty() {
         return Ok(f64::NAN);
     }
-    let logits = eval_logits(rt, eval_name, global_params, ds, &test_ids, builder, eval_rng)?;
-    Ok(score(ds, &logits, c, &test_ids))
+    let (test_score, _) = eval_split(
+        rt,
+        eval_name,
+        global_params,
+        ds,
+        &test_ids,
+        builder,
+        eval_rng,
+        true,
+    )?;
+    Ok(test_score)
 }
 
 /// Last non-NaN validation score + avg bytes/round over `records`.
@@ -747,7 +844,6 @@ pub(crate) fn finish_run(
     ds: &Dataset,
     cfg: &ExperimentConfig,
     builder: &BlockBuilder,
-    c: usize,
     eval_rng: &mut Pcg64,
     cut_ratio: f64,
     records: Vec<RoundRecord>,
@@ -755,7 +851,7 @@ pub(crate) fn finish_run(
     max_staleness: Option<u64>,
 ) -> Result<RunResult> {
     let final_test =
-        final_test_score(rt, eval_name, global_params, ds, cfg, builder, c, eval_rng)?;
+        final_test_score(rt, eval_name, global_params, ds, cfg, builder, eval_rng)?;
     let (final_val, avg_round_bytes) = summarize(&records);
     Ok(RunResult {
         algorithm: cfg.algorithm,
@@ -843,6 +939,9 @@ fn run_sequential(
         net: netm,
     } = setup_run(cfg, ds, rt, pre_assignment)?;
     let is_fullsync = cfg.algorithm == Algorithm::FullSync;
+    // workers run serially on this thread, so the kernel pool may use the
+    // whole host (0 = auto); results are bit-identical at any setting
+    rt.set_kernel_threads(cfg.kernel_threads);
 
     let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
     // one-time storage bytes ride round 1's comm, so the cumulative counter
@@ -905,6 +1004,12 @@ fn run_sequential(
             local_loss_n += out.loss_n;
             worker_time = worker_time.max(out.elapsed_s);
             net_time = net_time.max(out.net_s);
+            ctx.emit(Event::WorkerRoundCompleted {
+                round,
+                part: info.part,
+                compute_s: out.elapsed_s,
+                net_s: out.net_s,
+            });
         }
 
         // ---- server: average + correct + eval -----------------------------
@@ -961,7 +1066,6 @@ fn run_sequential(
         ds,
         cfg,
         &local_builder,
-        dims.c,
         &mut eval_rng,
         cut_ratio,
         records,

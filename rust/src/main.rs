@@ -4,6 +4,12 @@
 //!   run [--config file.json] [--key=value ...]   one distributed run
 //!       `llcg run --help` prints the full config-key table (generated
 //!       from the single-source schema in `api::keys`)
+//!   sweep --sweep key=v1,v2[,...] [...]          config-grid sweep: the first
+//!                                                --sweep axis spans the grid,
+//!                                                further --sweep axes cross it;
+//!                                                all other flags form the base
+//!                                                config; prints one summary row
+//!                                                per point
 //!   datasets                                     registry listing + Table-2 stats
 //!   partition --dataset D --parts P              partitioner comparison
 //!   repro-<exp>                                  regenerate a paper table/figure
@@ -19,7 +25,8 @@
 
 use anyhow::{bail, Result};
 
-use llcg::api::{keys, registry, ExperimentBuilder, TablePrinter};
+use llcg::api::{keys, registry, ExperimentBuilder, Sweep, TablePrinter};
+use llcg::util::Json;
 use llcg::config::ExperimentConfig;
 use llcg::coordinator::driver;
 use llcg::experiments;
@@ -49,7 +56,11 @@ fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
     Ok(out)
 }
 
-fn build_config(flags: &[(String, String)]) -> Result<ExperimentConfig> {
+/// Fold `--config` + `--key=value` flags into a config. `skip` names the
+/// subcommand's own structural flags (e.g. `sweep`); anything else unknown
+/// still fails loudly through the key schema — `llcg run --sweep ...` is an
+/// error, not a silently ignored axis.
+fn build_config(flags: &[(String, String)], skip: &[&str]) -> Result<ExperimentConfig> {
     let mut cfg = ExperimentConfig::default();
     for (k, v) in flags {
         if k == "config" {
@@ -57,7 +68,7 @@ fn build_config(flags: &[(String, String)]) -> Result<ExperimentConfig> {
         }
     }
     for (k, v) in flags {
-        if k == "config" || k == "out" {
+        if k == "config" || k == "out" || skip.contains(&k.as_str()) {
             continue;
         }
         cfg.apply_override(k, v).map_err(|e| anyhow::anyhow!(e))?;
@@ -81,7 +92,7 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
         run_help();
         return Ok(());
     }
-    let cfg = build_config(flags)?;
+    let cfg = build_config(flags, &[])?;
     let (rt, _adir) = Runtime::load_or_native(&cfg.artifacts_dir)?;
     let exp = ExperimentBuilder::from_config(cfg).build()?;
     let cfg = exp.config();
@@ -126,6 +137,80 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
                 std::path::Path::new(v).parent().unwrap_or(std::path::Path::new(".")),
             )?;
             std::fs::write(v, result.to_json().to_string_pretty())?;
+            eprintln!("wrote {v}");
+        }
+    }
+    Ok(())
+}
+
+/// `llcg sweep --sweep key=v1,v2[,...] [--sweep key2=...] [base flags]` —
+/// the ROADMAP axis grammar straight to `Sweep::over`/`cross`, with one
+/// summary row per point. Dataset + partition are loaded once and shared
+/// across points (the sweep layer's caches).
+fn cmd_sweep(flags: &[(String, String)]) -> Result<()> {
+    let mut axes: Vec<(String, Vec<String>)> = Vec::new();
+    for (k, v) in flags {
+        if k != "sweep" {
+            continue;
+        }
+        let (axis, values) = v.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("--sweep wants key=v1,v2,... (got {v:?})")
+        })?;
+        let values: Vec<String> = values.split(',').map(str::to_string).collect();
+        if axis.is_empty() || values.iter().any(String::is_empty) {
+            bail!("--sweep wants key=v1,v2,... (got {v:?})");
+        }
+        axes.push((axis.to_string(), values));
+    }
+    if axes.is_empty() {
+        bail!(
+            "usage: llcg sweep --sweep key=v1,v2[,...] [--sweep key2=...] \
+             [--config file.json] [--key=value ...] [--out results.json]"
+        );
+    }
+    let base = build_config(flags, &["sweep"])?;
+    let mut sweep = Sweep::over(&base, &axes[0].0, &axes[0].1);
+    for (axis, values) in &axes[1..] {
+        sweep = sweep.cross(axis, values);
+    }
+    // validate every point's config up front so a typo fails fast
+    for i in 0..sweep.len() {
+        sweep.config(i).map_err(|e| anyhow::anyhow!("point {i}: {e:#}"))?;
+    }
+    let (rt, adir) = Runtime::load_or_native(&base.artifacts_dir)?;
+    eprintln!(
+        "sweep: {} points on {} (backend={}, artifacts: {adir})",
+        sweep.len(),
+        base.dataset,
+        rt.backend_name()
+    );
+    println!(
+        "{:<36} {:>9} {:>9} {:>12} {:>9}",
+        "point", "final_val", "final_test", "avg_round_MB", "wall_s"
+    );
+    let results = sweep.run(&rt, |i, _exp, res| {
+        let label: Vec<String> = sweep
+            .patch(i)
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        let wall: f64 = res.records.iter().map(|r| r.wall_time_s).sum();
+        println!(
+            "{:<36} {:>9.4} {:>9.4} {:>12.3} {:>9.3}",
+            label.join(" "),
+            res.final_val,
+            res.final_test,
+            res.avg_round_mb(),
+            wall
+        );
+    })?;
+    for (k, v) in flags {
+        if k == "out" {
+            std::fs::create_dir_all(
+                std::path::Path::new(v).parent().unwrap_or(std::path::Path::new(".")),
+            )?;
+            let j = Json::arr(results.iter().map(|r| r.to_json()).collect());
+            std::fs::write(v, j.to_string_pretty())?;
             eprintln!("wrote {v}");
         }
     }
@@ -180,8 +265,9 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
         eprintln!(
-            "usage: llcg <run|datasets|partition|repro-*> [--flags]\n\
+            "usage: llcg <run|sweep|datasets|partition|repro-*> [--flags]\n\
              `llcg run --help` lists every config key\n\
+             `llcg sweep --sweep key=v1,v2,...` runs a config grid\n\
              repro commands: {}",
             experiments::REPRO_COMMANDS.join(", ")
         );
@@ -190,6 +276,7 @@ fn main() -> Result<()> {
     let flags = parse_flags(&args[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(&flags),
+        "sweep" => cmd_sweep(&flags),
         "datasets" => cmd_datasets(),
         "partition" => cmd_partition(&flags),
         other => {

@@ -25,23 +25,15 @@ pub fn micro_f1(logits: &[f32], c: usize, labels: &Labels, ids: &[u32]) -> f64 {
         }
         Labels::MultiLabel { data, c: dc } => {
             assert_eq!(*dc, c);
-            let (mut tp, mut fp, mut fnn) = (0u64, 0u64, 0u64);
+            let mut acc = MicroF1::default();
             for (i, &v) in ids.iter().enumerate() {
                 for j in 0..c {
                     let pred = logits[i * c + j] > 0.0;
                     let truth = data[v as usize * c + j] > 0.5;
-                    match (pred, truth) {
-                        (true, true) => tp += 1,
-                        (true, false) => fp += 1,
-                        (false, true) => fnn += 1,
-                        _ => {}
-                    }
+                    acc.add(pred, truth);
                 }
             }
-            if 2 * tp + fp + fnn == 0 {
-                return 0.0;
-            }
-            (2 * tp) as f64 / (2 * tp + fp + fnn) as f64
+            acc.value()
         }
     }
 }
@@ -99,6 +91,60 @@ pub fn roc_auc(logits: &[f32], c: usize, labels: &Labels, ids: &[u32]) -> f64 {
     }
 }
 
+/// One row's softmax-CE in f64 via log-sum-exp — the single source of the
+/// row formula, shared by [`mean_loss`] and the device-side eval
+/// reductions (`Runtime::eval_scores_device`), so the two paths cannot
+/// drift apart bitwise.
+pub fn row_ce_loss(row: &[f32], target: usize) -> f64 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f64 = row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln() + m as f64;
+    lse - row[target] as f64
+}
+
+/// One row's mean sigmoid-BCE over classes in f64 — see [`row_ce_loss`]
+/// for the sharing contract. `yrow` holds the 0/1 targets for this row.
+pub fn row_bce_loss(row: &[f32], yrow: &[f32]) -> f64 {
+    debug_assert_eq!(row.len(), yrow.len());
+    let mut bce = 0f64;
+    for (&zf, &yf) in row.iter().zip(yrow) {
+        let z = zf as f64;
+        let y = yf as f64;
+        bce += z.max(0.0) - z * y + (1.0 + (-z.abs()).exp()).ln();
+    }
+    bce / row.len() as f64
+}
+
+/// tp/fp/fn accumulator behind multilabel micro-F1 — one counting and one
+/// final-ratio rule, shared by [`micro_f1`] and `driver::eval_split`'s
+/// device-side fold.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MicroF1 {
+    tp: u64,
+    fp: u64,
+    fnn: u64,
+}
+
+impl MicroF1 {
+    pub fn add(&mut self, pred: bool, truth: bool) {
+        match (pred, truth) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, true) => self.fnn += 1,
+            _ => {}
+        }
+    }
+
+    /// `2TP / (2TP + FP + FN)`, 0.0 when no positives were seen at all.
+    pub fn value(&self) -> f64 {
+        let denom = 2 * self.tp + self.fp + self.fnn;
+        if denom == 0 {
+            0.0
+        } else {
+            (2 * self.tp) as f64 / denom as f64
+        }
+    }
+}
+
 /// Masked mean loss from logits, matching `model.loss_fn` semantics
 /// (softmax-CE for multiclass, mean sigmoid-BCE for multilabel) — used for
 /// the "global training loss" curves (Fig 4 e/f).
@@ -112,22 +158,11 @@ pub fn mean_loss(logits: &[f32], c: usize, labels: &Labels, ids: &[u32]) -> f64 
         let row = &logits[i * c..(i + 1) * c];
         match labels {
             Labels::MultiClass(y) => {
-                let target = y[v as usize] as usize;
-                // log-sum-exp
-                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let lse: f64 =
-                    row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln()
-                        + m as f64;
-                total += lse - row[target] as f64;
+                total += row_ce_loss(row, y[v as usize] as usize);
             }
             Labels::MultiLabel { data, c: dc } => {
-                let mut bce = 0f64;
-                for j in 0..c {
-                    let z = row[j] as f64;
-                    let y = data[v as usize * *dc + j] as f64;
-                    bce += z.max(0.0) - z * y + (1.0 + (-z.abs()).exp()).ln();
-                }
-                total += bce / c as f64;
+                let yrow = &data[v as usize * dc..v as usize * dc + c];
+                total += row_bce_loss(row, yrow);
             }
         }
     }

@@ -1,0 +1,707 @@
+//! Tiled, multi-threaded compute kernels for the native backend.
+//!
+//! Every kernel here is **bit-identical** to its scalar reference (`*_ref`,
+//! the PR-1 single-threaded triple loops, kept verbatim below as the
+//! executable specification) at any thread count. The determinism contract:
+//!
+//! - **Row-partitioned parallelism.** Work is split by *disjoint contiguous
+//!   output-row ranges*; each output element is written by exactly one
+//!   thread. There are no parallel reductions and no atomics.
+//! - **Sequential inner accumulation.** Within one output element, the f32
+//!   additions happen in exactly the scalar kernel's order (ascending `k` /
+//!   ascending reduction row). Cache tiling only reorders *which element*
+//!   is advanced next, never the addition sequence *inside* an element.
+//! - **Identical zero-skipping.** The scalar kernels skip zero left-operand
+//!   entries (banded adjacency operators are mostly structural zeros); the
+//!   tiled kernels skip the same entries, so the executed FLOP sequence per
+//!   element matches term for term.
+//!
+//! Consequently the sync-mode bit-parity assertions between the sequential
+//! driver and the cluster engine hold at *any* `kernel_threads` setting —
+//! including mixed settings across engines (see `tests/kernels.rs`).
+//!
+//! On top of the three matmul shapes the layer adds:
+//!
+//! - **banded-adjacency kernels** ([`matmul_banded`], [`matmul_at_b_banded`])
+//!   for the sampler's block operators `A1`/`A2`, whose row `i` can only
+//!   hold non-zeros in the slot band `[i*f, (i+1)*f)` (see
+//!   `sampler::BlockBuilder`). The dense scalar kernel scans and skips every
+//!   structural zero; the banded kernels touch only the band — the same
+//!   O(nnz) work the Pallas aggregation kernels do on device — while
+//!   executing the identical addition sequence.
+//! - **fused epilogues** ([`linear`]): bias add + ReLU run inside the same
+//!   parallel row pass as the matmul, while the output rows are cache-hot.
+//!
+//! Dispatch: every public kernel takes a [`KernelCtx`]. `ctx.scalar()`
+//! forces the reference path (benchmark baseline, parity tests); otherwise
+//! the tiled body runs, engaging the [`ThreadPool`] only when the call is
+//! large enough to amortize the dispatch (two channel hops per worker).
+
+use std::sync::Arc;
+
+use super::pool::ThreadPool;
+
+/// Reduction-dimension tile: the `[K_TILE x n]` panel of the right operand
+/// stays cache-resident while a row range streams over it.
+const K_TILE: usize = 256;
+
+/// Minimum multiply-accumulate count before a kernel engages the pool;
+/// below this the dispatch overhead dominates and the call runs inline on
+/// the caller (still tiled). Tiny-dataset steps stay single-threaded.
+const MIN_PAR_FLOPS: usize = 1 << 14;
+
+/// Kernel execution context: the worker pool plus the scalar-fallback flag.
+/// Cheap to clone (the pool is shared).
+#[derive(Clone)]
+pub struct KernelCtx {
+    pool: Arc<ThreadPool>,
+    scalar: bool,
+}
+
+impl KernelCtx {
+    /// Context over a fresh pool of `threads` lanes (0 = host cores).
+    pub fn new(threads: usize) -> KernelCtx {
+        KernelCtx {
+            pool: Arc::new(ThreadPool::new(threads)),
+            scalar: false,
+        }
+    }
+
+    /// Context over an existing (shared) pool.
+    pub fn with_pool(pool: Arc<ThreadPool>, scalar: bool) -> KernelCtx {
+        KernelCtx { pool, scalar }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// True when the scalar reference kernels are forced.
+    pub fn scalar(&self) -> bool {
+        self.scalar
+    }
+}
+
+/// Output base pointer crossing into pool lanes; each lane derives its own
+/// disjoint row range from it.
+struct SendMut(*mut f32);
+// SAFETY: lanes write disjoint row ranges (see `par_rows`), and the borrow
+// outlives the pool dispatch, which blocks until every lane is done.
+unsafe impl Send for SendMut {}
+unsafe impl Sync for SendMut {}
+
+/// Run `body(lo, hi, out_rows)` over disjoint contiguous row ranges of
+/// `out` (`rows` rows of length `n`), on the pool when `flops` is large
+/// enough, inline otherwise. `out_rows` is exactly `out[lo*n .. hi*n]`.
+fn par_rows(
+    ctx: &KernelCtx,
+    out: &mut [f32],
+    rows: usize,
+    n: usize,
+    flops: usize,
+    body: impl Fn(usize, usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    let lanes = ctx.pool.threads().min(rows.max(1));
+    if lanes <= 1 || flops < MIN_PAR_FLOPS {
+        body(0, rows, out);
+        return;
+    }
+    let chunk = rows.div_ceil(lanes);
+    let base = SendMut(out.as_mut_ptr());
+    ctx.pool.run(&|lane| {
+        let lo = lane * chunk;
+        if lo >= rows {
+            return;
+        }
+        let hi = (lo + chunk).min(rows);
+        // SAFETY: [lo, hi) row ranges are disjoint across lanes and
+        // in-bounds; `ThreadPool::run` blocks until every lane returns,
+        // so the `out` borrow outlives all writes.
+        let out_rows =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(lo * n), (hi - lo) * n) };
+        body(lo, hi, out_rows);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference kernels (bit-exact specification; also the bench baseline)
+// ---------------------------------------------------------------------------
+
+/// `out[m,n] = a[m,k] @ b[k,n]`, skipping zero entries of `a` — the scalar
+/// reference every tiled kernel must reproduce bit-for-bit.
+pub fn matmul_ref(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,n] (+)= a[r,m]ᵀ @ b[r,n]`; zeroes `out` first unless `acc`
+/// (scalar reference).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at_b_ref(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    acc: bool,
+) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    debug_assert_eq!(out.len(), m * n);
+    if !acc {
+        out.fill(0.0);
+    }
+    for row in 0..r {
+        let arow = &a[row * m..(row + 1) * m];
+        let brow = &b[row * n..(row + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,n] = a[m,k] @ b[n,k]ᵀ` (row-by-row dot products; scalar
+/// reference).
+pub fn matmul_a_bt_ref(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            out[i * n + j] = s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// elementwise helpers (order-free; shared by both paths)
+// ---------------------------------------------------------------------------
+
+/// `out[r,n] += bias[n]` broadcast over rows.
+pub fn add_bias(out: &mut [f32], bias: &[f32], r: usize, n: usize) {
+    debug_assert_eq!(out.len(), r * n);
+    debug_assert_eq!(bias.len(), n);
+    for row in 0..r {
+        for (o, &bv) in out[row * n..(row + 1) * n].iter_mut().zip(bias) {
+            *o += bv;
+        }
+    }
+}
+
+pub fn relu_inplace(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// `dz = dh ⊙ (h > 0)` in place on `dh` (relu backward; `h` is post-act).
+pub fn relu_backward_inplace(dh: &mut [f32], h: &[f32]) {
+    for (d, &hv) in dh.iter_mut().zip(h) {
+        if hv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// `out[n] (+)= column sums of g[r,n]` — row-ascending accumulation; kept
+/// sequential (n is a class/hidden width here, far below the parallel
+/// threshold, and splitting rows would change the addition order).
+pub fn colsum(g: &[f32], out: &mut [f32], r: usize, n: usize, acc: bool) {
+    debug_assert_eq!(g.len(), r * n);
+    debug_assert_eq!(out.len(), n);
+    if !acc {
+        out.fill(0.0);
+    }
+    for row in 0..r {
+        for (o, &gv) in out.iter_mut().zip(&g[row * n..(row + 1) * n]) {
+            *o += gv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tiled + parallel kernels
+// ---------------------------------------------------------------------------
+
+/// Tiled body shared by [`matmul`] and [`linear`]: rows `[lo, hi)` of
+/// `a @ b`, k-tiled so the active `b` panel stays cache-resident. Per
+/// output element the additions run over ascending `k` (tiles ascending,
+/// ascending within a tile) — the scalar order.
+fn matmul_rows(a: &[f32], b: &[f32], out_rows: &mut [f32], lo: usize, hi: usize, k: usize, n: usize) {
+    out_rows.fill(0.0);
+    for k0 in (0..k).step_by(K_TILE) {
+        let k1 = (k0 + K_TILE).min(k);
+        for i in lo..hi {
+            let arow = &a[i * k + k0..i * k + k1];
+            let orow = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[(k0 + kk) * n..(k0 + kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n]` — tiled, parallel by output-row ranges;
+/// bit-identical to [`matmul_ref`] at any thread count.
+pub fn matmul(ctx: &KernelCtx, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if ctx.scalar {
+        return matmul_ref(a, b, out, m, k, n);
+    }
+    par_rows(ctx, out, m, n, m * k * n, |lo, hi, out_rows| {
+        matmul_rows(a, b, out_rows, lo, hi, k, n);
+    });
+}
+
+/// [`matmul`] for a banded left operand: row `i`'s non-zeros lie entirely in
+/// columns `[i*band, (i+1)*band)` (the block builder's slot-group bands, so
+/// `k == m * band`). Touches only the band — O(nnz) instead of an O(m·k)
+/// zero scan — and is bit-identical to [`matmul_ref`] on such operands: the
+/// skipped columns are structural zeros the dense kernel skips too, and the
+/// band is walked in the same ascending-`k` order.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_banded(
+    ctx: &KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    band: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    assert_eq!(m * band, k, "banded matmul: k must equal m * band");
+    if ctx.scalar {
+        return matmul_ref(a, b, out, m, k, n);
+    }
+    par_rows(ctx, out, m, n, m * band * n, |lo, hi, out_rows| {
+        for i in lo..hi {
+            let orow = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
+            orow.fill(0.0);
+            for kk in i * band..(i + 1) * band {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// `out[m,n] (+)= a[r,m]ᵀ @ b[r,n]` — parallel by output-row ranges. The
+/// reduction row loop stays ascending per element (r-tiles ascending,
+/// ascending within), so results match [`matmul_at_b_ref`] bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at_b(
+    ctx: &KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    acc: bool,
+) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    debug_assert_eq!(out.len(), m * n);
+    if ctx.scalar {
+        return matmul_at_b_ref(a, b, out, r, m, n, acc);
+    }
+    par_rows(ctx, out, m, n, r * m * n, |lo, hi, out_rows| {
+        if !acc {
+            out_rows.fill(0.0);
+        }
+        for r0 in (0..r).step_by(K_TILE) {
+            let r1 = (r0 + K_TILE).min(r);
+            for i in lo..hi {
+                let orow = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
+                for row in r0..r1 {
+                    let av = a[row * m + i];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[row * n..(row + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// [`matmul_at_b`] for a banded `a` (see [`matmul_banded`]; here
+/// `m == r * band`): output row `i` receives exactly one contribution,
+/// `a[i/band, i] * b[i/band, :]` — the backward pass of the slot-band
+/// aggregation. Bit-identical to [`matmul_at_b_ref`] on banded operands
+/// (every other reduction row holds a structural zero at column `i`).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at_b_banded(
+    ctx: &KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    band: usize,
+    acc: bool,
+) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    debug_assert_eq!(out.len(), m * n);
+    assert_eq!(r * band, m, "banded matmul_at_b: m must equal r * band");
+    if ctx.scalar {
+        return matmul_at_b_ref(a, b, out, r, m, n, acc);
+    }
+    par_rows(ctx, out, m, n, m * n, |lo, hi, out_rows| {
+        for i in lo..hi {
+            let orow = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
+            if !acc {
+                orow.fill(0.0);
+            }
+            let row = i / band;
+            let av = a[row * m + i];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[row * n..(row + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    });
+}
+
+/// `out[m,n] = a[m,k] @ b[n,k]ᵀ` — parallel by output rows; each element is
+/// one full-length sequential dot product, exactly as in
+/// [`matmul_a_bt_ref`].
+pub fn matmul_a_bt(
+    ctx: &KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    if ctx.scalar {
+        return matmul_a_bt_ref(a, b, out, m, k, n);
+    }
+    par_rows(ctx, out, m, n, m * k * n, |lo, hi, out_rows| {
+        for i in lo..hi {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut s = 0.0f32;
+                for (&x, &y) in arow.iter().zip(brow) {
+                    s += x * y;
+                }
+                *o = s;
+            }
+        }
+    });
+}
+
+/// `out = relu?(x @ w + bias?)` with the bias + ReLU epilogue fused into the
+/// same parallel row pass (the output rows are still cache-hot when the
+/// epilogue touches them). Elementwise epilogues are order-free, so this is
+/// bit-identical to matmul-then-bias-then-relu.
+#[allow(clippy::too_many_arguments)]
+pub fn linear(
+    ctx: &KernelCtx,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if ctx.scalar {
+        matmul_ref(x, w, out, m, k, n);
+        if let Some(bv) = bias {
+            add_bias(out, bv, m, n);
+        }
+        if relu {
+            relu_inplace(out);
+        }
+        return;
+    }
+    par_rows(ctx, out, m, n, m * k * n, |lo, hi, out_rows| {
+        matmul_rows(x, w, out_rows, lo, hi, k, n);
+        if let Some(bv) = bias {
+            add_bias(out_rows, bv, hi - lo, n);
+        }
+        if relu {
+            relu_inplace(out_rows);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// Dense random matrix with ~30% exact zeros (exercises zero-skipping).
+    fn mat(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                let v = rng.f32();
+                if v < 0.3 {
+                    0.0
+                } else {
+                    v * 2.0 - 1.0
+                }
+            })
+            .collect()
+    }
+
+    /// Banded matrix `[m x m*band]`: non-zeros only in row `i`'s band, with
+    /// some band entries zeroed (padding slots).
+    fn banded(rng: &mut Pcg64, m: usize, band: usize) -> Vec<f32> {
+        let k = m * band;
+        let mut a = vec![0.0f32; m * k];
+        for i in 0..m {
+            for s in 0..band {
+                let v = rng.f32();
+                if v > 0.25 {
+                    a[i * k + i * band + s] = v;
+                }
+            }
+        }
+        a
+    }
+
+    /// Shapes chosen odd / non-tile-aligned on purpose, including a k that
+    /// crosses the K_TILE boundary.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (7, 13, 5),
+        (8, 300, 17), // k crosses K_TILE = 256
+        (33, 64, 3),
+        (256, 64, 64),
+    ];
+
+    const THREADS: &[usize] = &[1, 2, 7];
+
+    #[test]
+    fn matmul_matches_ref_bitwise() {
+        for &(m, k, n) in SHAPES {
+            let mut rng = Pcg64::new(1);
+            let a = mat(&mut rng, m * k);
+            let b = mat(&mut rng, k * n);
+            let mut want = vec![0.0f32; m * n];
+            matmul_ref(&a, &b, &mut want, m, k, n);
+            for &t in THREADS {
+                let ctx = KernelCtx::new(t);
+                let mut got = vec![f32::NAN; m * n];
+                matmul(&ctx, &a, &b, &mut got, m, k, n);
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "matmul ({m},{k},{n}) t={t} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_at_b_matches_ref_bitwise() {
+        for &(r, m, n) in SHAPES {
+            let mut rng = Pcg64::new(2);
+            let a = mat(&mut rng, r * m);
+            let b = mat(&mut rng, r * n);
+            for acc in [false, true] {
+                let mut want = mat(&mut rng, m * n);
+                let base = want.clone();
+                matmul_at_b_ref(&a, &b, &mut want, r, m, n, acc);
+                for &t in THREADS {
+                    let ctx = KernelCtx::new(t);
+                    let mut got = base.clone();
+                    matmul_at_b(&ctx, &a, &b, &mut got, r, m, n, acc);
+                    assert_eq!(
+                        bits(&want),
+                        bits(&got),
+                        "at_b ({r},{m},{n}) acc={acc} t={t} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_a_bt_matches_ref_bitwise() {
+        for &(m, k, n) in SHAPES {
+            let mut rng = Pcg64::new(3);
+            let a = mat(&mut rng, m * k);
+            let b = mat(&mut rng, n * k);
+            let mut want = vec![0.0f32; m * n];
+            matmul_a_bt_ref(&a, &b, &mut want, m, k, n);
+            for &t in THREADS {
+                let ctx = KernelCtx::new(t);
+                let mut got = vec![f32::NAN; m * n];
+                matmul_a_bt(&ctx, &a, &b, &mut got, m, k, n);
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "a_bt ({m},{k},{n}) t={t} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn banded_kernels_match_dense_ref_bitwise() {
+        // (m, band, n) with odd values; k = m * band
+        for &(m, band, n) in &[(1usize, 1usize, 1usize), (7, 3, 5), (32, 8, 64), (33, 9, 17)] {
+            let k = m * band;
+            let mut rng = Pcg64::new(4);
+            let a = banded(&mut rng, m, band);
+            let b = mat(&mut rng, k * n);
+            let mut want = vec![0.0f32; m * n];
+            matmul_ref(&a, &b, &mut want, m, k, n);
+            for &t in THREADS {
+                let ctx = KernelCtx::new(t);
+                let mut got = vec![f32::NAN; m * n];
+                matmul_banded(&ctx, &a, &b, &mut got, m, k, n, band);
+                assert_eq!(bits(&want), bits(&got), "banded ({m},{band},{n}) t={t}");
+            }
+
+            // transposed: out is [k x n], reduction over the m rows
+            let bt = mat(&mut rng, m * n);
+            for acc in [false, true] {
+                let mut want_t = mat(&mut rng, k * n);
+                let base = want_t.clone();
+                matmul_at_b_ref(&a, &bt, &mut want_t, m, k, n, acc);
+                for &t in THREADS {
+                    let ctx = KernelCtx::new(t);
+                    let mut got = base.clone();
+                    matmul_at_b_banded(&ctx, &a, &bt, &mut got, m, k, n, band, acc);
+                    assert_eq!(
+                        bits(&want_t),
+                        bits(&got),
+                        "banded_at_b ({m},{band},{n}) acc={acc} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn linear_fused_epilogue_matches_unfused() {
+        for &(m, k, n) in SHAPES {
+            let mut rng = Pcg64::new(5);
+            let x = mat(&mut rng, m * k);
+            let w = mat(&mut rng, k * n);
+            let bias: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            for relu in [false, true] {
+                let mut want = vec![0.0f32; m * n];
+                matmul_ref(&x, &w, &mut want, m, k, n);
+                add_bias(&mut want, &bias, m, n);
+                if relu {
+                    relu_inplace(&mut want);
+                }
+                for &t in THREADS {
+                    let ctx = KernelCtx::new(t);
+                    let mut got = vec![f32::NAN; m * n];
+                    linear(&ctx, &x, &w, Some(&bias), &mut got, m, k, n, relu);
+                    assert_eq!(bits(&want), bits(&got), "linear ({m},{k},{n}) t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_flag_routes_to_reference() {
+        let mut rng = Pcg64::new(6);
+        let (m, k, n) = (9, 11, 4);
+        let a = mat(&mut rng, m * k);
+        let b = mat(&mut rng, k * n);
+        let mut want = vec![0.0f32; m * n];
+        matmul_ref(&a, &b, &mut want, m, k, n);
+        let ctx = KernelCtx::with_pool(Arc::new(ThreadPool::new(4)), true);
+        assert!(ctx.scalar());
+        let mut got = vec![f32::NAN; m * n];
+        matmul(&ctx, &a, &b, &mut got, m, k, n);
+        assert_eq!(bits(&want), bits(&got));
+    }
+
+    #[test]
+    fn shared_pool_serves_many_kernel_calls() {
+        // one pool reused across kernels and iterations (the Runtime usage)
+        let pool = Arc::new(ThreadPool::new(3));
+        let ctx = KernelCtx::with_pool(pool, false);
+        let mut rng = Pcg64::new(7);
+        let (m, k, n) = (64, 300, 32);
+        let a = mat(&mut rng, m * k);
+        let b = mat(&mut rng, k * n);
+        let mut want = vec![0.0f32; m * n];
+        matmul_ref(&a, &b, &mut want, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        for _ in 0..25 {
+            matmul(&ctx, &a, &b, &mut got, m, k, n);
+            assert_eq!(bits(&want), bits(&got));
+        }
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+}

@@ -43,10 +43,34 @@
 //! The queued-loss variant ([`Runtime::train_step_device_queued`] +
 //! [`DeviceState::take_losses`]) removes even the per-step scalar-loss sync:
 //! losses accumulate device-side and are drained in one batch per round.
-//! Remaining per-step host↔device traffic: the sampled block inputs
-//! (tracked in ROADMAP.md "Open items").
+//!
+//! ## Pinned block-input staging
+//!
+//! The sampled block tensors (`a1/a2/x0/x1/x2`, labels, mask) are the one
+//! input that must cross to the device every step. Their shapes are static
+//! per artifact, so [`DeviceState`] carries pinned, shape-stable staging
+//! ([`BlockLits`]) that is overwritten in place from the `BlockArena`'s
+//! block each step instead of re-allocated: under PJRT the host literals
+//! are reused across steps (only the device copy remains per-step; buffer
+//! donation needs the real `xla` crate — see ROADMAP); under the native
+//! backend host memory *is* device memory, so the arena block is consumed
+//! in place with zero staging.
+//!
+//! ## Kernel engine
+//!
+//! The native backend executes through the tiled, multi-threaded kernel
+//! layer ([`kernels`]) over a persistent [`pool::ThreadPool`] owned by this
+//! runtime. [`Runtime::set_kernel_threads`] sizes the pool (`0` = all host
+//! cores; the cluster engine sizes per-worker pools as `cores / P`), and
+//! every kernel is bit-identical to its scalar reference at any thread
+//! count — see `runtime/README.md` for the determinism contract.
 
+pub mod kernels;
 pub mod native;
+pub mod pool;
+
+pub use kernels::KernelCtx;
+pub use pool::ThreadPool;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -135,6 +159,101 @@ fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
         shape,
         bytes,
     )?)
+}
+
+fn f32_bytes(data: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+fn i32_bytes(data: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+/// One fresh literal per block input, in artifact input order
+/// `[a1, a2, x0, x1, x2]` plus — when `with_labels` (train artifacts) —
+/// `[y, mask]`. The unpinned staging path, kept as the baseline for the
+/// pinned-parity tests and the `bench kernels` staged-vs-pinned rows.
+pub fn fresh_block_literals(
+    multilabel: bool,
+    with_labels: bool,
+    block: &Block,
+) -> Result<Vec<xla::Literal>> {
+    let (b, n1, n2, d, c) = (block.b, block.n1, block.n2, block.d, block.c);
+    let mut lits = vec![
+        f32_literal(&block.a1, &[b, n1])?,
+        f32_literal(&block.a2, &[n1, n2])?,
+        f32_literal(&block.x0, &[b, d])?,
+        f32_literal(&block.x1, &[n1, d])?,
+        f32_literal(&block.x2, &[n2, d])?,
+    ];
+    if with_labels {
+        lits.push(if multilabel {
+            f32_literal(&block.y_multi, &[b, c])?
+        } else {
+            i32_literal(&block.y_class, &[b])?
+        });
+        lits.push(f32_literal(&block.mask, &[b])?);
+    }
+    Ok(lits)
+}
+
+/// Pinned, shape-stable host staging for one block's input literals (order
+/// `[a1, a2, x0, x1, x2(, y, mask)]`). The first [`stage`] allocates; every
+/// later stage with an unchanged shape overwrites the literal bytes in
+/// place — zero allocation on the step hot path. Eval artifacts take no
+/// labels, so they stage with `with_labels: false` and skip the y/mask
+/// copies entirely.
+///
+/// [`stage`]: BlockLits::stage
+#[derive(Default)]
+pub struct BlockLits {
+    lits: Vec<xla::Literal>,
+    /// (b, n1, n2, d, c, multilabel, with_labels) of the staged shape
+    shape: Option<(usize, usize, usize, usize, usize, bool, bool)>,
+}
+
+impl BlockLits {
+    pub fn new() -> BlockLits {
+        BlockLits::default()
+    }
+
+    /// Stage `block` into the pinned literals; allocation-free when the
+    /// shape is unchanged. Returns the literals in artifact input order.
+    pub fn stage(
+        &mut self,
+        multilabel: bool,
+        with_labels: bool,
+        block: &Block,
+    ) -> Result<&[xla::Literal]> {
+        let shape = (
+            block.b,
+            block.n1,
+            block.n2,
+            block.d,
+            block.c,
+            multilabel,
+            with_labels,
+        );
+        if self.shape != Some(shape) {
+            self.lits = fresh_block_literals(multilabel, with_labels, block)?;
+            self.shape = Some(shape);
+            return Ok(&self.lits);
+        }
+        self.lits[0].copy_from_untyped_data(f32_bytes(&block.a1))?;
+        self.lits[1].copy_from_untyped_data(f32_bytes(&block.a2))?;
+        self.lits[2].copy_from_untyped_data(f32_bytes(&block.x0))?;
+        self.lits[3].copy_from_untyped_data(f32_bytes(&block.x1))?;
+        self.lits[4].copy_from_untyped_data(f32_bytes(&block.x2))?;
+        if with_labels {
+            if multilabel {
+                self.lits[5].copy_from_untyped_data(f32_bytes(&block.y_multi))?;
+            } else {
+                self.lits[5].copy_from_untyped_data(i32_bytes(&block.y_class))?;
+            }
+            self.lits[6].copy_from_untyped_data(f32_bytes(&block.mask))?;
+        }
+        Ok(&self.lits)
+    }
 }
 
 /// Static dims of one artifact's block format.
@@ -325,6 +444,11 @@ pub struct DeviceState {
     slots: DeviceSlots,
     /// per-step losses not yet synced to the host (queued path)
     pending_losses: Vec<PendingLoss>,
+    /// pinned block-input staging (PJRT path; the native backend consumes
+    /// the arena block in place — host memory is device memory there)
+    block_lits: BlockLits,
+    /// pinned rank-0 learning-rate literal, refreshed in place per step
+    lr_lit: Option<xla::Literal>,
 }
 
 enum DeviceSlots {
@@ -332,6 +456,20 @@ enum DeviceSlots {
     Native(Vec<Tensor>),
     /// PJRT backend: device buffers, replaced by each step's outputs.
     Pjrt(Vec<xla::PjRtBuffer>),
+}
+
+/// Per-row eval reductions returned by [`Runtime::eval_scores_device`]:
+/// `O(b)` values in place of the full `b × c` logits download.
+pub struct EvalScores {
+    /// per-row argmax over classes (first-max tie-break, as
+    /// `metrics::argmax`)
+    pub pred: Vec<u32>,
+    /// per-row bitmask of strictly-positive logits (the multilabel
+    /// prediction rule); class `j` is bit `j`, valid for `c <= 64`
+    pub pos_bits: Vec<u64>,
+    /// per-row loss against the block's labels, matching
+    /// `metrics::mean_loss`'s per-row f64 formula exactly
+    pub loss: Vec<f64>,
 }
 
 /// A step's loss before the host has synced it.
@@ -374,8 +512,20 @@ pub struct Runtime {
     backend: Backend,
     dir: PathBuf,
     metas: HashMap<String, ArtifactMeta>,
+    /// native-backend kernel engine: thread count, scalar override, pool
+    kernel: RefCell<KernelCfg>,
     /// executions performed (profiling)
     pub exec_count: RefCell<u64>,
+}
+
+/// Kernel-engine configuration; the pool is built lazily on first use and
+/// rebuilt when the requested thread count changes.
+struct KernelCfg {
+    /// requested lanes (0 = auto: all host cores)
+    threads: usize,
+    /// force the scalar reference kernels (bench baseline / parity tests)
+    scalar: bool,
+    pool: Option<std::sync::Arc<ThreadPool>>,
 }
 
 enum Backend {
@@ -424,8 +574,56 @@ impl Runtime {
             backend,
             dir,
             metas,
+            kernel: RefCell::new(KernelCfg {
+                threads: 0,
+                scalar: false,
+                pool: None,
+            }),
             exec_count: RefCell::new(0),
         })
+    }
+
+    /// Size the native kernel pool: `threads` parallel lanes (0 = auto: all
+    /// host cores). Takes effect on the next kernel call; a live pool of a
+    /// different size is dropped (joining its workers) and rebuilt. The
+    /// cluster engine calls this per worker runtime so that
+    /// `P workers × T lanes` never oversubscribes the host.
+    pub fn set_kernel_threads(&self, threads: usize) {
+        let mut k = self.kernel.borrow_mut();
+        if k.threads != threads {
+            k.threads = threads;
+            k.pool = None;
+        }
+    }
+
+    /// Resolved kernel lane count (after 0 → host cores).
+    pub fn kernel_threads(&self) -> usize {
+        let k = self.kernel.borrow();
+        if k.threads == 0 {
+            pool::host_threads()
+        } else {
+            k.threads
+        }
+    }
+
+    /// Force the scalar reference kernels (benchmark baseline and parity
+    /// tests; results are bit-identical either way).
+    pub fn set_kernel_scalar(&self, scalar: bool) {
+        self.kernel.borrow_mut().scalar = scalar;
+    }
+
+    /// Kernel context for one executor call (shared pool, built lazily).
+    fn kernel_ctx(&self) -> KernelCtx {
+        let mut k = self.kernel.borrow_mut();
+        if k.pool.is_none() {
+            let t = if k.threads == 0 {
+                pool::host_threads()
+            } else {
+                k.threads
+            };
+            k.pool = Some(std::sync::Arc::new(ThreadPool::new(t)));
+        }
+        KernelCtx::with_pool(k.pool.as_ref().expect("just built").clone(), k.scalar)
     }
 
     /// Load `preferred` if its manifest exists *and* is executable in this
@@ -536,33 +734,44 @@ impl Runtime {
         }
     }
 
-    fn block_literals(&self, meta: &ArtifactMeta, block: &Block) -> Result<Vec<xla::Literal>> {
+    fn check_block_dims(&self, meta: &ArtifactMeta, block: &Block) -> Result<()> {
         let dims = &meta.dims;
-        if block.b != dims.b || block.n1 != dims.n1 || block.n2 != dims.n2 {
+        if block.b != dims.b
+            || block.n1 != dims.n1
+            || block.n2 != dims.n2
+            || block.d != dims.d
+            || block.c != dims.c
+        {
             bail!(
-                "block dims ({},{},{}) do not match artifact {} ({},{},{})",
-                block.b, block.n1, block.n2, meta.name, dims.b, dims.n1, dims.n2
+                "block dims ({},{},{},d={},c={}) do not match artifact {} \
+                 ({},{},{},d={},c={})",
+                block.b,
+                block.n1,
+                block.n2,
+                block.d,
+                block.c,
+                meta.name,
+                dims.b,
+                dims.n1,
+                dims.n2,
+                dims.d,
+                dims.c
             );
         }
-        let shaped = f32_literal;
-        Ok(vec![
-            shaped(&block.a1, &[dims.b, dims.n1])?,
-            shaped(&block.a2, &[dims.n1, dims.n2])?,
-            shaped(&block.x0, &[dims.b, dims.d])?,
-            shaped(&block.x1, &[dims.n1, dims.d])?,
-            shaped(&block.x2, &[dims.n2, dims.d])?,
-        ])
+        Ok(())
     }
 
-    fn label_literals(&self, meta: &ArtifactMeta, block: &Block) -> Result<Vec<xla::Literal>> {
-        let dims = &meta.dims;
-        let y = if meta.multilabel() {
-            f32_literal(&block.y_multi, &[dims.b, dims.c])?
-        } else {
-            i32_literal(&block.y_class, &[dims.b])?
-        };
-        let mask = f32_literal(&block.mask, &[dims.b])?;
-        Ok(vec![y, mask])
+    /// Validated fresh-literal staging for one artifact call — thin wrapper
+    /// keeping [`fresh_block_literals`] the single source of the
+    /// ABI-load-bearing input order.
+    fn staged_block_literals(
+        &self,
+        meta: &ArtifactMeta,
+        block: &Block,
+        with_labels: bool,
+    ) -> Result<Vec<xla::Literal>> {
+        self.check_block_dims(meta, block)?;
+        fresh_block_literals(meta.multilabel(), with_labels, block)
     }
 
     // -- legacy host-literal path ------------------------------------------
@@ -597,7 +806,7 @@ impl Runtime {
                 let n = state.params.len();
                 *self.exec_count.borrow_mut() += 1;
                 let (p, o) = staged.split_at_mut(n);
-                let loss = exe.train_step(p, o, block, lr)?;
+                let loss = exe.train_step(&self.kernel_ctx(), p, o, block, lr)?;
                 for (dst, src) in state
                     .params
                     .iter_mut()
@@ -632,8 +841,7 @@ impl Runtime {
         for o in &state.opt {
             inputs.push(o.to_literal()?);
         }
-        inputs.extend(self.block_literals(&meta, block)?);
-        inputs.extend(self.label_literals(&meta, block)?);
+        inputs.extend(self.staged_block_literals(&meta, block, true)?);
         inputs.push(xla::Literal::scalar(lr));
 
         *self.exec_count.borrow_mut() += 1;
@@ -668,7 +876,7 @@ impl Runtime {
                 for p in params {
                     inputs.push(p.to_literal()?);
                 }
-                inputs.extend(self.block_literals(&meta, block)?);
+                inputs.extend(self.staged_block_literals(&meta, block, false)?);
                 *self.exec_count.borrow_mut() += 1;
                 let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
                 let logits = result.to_tuple1()?;
@@ -679,7 +887,7 @@ impl Runtime {
                 // literal-path cost model: params staged per call
                 let staged: Vec<Tensor> = params.to_vec();
                 *self.exec_count.borrow_mut() += 1;
-                exe.eval_step(&staged, block)
+                exe.eval_step(&self.kernel_ctx(), &staged, block)
             }
         }
     }
@@ -740,6 +948,8 @@ impl Runtime {
             steps: 0,
             slots,
             pending_losses: Vec::new(),
+            block_lits: BlockLits::new(),
+            lr_lit: None,
         })
     }
 
@@ -787,17 +997,25 @@ impl Runtime {
             (Backend::Native { .. }, DeviceSlots::Native(tensors)) => {
                 let exe = self.exec_native(&dev.name)?;
                 let (p, o) = tensors.split_at_mut(dev.n_params);
-                PendingLoss::Host(exe.train_step(p, o, block, lr)?)
+                PendingLoss::Host(exe.train_step(&self.kernel_ctx(), p, o, block, lr)?)
             }
             (Backend::Pjrt { client, .. }, DeviceSlots::Pjrt(bufs)) => {
                 let exe = self.exec_pjrt(&dev.name)?;
-                let block_lits = self.block_literals(&meta, block)?;
-                let label_lits = self.label_literals(&meta, block)?;
+                self.check_block_dims(&meta, block)?;
+                // pinned staging: the 7 block literals + the lr scalar live
+                // in the DeviceState and are overwritten in place each step
+                let lits = dev.block_lits.stage(meta.multilabel(), true, block)?;
+                if let Some(l) = dev.lr_lit.as_mut() {
+                    l.copy_from_untyped_data(&lr.to_le_bytes())?;
+                } else {
+                    dev.lr_lit = Some(xla::Literal::scalar(lr));
+                }
+                let lr_lit = dev.lr_lit.as_ref().expect("just staged");
                 let mut staged: Vec<xla::PjRtBuffer> = Vec::with_capacity(8);
-                for lit in block_lits.iter().chain(label_lits.iter()) {
+                for lit in lits.iter() {
                     staged.push(client.buffer_from_host_literal(lit)?);
                 }
-                staged.push(client.buffer_from_host_literal(&xla::Literal::scalar(lr))?);
+                staged.push(client.buffer_from_host_literal(lr_lit)?);
                 let mut args: Vec<&xla::PjRtBuffer> =
                     Vec::with_capacity(bufs.len() + staged.len());
                 args.extend(bufs.iter());
@@ -833,7 +1051,9 @@ impl Runtime {
     }
 
     /// Eval on device-resident parameters (uploaded once per eval sweep).
-    pub fn eval_step_device(&self, dev: &DeviceState, block: &Block) -> Result<Vec<f32>> {
+    /// Block inputs go through the state's pinned staging (`&mut` for the
+    /// in-place overwrite; the compute itself does not mutate).
+    pub fn eval_step_device(&self, dev: &mut DeviceState, block: &Block) -> Result<Vec<f32>> {
         let meta = self.meta(&dev.name)?.clone();
         if meta.kind != "eval" {
             bail!("{} is not an eval artifact", dev.name);
@@ -842,13 +1062,15 @@ impl Runtime {
         match (&self.backend, &dev.slots) {
             (Backend::Native { .. }, DeviceSlots::Native(tensors)) => {
                 let exe = self.exec_native(&dev.name)?;
-                exe.eval_step(&tensors[..dev.n_params], block)
+                exe.eval_step(&self.kernel_ctx(), &tensors[..dev.n_params], block)
             }
             (Backend::Pjrt { client, .. }, DeviceSlots::Pjrt(bufs)) => {
                 let exe = self.exec_pjrt(&dev.name)?;
-                let block_lits = self.block_literals(&meta, block)?;
-                let mut staged: Vec<xla::PjRtBuffer> = Vec::with_capacity(block_lits.len());
-                for lit in &block_lits {
+                self.check_block_dims(&meta, block)?;
+                // eval artifacts take only the 5 block tensors (no labels)
+                let lits = dev.block_lits.stage(meta.multilabel(), false, block)?;
+                let mut staged: Vec<xla::PjRtBuffer> = Vec::with_capacity(lits.len());
+                for lit in lits {
                     staged.push(client.buffer_from_host_literal(lit)?);
                 }
                 let mut args: Vec<&xla::PjRtBuffer> =
@@ -867,6 +1089,68 @@ impl Runtime {
                 dev.name
             ),
         }
+    }
+
+    /// Device-side eval reductions: run the eval forward and reduce the
+    /// logits to per-row quantities *before* they are handed to the caller —
+    /// the argmax prediction, the positive-logit bitmask (multilabel
+    /// prediction), and the per-row loss against the block's labels. The
+    /// caller receives `O(b)` values instead of the `b × c` logits tensor;
+    /// every reduction matches its `metrics::*` counterpart bit-for-bit
+    /// (first-max argmax, `mean_loss`'s f64 row formula).
+    ///
+    /// Under the native backend the reduction runs where the logits already
+    /// live; under PJRT it currently costs the same single logits download
+    /// as [`eval_step_device`] — fusing the reduction into the eval
+    /// artifact is the remaining step (see ROADMAP).
+    pub fn eval_scores_device(&self, dev: &mut DeviceState, block: &Block) -> Result<EvalScores> {
+        let meta = self.meta(&dev.name)?.clone();
+        let c = meta.dims.c;
+        if c > 64 {
+            // pos_bits is a u64 bitmask; silently truncating predictions
+            // would corrupt any metric built from them
+            bail!(
+                "eval_scores_device supports c <= 64 (got {c}); use \
+                 eval_step_device + metrics on the full logits instead"
+            );
+        }
+        let logits = self.eval_step_device(dev, block)?;
+        let b = block.b;
+        let multilabel = meta.multilabel();
+        if multilabel && block.y_multi.len() != b * c {
+            bail!("eval_scores_device needs y_multi[{}]", b * c);
+        }
+        if !multilabel && block.y_class.len() != b {
+            bail!("eval_scores_device needs y_class[{b}]");
+        }
+        let mut scores = EvalScores {
+            pred: Vec::with_capacity(b),
+            pos_bits: Vec::with_capacity(b),
+            loss: Vec::with_capacity(b),
+        };
+        for i in 0..b {
+            let row = &logits[i * c..(i + 1) * c];
+            // the exact reductions the logits path applies — shared helpers,
+            // so the bit-parity with `score`/`mean_loss` is structural
+            scores.pred.push(crate::metrics::argmax(row) as u32);
+            let mut bits = 0u64;
+            for (j, &x) in row.iter().enumerate() {
+                if x > 0.0 {
+                    bits |= 1 << j;
+                }
+            }
+            scores.pos_bits.push(bits);
+            scores.loss.push(if multilabel {
+                crate::metrics::row_bce_loss(row, &block.y_multi[i * c..(i + 1) * c])
+            } else {
+                let target = block.y_class[i] as usize;
+                if target >= c {
+                    bail!("label {target} out of range c={c}");
+                }
+                crate::metrics::row_ce_loss(row, target)
+            });
+        }
+        Ok(scores)
     }
 
     /// Materialize device-resident state back into host tensors — the
@@ -988,6 +1272,73 @@ mod tests {
         Tensor::copy_all(&mut dst, &src); // second reuses
         assert_eq!(dst[0].data.as_ptr(), p2);
         assert_eq!(dst[0].data, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn pinned_block_staging_matches_fresh_literals() {
+        use crate::graph::generators;
+        use crate::sampler::BlockBuilder;
+
+        let ds = generators::by_name("tiny", 0).unwrap();
+        let bb = BlockBuilder::new(8, 4, 4, ds.d, ds.c(), false);
+        let mut rng = Pcg64::new(5);
+        let mut pinned = BlockLits::new();
+        // several consecutive blocks through one pinned staging (first call
+        // allocates, later calls overwrite in place) vs fresh literals
+        for round in 0..4 {
+            let targets: Vec<u32> = (round * 8..round * 8 + 8).collect();
+            let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+            let fresh = fresh_block_literals(false, true, &blk).unwrap();
+            let staged = pinned.stage(false, true, &blk).unwrap();
+            assert_eq!(fresh.len(), staged.len());
+            for (i, (f, s)) in fresh.iter().zip(staged.iter()).enumerate() {
+                assert_eq!(f.shape(), s.shape(), "round {round} input {i}: shape");
+                assert_eq!(
+                    f.element_type(),
+                    s.element_type(),
+                    "round {round} input {i}: dtype"
+                );
+                if i == 5 {
+                    // the label literal is i32 for multiclass blocks
+                    assert_eq!(
+                        f.to_vec::<i32>().unwrap(),
+                        s.to_vec::<i32>().unwrap(),
+                        "round {round}: labels"
+                    );
+                } else {
+                    let fv = f.to_vec::<f32>().unwrap();
+                    let sv = s.to_vec::<f32>().unwrap();
+                    assert_eq!(
+                        fv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        sv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "round {round} input {i}: payload"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_block_staging_reshapes_on_shape_change() {
+        use crate::graph::generators;
+        use crate::sampler::BlockBuilder;
+
+        let ds = generators::by_name("tiny", 1).unwrap();
+        let mut rng = Pcg64::new(6);
+        let mut pinned = BlockLits::new();
+        let bb1 = BlockBuilder::new(8, 4, 4, ds.d, ds.c(), false);
+        let blk1 = bb1.build(&[0, 1, 2], &ds.graph, &ds, &mut rng);
+        assert_eq!(pinned.stage(false, true, &blk1).unwrap()[0].shape(), &[8, 32]);
+        let bb2 = BlockBuilder::new(4, 3, 2, ds.d, ds.c(), false);
+        let blk2 = bb2.build(&[5, 6], &ds.graph, &ds, &mut rng);
+        // a different block shape must re-allocate, not corrupt
+        assert_eq!(pinned.stage(false, true, &blk2).unwrap()[0].shape(), &[4, 12]);
+        let fresh = fresh_block_literals(false, true, &blk2).unwrap();
+        let staged = pinned.stage(false, true, &blk2).unwrap();
+        assert_eq!(
+            fresh[1].to_vec::<f32>().unwrap(),
+            staged[1].to_vec::<f32>().unwrap()
+        );
     }
 
     #[test]

@@ -15,9 +15,14 @@
 //! GAT is PJRT-only (attention backward is deliberately out of scope for
 //! the reference implementation); [`NativeExec::new`] rejects it.
 //!
-//! Aggregation matmuls skip zero left-operand entries, which makes the
-//! dense-banded `A1`/`A2` products effectively O(nnz) — the same work the
-//! Pallas aggregation kernels do on device.
+//! All dense/sparse math goes through the tiled kernel layer
+//! ([`super::kernels`]): cache-blocked matmuls parallelized over disjoint
+//! output-row ranges on a persistent [`super::pool::ThreadPool`], banded
+//! kernels for the `A1`/`A2` slot-band aggregation (O(nnz), like the Pallas
+//! aggregation kernels on device), and fused bias+ReLU epilogues. The
+//! kernels are bit-identical to their scalar references at any thread
+//! count — see `runtime/README.md` for the determinism contract — so every
+//! result below is independent of the [`KernelCtx`] it ran under.
 
 use std::path::Path;
 
@@ -26,6 +31,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::sampler::Block;
 use crate::util::Json;
 
+use super::kernels::{
+    add_bias, colsum, linear, matmul, matmul_a_bt, matmul_at_b, matmul_at_b_banded,
+    matmul_banded, relu_backward_inplace, relu_inplace, KernelCtx,
+};
 use super::{ArtifactMeta, Tensor};
 
 pub const ADAM_B1: f32 = 0.9;
@@ -64,140 +73,9 @@ pub fn param_specs(
     })
 }
 
-// ---------------------------------------------------------------------------
-// dense kernels (row-major f32)
-// ---------------------------------------------------------------------------
-
-/// `out[m,n] = a[m,k] @ b[k,n]`, skipping zero entries of `a` (banded
-/// adjacency operators are mostly structural zeros).
-fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out[m,n] (+)= a[r,m]ᵀ @ b[r,n]`; zeroes `out` first unless `acc`.
-#[allow(clippy::too_many_arguments)]
-fn matmul_at_b(a: &[f32], b: &[f32], out: &mut [f32], r: usize, m: usize, n: usize, acc: bool) {
-    debug_assert_eq!(a.len(), r * m);
-    debug_assert_eq!(b.len(), r * n);
-    debug_assert_eq!(out.len(), m * n);
-    if !acc {
-        out.fill(0.0);
-    }
-    for row in 0..r {
-        let arow = &a[row * m..(row + 1) * m];
-        let brow = &b[row * n..(row + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out[m,n] = a[m,k] @ b[n,k]ᵀ` (row-by-row dot products).
-fn matmul_a_bt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for (&x, &y) in arow.iter().zip(brow) {
-                s += x * y;
-            }
-            out[i * n + j] = s;
-        }
-    }
-}
-
-/// `out[r,n] += bias[n]` broadcast over rows.
-fn add_bias(out: &mut [f32], bias: &[f32], r: usize, n: usize) {
-    debug_assert_eq!(out.len(), r * n);
-    debug_assert_eq!(bias.len(), n);
-    for row in 0..r {
-        for (o, &bv) in out[row * n..(row + 1) * n].iter_mut().zip(bias) {
-            *o += bv;
-        }
-    }
-}
-
-fn relu_inplace(xs: &mut [f32]) {
-    for x in xs.iter_mut() {
-        if *x < 0.0 {
-            *x = 0.0;
-        }
-    }
-}
-
-/// `dz = dh ⊙ (h > 0)` in place on `dh` (relu backward; `h` is post-act).
-fn relu_backward_inplace(dh: &mut [f32], h: &[f32]) {
-    for (d, &hv) in dh.iter_mut().zip(h) {
-        if hv <= 0.0 {
-            *d = 0.0;
-        }
-    }
-}
-
-/// `out[n] (+)= column sums of g[r,n]`.
-fn colsum(g: &[f32], out: &mut [f32], r: usize, n: usize, acc: bool) {
-    debug_assert_eq!(g.len(), r * n);
-    debug_assert_eq!(out.len(), n);
-    if !acc {
-        out.fill(0.0);
-    }
-    for row in 0..r {
-        for (o, &gv) in out.iter_mut().zip(&g[row * n..(row + 1) * n]) {
-            *o += gv;
-        }
-    }
-}
-
 /// Parameter tensor `i`'s data (positional, manifest order).
 fn pd(params: &[Tensor], i: usize) -> &[f32] {
     &params[i].data
-}
-
-/// `h = relu?(x @ w + bias?)` — the `ops.linear` analog.
-#[allow(clippy::too_many_arguments)]
-fn linear(
-    x: &[f32],
-    w: &[f32],
-    bias: Option<&[f32]>,
-    out: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    relu: bool,
-) {
-    matmul(x, w, out, m, k, n);
-    if let Some(b) = bias {
-        add_bias(out, b, m, n);
-    }
-    if relu {
-        relu_inplace(out);
-    }
 }
 
 // ---------------------------------------------------------------------------
@@ -259,70 +137,100 @@ impl NativeExec {
                 dims.d
             );
         }
+        #[cfg(debug_assertions)]
+        {
+            // the banded kernels rely on the block-format invariant (see
+            // `sampler::BlockBuilder`): row i of A1/A2 holds non-zeros only
+            // inside its slot band — verify it in debug builds
+            for i in 0..block.b {
+                for (j, &v) in block.a1[i * block.n1..(i + 1) * block.n1].iter().enumerate()
+                {
+                    debug_assert!(
+                        v == 0.0 || (j >= i * dims.f1 && j < (i + 1) * dims.f1),
+                        "A1 row {i} has an off-band non-zero at col {j}"
+                    );
+                }
+            }
+            for i in 0..block.n1 {
+                for (j, &v) in block.a2[i * block.n2..(i + 1) * block.n2].iter().enumerate()
+                {
+                    debug_assert!(
+                        v == 0.0 || (j >= i * dims.f2 && j < (i + 1) * dims.f2),
+                        "A2 row {i} has an off-band non-zero at col {j}"
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
-    /// One optimizer step on `params`/`opt` in place; returns the batch loss.
+    /// One optimizer step on `params`/`opt` in place; returns the batch
+    /// loss. All matmuls run through `kc`'s kernel engine; the result is
+    /// bit-independent of its thread count (see the module docs).
     pub fn train_step(
         &self,
+        kc: &KernelCtx,
         params: &mut [Tensor],
         opt: &mut [Tensor],
         block: &Block,
         lr: f32,
     ) -> Result<f32> {
         self.check_block(block)?;
-        let (loss, grads) = self.loss_and_grads(params, block)?;
+        let (loss, grads) = self.loss_and_grads(kc, params, block)?;
         self.apply_update(params, opt, &grads, lr)?;
         Ok(loss)
     }
 
     /// Forward only; returns logits `[b * c]`.
-    pub fn eval_step(&self, params: &[Tensor], block: &Block) -> Result<Vec<f32>> {
+    pub fn eval_step(&self, kc: &KernelCtx, params: &[Tensor], block: &Block) -> Result<Vec<f32>> {
         self.check_block(block)?;
-        let (logits, _caches) = self.forward(params, block)?;
+        let (logits, _caches) = self.forward(kc, params, block)?;
         Ok(logits)
     }
 
     // -- forward -----------------------------------------------------------
 
     /// Runs the arch forward; returns logits and the activation caches the
-    /// backward pass needs (arch-specific layout).
-    fn forward(&self, params: &[Tensor], block: &Block) -> Result<(Vec<f32>, Caches)> {
+    /// backward pass needs (arch-specific layout). `A1`/`A2` products use
+    /// the banded aggregation kernels (slot band `f1`/`f2` — see the block
+    /// builder); dense layers use the fused-epilogue `linear`.
+    fn forward(&self, kc: &KernelCtx, params: &[Tensor], block: &Block) -> Result<(Vec<f32>, Caches)> {
         let d = self.meta.dims.d;
         let h = self.meta.dims.h;
         let c = self.meta.dims.c;
+        let (f1, f2) = (self.meta.dims.f1, self.meta.dims.f2);
         let (b, n1, n2) = (block.b, block.n1, block.n2);
 
         match self.meta.arch.as_str() {
             "mlp" => {
                 // h1 = relu(x0 @ w1 + b1); logits = h1 @ w2 + b2
                 let mut h1 = vec![0.0; b * h];
-                linear(&block.x0, pd(params, 0), Some(pd(params, 1)), &mut h1, b, d, h, true);
+                linear(kc, &block.x0, pd(params, 0), Some(pd(params, 1)), &mut h1, b, d, h, true);
                 let mut logits = vec![0.0; b * c];
-                linear(&h1, pd(params, 2), Some(pd(params, 3)), &mut logits, b, h, c, false);
+                linear(kc, &h1, pd(params, 2), Some(pd(params, 3)), &mut logits, b, h, c, false);
                 Ok((logits, Caches::Mlp { h1 }))
             }
             "gcn" => {
                 // h1 = relu((A2 @ x2) @ w1 + b1); logits = (A1 @ h1) @ w2 + b2
                 let mut agg2 = vec![0.0; n1 * d];
-                matmul(&block.a2, &block.x2, &mut agg2, n1, n2, d);
+                matmul_banded(kc, &block.a2, &block.x2, &mut agg2, n1, n2, d, f2);
                 let mut h1 = vec![0.0; n1 * h];
-                linear(&agg2, pd(params, 0), Some(pd(params, 1)), &mut h1, n1, d, h, true);
+                linear(kc, &agg2, pd(params, 0), Some(pd(params, 1)), &mut h1, n1, d, h, true);
                 let mut agg1 = vec![0.0; b * h];
-                matmul(&block.a1, &h1, &mut agg1, b, n1, h);
+                matmul_banded(kc, &block.a1, &h1, &mut agg1, b, n1, h, f1);
                 let mut logits = vec![0.0; b * c];
-                linear(&agg1, pd(params, 2), Some(pd(params, 3)), &mut logits, b, h, c, false);
+                linear(kc, &agg1, pd(params, 2), Some(pd(params, 3)), &mut logits, b, h, c, false);
                 Ok((logits, Caches::Gcn { agg2, h1, agg1 }))
             }
             "sage" => {
                 // n1v = A2 @ x2
                 let mut n1v = vec![0.0; n1 * d];
-                matmul(&block.a2, &block.x2, &mut n1v, n1, n2, d);
+                matmul_banded(kc, &block.a2, &block.x2, &mut n1v, n1, n2, d, f2);
                 // h1 = relu(x1 @ ws1 + b1 + n1v @ wn1)
                 let mut h1 = vec![0.0; n1 * h];
-                matmul(&block.x1, pd(params, 0), &mut h1, n1, d, h);
+                matmul(kc, &block.x1, pd(params, 0), &mut h1, n1, d, h);
                 let mut tmp = vec![0.0; n1 * h];
-                matmul(&n1v, pd(params, 1), &mut tmp, n1, d, h);
+                matmul(kc, &n1v, pd(params, 1), &mut tmp, n1, d, h);
                 for (a, &t) in h1.iter_mut().zip(&tmp) {
                     *a += t;
                 }
@@ -330,14 +238,14 @@ impl NativeExec {
                 relu_inplace(&mut h1);
                 // n0 = A1 @ h1 ; m0 = A1 @ x1
                 let mut n0 = vec![0.0; b * h];
-                matmul(&block.a1, &h1, &mut n0, b, n1, h);
+                matmul_banded(kc, &block.a1, &h1, &mut n0, b, n1, h, f1);
                 let mut m0 = vec![0.0; b * d];
-                matmul(&block.a1, &block.x1, &mut m0, b, n1, d);
+                matmul_banded(kc, &block.a1, &block.x1, &mut m0, b, n1, d, f1);
                 // h0 = relu(x0 @ ws1 + b1 + m0 @ wn1)
                 let mut h0 = vec![0.0; b * h];
-                matmul(&block.x0, pd(params, 0), &mut h0, b, d, h);
+                matmul(kc, &block.x0, pd(params, 0), &mut h0, b, d, h);
                 let mut tmp0 = vec![0.0; b * h];
-                matmul(&m0, pd(params, 1), &mut tmp0, b, d, h);
+                matmul(kc, &m0, pd(params, 1), &mut tmp0, b, d, h);
                 for (a, &t) in h0.iter_mut().zip(&tmp0) {
                     *a += t;
                 }
@@ -345,9 +253,9 @@ impl NativeExec {
                 relu_inplace(&mut h0);
                 // logits = h0 @ ws2 + b2 + n0 @ wn2
                 let mut logits = vec![0.0; b * c];
-                matmul(&h0, pd(params, 3), &mut logits, b, h, c);
+                matmul(kc, &h0, pd(params, 3), &mut logits, b, h, c);
                 let mut tmpl = vec![0.0; b * c];
-                matmul(&n0, pd(params, 4), &mut tmpl, b, h, c);
+                matmul(kc, &n0, pd(params, 4), &mut tmpl, b, h, c);
                 for (a, &t) in logits.iter_mut().zip(&tmpl) {
                     *a += t;
                 }
@@ -368,9 +276,9 @@ impl NativeExec {
                 let beta = APPNP_TELEPORT;
                 let mlp = |x: &[f32], rows: usize| -> (Vec<f32>, Vec<f32>) {
                     let mut u = vec![0.0; rows * h];
-                    linear(x, pd(params, 0), Some(pd(params, 1)), &mut u, rows, d, h, true);
+                    linear(kc, x, pd(params, 0), Some(pd(params, 1)), &mut u, rows, d, h, true);
                     let mut out = vec![0.0; rows * c];
-                    linear(&u, pd(params, 2), Some(pd(params, 3)), &mut out, rows, h, c, false);
+                    linear(kc, &u, pd(params, 2), Some(pd(params, 3)), &mut out, rows, h, c, false);
                     (out, u)
                 };
                 let (h2, u2) = mlp(&block.x2, n2);
@@ -378,13 +286,13 @@ impl NativeExec {
                 let (h0, u0) = mlp(&block.x0, b);
                 // p1 = beta*h1v + (1-beta)*A2@h2
                 let mut p1 = vec![0.0; n1 * c];
-                matmul(&block.a2, &h2, &mut p1, n1, n2, c);
+                matmul_banded(kc, &block.a2, &h2, &mut p1, n1, n2, c, f2);
                 for (o, &hv) in p1.iter_mut().zip(&h1v) {
                     *o = beta * hv + (1.0 - beta) * *o;
                 }
                 // logits = beta*h0 + (1-beta)*A1@p1
                 let mut logits = vec![0.0; b * c];
-                matmul(&block.a1, &p1, &mut logits, b, n1, c);
+                matmul_banded(kc, &block.a1, &p1, &mut logits, b, n1, c, f1);
                 for (o, &hv) in logits.iter_mut().zip(&h0) {
                     *o = beta * hv + (1.0 - beta) * *o;
                 }
@@ -396,10 +304,15 @@ impl NativeExec {
 
     // -- loss + gradients --------------------------------------------------
 
-    fn loss_and_grads(&self, params: &[Tensor], block: &Block) -> Result<(f32, Vec<Tensor>)> {
-        let (logits, caches) = self.forward(params, block)?;
+    fn loss_and_grads(
+        &self,
+        kc: &KernelCtx,
+        params: &[Tensor],
+        block: &Block,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let (logits, caches) = self.forward(kc, params, block)?;
         let (loss, g) = self.loss_grad(&logits, block)?;
-        let grads = self.backward(params, block, &caches, &g)?;
+        let grads = self.backward(kc, params, block, &caches, &g)?;
         Ok((loss, grads))
     }
 
@@ -467,9 +380,11 @@ impl NativeExec {
     }
 
     /// Backprop `g = dL/dlogits` to parameter gradients (same order/shapes
-    /// as `params`).
+    /// as `params`). The `A1ᵀ`/`A2ᵀ` products use the banded-transpose
+    /// kernel (one contribution per output row).
     fn backward(
         &self,
+        kc: &KernelCtx,
         params: &[Tensor],
         block: &Block,
         caches: &Caches,
@@ -478,30 +393,31 @@ impl NativeExec {
         let d = self.meta.dims.d;
         let h = self.meta.dims.h;
         let c = self.meta.dims.c;
+        let (f1, f2) = (self.meta.dims.f1, self.meta.dims.f2);
         let (b, n1, n2) = (block.b, block.n1, block.n2);
         let mut grads: Vec<Tensor> = params.iter().map(|t| Tensor::zeros(&t.shape)).collect();
 
         match (self.meta.arch.as_str(), caches) {
             ("mlp", Caches::Mlp { h1 }) => {
                 // [w1, b1, w2, b2]
-                matmul_at_b(h1, g, &mut grads[2].data, b, h, c, false);
+                matmul_at_b(kc, h1, g, &mut grads[2].data, b, h, c, false);
                 colsum(g, &mut grads[3].data, b, c, false);
                 let mut dh1 = vec![0.0; b * h];
-                matmul_a_bt(g, pd(params, 2), &mut dh1, b, c, h);
+                matmul_a_bt(kc, g, pd(params, 2), &mut dh1, b, c, h);
                 relu_backward_inplace(&mut dh1, h1);
-                matmul_at_b(&block.x0, &dh1, &mut grads[0].data, b, d, h, false);
+                matmul_at_b(kc, &block.x0, &dh1, &mut grads[0].data, b, d, h, false);
                 colsum(&dh1, &mut grads[1].data, b, h, false);
             }
             ("gcn", Caches::Gcn { agg2, h1, agg1 }) => {
                 // [w1, b1, w2, b2]
-                matmul_at_b(agg1, g, &mut grads[2].data, b, h, c, false);
+                matmul_at_b(kc, agg1, g, &mut grads[2].data, b, h, c, false);
                 colsum(g, &mut grads[3].data, b, c, false);
                 let mut dagg1 = vec![0.0; b * h];
-                matmul_a_bt(g, pd(params, 2), &mut dagg1, b, c, h);
+                matmul_a_bt(kc, g, pd(params, 2), &mut dagg1, b, c, h);
                 let mut dh1 = vec![0.0; n1 * h];
-                matmul_at_b(&block.a1, &dagg1, &mut dh1, b, n1, h, false);
+                matmul_at_b_banded(kc, &block.a1, &dagg1, &mut dh1, b, n1, h, f1, false);
                 relu_backward_inplace(&mut dh1, h1);
-                matmul_at_b(agg2, &dh1, &mut grads[0].data, n1, d, h, false);
+                matmul_at_b(kc, agg2, &dh1, &mut grads[0].data, n1, d, h, false);
                 colsum(&dh1, &mut grads[1].data, n1, h, false);
             }
             (
@@ -515,24 +431,24 @@ impl NativeExec {
                 },
             ) => {
                 // [ws1, wn1, b1, ws2, wn2, b2]
-                matmul_at_b(h0, g, &mut grads[3].data, b, h, c, false);
-                matmul_at_b(n0, g, &mut grads[4].data, b, h, c, false);
+                matmul_at_b(kc, h0, g, &mut grads[3].data, b, h, c, false);
+                matmul_at_b(kc, n0, g, &mut grads[4].data, b, h, c, false);
                 colsum(g, &mut grads[5].data, b, c, false);
                 // self path at level 0
                 let mut dh0 = vec![0.0; b * h];
-                matmul_a_bt(g, pd(params, 3), &mut dh0, b, c, h);
+                matmul_a_bt(kc, g, pd(params, 3), &mut dh0, b, c, h);
                 relu_backward_inplace(&mut dh0, h0);
                 // neighbor path through the level-1 embeddings
                 let mut dn0 = vec![0.0; b * h];
-                matmul_a_bt(g, pd(params, 4), &mut dn0, b, c, h);
+                matmul_a_bt(kc, g, pd(params, 4), &mut dn0, b, c, h);
                 let mut dh1 = vec![0.0; n1 * h];
-                matmul_at_b(&block.a1, &dn0, &mut dh1, b, n1, h, false);
+                matmul_at_b_banded(kc, &block.a1, &dn0, &mut dh1, b, n1, h, f1, false);
                 relu_backward_inplace(&mut dh1, h1);
                 // shared layer-1 weights accumulate from both levels
-                matmul_at_b(&block.x0, &dh0, &mut grads[0].data, b, d, h, false);
-                matmul_at_b(&block.x1, &dh1, &mut grads[0].data, n1, d, h, true);
-                matmul_at_b(m0, &dh0, &mut grads[1].data, b, d, h, false);
-                matmul_at_b(n1v, &dh1, &mut grads[1].data, n1, d, h, true);
+                matmul_at_b(kc, &block.x0, &dh0, &mut grads[0].data, b, d, h, false);
+                matmul_at_b(kc, &block.x1, &dh1, &mut grads[0].data, n1, d, h, true);
+                matmul_at_b(kc, m0, &dh0, &mut grads[1].data, b, d, h, false);
+                matmul_at_b(kc, n1v, &dh1, &mut grads[1].data, n1, d, h, true);
                 colsum(&dh0, &mut grads[2].data, b, h, false);
                 colsum(&dh1, &mut grads[2].data, n1, h, true);
             }
@@ -541,12 +457,12 @@ impl NativeExec {
                 // shared MLP accumulates over the three calls.
                 let beta = APPNP_TELEPORT;
                 let mut dp1 = vec![0.0; n1 * c];
-                matmul_at_b(&block.a1, g, &mut dp1, b, n1, c, false);
+                matmul_at_b_banded(kc, &block.a1, g, &mut dp1, b, n1, c, f1, false);
                 for v in dp1.iter_mut() {
                     *v *= 1.0 - beta;
                 }
                 let mut dh2 = vec![0.0; n2 * c];
-                matmul_at_b(&block.a2, &dp1, &mut dh2, n1, n2, c, false);
+                matmul_at_b_banded(kc, &block.a2, &dp1, &mut dh2, n1, n2, c, f2, false);
                 for v in dh2.iter_mut() {
                     *v *= 1.0 - beta;
                 }
@@ -558,12 +474,12 @@ impl NativeExec {
                     (&block.x1, u1, &dh1, n1),
                     (&block.x0, u0, &dh0, b),
                 ] {
-                    matmul_at_b(u, dh, &mut grads[2].data, rows, h, c, !first);
+                    matmul_at_b(kc, u, dh, &mut grads[2].data, rows, h, c, !first);
                     colsum(dh, &mut grads[3].data, rows, c, !first);
                     let mut du = vec![0.0; rows * h];
-                    matmul_a_bt(dh, pd(params, 2), &mut du, rows, c, h);
+                    matmul_a_bt(kc, dh, pd(params, 2), &mut du, rows, c, h);
                     relu_backward_inplace(&mut du, u);
-                    matmul_at_b(x, &du, &mut grads[0].data, rows, d, h, !first);
+                    matmul_at_b(kc, x, &du, &mut grads[0].data, rows, d, h, !first);
                     colsum(&du, &mut grads[1].data, rows, h, !first);
                     first = false;
                 }
@@ -816,23 +732,26 @@ mod tests {
 
     #[test]
     fn gradcheck_all_archs_and_losses() {
-        // central finite differences on a handful of coordinates per tensor
+        // central finite differences on a handful of coordinates per tensor;
+        // kernel-thread count is irrelevant to the results (bit-identical
+        // contract), so run the check under a 2-lane pool
+        let kc = KernelCtx::new(2);
         for arch in ["mlp", "gcn", "sage", "appnp"] {
             let (exec, meta) = tiny_exec(arch, "sgd");
             let (_ds, blk) = tiny_block(&meta, 3);
             let mut rng = Pcg64::new(5);
             let state = ModelState::init(&meta, &mut rng);
-            let (_, grads) = exec.loss_and_grads(&state.params, &blk).unwrap();
+            let (_, grads) = exec.loss_and_grads(&kc, &state.params, &blk).unwrap();
             let eps = 1e-2f32;
             for (ti, t) in state.params.iter().enumerate() {
                 let probes = [0usize, t.data.len() / 2, t.data.len() - 1];
                 for &j in probes.iter() {
                     let mut plus = state.params.clone();
                     plus[ti].data[j] += eps;
-                    let (lp, _) = exec.loss_and_grads(&plus, &blk).unwrap();
+                    let (lp, _) = exec.loss_and_grads(&kc, &plus, &blk).unwrap();
                     let mut minus = state.params.clone();
                     minus[ti].data[j] -= eps;
-                    let (lm, _) = exec.loss_and_grads(&minus, &blk).unwrap();
+                    let (lm, _) = exec.loss_and_grads(&kc, &minus, &blk).unwrap();
                     let fd = (lp - lm) / (2.0 * eps);
                     let an = grads[ti].data[j];
                     assert!(
@@ -846,18 +765,19 @@ mod tests {
 
     #[test]
     fn sgd_training_reduces_loss_on_fixed_batch() {
+        let kc = KernelCtx::new(1);
         for arch in ["mlp", "gcn", "sage", "appnp"] {
             let (exec, meta) = tiny_exec(arch, "sgd");
             let (_ds, blk) = tiny_block(&meta, 7);
             let mut rng = Pcg64::new(11);
             let mut state = ModelState::init(&meta, &mut rng);
             let first = exec
-                .train_step(&mut state.params, &mut state.opt, &blk, 0.1)
+                .train_step(&kc, &mut state.params, &mut state.opt, &blk, 0.1)
                 .unwrap();
             let mut last = first;
             for _ in 0..30 {
                 last = exec
-                    .train_step(&mut state.params, &mut state.opt, &blk, 0.1)
+                    .train_step(&kc, &mut state.params, &mut state.opt, &blk, 0.1)
                     .unwrap();
             }
             assert!(last < first * 0.8, "{arch}: loss {first} -> {last}");
@@ -866,36 +786,78 @@ mod tests {
 
     #[test]
     fn adam_counter_and_convergence() {
+        let kc = KernelCtx::new(1);
         let (exec, meta) = tiny_exec("gcn", "adam");
         let (_ds, blk) = tiny_block(&meta, 9);
         let mut rng = Pcg64::new(13);
         let mut state = ModelState::init(&meta, &mut rng);
         assert_eq!(state.opt.len(), 2 * state.params.len() + 1);
         let first = exec
-            .train_step(&mut state.params, &mut state.opt, &blk, 0.01)
+            .train_step(&kc, &mut state.params, &mut state.opt, &blk, 0.01)
             .unwrap();
         for i in 1..=20 {
-            exec.train_step(&mut state.params, &mut state.opt, &blk, 0.01)
+            exec.train_step(&kc, &mut state.params, &mut state.opt, &blk, 0.01)
                 .unwrap();
             assert_eq!(state.opt.last().unwrap().data[0], (i + 1) as f32);
         }
         let last = exec
-            .train_step(&mut state.params, &mut state.opt, &blk, 0.01)
+            .train_step(&kc, &mut state.params, &mut state.opt, &blk, 0.01)
             .unwrap();
         assert!(last < first, "adam: {first} -> {last}");
     }
 
     #[test]
     fn lr_zero_is_noop_on_params() {
+        let kc = KernelCtx::new(1);
         let (exec, meta) = tiny_exec("sage", "sgd");
         let (_ds, blk) = tiny_block(&meta, 15);
         let mut rng = Pcg64::new(17);
         let mut state = ModelState::init(&meta, &mut rng);
         let before = state.params.clone();
-        exec.train_step(&mut state.params, &mut state.opt, &blk, 0.0)
+        exec.train_step(&kc, &mut state.params, &mut state.opt, &blk, 0.0)
             .unwrap();
         for (a, b) in state.params.iter().zip(&before) {
             assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn full_step_is_bit_identical_across_thread_counts_and_scalar() {
+        // the whole-executor determinism contract: scalar reference vs the
+        // tiled kernels at 1/2/7 lanes, over several consecutive steps
+        for arch in ["mlp", "gcn", "sage", "appnp"] {
+            let (exec, meta) = tiny_exec(arch, "sgd");
+            let (_ds, blk) = tiny_block(&meta, 21);
+            let mut rng = Pcg64::new(23);
+            let init = ModelState::init(&meta, &mut rng);
+
+            let run = |kc: &KernelCtx| -> (Vec<f32>, ModelState) {
+                let mut state = init.clone();
+                let mut losses = Vec::new();
+                for _ in 0..3 {
+                    losses.push(
+                        exec.train_step(kc, &mut state.params, &mut state.opt, &blk, 0.05)
+                            .unwrap(),
+                    );
+                }
+                (losses, state)
+            };
+            let scalar_kc = KernelCtx::with_pool(
+                std::sync::Arc::new(crate::runtime::pool::ThreadPool::new(1)),
+                true,
+            );
+            let (want_losses, want_state) = run(&scalar_kc);
+            for threads in [1usize, 2, 7] {
+                let (losses, state) = run(&KernelCtx::new(threads));
+                assert_eq!(
+                    want_losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+                    losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+                    "{arch} t={threads}: loss stream diverged from scalar"
+                );
+                for (a, b) in want_state.params.iter().zip(&state.params) {
+                    assert_eq!(a.data, b.data, "{arch} t={threads}: params diverged");
+                }
+            }
         }
     }
 

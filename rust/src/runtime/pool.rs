@@ -1,0 +1,249 @@
+//! Std-only persistent worker pool for the tiled compute kernels.
+//!
+//! The pool exists for exactly one call shape: "run this `Fn(thread_index)`
+//! once on every pool thread, block until all of them are done"
+//! ([`ThreadPool::run`]). The kernel layer maps thread indices onto disjoint
+//! output-row ranges, so no synchronization beyond the completion barrier is
+//! ever needed, and the float accumulation order inside each output element
+//! is untouched (see `kernels.rs` for the determinism contract).
+//!
+//! Design notes:
+//!
+//! - **Persistent threads.** Workers are spawned once in [`ThreadPool::new`]
+//!   and parked on an mpsc receive between calls; a kernel dispatch is two
+//!   channel hops per worker, not a thread spawn. `ThreadPool::new(1)` (or a
+//!   host with one core) spawns nothing and runs jobs inline.
+//! - **Caller participates.** `run` executes index 0 on the calling thread,
+//!   so a pool of T threads spawns only T−1 OS threads and the caller is
+//!   never idle-blocked while work remains.
+//! - **Scoped borrows without `std::thread::scope`.** Jobs borrow the
+//!   caller's stack (kernel operands live in the caller's frame). The borrow
+//!   is erased to `'static` to cross the channel and is sound because `run`
+//!   does not return — not even by panic — until every worker has reported
+//!   completion of that exact job.
+//! - **Panic propagation.** A panicking job (on any thread, including the
+//!   caller) is caught, the barrier is still drained, and the panic resumes
+//!   on the caller. The pool stays usable afterwards.
+//! - **Shutdown.** Dropping the pool closes the job channels; workers fall
+//!   out of their receive loop and are joined. Repeated create/run/drop
+//!   cycles are safe (exercised by the tests below).
+//!
+//! `run` is not re-entrant from inside a job: kernels never nest pool
+//! dispatches, and nesting would interleave completion tokens.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A dispatched job: a `&(dyn Fn(usize) + Sync)` with its lifetime erased so
+/// it can cross the worker channels. Validity is guaranteed by the
+/// completion barrier in [`ThreadPool::run`].
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared-called from many threads) and
+// outlives every use — `run` blocks on the completion barrier before the
+// borrow it was erased from can end.
+unsafe impl Send for Job {}
+
+/// `Ok(())` or the payload of a panicking job.
+type JobResult = std::thread::Result<()>;
+
+/// Number of hardware threads on this host (>= 1).
+pub fn host_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Persistent worker pool; see the module docs.
+pub struct ThreadPool {
+    threads: usize,
+    /// one job channel per spawned worker (indices `1..threads`)
+    txs: Vec<Sender<Job>>,
+    /// completion tokens, one per worker per job
+    done_rx: Receiver<JobResult>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Pool of `threads` total execution lanes (caller included); `0` means
+    /// auto-size to [`host_threads`]. Spawns `threads - 1` OS threads.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = if threads == 0 { host_threads() } else { threads };
+        let (done_tx, done_rx) = channel::<JobResult>();
+        let mut txs = Vec::with_capacity(threads.saturating_sub(1));
+        let mut handles = Vec::with_capacity(threads.saturating_sub(1));
+        for i in 1..threads {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("llcg-kernels-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // SAFETY: the pointer stays valid until the done
+                        // token below is received by `run`
+                        let f = unsafe { &*job.0 };
+                        let result = catch_unwind(AssertUnwindSafe(|| f(i)));
+                        if done.send(result).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawning kernel pool worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        ThreadPool {
+            threads,
+            txs,
+            done_rx,
+            handles,
+        }
+    }
+
+    /// Total execution lanes (caller thread included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(t)` once for every lane `t` in `0..threads()`, blocking until
+    /// all calls return. Index 0 runs on the calling thread. Panics in any
+    /// lane resume on the caller after the barrier drains.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.txs.is_empty() {
+            f(0);
+            return;
+        }
+        // SAFETY: lifetime erasure only; `run` blocks on the completion
+        // barrier below before returning (even under panic), so the borrow
+        // outlives every worker's use of it.
+        let erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        for tx in &self.txs {
+            tx.send(Job(erased as *const _))
+                .expect("kernel pool worker exited early");
+        }
+        let caller = catch_unwind(AssertUnwindSafe(|| erased(0)));
+        let mut panic = caller.err();
+        for _ in 0..self.txs.len() {
+            match self
+                .done_rx
+                .recv()
+                .expect("kernel pool worker vanished mid-job")
+            {
+                Ok(()) => {}
+                Err(p) => panic = Some(p),
+            }
+        }
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // closing the job channels ends the worker loops
+        self.txs.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_lane_exactly_once() {
+        for threads in [1usize, 2, 3, 7] {
+            let pool = ThreadPool::new(threads);
+            assert_eq!(pool.threads(), threads);
+            let hits: Vec<AtomicUsize> = (0..threads).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(&|t| {
+                hits[t].fetch_add(1, Ordering::SeqCst);
+            });
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "lane {t} of {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_row_writes_land() {
+        // the kernel usage pattern: each lane owns a contiguous range
+        let pool = ThreadPool::new(4);
+        let n = 103usize;
+        let mut out = vec![0u32; n];
+        let chunk = n.div_ceil(4);
+        struct SendMut(*mut u32);
+        unsafe impl Send for SendMut {}
+        unsafe impl Sync for SendMut {}
+        let base = SendMut(out.as_mut_ptr());
+        pool.run(&|t| {
+            let lo = t * chunk;
+            if lo >= n {
+                return;
+            }
+            let hi = (lo + chunk).min(n);
+            for i in lo..hi {
+                // SAFETY: ranges are disjoint per lane and in-bounds
+                unsafe { *base.0.add(i) = i as u32 + 1 };
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(&|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 200 * 3);
+    }
+
+    #[test]
+    fn repeated_create_and_drop_is_clean() {
+        for _ in 0..20 {
+            let pool = ThreadPool::new(4);
+            let total = AtomicUsize::new(0);
+            pool.run(&|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(total.load(Ordering::SeqCst), 4);
+            drop(pool); // joins workers; must not hang or leak
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|t| {
+                if t == 1 {
+                    panic!("lane 1 boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "worker panic must surface on the caller");
+        // the pool remains usable after a panicking job
+        let total = AtomicUsize::new(0);
+        pool.run(&|_| {
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn zero_asks_for_host_threads() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), host_threads());
+    }
+}

@@ -127,6 +127,15 @@ fn event_stream_is_ordered_and_complete() {
         kinds.iter().filter(|&&k| k == "eval_completed").count(),
         2
     );
+    // one worker completion per (worker, round)
+    let cfg = base_cfg();
+    assert_eq!(
+        kinds
+            .iter()
+            .filter(|&&k| k == "worker_round_completed")
+            .count(),
+        cfg.parts * 3
+    );
 }
 
 #[test]

@@ -152,6 +152,12 @@ fn event_summary(ev: &Event) -> String {
         Event::RoundStarted { round, local_steps } => {
             format!("round_started r={round} k={local_steps}")
         }
+        Event::WorkerRoundCompleted { round, part, .. } => {
+            // the identity (round, part) — and the part-ordered position in
+            // the stream — are engine-independent; the compute/net times
+            // are measurements and deliberately excluded from the digest
+            format!("worker_round r={round} p={part}")
+        }
         Event::CorrectionApplied { round, steps } => {
             format!("correction_applied r={round} s={steps}")
         }
@@ -214,10 +220,30 @@ fn engines_emit_identical_sync_event_streams() {
     let count = |prefix: &str| a.iter().filter(|s| s.starts_with(prefix)).count();
     assert_eq!(count("round_started"), seq_cfg.rounds);
     assert_eq!(count("round_completed"), seq_cfg.rounds);
+    assert_eq!(
+        count("worker_round"),
+        seq_cfg.rounds * seq_cfg.parts,
+        "one WorkerRoundCompleted per worker per round"
+    );
     assert_eq!(count("correction_applied"), seq_cfg.rounds);
     assert_eq!(count("eval_completed"), 2, "eval_every=2 over 4 rounds");
     assert_eq!(count("finished"), 1);
     assert!(a.last().unwrap().starts_with("finished"));
+    // worker events sit between their RoundStarted and RoundCompleted, in
+    // part order (0..P) on both engines
+    let first_round: Vec<&String> = a
+        .iter()
+        .skip_while(|s| !s.starts_with("round_started r=1 "))
+        .take_while(|s| !s.starts_with("round_completed"))
+        .filter(|s| s.starts_with("worker_round"))
+        .collect();
+    let want: Vec<String> = (0..seq_cfg.parts)
+        .map(|p| format!("worker_round r=1 p={p}"))
+        .collect();
+    assert_eq!(
+        first_round.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        want.iter().map(|s| s.as_str()).collect::<Vec<_>>()
+    );
 }
 
 #[test]

@@ -224,8 +224,8 @@ fn device_resident_eval_matches_literal() {
     let targets: Vec<u32> = (0..8).collect();
     let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
     let lit = rt.eval_step("gcn_eval_tiny", &state.params, &blk).unwrap();
-    let dev = rt.upload_params("gcn_eval_tiny", &state.params).unwrap();
-    let res = rt.eval_step_device(&dev, &blk).unwrap();
+    let mut dev = rt.upload_params("gcn_eval_tiny", &state.params).unwrap();
+    let res = rt.eval_step_device(&mut dev, &blk).unwrap();
     assert_eq!(lit, res, "resident eval logits must match literal path");
 }
 

@@ -1,0 +1,202 @@
+//! Kernel-layer determinism contract at the system level: full train/eval
+//! steps and whole runs must be bit-identical across kernel thread counts
+//! {1, 2, 7} and against the scalar reference kernels, the pinned block
+//! staging must match the fresh-literal path, and the device-side eval
+//! reductions must reproduce the logits-download metrics exactly.
+//! (Kernel-vs-reference parity on odd shapes lives in the unit tests of
+//! `runtime::kernels`; pool lifecycle tests in `runtime::pool`.)
+
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::graph::generators;
+use llcg::metrics;
+use llcg::runtime::{ModelState, Runtime};
+use llcg::sampler::BlockBuilder;
+use llcg::util::Pcg64;
+
+fn native_rt() -> Runtime {
+    let (rt, _dir) =
+        Runtime::load_or_native("target/native-artifacts").expect("native runtime");
+    assert_eq!(rt.backend_name(), "native");
+    rt
+}
+
+/// Train a few device-resident steps and return (losses, params) bits.
+fn run_steps(rt: &Runtime, name: &str, seed: u64) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let ds = generators::by_name("tiny", 0).unwrap();
+    let meta = rt.meta(name).unwrap().clone();
+    let bb = BlockBuilder::new(
+        meta.dims.b,
+        meta.dims.f1,
+        meta.dims.f2,
+        meta.dims.d,
+        meta.dims.c,
+        meta.multilabel(),
+    );
+    let mut init_rng = Pcg64::new(seed);
+    let mut state = ModelState::init(&meta, &mut init_rng);
+    let mut rng = Pcg64::new(seed + 1);
+    let targets: Vec<u32> = ds.splits.train[..meta.dims.b].to_vec();
+    let mut dev = rt.upload(name, &state).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        losses.push(
+            rt.train_step_device(&mut dev, &blk, 0.02)
+                .unwrap()
+                .to_bits(),
+        );
+    }
+    rt.download_into(&dev, &mut state).unwrap();
+    let params = state
+        .params
+        .iter()
+        .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    (losses, params)
+}
+
+#[test]
+fn steps_are_bit_identical_across_thread_counts_and_scalar() {
+    let rt = native_rt();
+    for arch in ["gcn", "sage", "appnp", "mlp"] {
+        let name = format!("{arch}_adam_tiny");
+        rt.set_kernel_scalar(true);
+        rt.set_kernel_threads(1);
+        let want = run_steps(&rt, &name, 31);
+        rt.set_kernel_scalar(false);
+        for threads in [1usize, 2, 7] {
+            rt.set_kernel_threads(threads);
+            assert_eq!(rt.kernel_threads(), threads);
+            let got = run_steps(&rt, &name, 31);
+            assert_eq!(want, got, "{arch} t={threads}: diverged from scalar");
+        }
+    }
+    rt.set_kernel_threads(0); // back to auto; later tests share the runtime dir
+}
+
+#[test]
+fn whole_run_is_bit_identical_across_kernel_thread_counts() {
+    // the engine-level consequence of kernel determinism: the sequential
+    // driver at kernel_threads=1 and =7 produces the same RunResult bits
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.algorithm = Algorithm::Llcg;
+    cfg.parts = 2;
+    cfg.rounds = 2;
+    cfg.schedule = Schedule::Fixed { k: 2 };
+    cfg.correction_steps = 1;
+    cfg.eval_max_nodes = 32;
+    cfg.seed = 5;
+    let ds = generators::by_name("tiny", cfg.seed).unwrap();
+    let mut results = Vec::new();
+    for threads in [1usize, 7] {
+        let rt = native_rt();
+        cfg.kernel_threads = threads;
+        results.push(driver::run_experiment(&cfg, &ds, &rt).unwrap());
+    }
+    let (a, b) = (&results[0], &results[1]);
+    assert_eq!(a.final_val.to_bits(), b.final_val.to_bits());
+    assert_eq!(a.final_test.to_bits(), b.final_test.to_bits());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.local_loss.to_bits(), rb.local_loss.to_bits());
+        assert_eq!(ra.global_loss.to_bits(), rb.global_loss.to_bits());
+        assert_eq!(ra.val_score.to_bits(), rb.val_score.to_bits());
+    }
+}
+
+#[test]
+fn eval_split_matches_logits_download_path() {
+    // device-side reductions (argmax / pos-bits / per-row loss) vs the full
+    // logits download + metrics::* — bit-for-bit, on a multiclass and a
+    // multilabel dataset
+    let rt = native_rt();
+    for (ds_name, arch) in [("tiny", "gcn"), ("yelp-s", "gcn")] {
+        let ds = generators::by_name(ds_name, 3).unwrap();
+        let eval_name = Runtime::eval_name(arch, ds_name);
+        let meta = rt.meta(&eval_name).unwrap().clone();
+        let train_meta = rt
+            .meta(&Runtime::train_name(arch, "adam", ds_name))
+            .unwrap()
+            .clone();
+        let mut rng = Pcg64::new(17);
+        let state = ModelState::init(&train_meta, &mut rng);
+        let bb = BlockBuilder::new(
+            meta.dims.b,
+            meta.dims.f1,
+            meta.dims.f2,
+            meta.dims.d,
+            meta.dims.c,
+            meta.multilabel(),
+        );
+        let ids: Vec<u32> = ds.splits.val.iter().copied().take(50).collect();
+        assert!(!ids.is_empty());
+        // both paths consume the same rng stream (Full fanout draws none)
+        let logits = driver::eval_logits(
+            &rt,
+            &eval_name,
+            &state.params,
+            &ds,
+            &ids,
+            &bb,
+            &mut Pcg64::new(1),
+        )
+        .unwrap();
+        let want_score = driver::score(&ds, &logits, meta.dims.c, &ids);
+        let want_loss = metrics::mean_loss(&logits, meta.dims.c, &ds.labels, &ids);
+        let (score, loss) = driver::eval_split(
+            &rt,
+            &eval_name,
+            &state.params,
+            &ds,
+            &ids,
+            &bb,
+            &mut Pcg64::new(1),
+            true,
+        )
+        .unwrap();
+        assert_eq!(
+            want_score.to_bits(),
+            score.to_bits(),
+            "{ds_name}: score diverged"
+        );
+        assert_eq!(
+            want_loss.to_bits(),
+            loss.to_bits(),
+            "{ds_name}: mean loss diverged"
+        );
+    }
+}
+
+#[test]
+fn cluster_and_sequential_agree_at_mixed_kernel_thread_counts() {
+    // the strongest form of the contract: different engines AND different
+    // kernel-thread settings, still bit-for-bit equal losses
+    let rt = native_rt();
+    let mut seq_cfg = ExperimentConfig::default();
+    seq_cfg.dataset = "tiny".into();
+    seq_cfg.algorithm = Algorithm::Llcg;
+    seq_cfg.parts = 3;
+    seq_cfg.rounds = 2;
+    seq_cfg.schedule = Schedule::Fixed { k: 2 };
+    seq_cfg.correction_steps = 1;
+    seq_cfg.eval_max_nodes = 32;
+    seq_cfg.seed = 9;
+    seq_cfg.kernel_threads = 5;
+    let mut clu_cfg = seq_cfg.clone();
+    clu_cfg.engine = llcg::cluster::Engine::Cluster;
+    clu_cfg.kernel_threads = 2;
+    let ds = generators::by_name("tiny", seq_cfg.seed).unwrap();
+    let a = driver::run_experiment(&seq_cfg, &ds, &rt).unwrap();
+    let b = driver::run_experiment(&clu_cfg, &ds, &rt).unwrap();
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(
+            ra.local_loss.to_bits(),
+            rb.local_loss.to_bits(),
+            "round {}: kernel-thread counts must not leak into numerics",
+            ra.round
+        );
+        assert_eq!(ra.val_score.to_bits(), rb.val_score.to_bits());
+    }
+    assert_eq!(a.final_test.to_bits(), b.final_test.to_bits());
+}

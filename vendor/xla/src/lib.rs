@@ -26,6 +26,13 @@
 //! HloModuleProto::from_text_file, XlaComputation::from_proto
 //! Literal::{create_from_shape_and_untyped_data, scalar, to_vec, to_tuple, to_tuple1}
 //! ```
+//!
+//! One extension beyond the xla-rs surface:
+//! [`Literal::copy_from_untyped_data`] overwrites a literal's bytes in
+//! place (the runtime's pinned block-input staging). When swapping in the
+//! real crate, shim it with a one-line wrapper that rebuilds the literal
+//! via `create_from_shape_and_untyped_data` — semantics are identical, the
+//! facade version merely skips the allocation.
 
 use std::fmt;
 
@@ -107,6 +114,25 @@ impl Literal {
             bytes: data.to_vec(),
             tuple: None,
         })
+    }
+
+    /// Overwrite this literal's bytes in place (shape and dtype are fixed
+    /// at creation). The pinned-staging fast path: no allocation, a single
+    /// `memcpy`. Errors on tuples and on any length mismatch.
+    pub fn copy_from_untyped_data(&mut self, data: &[u8]) -> Result<()> {
+        if self.tuple.is_some() {
+            return Err(Error("copy_from_untyped_data on a tuple literal".into()));
+        }
+        if data.len() != self.bytes.len() {
+            return Err(Error(format!(
+                "copy_from_untyped_data: {} bytes into a {}-byte literal (shape {:?})",
+                data.len(),
+                self.bytes.len(),
+                self.shape
+            )));
+        }
+        self.bytes.copy_from_slice(data);
+        Ok(())
     }
 
     /// Rank-0 f32 literal.
@@ -292,6 +318,22 @@ mod tests {
             Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
                 .is_err()
         );
+    }
+
+    #[test]
+    fn literal_in_place_overwrite() {
+        let xs = [1.0f32, 2.0, 3.0];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let mut lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        let ys = [-4.0f32, 5.5, 0.0];
+        let ybytes: Vec<u8> = ys.iter().flat_map(|x| x.to_le_bytes()).collect();
+        lit.copy_from_untyped_data(&ybytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), ys);
+        // wrong length and tuples are rejected
+        assert!(lit.copy_from_untyped_data(&ybytes[..8]).is_err());
+        let mut t = Literal::tuple(vec![Literal::scalar(1.0)]);
+        assert!(t.copy_from_untyped_data(&ybytes).is_err());
     }
 
     #[test]
