@@ -10,9 +10,13 @@
 #   make bench-kernels  just the kernel-layer benches: scalar vs tiled vs
 #                    tiled+pool at 1/2/4/8 threads, step latency per engine,
 #                    staged-vs-pinned block upload (writes BENCH_kernels.json)
+#   make bench-serve just the serving benches: cold (full 2-hop eval) vs
+#                    cached query latency, batch=1 vs micro-batched, and
+#                    sustained throughput at 1/2/4/8 server threads
+#                    (writes BENCH_serve.json)
 #   make test        quick test run
 
-.PHONY: artifacts check fmt test bench bench-cluster bench-kernels clean
+.PHONY: artifacts check fmt test bench bench-cluster bench-kernels bench-serve clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -36,6 +40,9 @@ bench-cluster:
 
 bench-kernels:
 	cargo bench -- kernels
+
+bench-serve:
+	cargo bench -- serve
 
 clean:
 	cargo clean

@@ -1,0 +1,133 @@
+//! Train → publish → serve, live: the cluster engine trains LLCG on one
+//! thread while the inference server answers queries on another, hot-swapping
+//! to each round's improving snapshot as it is published.
+//!
+//!     cargo run --release --example serve_pipeline
+//!
+//! Pipeline:
+//! 1. a training thread runs the threaded cluster engine with
+//!    `Run::publish_to(hub)` — every round boundary publishes the freshly
+//!    averaged + corrected global params as a `ModelSnapshot`;
+//! 2. the main thread waits for the first snapshot, starts the
+//!    micro-batching `serve::Server` over the hub, and issues queries while
+//!    training is still running — watch the served snapshot `version`
+//!    climb as the model improves under live traffic;
+//! 3. after training finishes, a closed-loop load test measures sustained
+//!    throughput and latency percentiles against the final model.
+//!
+//! Served scores are bit-identical to the training-side eval path at every
+//! batch size and thread count (see `rust/src/serve/README.md`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use llcg::api::ExperimentBuilder;
+use llcg::cluster::Engine;
+use llcg::coordinator::{Algorithm, Schedule};
+use llcg::graph::generators;
+use llcg::runtime::Runtime;
+use llcg::serve::{run_load, LoadMode, LoadSpec, ServeConfig, Server, SnapshotHub};
+
+fn main() -> anyhow::Result<()> {
+    // dataset shared by training and serving (one Arc, no reload)
+    let ds = Arc::new(generators::by_name("tiny", 7).expect("tiny generator"));
+    println!("dataset: {}", ds.stats());
+
+    let hub = SnapshotHub::new();
+
+    // 1. training thread: cluster engine, publishing every round boundary
+    let trainer = {
+        let ds = ds.clone();
+        let hub = hub.clone();
+        std::thread::spawn(move || {
+            let (rt, _) =
+                Runtime::load_or_native("target/native-artifacts").expect("native runtime");
+            let exp = ExperimentBuilder::new()
+                .with_dataset(ds)
+                .arch("gcn")
+                .algorithm(Algorithm::Llcg)
+                .engine(Engine::Cluster)
+                .parts(2)
+                .rounds(10)
+                .schedule(Schedule::Fixed { k: 4 })
+                .correction_steps(1)
+                .eval_every(2)
+                .eval_max_nodes(64)
+                .seed(7)
+                .build()
+                .expect("experiment builds");
+            exp.launch(&rt)
+                .publish_to(hub)
+                .expect("gcn is servable")
+                .finish()
+                .expect("training run")
+        })
+    };
+
+    // 2. wait for round 1's snapshot, then serve under live training
+    let t0 = Instant::now();
+    while hub.version() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(120), "no snapshot published");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let server = Server::start(
+        hub.clone(),
+        ds.clone(),
+        ServeConfig {
+            max_batch: 16,
+            flush_us: 200,
+            threads: 1, // training owns most cores while it runs
+            queue: 256,
+        },
+    )?;
+    let client = server.client();
+    println!("\nserving while training (snapshot version climbs as rounds publish):");
+    let probe = ds.splits.val[0];
+    let mut last_version = 0;
+    while !trainer.is_finished() {
+        let scores = client.query(probe)?;
+        if scores.version != last_version {
+            last_version = scores.version;
+            println!(
+                "  node {probe}: pred={} (snapshot v{} / round {})",
+                scores.pred,
+                scores.version,
+                hub.current().map(|s| s.round).unwrap_or(0)
+            );
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let result = trainer.join().expect("training thread");
+    println!(
+        "training done: final val={:.4} test={:.4}; snapshots published: {}",
+        result.final_val,
+        result.final_test,
+        hub.version()
+    );
+
+    // 3. closed-loop load test against the final model
+    let nodes: Vec<u32> = (0..ds.n() as u32).collect();
+    let report = run_load(
+        &client,
+        &nodes,
+        &LoadSpec {
+            mode: LoadMode::Closed,
+            clients: 4,
+            requests: 2000,
+            seed: 7,
+        },
+    );
+    println!("\nload test (closed loop, 4 clients): {report}");
+    let stats = server.stats();
+    println!(
+        "server stats: {} requests in {} batches (mean batch {:.1}, max {}), {} hot-swaps",
+        stats.requests,
+        stats.batches,
+        stats.mean_batch(),
+        stats.max_batch,
+        stats.swaps
+    );
+    drop(client);
+    server.shutdown();
+    Ok(())
+}

@@ -113,6 +113,7 @@ impl Bench {
                                     ("std", Json::num(s.std)),
                                     ("p50", Json::num(s.p50)),
                                     ("p90", Json::num(s.p90)),
+                                    ("p95", Json::num(s.p95)),
                                     ("p99", Json::num(s.p99)),
                                 ])
                             })
@@ -466,6 +467,156 @@ fn main() {
                         b.mean_of("kernels/block-upload-pinned(reddit-s)"),
                     ) {
                         println!("  -> pinned block staging speedup: {:.2}x", staged / pin);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- serve: cached inference vs the uncached eval path -------------------
+    // The serving acceptance rows (`make bench-serve` -> BENCH_serve.json):
+    // cold = the eval path's full 2-hop block build + forward per query
+    // (params pre-uploaded — the best the uncached path can do); cached =
+    // the per-snapshot embedding cache + one output-layer step. Same bits,
+    // very different clocks. Throughput rows push the same request count
+    // through each path (lower ms = higher sustained throughput).
+    if b.enabled("serve/") {
+        use llcg::runtime::KernelCtx;
+        use llcg::serve::{
+            run_load, EmbeddingCache, InferenceEngine, LoadMode, LoadSpec, ModelSnapshot,
+            ServeConfig, Server, SnapshotHub,
+        };
+
+        match Runtime::load_or_native("artifacts") {
+            Err(e) => eprintln!("(no runtime available — skipping serve benches: {e:#})"),
+            Ok((rt, _adir)) => {
+                if rt.backend_name() != "native" {
+                    eprintln!("(serve benches need the native backend — skipped)");
+                } else {
+                    let data = Arc::new(generators::by_name("reddit-s", 0).unwrap());
+                    let train_meta = rt.meta("gcn_adam_reddit-s").unwrap().clone();
+                    let eval_name = "gcn_eval_reddit-s";
+                    let em = rt.meta(eval_name).unwrap().clone();
+                    let mut rng = Pcg64::new(11);
+                    let state = ModelState::init(&train_meta, &mut rng);
+                    let snap = Arc::new(
+                        ModelSnapshot::for_artifact(&train_meta, &state.params, 1).unwrap(),
+                    );
+                    let val = data.splits.val.clone();
+                    let threads: &[usize] = &[1, 2, 4, 8];
+
+                    // cache build cost (paid once per published snapshot)
+                    let kc1 = KernelCtx::new(0);
+                    b.run("serve/cache-build(gcn,reddit-s)", 1, 5, || {
+                        std::hint::black_box(
+                            EmbeddingCache::build(&snap, &data, &kc1).unwrap().bytes(),
+                        );
+                    });
+
+                    // cold baseline: full 2-hop eval block + forward per query
+                    let mut bb = BlockBuilder::new(
+                        em.dims.b,
+                        em.dims.f1,
+                        em.dims.f2,
+                        em.dims.d,
+                        em.dims.c,
+                        em.multilabel(),
+                    );
+                    bb.fanout = Fanout::Full;
+                    bb.sample_ratio = 1.0;
+                    let mut dev = rt.upload_params(eval_name, &state.params).unwrap();
+                    let mut arena = BlockArena::new();
+                    let mut qrng = Pcg64::new(13);
+                    let cold_row = "serve/query-batch1-uncached(gcn,reddit-s)";
+                    b.run(cold_row, 3, 60, || {
+                        let v = *qrng.choose(&val);
+                        let blk = bb.build_into(&mut arena, &[v], &data.graph, &data, &mut qrng);
+                        std::hint::black_box(rt.eval_step_device(&mut dev, blk).unwrap().len());
+                    });
+
+                    // cached engine: batch=1 and micro-batched, per thread count
+                    for &t in threads {
+                        let mut engine = InferenceEngine::new(
+                            snap.clone(),
+                            data.clone(),
+                            KernelCtx::new(t),
+                        )
+                        .unwrap();
+                        let mut r2 = Pcg64::new(17);
+                        let one_row = format!("serve/query-batch1-cached(t={t})");
+                        b.run(&one_row, 5, 200, || {
+                            let v = *r2.choose(&val);
+                            std::hint::black_box(engine.score_batch(&[v]).unwrap().len());
+                        });
+                        if t == 1 {
+                            if let (Some(cold), Some(one)) =
+                                (b.mean_of(cold_row), b.mean_of(&one_row))
+                            {
+                                println!(
+                                    "  -> embedding cache query speedup (batch=1, t=1): {:.2}x",
+                                    cold / one
+                                );
+                            }
+                        }
+                        b.run(&format!("serve/query-microbatch32-cached(t={t})"), 5, 100, || {
+                            let batch = r2.sample_without_replacement(&val, 32);
+                            std::hint::black_box(engine.score_batch(&batch).unwrap().len());
+                        });
+                    }
+
+                    // sustained throughput: N requests through each path
+                    let n_req = 256usize;
+                    let unc_row = format!("serve/throughput-uncached-batch1(n={n_req})");
+                    let mut r3 = Pcg64::new(19);
+                    b.run(&unc_row, 1, 3, || {
+                        for _ in 0..n_req {
+                            let v = *r3.choose(&val);
+                            let blk =
+                                bb.build_into(&mut arena, &[v], &data.graph, &data, &mut r3);
+                            std::hint::black_box(
+                                rt.eval_step_device(&mut dev, blk).unwrap().len(),
+                            );
+                        }
+                    });
+                    let hub = SnapshotHub::new();
+                    hub.publish(ModelSnapshot::for_artifact(&train_meta, &state.params, 1).unwrap());
+                    for &t in threads {
+                        let server = Server::start(
+                            hub.clone(),
+                            data.clone(),
+                            ServeConfig {
+                                max_batch: 32,
+                                flush_us: 200,
+                                threads: t,
+                                queue: 1024,
+                            },
+                        )
+                        .unwrap();
+                        let client = server.client();
+                        let spec = LoadSpec {
+                            mode: LoadMode::Closed,
+                            clients: 4,
+                            requests: n_req,
+                            seed: 23,
+                        };
+                        let srv_row =
+                            format!("serve/throughput-server-microbatch(n={n_req},clients=4,t={t})");
+                        b.run(&srv_row, 1, 3, || {
+                            let rep = run_load(&client, &val, &spec);
+                            assert_eq!(rep.completed, n_req, "load run dropped requests");
+                            std::hint::black_box(rep.throughput_rps);
+                        });
+                        if let (Some(unc), Some(srv)) =
+                            (b.mean_of(&unc_row), b.mean_of(&srv_row))
+                        {
+                            println!(
+                                "  -> micro-batched+cached throughput vs uncached batch=1 \
+                                 (t={t}): {:.2}x",
+                                unc / srv
+                            );
+                        }
+                        drop(client);
+                        server.shutdown();
                     }
                 }
             }

@@ -361,6 +361,46 @@ static KEYS: &[KeySpec] = &[
         },
         show: |cfg| cfg.net.clone(),
     },
+    KeySpec {
+        name: "serve_batch",
+        kind: KeyKind::Num,
+        doc: "serving: micro-batch flush size (requests per inference batch)",
+        apply: |cfg, v| {
+            cfg.serve_batch = req_count(v, "serve_batch", 1)?;
+            Ok(())
+        },
+        show: |cfg| cfg.serve_batch.to_string(),
+    },
+    KeySpec {
+        name: "serve_flush_us",
+        kind: KeyKind::Num,
+        doc: "serving: micro-batch flush deadline (microseconds after the first request)",
+        apply: |cfg, v| {
+            cfg.serve_flush_us = req_count(v, "serve_flush_us", 0)? as u64;
+            Ok(())
+        },
+        show: |cfg| cfg.serve_flush_us.to_string(),
+    },
+    KeySpec {
+        name: "serve_threads",
+        kind: KeyKind::Num,
+        doc: "serving: kernel-pool lanes for the inference server (0 = all cores)",
+        apply: |cfg, v| {
+            cfg.serve_threads = req_count(v, "serve_threads", 0)?;
+            Ok(())
+        },
+        show: |cfg| cfg.serve_threads.to_string(),
+    },
+    KeySpec {
+        name: "serve_queue",
+        kind: KeyKind::Num,
+        doc: "serving: bounded request-queue depth (senders block when full)",
+        apply: |cfg, v| {
+            cfg.serve_queue = req_count(v, "serve_queue", 1)?;
+            Ok(())
+        },
+        show: |cfg| cfg.serve_queue.to_string(),
+    },
 ];
 
 /// Look up a key by its canonical (underscore) name.
@@ -450,7 +490,7 @@ mod tests {
         dedup.dedup();
         assert_eq!(names.len(), dedup.len(), "duplicate KeySpec rows");
         // one row per ExperimentConfig knob (schedule takes two)
-        assert_eq!(names.len(), 25);
+        assert_eq!(names.len(), 29);
     }
 
     #[test]
@@ -511,6 +551,23 @@ mod tests {
         apply_str(&mut cfg, "rounds", "0").unwrap(); // rounds=0 is legal
         apply_str(&mut cfg, "eval_max_nodes", "0").unwrap(); // 0 = all
         apply_str(&mut cfg, "kernel_threads", "0").unwrap(); // 0 = auto
+    }
+
+    #[test]
+    fn serve_keys_parse_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        apply_str(&mut cfg, "serve_batch", "8").unwrap();
+        apply_str(&mut cfg, "serve-flush-us", "1000").unwrap();
+        apply_str(&mut cfg, "serve_threads", "2").unwrap();
+        apply_str(&mut cfg, "serve_queue", "16").unwrap();
+        assert_eq!(
+            (cfg.serve_batch, cfg.serve_flush_us, cfg.serve_threads, cfg.serve_queue),
+            (8, 1000, 2, 16)
+        );
+        assert!(apply_str(&mut cfg, "serve_batch", "0").is_err());
+        assert!(apply_str(&mut cfg, "serve_queue", "0").is_err());
+        apply_str(&mut cfg, "serve_flush_us", "0").unwrap(); // 0 = flush instantly
+        apply_str(&mut cfg, "serve_threads", "0").unwrap(); // 0 = all cores
     }
 
     #[test]

@@ -21,7 +21,8 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::driver::{self, RoundRecord, RunResult};
 use crate::coordinator::{Algorithm, CorrectionBatch, Schedule};
 use crate::graph::Dataset;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, Tensor};
+use crate::serve::{SnapshotHub, SnapshotPublisher};
 
 // ---------------------------------------------------------------------------
 // events
@@ -95,11 +96,15 @@ impl RunControl {
     }
 }
 
-/// Engine-side plumbing: where events go and whether to keep going. Lives
-/// on the server thread for the whole run (worker threads never emit).
+/// Engine-side plumbing: where events go, whether to keep going, and the
+/// optional serving publisher. Lives on the server thread for the whole
+/// run (worker threads never emit).
 pub(crate) struct RunCtx<'a> {
     pub sink: &'a mut dyn FnMut(Event),
     pub stop: &'a RunControl,
+    /// when set (`Run::publish_to`), every engine snapshots the global
+    /// params here at each round boundary for live serving
+    pub publish: Option<&'a SnapshotPublisher>,
 }
 
 impl RunCtx<'_> {
@@ -109,6 +114,13 @@ impl RunCtx<'_> {
 
     pub fn stopped(&self) -> bool {
         self.stop.stop_requested()
+    }
+
+    /// Round-boundary snapshot publication (no-op without a publisher).
+    pub fn publish_params(&self, round: usize, params: &[Tensor]) {
+        if let Some(p) = self.publish {
+            p.publish(round, params);
+        }
     }
 }
 
@@ -368,6 +380,7 @@ impl Experiment {
             exp: self,
             rt,
             control: RunControl::default(),
+            publisher: None,
         }
     }
 }
@@ -378,12 +391,26 @@ pub struct Run<'a> {
     exp: &'a Experiment,
     rt: &'a Runtime,
     control: RunControl,
+    publisher: Option<SnapshotPublisher>,
 }
 
 impl Run<'_> {
     /// Handle for stopping this run at the next round boundary.
     pub fn control(&self) -> RunControl {
         self.control.clone()
+    }
+
+    /// Publish a serving snapshot of the global parameters to `hub` at
+    /// every round boundary (on either engine, in every round mode) — the
+    /// live-serving hand-off: a `serve::Server` reading `hub` hot-swaps to
+    /// each improving model while this run is still training. Fails for
+    /// archs outside the native serving zoo (GAT).
+    pub fn publish_to(mut self, hub: Arc<SnapshotHub>) -> Result<Self> {
+        let cfg = self.exp.config();
+        let name = Runtime::train_name(&cfg.arch, &cfg.optimizer, &cfg.dataset);
+        let meta = self.rt.meta(&name)?.clone();
+        self.publisher = Some(SnapshotPublisher::new(hub, &meta)?);
+        Ok(self)
     }
 
     /// Execute the run, invoking `sink` for every event (ending with
@@ -394,6 +421,7 @@ impl Run<'_> {
             let mut ctx = RunCtx {
                 sink: &mut deliver,
                 stop: &self.control,
+                publish: self.publisher.as_ref(),
             };
             driver::run_with_ctx(
                 &self.exp.cfg,

@@ -581,6 +581,9 @@ fn run_rounds(
                 net_time_s: net_time,
                 wall_time_s: t_round.elapsed().as_secs_f64(),
             });
+            // round boundary: publish the (corrected) global model for any
+            // live serving hub while the next round keeps training
+            ctx.publish_params(round, &global_params);
             ctx.emit(Event::RoundCompleted(
                 records.last().expect("just pushed").clone(),
             ));
@@ -792,6 +795,8 @@ fn run_async(
                             net_time_s: net_time,
                             wall_time_s: t_window.elapsed().as_secs_f64(),
                         });
+                        // window boundary: publish for any live serving hub
+                        ctx.publish_params(round, &global_params);
                         ctx.emit(Event::RoundCompleted(
                             records.last().expect("just pushed").clone(),
                         ));

@@ -54,6 +54,15 @@ pub struct ExperimentConfig {
     /// the sequential engine, `cores / P` per cluster worker); results are
     /// bit-identical at any setting
     pub kernel_threads: usize,
+    /// serving: micro-batch flush size (requests per inference batch)
+    pub serve_batch: usize,
+    /// serving: micro-batch flush deadline in microseconds after the
+    /// batch's first request
+    pub serve_flush_us: u64,
+    /// serving: kernel-pool lanes for the inference server (0 = all cores)
+    pub serve_threads: usize,
+    /// serving: bounded request-queue depth (senders block when full)
+    pub serve_queue: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -83,6 +92,10 @@ impl Default for ExperimentConfig {
             round_mode: RoundMode::Sync,
             net: "ideal".into(),
             kernel_threads: 0,
+            serve_batch: 32,
+            serve_flush_us: 200,
+            serve_threads: 0,
+            serve_queue: 1024,
         }
     }
 }

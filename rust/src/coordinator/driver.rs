@@ -882,6 +882,7 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset, rt: &Runtime) -> Res
     let mut ctx = RunCtx {
         sink: &mut sink,
         stop: &control,
+        publish: None,
     };
     run_with_ctx(cfg, ds, rt, None, &mut ctx)
 }
@@ -1054,6 +1055,9 @@ fn run_sequential(
             net_time_s: net_time,
             wall_time_s: t_round.elapsed().as_secs_f64(),
         });
+        // round boundary: hand the (corrected) global model to any live
+        // serving hub (no-op unless the run was launched with publish_to)
+        ctx.publish_params(round, &global_params);
         ctx.emit(Event::RoundCompleted(
             records.last().expect("just pushed").clone(),
         ));

@@ -18,6 +18,11 @@
 //!   the threaded `cluster` engine (per-worker OS threads + a parameter
 //!   server over a modeled network; sync / bounded-staleness / pipelined
 //!   round modes).
+//! - **`serve`** — online inference on trained models: round-boundary
+//!   model snapshots with atomic hot-swap (`serve::SnapshotHub`), a
+//!   per-snapshot full-graph embedding cache, a micro-batching request
+//!   server, and a deterministic load generator — scores bit-identical to
+//!   the training-side eval path.
 //! - **L2/L1 (`python/`, build-time only)** — JAX GNN models on Pallas
 //!   aggregation kernels, AOT-lowered to HLO text artifacts.
 //! - **runtime** — PJRT CPU client (`xla` crate) loading `artifacts/*.hlo.txt`.
@@ -35,6 +40,7 @@ pub mod metrics;
 pub mod partition;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod testkit;
 pub mod util;
 
@@ -43,3 +49,4 @@ pub use cluster::{Engine, NetModel, RoundMode};
 pub use config::ExperimentConfig;
 pub use coordinator::{Algorithm, RunResult};
 pub use graph::{CsrGraph, Dataset};
+pub use serve::{ModelSnapshot, Server, SnapshotHub};

@@ -10,6 +10,11 @@
 //!                                                all other flags form the base
 //!                                                config; prints one summary row
 //!                                                per point
+//!   serve [--requests N] [--clients K] [...]     train (publishing per-round
+//!                                                snapshots), then load-test the
+//!                                                micro-batching inference server
+//!   infer [--nodes 1,2,3 | --split val]          train, then score nodes through
+//!                                                the cached inference engine
 //!   datasets                                     registry listing + Table-2 stats
 //!   partition --dataset D --parts P              partitioner comparison
 //!   repro-<exp>                                  regenerate a paper table/figure
@@ -30,8 +35,12 @@ use llcg::util::Json;
 use llcg::config::ExperimentConfig;
 use llcg::coordinator::driver;
 use llcg::experiments;
+use llcg::graph::Labels;
 use llcg::partition;
-use llcg::runtime::Runtime;
+use llcg::runtime::{KernelCtx, Runtime};
+use llcg::serve::{
+    run_load, InferenceEngine, LoadMode, LoadSpec, ServeConfig, Server, SnapshotHub,
+};
 use llcg::util::Pcg64;
 
 fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
@@ -217,6 +226,172 @@ fn cmd_sweep(flags: &[(String, String)]) -> Result<()> {
     Ok(())
 }
 
+/// `llcg serve [config flags] [--requests N] [--clients K] [--mode
+/// closed|open] [--rate RPS]` — train (publishing a serving snapshot every
+/// round), start the micro-batching inference server over the final hub
+/// state, and drive it with the deterministic load generator.
+fn cmd_serve(flags: &[(String, String)]) -> Result<()> {
+    let cfg = build_config(flags, &["requests", "clients", "mode", "rate"])?;
+    let mut requests = 2000usize;
+    let mut clients = 4usize;
+    let mut mode = "closed".to_string();
+    let mut rate = 2000.0f64;
+    for (k, v) in flags {
+        match k.as_str() {
+            "requests" => requests = v.parse()?,
+            "clients" => clients = v.parse()?,
+            "mode" => mode = v.clone(),
+            "rate" => rate = v.parse()?,
+            _ => {}
+        }
+    }
+    let load_mode = match mode.as_str() {
+        "closed" => LoadMode::Closed,
+        "open" => LoadMode::Open { rate_rps: rate },
+        other => bail!("--mode wants closed|open (got {other:?})"),
+    };
+
+    let (rt, _adir) = Runtime::load_or_native(&cfg.artifacts_dir)?;
+    let exp = ExperimentBuilder::from_config(cfg).build()?;
+    let cfg = exp.config();
+    let hub = SnapshotHub::new();
+    eprintln!(
+        "serve: training {} on {} ({} parts, {} rounds, engine={}) with per-round \
+         snapshot publication",
+        cfg.algorithm.name(),
+        cfg.dataset,
+        cfg.parts,
+        cfg.rounds,
+        cfg.engine.name()
+    );
+    let mut printer = TablePrinter::new();
+    let result = exp
+        .launch(&rt)
+        .publish_to(hub.clone())?
+        .stream(|ev| printer.on_event(ev))?;
+    eprintln!(
+        "trained: final val={:.4} test={:.4}; snapshots published: {}",
+        result.final_val,
+        result.final_test,
+        hub.version()
+    );
+
+    let ds = exp.dataset().clone();
+    let scfg = ServeConfig::from_experiment(exp.config());
+    let server = Server::start(hub, ds.clone(), scfg)?;
+    let nodes: Vec<u32> = (0..ds.n() as u32).collect();
+    let spec = LoadSpec {
+        mode: load_mode,
+        clients,
+        requests,
+        seed: exp.config().seed,
+    };
+    eprintln!(
+        "serving: batch<= {}, flush {}us, {} kernel lanes, queue {}; load: {mode} x{clients} clients",
+        scfg.max_batch, scfg.flush_us, scfg.threads, scfg.queue
+    );
+    let client = server.client();
+    let report = run_load(&client, &nodes, &spec);
+    println!("{report}");
+    let stats = server.stats();
+    println!(
+        "server: {} requests in {} batches (mean batch {:.1}, max {}), {} snapshot swaps, \
+         {} rejected",
+        stats.requests,
+        stats.batches,
+        stats.mean_batch(),
+        stats.max_batch,
+        stats.swaps,
+        stats.rejected
+    );
+    drop(client);
+    server.shutdown();
+    Ok(())
+}
+
+/// `llcg infer [config flags] [--nodes 1,2,3 | --split val --limit N]` —
+/// train, snapshot the final model, and score nodes through the cached
+/// inference engine (bit-identical to the eval path).
+fn cmd_infer(flags: &[(String, String)]) -> Result<()> {
+    let cfg = build_config(flags, &["nodes", "split", "limit"])?;
+    let mut explicit_nodes: Option<Vec<u32>> = None;
+    let mut split = "val".to_string();
+    let mut limit = 16usize;
+    for (k, v) in flags {
+        match k.as_str() {
+            "nodes" => {
+                explicit_nodes = Some(
+                    v.split(',')
+                        .map(|s| s.trim().parse::<u32>())
+                        .collect::<std::result::Result<Vec<u32>, _>>()
+                        .map_err(|e| anyhow::anyhow!("--nodes wants id,id,...: {e}"))?,
+                );
+            }
+            "split" => split = v.clone(),
+            "limit" => limit = v.parse()?,
+            _ => {}
+        }
+    }
+    let (rt, _adir) = Runtime::load_or_native(&cfg.artifacts_dir)?;
+    let exp = ExperimentBuilder::from_config(cfg).build()?;
+    let hub = SnapshotHub::new();
+    eprintln!(
+        "infer: training {} rounds of {} on {} first ...",
+        exp.config().rounds,
+        exp.config().arch,
+        exp.config().dataset
+    );
+    let result = exp.launch(&rt).publish_to(hub.clone())?.finish()?;
+    let snap = hub
+        .current()
+        .ok_or_else(|| anyhow::anyhow!("no snapshot published (rounds=0?)"))?;
+    let ds = exp.dataset().clone();
+    let nodes: Vec<u32> = match explicit_nodes {
+        Some(n) => n,
+        None => {
+            let ids = match split.as_str() {
+                "train" => &ds.splits.train,
+                "val" => &ds.splits.val,
+                "test" => &ds.splits.test,
+                other => bail!("--split wants train|val|test (got {other:?})"),
+            };
+            ids.iter().copied().take(limit).collect()
+        }
+    };
+    if nodes.is_empty() {
+        bail!("no nodes to score (empty --nodes / split)");
+    }
+    let mut engine = InferenceEngine::new(
+        snap,
+        ds.clone(),
+        KernelCtx::new(exp.config().serve_threads),
+    )?;
+    let c = engine.classes();
+    eprintln!(
+        "model: round {} snapshot (val={:.4}); cache: {} nodes, {:.2} MB, built in {:.3}s",
+        engine.snapshot().round,
+        result.final_val,
+        engine.cache().nodes(),
+        engine.cache().bytes() as f64 / 1e6,
+        engine.cache().build_s
+    );
+    println!("{:>8} {:>6} {:>8} {:>12}", "node", "pred", "truth", "logit[pred]");
+    let scores = engine.score_batch(&nodes)?.to_vec();
+    for (i, &v) in nodes.iter().enumerate() {
+        let row = &scores[i * c..(i + 1) * c];
+        let pred = llcg::metrics::argmax(row);
+        let truth = match &ds.labels {
+            Labels::MultiClass(y) => y[v as usize].to_string(),
+            Labels::MultiLabel { data, c: dc } => {
+                let pos = (0..*dc).filter(|&j| data[v as usize * dc + j] > 0.5).count();
+                format!("{pos}+")
+            }
+        };
+        println!("{:>8} {:>6} {:>8} {:>12.4}", v, pred, truth, row[pred]);
+    }
+    Ok(())
+}
+
 fn cmd_datasets() -> Result<()> {
     println!("Registered datasets (synthetic; stats at seed 0):");
     for (name, doc) in registry::with(|r| r.dataset_docs()) {
@@ -265,9 +440,11 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
         eprintln!(
-            "usage: llcg <run|sweep|datasets|partition|repro-*> [--flags]\n\
+            "usage: llcg <run|sweep|serve|infer|datasets|partition|repro-*> [--flags]\n\
              `llcg run --help` lists every config key\n\
              `llcg sweep --sweep key=v1,v2,...` runs a config grid\n\
+             `llcg serve` trains then load-tests the inference server\n\
+             `llcg infer --nodes 1,2,3` trains then scores nodes\n\
              repro commands: {}",
             experiments::REPRO_COMMANDS.join(", ")
         );
@@ -277,6 +454,8 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&flags),
         "sweep" => cmd_sweep(&flags),
+        "serve" => cmd_serve(&flags),
+        "infer" => cmd_infer(&flags),
         "datasets" => cmd_datasets(),
         "partition" => cmd_partition(&flags),
         other => {

@@ -83,10 +83,14 @@ impl KernelCtx {
 }
 
 /// Output base pointer crossing into pool lanes; each lane derives its own
-/// disjoint row range from it.
-struct SendMut(*mut f32);
-// SAFETY: lanes write disjoint row ranges (see `par_rows`), and the borrow
-// outlives the pool dispatch, which blocks until every lane is done.
+/// disjoint index range from it. Shared by every parallel pass in the crate
+/// (`par_rows`/`par_ranges` here, the loss-grad rows in `runtime::native`,
+/// the serve-cache aggregation) so the soundness argument lives in exactly
+/// one place.
+pub(crate) struct SendMut(pub(crate) *mut f32);
+// SAFETY: lanes write disjoint ranges (see `par_rows`/`par_ranges`), and
+// the borrow outlives the pool dispatch, which blocks until every lane is
+// done.
 unsafe impl Send for SendMut {}
 unsafe impl Sync for SendMut {}
 
@@ -121,6 +125,30 @@ fn par_rows(
         let out_rows =
             unsafe { std::slice::from_raw_parts_mut(base.0.add(lo * n), (hi - lo) * n) };
         body(lo, hi, out_rows);
+    });
+}
+
+/// Run `body(lo, hi)` over disjoint contiguous ranges partitioning
+/// `0..rows` — on the pool when `flops` is large enough, inline otherwise.
+/// The generic range dispatcher behind the elementwise passes (optimizer
+/// updates, loss-gradient rows, serve-cache aggregation): any computation
+/// whose unit `i` writes only unit-`i` outputs is bit-identical at every
+/// lane count under it, because each unit runs exactly once on exactly one
+/// lane and its internal op order is untouched.
+pub fn par_ranges(ctx: &KernelCtx, rows: usize, flops: usize, body: impl Fn(usize, usize) + Sync) {
+    let lanes = ctx.pool.threads().min(rows.max(1));
+    if lanes <= 1 || flops < MIN_PAR_FLOPS {
+        body(0, rows);
+        return;
+    }
+    let chunk = rows.div_ceil(lanes);
+    ctx.pool.run(&|lane| {
+        let lo = lane * chunk;
+        if lo >= rows {
+            return;
+        }
+        let hi = (lo + chunk).min(rows);
+        body(lo, hi);
     });
 }
 
@@ -454,6 +482,90 @@ pub fn matmul_a_bt(
     });
 }
 
+// ---------------------------------------------------------------------------
+// parallel elementwise passes (optimizer updates)
+// ---------------------------------------------------------------------------
+//
+// Parameter updates are elementwise: element `i` of the output depends only
+// on element `i` of the inputs, with no cross-element reduction. Splitting
+// the index space over disjoint lane ranges therefore keeps every result
+// bit-identical to the sequential loop at any thread count — the easiest
+// case of the determinism contract. The scalar flag still routes to the
+// plain sequential loop (the executable specification / bench baseline).
+
+/// SGD step `p[i] -= lr * g[i]`, parallelized over disjoint index ranges.
+pub fn sgd_update(ctx: &KernelCtx, p: &mut [f32], g: &[f32], lr: f32) {
+    debug_assert_eq!(p.len(), g.len());
+    if ctx.scalar {
+        for (pv, &gv) in p.iter_mut().zip(g) {
+            *pv -= lr * gv;
+        }
+        return;
+    }
+    let n = p.len();
+    let base = SendMut(p.as_mut_ptr());
+    par_ranges(ctx, n, n, |lo, hi| {
+        // SAFETY: [lo, hi) index ranges are disjoint across lanes and
+        // in-bounds; par_ranges blocks until every lane returns.
+        let ps = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+        for (pv, &gv) in ps.iter_mut().zip(&g[lo..hi]) {
+            *pv -= lr * gv;
+        }
+    });
+}
+
+/// Bias-corrected Adam step on one tensor's flat data, parallelized over
+/// disjoint index ranges. `bc1`/`bc2` are the step's bias corrections
+/// `1 - β1^t` / `1 - β2^t` (the `t` counter stays with the caller). The
+/// per-element op sequence is exactly the sequential reference's:
+/// `m = β1·m + (1−β1)·g; v = β2·v + (1−β2)·g²; p -= lr·m̂/(√v̂ + ε)`.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    ctx: &KernelCtx,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(p.len(), m.len());
+    debug_assert_eq!(p.len(), v.len());
+    let step = |ps: &mut [f32], ms: &mut [f32], vs: &mut [f32], gs: &[f32]| {
+        for (((pv, &gv), mv), vv) in ps.iter_mut().zip(gs).zip(ms.iter_mut()).zip(vs.iter_mut())
+        {
+            *mv = b1 * *mv + (1.0 - b1) * gv;
+            *vv = b2 * *vv + (1.0 - b2) * gv * gv;
+            let mhat = *mv / bc1;
+            let vhat = *vv / bc2;
+            *pv -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    };
+    if ctx.scalar {
+        step(p, m, v, g);
+        return;
+    }
+    let n = p.len();
+    let (bp, bm, bv) = (
+        SendMut(p.as_mut_ptr()),
+        SendMut(m.as_mut_ptr()),
+        SendMut(v.as_mut_ptr()),
+    );
+    par_ranges(ctx, n, n * 4, |lo, hi| {
+        // SAFETY: disjoint in-bounds index ranges per lane; par_ranges
+        // blocks until every lane returns (see sgd_update).
+        let ps = unsafe { std::slice::from_raw_parts_mut(bp.0.add(lo), hi - lo) };
+        let ms = unsafe { std::slice::from_raw_parts_mut(bm.0.add(lo), hi - lo) };
+        let vs = unsafe { std::slice::from_raw_parts_mut(bv.0.add(lo), hi - lo) };
+        step(ps, ms, vs, &g[lo..hi]);
+    });
+}
+
 /// `out = relu?(x @ w + bias?)` with the bias + ReLU epilogue fused into the
 /// same parallel row pass (the output rows are still cache-hot when the
 /// epilogue touches them). Elementwise epilogues are order-free, so this is
@@ -665,6 +777,88 @@ mod tests {
                     assert_eq!(bits(&want), bits(&got), "linear ({m},{k},{n}) t={t}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn par_ranges_partitions_exactly_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        for &t in THREADS {
+            let ctx = KernelCtx::new(t);
+            let rows = 100_003usize; // above MIN_PAR_FLOPS, odd on purpose
+            let hits: Vec<AtomicU32> = (0..rows).map(|_| AtomicU32::new(0)).collect();
+            par_ranges(&ctx, rows, rows, |lo, hi| {
+                for h in &hits[lo..hi] {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "t={t}: some index not covered exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_update_matches_sequential_bitwise() {
+        let n = 50_000usize; // large enough to engage the pool lanes
+        let mut rng = Pcg64::new(8);
+        let g = mat(&mut rng, n);
+        let p0 = mat(&mut rng, n);
+        let mut want = p0.clone();
+        for (pv, &gv) in want.iter_mut().zip(&g) {
+            *pv -= 0.05 * gv;
+        }
+        for &t in THREADS {
+            let ctx = KernelCtx::new(t);
+            let mut got = p0.clone();
+            sgd_update(&ctx, &mut got, &g, 0.05);
+            assert_eq!(bits(&want), bits(&got), "sgd t={t} diverged");
+        }
+        // scalar flag routes to the sequential reference
+        let ctx = KernelCtx::with_pool(Arc::new(ThreadPool::new(4)), true);
+        let mut got = p0.clone();
+        sgd_update(&ctx, &mut got, &g, 0.05);
+        assert_eq!(bits(&want), bits(&got));
+    }
+
+    #[test]
+    fn adam_update_matches_sequential_bitwise() {
+        let n = 50_000usize;
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let mut rng = Pcg64::new(9);
+        let p0 = mat(&mut rng, n);
+        // three consecutive steps with fresh grads each, as training does
+        let grads: Vec<Vec<f32>> = (0..3).map(|_| mat(&mut rng, n)).collect();
+        let run_ref = || {
+            let (mut p, mut m, mut v) = (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
+            for (t, g) in grads.iter().enumerate() {
+                let t1 = (t + 1) as f32;
+                let (bc1, bc2) = (1.0 - b1.powf(t1), 1.0 - b2.powf(t1));
+                for (((pv, &gv), mv), vv) in
+                    p.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut())
+                {
+                    *mv = b1 * *mv + (1.0 - b1) * gv;
+                    *vv = b2 * *vv + (1.0 - b2) * gv * gv;
+                    let mhat = *mv / bc1;
+                    let vhat = *vv / bc2;
+                    *pv -= 0.01 * mhat / (vhat.sqrt() + eps);
+                }
+            }
+            (p, m, v)
+        };
+        let (wp, wm, wv) = run_ref();
+        for &t in THREADS {
+            let ctx = KernelCtx::new(t);
+            let (mut p, mut m, mut v) = (p0.clone(), vec![0.0f32; n], vec![0.0f32; n]);
+            for (step, g) in grads.iter().enumerate() {
+                let t1 = (step + 1) as f32;
+                let (bc1, bc2) = (1.0 - b1.powf(t1), 1.0 - b2.powf(t1));
+                adam_update(&ctx, &mut p, &mut m, &mut v, g, 0.01, bc1, bc2, b1, b2, eps);
+            }
+            assert_eq!(bits(&wp), bits(&p), "adam params t={t} diverged");
+            assert_eq!(bits(&wm), bits(&m), "adam m t={t} diverged");
+            assert_eq!(bits(&wv), bits(&v), "adam v t={t} diverged");
         }
     }
 

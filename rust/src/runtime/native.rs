@@ -24,6 +24,7 @@
 //! count — see `runtime/README.md` for the determinism contract — so every
 //! result below is independent of the [`KernelCtx`] it ran under.
 
+use std::cell::RefCell;
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
@@ -32,10 +33,34 @@ use crate::sampler::Block;
 use crate::util::Json;
 
 use super::kernels::{
-    add_bias, colsum, linear, matmul, matmul_a_bt, matmul_at_b, matmul_at_b_banded,
-    matmul_banded, relu_backward_inplace, relu_inplace, KernelCtx,
+    adam_update, add_bias, colsum, linear, matmul, matmul_a_bt, matmul_at_b,
+    matmul_at_b_banded, matmul_banded, par_ranges, relu_backward_inplace, relu_inplace,
+    sgd_update, KernelCtx, SendMut,
 };
 use super::{ArtifactMeta, Tensor};
+
+/// Free-list of recycled activation buffers (ROADMAP satellite): the
+/// forward pass takes its per-step activations from here instead of
+/// allocating, and `loss_and_grads`/`eval_step` return them after the
+/// backward pass is done with the caches. Buffers come back with arbitrary
+/// contents — every forward output is fully written by its kernel before
+/// any read, so no clearing is needed (and none is done).
+#[derive(Default)]
+struct BufPool {
+    free: Vec<Vec<f32>>,
+}
+
+impl BufPool {
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.resize(len, 0.0);
+        v
+    }
+
+    fn put(&mut self, v: Vec<f32>) {
+        self.free.push(v);
+    }
+}
 
 pub const ADAM_B1: f32 = 0.9;
 pub const ADAM_B2: f32 = 0.999;
@@ -86,6 +111,9 @@ fn pd(params: &[Tensor], i: usize) -> &[f32] {
 /// train/eval steps on host tensors in place.
 pub struct NativeExec {
     meta: ArtifactMeta,
+    /// recycled per-step activation buffers (see [`BufPool`]); `NativeExec`
+    /// lives behind an `Rc` on one thread, so a `RefCell` suffices
+    bufs: RefCell<BufPool>,
 }
 
 impl NativeExec {
@@ -118,7 +146,10 @@ impl NativeExec {
                 specs
             );
         }
-        Ok(NativeExec { meta: meta.clone() })
+        Ok(NativeExec {
+            meta: meta.clone(),
+            bufs: RefCell::new(BufPool::default()),
+        })
     }
 
     fn check_block(&self, block: &Block) -> Result<()> {
@@ -177,14 +208,18 @@ impl NativeExec {
     ) -> Result<f32> {
         self.check_block(block)?;
         let (loss, grads) = self.loss_and_grads(kc, params, block)?;
-        self.apply_update(params, opt, &grads, lr)?;
+        self.apply_update(kc, params, opt, &grads, lr)?;
         Ok(loss)
     }
 
-    /// Forward only; returns logits `[b * c]`.
+    /// Forward only; returns logits `[b * c]`. The logits buffer escapes to
+    /// the caller (it is not recycled); the activation caches go back to
+    /// the pool.
     pub fn eval_step(&self, kc: &KernelCtx, params: &[Tensor], block: &Block) -> Result<Vec<f32>> {
         self.check_block(block)?;
-        let (logits, _caches) = self.forward(kc, params, block)?;
+        let mut pool = self.bufs.borrow_mut();
+        let (logits, caches) = self.forward(kc, params, block, &mut pool)?;
+        caches.recycle(&mut pool);
         Ok(logits)
     }
 
@@ -193,8 +228,16 @@ impl NativeExec {
     /// Runs the arch forward; returns logits and the activation caches the
     /// backward pass needs (arch-specific layout). `A1`/`A2` products use
     /// the banded aggregation kernels (slot band `f1`/`f2` — see the block
-    /// builder); dense layers use the fused-epilogue `linear`.
-    fn forward(&self, kc: &KernelCtx, params: &[Tensor], block: &Block) -> Result<(Vec<f32>, Caches)> {
+    /// builder); dense layers use the fused-epilogue `linear`. All
+    /// activations come from `pool` (arena-recycled across steps) and every
+    /// one is fully written by its kernel before any read.
+    fn forward(
+        &self,
+        kc: &KernelCtx,
+        params: &[Tensor],
+        block: &Block,
+        pool: &mut BufPool,
+    ) -> Result<(Vec<f32>, Caches)> {
         let d = self.meta.dims.d;
         let h = self.meta.dims.h;
         let c = self.meta.dims.c;
@@ -204,61 +247,64 @@ impl NativeExec {
         match self.meta.arch.as_str() {
             "mlp" => {
                 // h1 = relu(x0 @ w1 + b1); logits = h1 @ w2 + b2
-                let mut h1 = vec![0.0; b * h];
+                let mut h1 = pool.take(b * h);
                 linear(kc, &block.x0, pd(params, 0), Some(pd(params, 1)), &mut h1, b, d, h, true);
-                let mut logits = vec![0.0; b * c];
+                let mut logits = pool.take(b * c);
                 linear(kc, &h1, pd(params, 2), Some(pd(params, 3)), &mut logits, b, h, c, false);
                 Ok((logits, Caches::Mlp { h1 }))
             }
             "gcn" => {
                 // h1 = relu((A2 @ x2) @ w1 + b1); logits = (A1 @ h1) @ w2 + b2
-                let mut agg2 = vec![0.0; n1 * d];
+                let mut agg2 = pool.take(n1 * d);
                 matmul_banded(kc, &block.a2, &block.x2, &mut agg2, n1, n2, d, f2);
-                let mut h1 = vec![0.0; n1 * h];
+                let mut h1 = pool.take(n1 * h);
                 linear(kc, &agg2, pd(params, 0), Some(pd(params, 1)), &mut h1, n1, d, h, true);
-                let mut agg1 = vec![0.0; b * h];
+                let mut agg1 = pool.take(b * h);
                 matmul_banded(kc, &block.a1, &h1, &mut agg1, b, n1, h, f1);
-                let mut logits = vec![0.0; b * c];
+                let mut logits = pool.take(b * c);
                 linear(kc, &agg1, pd(params, 2), Some(pd(params, 3)), &mut logits, b, h, c, false);
                 Ok((logits, Caches::Gcn { agg2, h1, agg1 }))
             }
             "sage" => {
                 // n1v = A2 @ x2
-                let mut n1v = vec![0.0; n1 * d];
+                let mut n1v = pool.take(n1 * d);
                 matmul_banded(kc, &block.a2, &block.x2, &mut n1v, n1, n2, d, f2);
                 // h1 = relu(x1 @ ws1 + b1 + n1v @ wn1)
-                let mut h1 = vec![0.0; n1 * h];
+                let mut h1 = pool.take(n1 * h);
                 matmul(kc, &block.x1, pd(params, 0), &mut h1, n1, d, h);
-                let mut tmp = vec![0.0; n1 * h];
+                let mut tmp = pool.take(n1 * h);
                 matmul(kc, &n1v, pd(params, 1), &mut tmp, n1, d, h);
                 for (a, &t) in h1.iter_mut().zip(&tmp) {
                     *a += t;
                 }
+                pool.put(tmp);
                 add_bias(&mut h1, pd(params, 2), n1, h);
                 relu_inplace(&mut h1);
                 // n0 = A1 @ h1 ; m0 = A1 @ x1
-                let mut n0 = vec![0.0; b * h];
+                let mut n0 = pool.take(b * h);
                 matmul_banded(kc, &block.a1, &h1, &mut n0, b, n1, h, f1);
-                let mut m0 = vec![0.0; b * d];
+                let mut m0 = pool.take(b * d);
                 matmul_banded(kc, &block.a1, &block.x1, &mut m0, b, n1, d, f1);
                 // h0 = relu(x0 @ ws1 + b1 + m0 @ wn1)
-                let mut h0 = vec![0.0; b * h];
+                let mut h0 = pool.take(b * h);
                 matmul(kc, &block.x0, pd(params, 0), &mut h0, b, d, h);
-                let mut tmp0 = vec![0.0; b * h];
+                let mut tmp0 = pool.take(b * h);
                 matmul(kc, &m0, pd(params, 1), &mut tmp0, b, d, h);
                 for (a, &t) in h0.iter_mut().zip(&tmp0) {
                     *a += t;
                 }
+                pool.put(tmp0);
                 add_bias(&mut h0, pd(params, 2), b, h);
                 relu_inplace(&mut h0);
                 // logits = h0 @ ws2 + b2 + n0 @ wn2
-                let mut logits = vec![0.0; b * c];
+                let mut logits = pool.take(b * c);
                 matmul(kc, &h0, pd(params, 3), &mut logits, b, h, c);
-                let mut tmpl = vec![0.0; b * c];
+                let mut tmpl = pool.take(b * c);
                 matmul(kc, &n0, pd(params, 4), &mut tmpl, b, h, c);
                 for (a, &t) in logits.iter_mut().zip(&tmpl) {
                     *a += t;
                 }
+                pool.put(tmpl);
                 add_bias(&mut logits, pd(params, 5), b, c);
                 Ok((
                     logits,
@@ -274,28 +320,32 @@ impl NativeExec {
             "appnp" => {
                 // mlp(x) at each level; then 2 personalized-PageRank steps
                 let beta = APPNP_TELEPORT;
-                let mlp = |x: &[f32], rows: usize| -> (Vec<f32>, Vec<f32>) {
-                    let mut u = vec![0.0; rows * h];
+                let mlp = |x: &[f32], rows: usize, pool: &mut BufPool| -> (Vec<f32>, Vec<f32>) {
+                    let mut u = pool.take(rows * h);
                     linear(kc, x, pd(params, 0), Some(pd(params, 1)), &mut u, rows, d, h, true);
-                    let mut out = vec![0.0; rows * c];
+                    let mut out = pool.take(rows * c);
                     linear(kc, &u, pd(params, 2), Some(pd(params, 3)), &mut out, rows, h, c, false);
                     (out, u)
                 };
-                let (h2, u2) = mlp(&block.x2, n2);
-                let (h1v, u1) = mlp(&block.x1, n1);
-                let (h0, u0) = mlp(&block.x0, b);
+                let (h2, u2) = mlp(&block.x2, n2, &mut *pool);
+                let (h1v, u1) = mlp(&block.x1, n1, &mut *pool);
+                let (h0, u0) = mlp(&block.x0, b, &mut *pool);
                 // p1 = beta*h1v + (1-beta)*A2@h2
-                let mut p1 = vec![0.0; n1 * c];
+                let mut p1 = pool.take(n1 * c);
                 matmul_banded(kc, &block.a2, &h2, &mut p1, n1, n2, c, f2);
                 for (o, &hv) in p1.iter_mut().zip(&h1v) {
                     *o = beta * hv + (1.0 - beta) * *o;
                 }
+                pool.put(h2);
+                pool.put(h1v);
                 // logits = beta*h0 + (1-beta)*A1@p1
-                let mut logits = vec![0.0; b * c];
+                let mut logits = pool.take(b * c);
                 matmul_banded(kc, &block.a1, &p1, &mut logits, b, n1, c, f1);
                 for (o, &hv) in logits.iter_mut().zip(&h0) {
                     *o = beta * hv + (1.0 - beta) * *o;
                 }
+                pool.put(h0);
+                pool.put(p1);
                 Ok((logits, Caches::Appnp { u2, u1, u0 }))
             }
             other => bail!("native forward: unsupported arch {other:?}"),
@@ -310,44 +360,77 @@ impl NativeExec {
         params: &[Tensor],
         block: &Block,
     ) -> Result<(f32, Vec<Tensor>)> {
-        let (logits, caches) = self.forward(kc, params, block)?;
-        let (loss, g) = self.loss_grad(&logits, block)?;
+        let mut pool = self.bufs.borrow_mut();
+        let (logits, caches) = self.forward(kc, params, block, &mut pool)?;
+        let (loss, g) = self.loss_grad(kc, &logits, block, &mut pool)?;
         let grads = self.backward(kc, params, block, &caches, &g)?;
+        // everything the step borrowed from the arena goes back for the
+        // next step — the per-step activation recycling (ROADMAP satellite)
+        pool.put(logits);
+        pool.put(g);
+        caches.recycle(&mut pool);
         Ok((loss, grads))
     }
 
-    /// Masked mean loss and dL/dlogits `[b,c]`.
-    fn loss_grad(&self, logits: &[f32], block: &Block) -> Result<(f32, Vec<f32>)> {
+    /// Masked mean loss and dL/dlogits `[b,c]`. Rows are independent, so
+    /// the per-row max/softmax/gradient work is parallelized over disjoint
+    /// row ranges on the kernel pool; the loss reduction stays a sequential
+    /// ascending-row fold of per-row terms, so the f32 addition order — and
+    /// therefore every bit of the result — matches the sequential loop at
+    /// any thread count.
+    fn loss_grad(
+        &self,
+        kc: &KernelCtx,
+        logits: &[f32],
+        block: &Block,
+        pool: &mut BufPool,
+    ) -> Result<(f32, Vec<f32>)> {
         let c = self.meta.dims.c;
         let b = block.b;
         let denom = block.mask.iter().sum::<f32>().max(1.0);
-        let mut g = vec![0.0f32; b * c];
-        let mut loss = 0.0f32;
+        let mut g = pool.take(b * c);
+        let mut row_loss = pool.take(b);
         match self.meta.loss.as_str() {
             "softmax_ce" => {
                 if block.y_class.len() != b {
                     bail!("softmax_ce needs y_class[{b}], got {}", block.y_class.len());
                 }
+                // validate before the parallel region (no bail from lanes)
                 for i in 0..b {
-                    let mask = block.mask[i];
-                    if mask == 0.0 {
-                        continue;
-                    }
-                    let row = &logits[i * c..(i + 1) * c];
-                    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                    let sum: f32 = row.iter().map(|&z| (z - max).exp()).sum();
-                    let y = block.y_class[i] as usize;
-                    if y >= c {
-                        bail!("label {y} out of range c={c}");
-                    }
-                    loss += mask * (sum.ln() - (row[y] - max));
-                    let scale = mask / denom;
-                    let grow = &mut g[i * c..(i + 1) * c];
-                    for (j, (gv, &z)) in grow.iter_mut().zip(row).enumerate() {
-                        let p = (z - max).exp() / sum;
-                        *gv = scale * (p - if j == y { 1.0 } else { 0.0 });
+                    if block.mask[i] != 0.0 && block.y_class[i] as usize >= c {
+                        bail!("label {} out of range c={c}", block.y_class[i]);
                     }
                 }
+                let gp = SendMut(g.as_mut_ptr());
+                let lp = SendMut(row_loss.as_mut_ptr());
+                par_ranges(kc, b, b * c * 16, |lo, hi| {
+                    // SAFETY: disjoint in-bounds row ranges per lane;
+                    // par_ranges blocks until every lane returns.
+                    let gs = unsafe {
+                        std::slice::from_raw_parts_mut(gp.0.add(lo * c), (hi - lo) * c)
+                    };
+                    let ls =
+                        unsafe { std::slice::from_raw_parts_mut(lp.0.add(lo), hi - lo) };
+                    for i in lo..hi {
+                        let grow = &mut gs[(i - lo) * c..(i - lo + 1) * c];
+                        let mask = block.mask[i];
+                        if mask == 0.0 {
+                            grow.fill(0.0);
+                            ls[i - lo] = 0.0;
+                            continue;
+                        }
+                        let row = &logits[i * c..(i + 1) * c];
+                        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                        let sum: f32 = row.iter().map(|&z| (z - max).exp()).sum();
+                        let y = block.y_class[i] as usize;
+                        ls[i - lo] = mask * (sum.ln() - (row[y] - max));
+                        let scale = mask / denom;
+                        for (j, (gv, &z)) in grow.iter_mut().zip(row).enumerate() {
+                            let p = (z - max).exp() / sum;
+                            *gv = scale * (p - if j == y { 1.0 } else { 0.0 });
+                        }
+                    }
+                });
             }
             "sigmoid_bce" => {
                 if block.y_multi.len() != b * c {
@@ -357,25 +440,46 @@ impl NativeExec {
                         block.y_multi.len()
                     );
                 }
-                for i in 0..b {
-                    let mask = block.mask[i];
-                    if mask == 0.0 {
-                        continue;
+                let gp = SendMut(g.as_mut_ptr());
+                let lp = SendMut(row_loss.as_mut_ptr());
+                par_ranges(kc, b, b * c * 16, |lo, hi| {
+                    // SAFETY: see the softmax branch.
+                    let gs = unsafe {
+                        std::slice::from_raw_parts_mut(gp.0.add(lo * c), (hi - lo) * c)
+                    };
+                    let ls =
+                        unsafe { std::slice::from_raw_parts_mut(lp.0.add(lo), hi - lo) };
+                    for i in lo..hi {
+                        let grow = &mut gs[(i - lo) * c..(i - lo + 1) * c];
+                        let mask = block.mask[i];
+                        if mask == 0.0 {
+                            grow.fill(0.0);
+                            ls[i - lo] = 0.0;
+                            continue;
+                        }
+                        let row = &logits[i * c..(i + 1) * c];
+                        let yrow = &block.y_multi[i * c..(i + 1) * c];
+                        let mut row_bce = 0.0f32;
+                        for ((gv, &z), &y) in grow.iter_mut().zip(row).zip(yrow) {
+                            row_bce += z.max(0.0) - z * y + (-z.abs()).exp().ln_1p();
+                            let sig = 1.0 / (1.0 + (-z).exp());
+                            *gv = mask / denom * (sig - y) / c as f32;
+                        }
+                        ls[i - lo] = mask * row_bce / c as f32;
                     }
-                    let row = &logits[i * c..(i + 1) * c];
-                    let yrow = &block.y_multi[i * c..(i + 1) * c];
-                    let mut row_bce = 0.0f32;
-                    let grow = &mut g[i * c..(i + 1) * c];
-                    for ((gv, &z), &y) in grow.iter_mut().zip(row).zip(yrow) {
-                        row_bce += z.max(0.0) - z * y + (-z.abs()).exp().ln_1p();
-                        let sig = 1.0 / (1.0 + (-z).exp());
-                        *gv = mask / denom * (sig - y) / c as f32;
-                    }
-                    loss += mask * row_bce / c as f32;
-                }
+                });
             }
             other => bail!("unknown loss {other:?}"),
         }
+        // the sequential reduction, in the exact order the old single-loop
+        // version accumulated (ascending rows, masked rows skipped)
+        let mut loss = 0.0f32;
+        for i in 0..b {
+            if block.mask[i] != 0.0 {
+                loss += row_loss[i];
+            }
+        }
+        pool.put(row_loss);
         Ok((loss / denom, g))
     }
 
@@ -491,8 +595,13 @@ impl NativeExec {
 
     // -- optimizer ---------------------------------------------------------
 
+    /// One optimizer step, elementwise over every tensor — runs through the
+    /// parallel update kernels (`kernels::sgd_update` / `adam_update`),
+    /// which are bit-identical to the sequential loops at any thread count
+    /// (element-independent updates over disjoint lane ranges).
     fn apply_update(
         &self,
+        kc: &KernelCtx,
         params: &mut [Tensor],
         opt: &mut [Tensor],
         grads: &[Tensor],
@@ -501,9 +610,7 @@ impl NativeExec {
         match self.meta.optimizer.as_str() {
             "sgd" => {
                 for (pt, gt) in params.iter_mut().zip(grads) {
-                    for (pv, &gv) in pt.data.iter_mut().zip(&gt.data) {
-                        *pv -= lr * gv;
-                    }
+                    sgd_update(kc, &mut pt.data, &gt.data, lr);
                 }
             }
             "adam" => {
@@ -520,19 +627,19 @@ impl NativeExec {
                 for (((pt, gt), mt), vt) in
                     params.iter_mut().zip(grads).zip(ms).zip(vs)
                 {
-                    for (((pv, &gv), mv), vv) in pt
-                        .data
-                        .iter_mut()
-                        .zip(&gt.data)
-                        .zip(mt.data.iter_mut())
-                        .zip(vt.data.iter_mut())
-                    {
-                        *mv = ADAM_B1 * *mv + (1.0 - ADAM_B1) * gv;
-                        *vv = ADAM_B2 * *vv + (1.0 - ADAM_B2) * gv * gv;
-                        let mhat = *mv / bc1;
-                        let vhat = *vv / bc2;
-                        *pv -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
-                    }
+                    adam_update(
+                        kc,
+                        &mut pt.data,
+                        &mut mt.data,
+                        &mut vt.data,
+                        &gt.data,
+                        lr,
+                        bc1,
+                        bc2,
+                        ADAM_B1,
+                        ADAM_B2,
+                        ADAM_EPS,
+                    );
                 }
             }
             other => bail!("apply_update on optimizer {other:?}"),
@@ -563,6 +670,39 @@ enum Caches {
         u1: Vec<f32>,
         u0: Vec<f32>,
     },
+}
+
+impl Caches {
+    /// Return every cached activation to the arena once the backward pass
+    /// is done with it.
+    fn recycle(self, pool: &mut BufPool) {
+        match self {
+            Caches::Mlp { h1 } => pool.put(h1),
+            Caches::Gcn { agg2, h1, agg1 } => {
+                pool.put(agg2);
+                pool.put(h1);
+                pool.put(agg1);
+            }
+            Caches::Sage {
+                n1v,
+                h1,
+                n0,
+                m0,
+                h0,
+            } => {
+                pool.put(n1v);
+                pool.put(h1);
+                pool.put(n0);
+                pool.put(m0);
+                pool.put(h0);
+            }
+            Caches::Appnp { u2, u1, u0 } => {
+                pool.put(u2);
+                pool.put(u1);
+                pool.put(u0);
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

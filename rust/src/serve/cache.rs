@@ -1,0 +1,439 @@
+//! Per-layer hidden-embedding cache over the full graph + the cached
+//! inference engine.
+//!
+//! ## Why a cache
+//!
+//! The training-side eval path answers "scores for node v" by building a
+//! full 2-hop block (`Fanout::Full`, ratio 1.0) and running the whole
+//! forward — O(f1·f2) feature gathers and a layer-1 matmul *per query*, the
+//! neighborhood-explosion cost the LLCG paper attributes to GNN inference.
+//! But with full (capped) fanout the layer-1 hidden state of a block slot
+//! depends only on the node behind the slot, so it can be computed **once
+//! per snapshot for every node in the graph** and reused by every query:
+//! a request for node v then needs only its cached layer-1 neighbor
+//! embeddings plus one output-layer step — near-O(1) in the fanout product.
+//!
+//! ## Bit-parity contract
+//!
+//! Served scores are **bit-identical** to `driver::eval_logits` /
+//! `driver::eval_split` (asserted in `tests/serve.rs`, across batch sizes,
+//! kernel-thread counts, and snapshot hot-swaps). This holds because every
+//! cache/query computation replays the exact FLOP sequence of the block
+//! forward (`runtime::native`):
+//!
+//! - [`agg_row`] reproduces `matmul_banded` on a `Fanout::Full` block row:
+//!   slot 0 is the node itself, then its first `f − 1` neighbors in
+//!   adjacency order, weight `1/cnt`, ascending-slot accumulation. Padding
+//!   slots are structural zeros the banded kernel skips.
+//! - Dense layers run through the *same* tiled kernels (`linear`/`matmul`),
+//!   which are per-output-row bit-identical at any row count and thread
+//!   count (the kernel determinism contract, `runtime/README.md`) — so a
+//!   batch of 1 and a batch of 64 produce the same rows.
+//! - Elementwise combines (SAGE's two-path add, APPNP's teleport mix) are
+//!   written in the block forward's exact expression order.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::graph::{CsrGraph, Dataset};
+use crate::runtime::kernels::{self, add_bias, linear, matmul, relu_inplace, KernelCtx, SendMut};
+use crate::runtime::native::APPNP_TELEPORT;
+use crate::serve::snapshot::ModelSnapshot;
+
+/// Snapshot parameter `i`'s data (positional, artifact order — the same
+/// indexing `runtime::native` uses).
+fn pd(snap: &ModelSnapshot, i: usize) -> &[f32] {
+    &snap.params[i].data
+}
+
+/// One capped-mean aggregation row — the exact FLOP sequence
+/// `matmul_banded` executes on a `Fanout::Full` block row for node `v`:
+/// slot 0 is `v` itself, slots 1.. are its first `cap − 1` neighbors in
+/// adjacency order, every filled slot weighted `1/cnt`, accumulated in
+/// ascending slot order per output element.
+fn agg_row(g: &CsrGraph, src: &[f32], w: usize, cap: usize, v: u32, out: &mut [f32]) {
+    debug_assert!(cap >= 1);
+    out.fill(0.0);
+    let neigh = g.neighbors(v);
+    let take = (cap - 1).min(neigh.len());
+    let a = 1.0 / (1 + take) as f32;
+    let srow = &src[v as usize * w..(v as usize + 1) * w];
+    for (o, &x) in out.iter_mut().zip(srow) {
+        *o += a * x;
+    }
+    for &u in &neigh[..take] {
+        let srow = &src[u as usize * w..(u as usize + 1) * w];
+        for (o, &x) in out.iter_mut().zip(srow) {
+            *o += a * x;
+        }
+    }
+}
+
+/// Capped-mean aggregation for a batch of ids:
+/// `out[i] = mean(src[ids[i]], src[its first cap−1 neighbors])`,
+/// parallelized over disjoint output-row ranges (each row is written by
+/// exactly one lane, so the result is bit-identical at any thread count).
+/// The one aggregation driver — both the full-graph cache build and the
+/// per-query output-layer step go through it.
+fn agg_ids(
+    kc: &KernelCtx,
+    g: &CsrGraph,
+    src: &[f32],
+    w: usize,
+    cap: usize,
+    ids: &[u32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), ids.len() * w);
+    let base = SendMut(out.as_mut_ptr());
+    kernels::par_ranges(kc, ids.len(), ids.len() * cap * w, |lo, hi| {
+        // SAFETY: [lo, hi) row ranges are disjoint across lanes and
+        // in-bounds; par_ranges blocks until every lane returns.
+        let rows = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo * w), (hi - lo) * w) };
+        for (i, &v) in ids[lo..hi].iter().enumerate() {
+            agg_row(g, src, w, cap, v, &mut rows[i * w..(i + 1) * w]);
+        }
+    });
+}
+
+/// [`agg_ids`] over every node of the graph (the cache-build pass); the id
+/// vector costs one `u32` per node, negligible next to the `n`-row matmuls
+/// that follow.
+fn agg_full(kc: &KernelCtx, g: &CsrGraph, src: &[f32], w: usize, cap: usize, out: &mut [f32]) {
+    let ids: Vec<u32> = (0..g.n as u32).collect();
+    agg_ids(kc, g, src, w, cap, &ids, out);
+}
+
+/// Arch-specific cached layers. Everything a query needs beyond the output
+/// parameters lives here, indexed by node id.
+enum Layers {
+    /// `h1[v] = relu(x_v @ w1 + b1)` — `[n, h]`
+    Mlp { h1: Vec<f32> },
+    /// `h1[v] = relu(mean_f2(x) @ w1 + b1)` — `[n, h]`
+    Gcn { h1: Vec<f32> },
+    /// `h1[v] = relu(x_v @ ws1 + mean_f2(x) @ wn1 + b1)` — `[n, h]`
+    Sage { h1: Vec<f32> },
+    /// `mlp_out[v] = mlp(x_v)` and the first PPR step
+    /// `p1[v] = β·mlp_out[v] + (1−β)·mean_f2(mlp_out)` — each `[n, c]`
+    Appnp { mlp_out: Vec<f32>, p1: Vec<f32> },
+}
+
+impl Layers {
+    fn bytes(&self) -> u64 {
+        let len = match self {
+            Layers::Mlp { h1 } | Layers::Gcn { h1 } | Layers::Sage { h1 } => h1.len(),
+            Layers::Appnp { mlp_out, p1 } => mlp_out.len() + p1.len(),
+        };
+        len as u64 * 4
+    }
+}
+
+/// The per-snapshot hidden-embedding cache over the full graph: computed
+/// once per published snapshot (invalidated on hot-swap), reused by every
+/// query. See the module docs for the bit-parity contract.
+pub struct EmbeddingCache {
+    /// snapshot version this cache was computed from
+    pub version: u64,
+    /// wall-clock seconds the build took
+    pub build_s: f64,
+    n: usize,
+    layers: Layers,
+}
+
+impl EmbeddingCache {
+    /// Compute the cache for `snap` over `ds`'s full graph, on `kc`'s
+    /// kernel pool. Cost: one layer-1 forward over all `n` nodes — paid
+    /// once per snapshot instead of per query.
+    pub fn build(snap: &ModelSnapshot, ds: &Dataset, kc: &KernelCtx) -> Result<EmbeddingCache> {
+        let dims = snap.dims;
+        let (d, h, c) = (dims.d, dims.h, dims.c);
+        if ds.name != snap.dataset {
+            bail!(
+                "snapshot was trained on dataset {:?}, cannot serve {:?}",
+                snap.dataset,
+                ds.name
+            );
+        }
+        if ds.d != d || ds.c() != c {
+            bail!(
+                "dataset {} is d={},c={} but snapshot expects d={d},c={c}",
+                ds.name,
+                ds.d,
+                ds.c()
+            );
+        }
+        let n = ds.n();
+        let g = &ds.graph;
+        let t0 = Instant::now();
+        let layers = match snap.arch.as_str() {
+            "mlp" => {
+                let mut h1 = vec![0.0; n * h];
+                linear(kc, &ds.features, pd(snap, 0), Some(pd(snap, 1)), &mut h1, n, d, h, true);
+                Layers::Mlp { h1 }
+            }
+            "gcn" => {
+                // agg2 = mean_f2(x); h1 = relu(agg2 @ w1 + b1)
+                let mut agg2 = vec![0.0; n * d];
+                agg_full(kc, g, &ds.features, d, dims.f2, &mut agg2);
+                let mut h1 = vec![0.0; n * h];
+                linear(kc, &agg2, pd(snap, 0), Some(pd(snap, 1)), &mut h1, n, d, h, true);
+                Layers::Gcn { h1 }
+            }
+            "sage" => {
+                // h1 = relu(x @ ws1 + mean_f2(x) @ wn1 + b1) — the block
+                // forward's op order: self matmul, neighbor matmul, add,
+                // bias, relu
+                let mut n1v = vec![0.0; n * d];
+                agg_full(kc, g, &ds.features, d, dims.f2, &mut n1v);
+                let mut h1 = vec![0.0; n * h];
+                matmul(kc, &ds.features, pd(snap, 0), &mut h1, n, d, h);
+                let mut tmp = vec![0.0; n * h];
+                matmul(kc, &n1v, pd(snap, 1), &mut tmp, n, d, h);
+                for (a, &t) in h1.iter_mut().zip(&tmp) {
+                    *a += t;
+                }
+                add_bias(&mut h1, pd(snap, 2), n, h);
+                relu_inplace(&mut h1);
+                Layers::Sage { h1 }
+            }
+            "appnp" => {
+                // mlp_out = mlp(x); p1 = β·mlp_out + (1−β)·mean_f2(mlp_out)
+                let mut u = vec![0.0; n * h];
+                linear(kc, &ds.features, pd(snap, 0), Some(pd(snap, 1)), &mut u, n, d, h, true);
+                let mut mlp_out = vec![0.0; n * c];
+                linear(kc, &u, pd(snap, 2), Some(pd(snap, 3)), &mut mlp_out, n, h, c, false);
+                let mut p1 = vec![0.0; n * c];
+                agg_full(kc, g, &mlp_out, c, dims.f2, &mut p1);
+                for (o, &hv) in p1.iter_mut().zip(&mlp_out) {
+                    *o = APPNP_TELEPORT * hv + (1.0 - APPNP_TELEPORT) * *o;
+                }
+                Layers::Appnp { mlp_out, p1 }
+            }
+            other => bail!("no serving cache for arch {other:?}"),
+        };
+        Ok(EmbeddingCache {
+            version: snap.version,
+            build_s: t0.elapsed().as_secs_f64(),
+            n,
+            layers,
+        })
+    }
+
+    /// Resident size of the cached embeddings.
+    pub fn bytes(&self) -> u64 {
+        self.layers.bytes()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.n
+    }
+}
+
+/// Reusable per-batch gather/aggregation scratch: resized (never shrunk in
+/// capacity) each batch, so steady-state queries are allocation-free.
+#[derive(Default)]
+struct Scratch {
+    gather: Vec<f32>,
+    agg: Vec<f32>,
+    agg2: Vec<f32>,
+    hid: Vec<f32>,
+    tmp: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+/// A snapshot bound to its embedding cache and a kernel context — the thing
+/// that actually answers queries. One output-layer step per batch; scores
+/// are bit-identical to the training-side eval forward.
+pub struct InferenceEngine {
+    snap: Arc<ModelSnapshot>,
+    ds: Arc<Dataset>,
+    cache: EmbeddingCache,
+    kc: KernelCtx,
+    scratch: Scratch,
+}
+
+impl InferenceEngine {
+    /// Build the cache for `snap` and bind it. `kc` supplies the kernel
+    /// pool for both the cache build and every query batch.
+    pub fn new(
+        snap: Arc<ModelSnapshot>,
+        ds: Arc<Dataset>,
+        kc: KernelCtx,
+    ) -> Result<InferenceEngine> {
+        let cache = EmbeddingCache::build(&snap, &ds, &kc)?;
+        Ok(InferenceEngine {
+            snap,
+            ds,
+            cache,
+            kc,
+            scratch: Scratch::default(),
+        })
+    }
+
+    /// Snapshot version this engine serves.
+    pub fn version(&self) -> u64 {
+        self.snap.version
+    }
+
+    pub fn snapshot(&self) -> &Arc<ModelSnapshot> {
+        &self.snap
+    }
+
+    pub fn cache(&self) -> &EmbeddingCache {
+        &self.cache
+    }
+
+    /// Number of classes per score row.
+    pub fn classes(&self) -> usize {
+        self.snap.dims.c
+    }
+
+    /// Score a batch of nodes; returns the logits `[nodes.len() * c]`
+    /// (row-major, borrowed from the engine's scratch — copy out what must
+    /// outlive the next batch). Bit-identical to the eval-path forward for
+    /// every row, at any batch size and kernel-thread count.
+    pub fn score_batch(&mut self, nodes: &[u32]) -> Result<&[f32]> {
+        let InferenceEngine {
+            snap,
+            ds,
+            cache,
+            kc,
+            scratch,
+        } = self;
+        // only the scratch is mutated; rebind the rest as shared borrows
+        let (snap, ds, cache, kc): (&ModelSnapshot, &Dataset, &EmbeddingCache, &KernelCtx) =
+            (snap, ds, cache, kc);
+        let dims = snap.dims;
+        let (d, h, c) = (dims.d, dims.h, dims.c);
+        let bn = nodes.len();
+        let n = cache.n;
+        for &v in nodes {
+            if (v as usize) >= n {
+                bail!("node {v} out of range (graph has {n} nodes)");
+            }
+        }
+        let g = &ds.graph;
+        let Scratch {
+            gather,
+            agg,
+            agg2,
+            hid,
+            tmp,
+            logits,
+        } = scratch;
+        logits.resize(bn * c, 0.0);
+        if bn == 0 {
+            return Ok(logits.as_slice());
+        }
+        match &cache.layers {
+            Layers::Mlp { h1 } => {
+                // logits = h1[v] @ w2 + b2
+                gather.resize(bn * h, 0.0);
+                for (i, &v) in nodes.iter().enumerate() {
+                    gather[i * h..(i + 1) * h]
+                        .copy_from_slice(&h1[v as usize * h..(v as usize + 1) * h]);
+                }
+                linear(kc, gather, pd(snap, 2), Some(pd(snap, 3)), logits, bn, h, c, false);
+            }
+            Layers::Gcn { h1 } => {
+                // logits = mean_f1(h1) @ w2 + b2
+                agg.resize(bn * h, 0.0);
+                agg_ids(kc, g, h1, h, dims.f1, nodes, agg);
+                linear(kc, agg, pd(snap, 2), Some(pd(snap, 3)), logits, bn, h, c, false);
+            }
+            Layers::Sage { h1 } => {
+                // h0 = relu(x_v @ ws1 + mean_f1(x) @ wn1 + b1)
+                // logits = h0 @ ws2 + mean_f1(h1) @ wn2 + b2
+                gather.resize(bn * d, 0.0);
+                for (i, &v) in nodes.iter().enumerate() {
+                    gather[i * d..(i + 1) * d].copy_from_slice(ds.feature(v));
+                }
+                agg.resize(bn * d, 0.0);
+                agg_ids(kc, g, &ds.features, d, dims.f1, nodes, agg);
+                agg2.resize(bn * h, 0.0);
+                agg_ids(kc, g, h1, h, dims.f1, nodes, agg2);
+                hid.resize(bn * h, 0.0);
+                matmul(kc, gather, pd(snap, 0), hid, bn, d, h);
+                tmp.resize(bn * h, 0.0);
+                matmul(kc, agg, pd(snap, 1), tmp, bn, d, h);
+                for (a, &t) in hid.iter_mut().zip(tmp.iter()) {
+                    *a += t;
+                }
+                add_bias(hid, pd(snap, 2), bn, h);
+                relu_inplace(hid);
+                matmul(kc, hid, pd(snap, 3), logits, bn, h, c);
+                tmp.resize(bn * c, 0.0);
+                matmul(kc, agg2, pd(snap, 4), tmp, bn, h, c);
+                for (o, &t) in logits.iter_mut().zip(tmp.iter()) {
+                    *o += t;
+                }
+                add_bias(logits, pd(snap, 5), bn, c);
+            }
+            Layers::Appnp { mlp_out, p1 } => {
+                // logits = β·mlp_out[v] + (1−β)·mean_f1(p1)
+                agg.resize(bn * c, 0.0);
+                agg_ids(kc, g, p1, c, dims.f1, nodes, agg);
+                for (i, &v) in nodes.iter().enumerate() {
+                    let hrow = &mlp_out[v as usize * c..(v as usize + 1) * c];
+                    let arow = &agg[i * c..(i + 1) * c];
+                    let orow = &mut logits[i * c..(i + 1) * c];
+                    for ((o, &hv), &av) in orow.iter_mut().zip(hrow).zip(arow) {
+                        *o = APPNP_TELEPORT * hv + (1.0 - APPNP_TELEPORT) * av;
+                    }
+                }
+            }
+        }
+        Ok(logits.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::runtime::{ModelState, Runtime};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn cache_rejects_mismatched_dataset() {
+        let (rt, _) = Runtime::load_or_native("target/native-artifacts").unwrap();
+        let meta = rt.meta("gcn_adam_tiny").unwrap().clone();
+        let mut rng = Pcg64::new(1);
+        let state = ModelState::init(&meta, &mut rng);
+        let snap = ModelSnapshot::for_artifact(&meta, &state.params, 1).unwrap();
+        let wrong = generators::by_name("tiny-hetero", 0).unwrap();
+        let kc = KernelCtx::new(1);
+        let err = EmbeddingCache::build(&snap, &wrong, &kc).unwrap_err();
+        assert!(format!("{err:#}").contains("tiny"), "{err:#}");
+    }
+
+    #[test]
+    fn agg_row_matches_banded_block_row() {
+        // independent oracle: build a Fanout::Full block and compare the
+        // banded aggregation of its A2 row against agg_row for the same node
+        use crate::runtime::kernels::matmul_ref;
+        use crate::sampler::{BlockBuilder, Fanout};
+
+        let ds = generators::by_name("tiny", 0).unwrap();
+        let mut bb = BlockBuilder::new(4, 3, 4, ds.d, ds.c(), false);
+        bb.fanout = Fanout::Full;
+        let mut rng = Pcg64::new(5);
+        let targets = [7u32, 20, 33, 41];
+        let blk = bb.build(&targets, &ds.graph, &ds, &mut rng);
+        // dense reference: full A1 @ x1 row per target (f1-capped mean)
+        let mut want = vec![0.0f32; blk.b * ds.d];
+        matmul_ref(&blk.a1, &blk.x1, &mut want, blk.b, blk.n1, ds.d);
+        for (i, &t) in targets.iter().enumerate() {
+            let mut got = vec![f32::NAN; ds.d];
+            agg_row(&ds.graph, &ds.features, ds.d, 3, t, &mut got);
+            let wrow = &want[i * ds.d..(i + 1) * ds.d];
+            assert_eq!(
+                wrow.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "target {t}"
+            );
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Deterministic load generator for the inference server: closed-loop
+//! (each client issues its next request the moment the previous one
+//! answers) and open-loop (requests arrive on a fixed-rate schedule
+//! regardless of completion — queueing delay shows up in the latency tail).
+//!
+//! The *workload* is deterministic — the request node sequence is drawn
+//! from a seeded [`Pcg64`], so two runs at the same seed issue the same
+//! queries in the same per-client order. The measured latencies are of
+//! course not; they are the whole point.
+//!
+//! Latency accounting:
+//! - closed loop: response time (send → reply) per request;
+//! - open loop: *scheduled-arrival* to reply — a backlogged server shows up
+//!   as growing tail latency, exactly as it would for real traffic.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::serve::server::ServerClient;
+use crate::util::stats::{mean, Percentiles};
+use crate::util::Pcg64;
+
+/// Arrival discipline of the generated load.
+#[derive(Clone, Copy, Debug)]
+pub enum LoadMode {
+    /// each client issues requests back-to-back (measures peak sustainable
+    /// throughput)
+    Closed,
+    /// requests arrive at `rate_rps` on a fixed schedule shared by all
+    /// clients (measures behavior under a target offered load)
+    Open { rate_rps: f64 },
+}
+
+/// One load-test specification.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    pub mode: LoadMode,
+    /// concurrent client threads
+    pub clients: usize,
+    /// total requests to issue
+    pub requests: usize,
+    /// workload seed (node sequence is reproducible from it)
+    pub seed: u64,
+}
+
+/// What a load run measured.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub completed: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    /// completed requests per second of wall-clock
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    /// latency percentiles in milliseconds (NaN when nothing completed)
+    pub latency: Percentiles,
+}
+
+impl std::fmt::Display for LoadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests ({} ok, {} err) in {:.3}s -> {:.1} req/s; \
+             latency ms: mean={:.3} p50={:.3} p95={:.3} p99={:.3}",
+            self.requests,
+            self.completed,
+            self.errors,
+            self.wall_s,
+            self.throughput_rps,
+            self.mean_ms,
+            self.latency.p50,
+            self.latency.p95,
+            self.latency.p99
+        )
+    }
+}
+
+/// Run one load test against `client`, drawing request nodes uniformly from
+/// `nodes` with the spec's seed. Blocks until every request has answered.
+pub fn run_load(client: &ServerClient, nodes: &[u32], spec: &LoadSpec) -> LoadReport {
+    assert!(!nodes.is_empty(), "run_load needs a non-empty node set");
+    let requests = spec.requests;
+    let clients = spec.clients.max(1);
+    let mut rng = Pcg64::new(spec.seed);
+    let seq: Vec<u32> = (0..requests).map(|_| *rng.choose(nodes)).collect();
+
+    let start = Instant::now();
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
+    let mut errors = 0usize;
+    match spec.mode {
+        LoadMode::Closed => {
+            let chunk = requests.div_ceil(clients).max(1);
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for ch in seq.chunks(chunk) {
+                    let c = client.clone();
+                    handles.push(s.spawn(move || {
+                        let mut lats = Vec::with_capacity(ch.len());
+                        let mut errs = 0usize;
+                        for &v in ch {
+                            let t0 = Instant::now();
+                            match c.query(v) {
+                                Ok(_) => lats.push(t0.elapsed().as_secs_f64() * 1e3),
+                                Err(_) => errs += 1,
+                            }
+                        }
+                        (lats, errs)
+                    }));
+                }
+                for h in handles {
+                    let (lats, errs) = h.join().expect("load client panicked");
+                    lat_ms.extend(lats);
+                    errors += errs;
+                }
+            });
+        }
+        LoadMode::Open { rate_rps } => {
+            let rate = rate_rps.max(1e-3);
+            let next = AtomicUsize::new(0);
+            let collected: Mutex<(Vec<f64>, usize)> =
+                Mutex::new((Vec::with_capacity(requests), 0));
+            std::thread::scope(|s| {
+                for _ in 0..clients {
+                    let c = client.clone();
+                    let next = &next;
+                    let collected = &collected;
+                    let seq = &seq;
+                    s.spawn(move || loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= requests {
+                            break;
+                        }
+                        let due = start + Duration::from_secs_f64(i as f64 / rate);
+                        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                            std::thread::sleep(wait);
+                        }
+                        let r = c.query(seq[i]);
+                        // latency from the *scheduled* arrival: lateness
+                        // (all clients busy) counts as queueing delay
+                        let lat = due.elapsed().as_secs_f64() * 1e3;
+                        let mut g = collected.lock().expect("load collector poisoned");
+                        match r {
+                            Ok(_) => g.0.push(lat),
+                            Err(_) => g.1 += 1,
+                        }
+                    });
+                }
+            });
+            let (l, e) = collected.into_inner().expect("load collector poisoned");
+            lat_ms = l;
+            errors = e;
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let completed = lat_ms.len();
+    let latency = if lat_ms.is_empty() {
+        Percentiles {
+            p50: f64::NAN,
+            p90: f64::NAN,
+            p95: f64::NAN,
+            p99: f64::NAN,
+        }
+    } else {
+        Percentiles::of(&lat_ms)
+    };
+    LoadReport {
+        requests,
+        completed,
+        errors,
+        wall_s,
+        throughput_rps: completed as f64 / wall_s.max(1e-9),
+        mean_ms: mean(&lat_ms),
+        latency,
+    }
+}

@@ -1,0 +1,39 @@
+//! `llcg::serve` — online GNN inference on top of trained LLCG models.
+//!
+//! Four pieces (see `rust/src/serve/README.md` for the full contract):
+//!
+//! - [`snapshot`] — immutable [`ModelSnapshot`]s (params + arch +
+//!   block-format normalization metadata) and the [`SnapshotHub`], the
+//!   atomic publish point a still-training run feeds at round boundaries
+//!   (`Run::publish_to`) so a live server hot-swaps improving models.
+//! - [`cache`] — the per-snapshot [`EmbeddingCache`]: layer-1 hidden
+//!   embeddings for *every* node of the graph, computed once per snapshot
+//!   on the tiled kernel layer. A query then needs only its cached
+//!   layer-1 neighbor embeddings plus one output-layer step — near-O(1)
+//!   instead of the O(f1·f2) 2-hop recomputation the eval path pays per
+//!   request. [`InferenceEngine`] binds a snapshot to its cache and scores
+//!   batches **bit-identically** to `driver::eval_split`.
+//! - [`server`] — the micro-batching [`Server`]: bounded request queue,
+//!   deadline-or-batch-size flush, per-request [`NodeScores`] replies, and
+//!   cache invalidation on snapshot hot-swap.
+//! - [`loadgen`] — deterministic closed/open-loop load generation with
+//!   latency percentiles ([`run_load`] → [`LoadReport`]).
+//!
+//! ```text
+//! training (either engine)          serving
+//!   round r ends                      clients ──▶ bounded queue
+//!     └─ publish(θ_r) ──▶ SnapshotHub ──▶ dispatcher: micro-batch,
+//!                          ▲ version++     rebuild cache on version change,
+//!                          │               one output-layer step per batch
+//!                          └── llcg serve / examples/serve_pipeline.rs
+//! ```
+
+pub mod cache;
+pub mod loadgen;
+pub mod server;
+pub mod snapshot;
+
+pub use cache::{EmbeddingCache, InferenceEngine};
+pub use loadgen::{run_load, LoadMode, LoadReport, LoadSpec};
+pub use server::{NodeScores, ServeConfig, ServeStats, Server, ServerClient};
+pub use snapshot::{ModelSnapshot, SnapshotHub, SnapshotPublisher};

@@ -1,0 +1,388 @@
+//! The online inference server: a bounded request queue, a dispatcher
+//! thread that flushes micro-batches on a deadline-or-batch-size rule, and
+//! cheap cloneable client handles.
+//!
+//! ```text
+//!   clients ──SyncSender<Req>──▶ dispatcher (owns InferenceEngine + pool)
+//!     ▲                             │ collect until max_batch or flush_us
+//!     └────── per-request reply ◀───┘ score_batch → NodeScores per request
+//! ```
+//!
+//! Micro-batching amortizes the output-layer matmul across concurrent
+//! requests (the kernels are per-row bit-identical, so batching never
+//! changes a score — only the clock). The queue is bounded
+//! ([`ServeConfig::queue`]), so overload applies backpressure at the
+//! sender instead of growing memory.
+//!
+//! Hot-swap: before executing each batch the dispatcher compares the
+//! [`SnapshotHub`] version against its engine's; when a training run has
+//! published a newer snapshot, the embedding cache is rebuilt and the batch
+//! (and everything after it) is served from the new model. In-flight
+//! requests of the previous batch keep their already-computed scores — a
+//! swap never tears a batch.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::graph::Dataset;
+use crate::metrics;
+use crate::runtime::{KernelCtx, ThreadPool};
+use crate::serve::cache::InferenceEngine;
+use crate::serve::snapshot::SnapshotHub;
+
+/// Serving knobs; every field is also an `ExperimentConfig` key
+/// (`serve_batch` / `serve_flush_us` / `serve_threads` / `serve_queue`), so
+/// `llcg serve` takes them from the same schema as everything else.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// flush a micro-batch at this many queued requests
+    pub max_batch: usize,
+    /// ... or this many microseconds after its first request, whichever
+    /// comes first
+    pub flush_us: u64,
+    /// kernel-pool lanes for cache builds + batch execution (0 = all cores)
+    pub threads: usize,
+    /// bounded request-queue depth (senders block when full — backpressure)
+    pub queue: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_batch: 32,
+            flush_us: 200,
+            threads: 0,
+            queue: 1024,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Pull the serve keys out of an experiment config.
+    pub fn from_experiment(cfg: &ExperimentConfig) -> ServeConfig {
+        ServeConfig {
+            max_batch: cfg.serve_batch,
+            flush_us: cfg.serve_flush_us,
+            threads: cfg.serve_threads,
+            queue: cfg.serve_queue,
+        }
+    }
+}
+
+/// One answered query: per-class scores (logits) for a node, plus the
+/// snapshot version that served it (so clients can observe hot-swaps).
+#[derive(Clone, Debug)]
+pub struct NodeScores {
+    pub node: u32,
+    /// snapshot version the scores came from
+    pub version: u64,
+    /// argmax class (first-max tie-break, as `metrics::argmax`)
+    pub pred: u32,
+    /// raw per-class logits, length `c`
+    pub scores: Vec<f32>,
+}
+
+enum Req {
+    Query {
+        node: u32,
+        reply: Sender<std::result::Result<NodeScores, String>>,
+    },
+    Shutdown,
+}
+
+/// Dispatcher-side counters, readable via [`Server::stats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// snapshot hot-swaps (cache rebuilds) performed
+    pub swaps: u64,
+    /// published snapshots the server could not build a cache for (it keeps
+    /// serving the previous snapshot; see the dispatcher's swap rule)
+    pub failed_swaps: u64,
+    /// largest micro-batch executed
+    pub max_batch: usize,
+    /// requests rejected before batching (out-of-range node id)
+    pub rejected: u64,
+}
+
+impl ServeStats {
+    /// Mean executed micro-batch size.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// A running inference server. Create client handles with
+/// [`Server::client`]; stop it with [`Server::shutdown`].
+pub struct Server {
+    tx: SyncSender<Req>,
+    stats: Arc<Mutex<ServeStats>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Cheap cloneable handle for issuing blocking queries; safe to share
+/// across client threads.
+#[derive(Clone)]
+pub struct ServerClient {
+    tx: SyncSender<Req>,
+}
+
+impl ServerClient {
+    /// Score one node (blocks until the micro-batch containing this request
+    /// flushes). Errors if the node id is out of range or the server has
+    /// shut down.
+    pub fn query(&self, node: u32) -> Result<NodeScores> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Req::Query {
+                node,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("serve: server has shut down"))?;
+        match reply_rx.recv() {
+            Ok(Ok(scores)) => Ok(scores),
+            Ok(Err(msg)) => bail!("serve: {msg}"),
+            Err(_) => bail!("serve: server dropped the request (shutting down?)"),
+        }
+    }
+}
+
+impl Server {
+    /// Start a server over the hub's current snapshot. Fails if nothing has
+    /// been published yet or the cache build fails; a training run that
+    /// keeps publishing to `hub` hot-swaps the model under live traffic.
+    pub fn start(hub: Arc<SnapshotHub>, ds: Arc<Dataset>, cfg: ServeConfig) -> Result<Server> {
+        if hub.current().is_none() {
+            bail!("serve: no snapshot published yet (run training with a publisher first)");
+        }
+        if cfg.max_batch == 0 || cfg.queue == 0 {
+            bail!("serve: max_batch and queue must be >= 1");
+        }
+        let (tx, rx) = sync_channel::<Req>(cfg.queue);
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats2 = stats.clone();
+        let handle = std::thread::Builder::new()
+            .name("llcg-serve".into())
+            .spawn(move || dispatcher(hub, ds, cfg, rx, stats2, ready_tx))
+            .expect("spawning serve dispatcher");
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Server {
+                tx,
+                stats,
+                handle: Some(handle),
+            }),
+            Ok(Err(msg)) => {
+                let _ = handle.join();
+                bail!("serve: {msg}");
+            }
+            Err(_) => {
+                let _ = handle.join();
+                bail!("serve: dispatcher died during startup");
+            }
+        }
+    }
+
+    pub fn client(&self) -> ServerClient {
+        ServerClient {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Snapshot of the dispatcher counters.
+    pub fn stats(&self) -> ServeStats {
+        *self.stats.lock().expect("serve stats poisoned")
+    }
+
+    /// Stop the dispatcher (pending and queued requests error out) and join
+    /// its thread.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            // best-effort: if the queue is momentarily full, detach instead
+            // of risking a blocked drop (shutdown() is the orderly path)
+            if self.tx.try_send(Req::Shutdown).is_ok() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+type Batch = Vec<(u32, Sender<std::result::Result<NodeScores, String>>)>;
+
+fn dispatcher(
+    hub: Arc<SnapshotHub>,
+    ds: Arc<Dataset>,
+    cfg: ServeConfig,
+    rx: Receiver<Req>,
+    stats: Arc<Mutex<ServeStats>>,
+    ready: Sender<std::result::Result<(), String>>,
+) {
+    // one persistent pool for the whole server lifetime: cache rebuilds on
+    // hot-swap reuse it instead of respawning threads
+    let pool = Arc::new(ThreadPool::new(cfg.threads));
+    let kc = KernelCtx::with_pool(pool, false);
+    let snap = hub.current().expect("checked by Server::start");
+    let mut engine = match InferenceEngine::new(snap, ds.clone(), kc.clone()) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+
+    let n = ds.n();
+    let flush_after = Duration::from_micros(cfg.flush_us);
+    let mut batch: Batch = Vec::with_capacity(cfg.max_batch);
+    // version of the last published snapshot whose cache build failed —
+    // skipped until the hub moves again, so one bad publish costs one
+    // rebuild attempt, not one per batch
+    let mut failed_swap: u64 = 0;
+    let admit = |req: Req, batch: &mut Batch| -> Option<()> {
+        // None = shutdown requested
+        match req {
+            Req::Shutdown => None,
+            Req::Query { node, reply } => {
+                if (node as usize) >= n {
+                    stats.lock().expect("serve stats poisoned").rejected += 1;
+                    let _ = reply.send(Err(format!("node {node} out of range (n={n})")));
+                } else {
+                    batch.push((node, reply));
+                }
+                Some(())
+            }
+        }
+    };
+
+    'serve: loop {
+        batch.clear();
+        // block for the batch's first request
+        while batch.is_empty() {
+            match rx.recv() {
+                Err(_) => break 'serve,
+                Ok(req) => {
+                    if admit(req, &mut batch).is_none() {
+                        break 'serve;
+                    }
+                }
+            }
+        }
+        // deadline-or-batch-size collection window
+        let deadline = Instant::now() + flush_after;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => {
+                    if admit(req, &mut batch).is_none() {
+                        flush(&hub, &ds, &kc, &mut engine, &mut batch, &stats, &mut failed_swap);
+                        break 'serve;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    flush(&hub, &ds, &kc, &mut engine, &mut batch, &stats, &mut failed_swap);
+                    break 'serve;
+                }
+            }
+        }
+        flush(&hub, &ds, &kc, &mut engine, &mut batch, &stats, &mut failed_swap);
+    }
+}
+
+/// Execute one micro-batch: hot-swap the engine if the hub moved, score the
+/// batch, answer every request.
+#[allow(clippy::too_many_arguments)]
+fn flush(
+    hub: &SnapshotHub,
+    ds: &Arc<Dataset>,
+    kc: &KernelCtx,
+    engine: &mut InferenceEngine,
+    batch: &mut Batch,
+    stats: &Mutex<ServeStats>,
+    failed_swap: &mut u64,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    // hot-swap: rebuild the cache when training published a newer snapshot.
+    // A snapshot whose cache cannot be built (wrong dataset/dims on a
+    // shared hub) is recorded in `failed_swap` and skipped until the hub
+    // moves again — the server keeps answering from the engine it has.
+    let hub_v = hub.version();
+    if hub_v != engine.version() && hub_v != *failed_swap {
+        if let Some(snap) = hub.current() {
+            // judge by the fetched snapshot's own version, not hub_v: a
+            // publish racing between the two reads must not be re-attempted
+            // (or double-counted) on the next batch
+            let snap_v = snap.version;
+            if snap_v != engine.version() && snap_v != *failed_swap {
+                match InferenceEngine::new(snap, ds.clone(), kc.clone()) {
+                    Ok(fresh) => {
+                        *engine = fresh;
+                        *failed_swap = 0;
+                        stats.lock().expect("serve stats poisoned").swaps += 1;
+                    }
+                    Err(e) => {
+                        *failed_swap = snap_v;
+                        stats.lock().expect("serve stats poisoned").failed_swaps += 1;
+                        eprintln!(
+                            "serve: snapshot v{snap_v} rejected ({e:#}); \
+                             continuing on v{}",
+                            engine.version()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    let c = engine.classes();
+    let version = engine.version();
+    let nodes: Vec<u32> = batch.iter().map(|(v, _)| *v).collect();
+    {
+        let mut s = stats.lock().expect("serve stats poisoned");
+        s.requests += nodes.len() as u64;
+        s.batches += 1;
+        s.max_batch = s.max_batch.max(nodes.len());
+    }
+    match engine.score_batch(&nodes) {
+        Ok(scores) => {
+            for (i, (node, reply)) in batch.drain(..).enumerate() {
+                let row = &scores[i * c..(i + 1) * c];
+                let _ = reply.send(Ok(NodeScores {
+                    node,
+                    version,
+                    pred: metrics::argmax(row) as u32,
+                    scores: row.to_vec(),
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (_, reply) in batch.drain(..) {
+                let _ = reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Immutable model snapshots + the atomic publish/subscribe hub that feeds
+//! them from a (possibly still-running) training run into a live inference
+//! server.
+//!
+//! A [`ModelSnapshot`] freezes everything the serving path needs to answer
+//! node-prediction queries: the parameter tensors, the architecture, and the
+//! normalization metadata of the block format (the `f1`/`f2` fanout caps
+//! that define the capped-mean aggregation — see `sampler::BlockBuilder`).
+//! Snapshots are validated against the artifact's parameter specs at
+//! construction, so a live server can trust every snapshot it receives.
+//!
+//! The [`SnapshotHub`] is the hand-off point: training publishes an improving
+//! snapshot at every round boundary (`Run::publish_to` wires this through
+//! both execution engines), the server reads the current one with a single
+//! cheap `Arc` clone, and versions are strictly monotonic so consumers can
+//! detect a hot-swap without comparing tensors.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::native::{param_specs, NATIVE_ARCHS};
+use crate::runtime::{ArtifactMeta, Dims, Tensor};
+
+/// An immutable, self-describing trained model: parameters + architecture +
+/// the block-format normalization metadata (dims incl. the `f1`/`f2` fanout
+/// caps). `version` is assigned by [`SnapshotHub::publish`] (0 = never
+/// published).
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// monotonically increasing publish counter (0 until published)
+    pub version: u64,
+    /// training round that produced these parameters
+    pub round: usize,
+    pub arch: String,
+    pub dataset: String,
+    /// sigmoid-BCE (multilabel) vs softmax-CE head
+    pub multilabel: bool,
+    /// block-format dims: `d`/`h`/`c` widths plus the `f1`/`f2` fanout caps
+    /// that define the capped-mean neighbor aggregation
+    pub dims: Dims,
+    /// parameter tensors, in the artifact's positional order
+    pub params: Vec<Tensor>,
+}
+
+impl ModelSnapshot {
+    /// Freeze `params` (positional, artifact order) for serving. Validates
+    /// the arch against the native model zoo (serving executes on the
+    /// native kernels; GAT is PJRT-only) and every parameter shape against
+    /// the artifact's specs.
+    pub fn for_artifact(
+        meta: &ArtifactMeta,
+        params: &[Tensor],
+        round: usize,
+    ) -> Result<ModelSnapshot> {
+        if !NATIVE_ARCHS.contains(&meta.arch.as_str()) {
+            bail!(
+                "serving supports the native model zoo {:?}; arch {:?} is PJRT-only",
+                NATIVE_ARCHS,
+                meta.arch
+            );
+        }
+        let specs = param_specs(&meta.arch, meta.dims.d, meta.dims.h, meta.dims.c)?;
+        if params.len() != specs.len()
+            || specs.iter().zip(params).any(|((_, s), t)| *s != t.shape)
+        {
+            bail!(
+                "snapshot params do not match artifact {} (want {:?}, got {:?})",
+                meta.name,
+                specs,
+                params.iter().map(|t| t.shape.clone()).collect::<Vec<_>>()
+            );
+        }
+        Ok(ModelSnapshot {
+            version: 0,
+            round,
+            arch: meta.arch.clone(),
+            dataset: meta.dataset.clone(),
+            multilabel: meta.multilabel(),
+            dims: meta.dims,
+            params: params.to_vec(),
+        })
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.params.iter().map(|t| t.size_bytes()).sum()
+    }
+}
+
+/// The atomic snapshot hand-off between a training run and a live server.
+///
+/// `publish` swaps the current snapshot under a short lock and bumps the
+/// version; `current` hands out an `Arc` clone, so readers never block
+/// training for more than the pointer swap and a served request keeps its
+/// snapshot alive even while a newer one replaces it (hot-swap without
+/// tearing).
+#[derive(Debug, Default)]
+pub struct SnapshotHub {
+    slot: Mutex<Option<Arc<ModelSnapshot>>>,
+    version: AtomicU64,
+}
+
+impl SnapshotHub {
+    pub fn new() -> Arc<SnapshotHub> {
+        Arc::new(SnapshotHub::default())
+    }
+
+    /// Install `snap` as the current snapshot; assigns and returns its
+    /// version (strictly increasing across publishes).
+    pub fn publish(&self, mut snap: ModelSnapshot) -> u64 {
+        let mut slot = self.slot.lock().expect("snapshot hub poisoned");
+        let v = self.version.load(Ordering::SeqCst) + 1;
+        snap.version = v;
+        *slot = Some(Arc::new(snap));
+        // stored under the slot lock so version() == current().version once
+        // the new snapshot is visible
+        self.version.store(v, Ordering::SeqCst);
+        v
+    }
+
+    /// The current snapshot, if anything has been published yet.
+    pub fn current(&self) -> Option<Arc<ModelSnapshot>> {
+        self.slot.lock().expect("snapshot hub poisoned").clone()
+    }
+
+    /// Version of the current snapshot (0 = nothing published). Cheap —
+    /// the server polls this per micro-batch to detect hot-swaps.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
+}
+
+/// Round-boundary publisher handed to a run (`Run::publish_to`): snapshots
+/// the freshly averaged/corrected global parameters into a [`SnapshotHub`]
+/// after every round, on whichever engine executes the run. The artifact is
+/// validated once here so a mid-run publish cannot fail.
+#[derive(Clone, Debug)]
+pub struct SnapshotPublisher {
+    hub: Arc<SnapshotHub>,
+    meta: ArtifactMeta,
+}
+
+impl SnapshotPublisher {
+    pub fn new(hub: Arc<SnapshotHub>, meta: &ArtifactMeta) -> Result<SnapshotPublisher> {
+        if !NATIVE_ARCHS.contains(&meta.arch.as_str()) {
+            bail!(
+                "cannot publish serving snapshots for arch {:?} (native zoo: {:?})",
+                meta.arch,
+                NATIVE_ARCHS
+            );
+        }
+        Ok(SnapshotPublisher {
+            hub,
+            meta: meta.clone(),
+        })
+    }
+
+    /// Publish `params` as round `round`'s snapshot; returns the version.
+    pub fn publish(&self, round: usize, params: &[Tensor]) -> u64 {
+        let snap = ModelSnapshot::for_artifact(&self.meta, params, round)
+            .expect("publisher validated the artifact at construction");
+        self.hub.publish(snap)
+    }
+
+    pub fn hub(&self) -> &Arc<SnapshotHub> {
+        &self.hub
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ModelState, Runtime};
+    use crate::util::Pcg64;
+
+    fn tiny_meta() -> ArtifactMeta {
+        let (rt, _) = Runtime::load_or_native("target/native-artifacts").unwrap();
+        rt.meta("gcn_adam_tiny").unwrap().clone()
+    }
+
+    #[test]
+    fn snapshot_validates_params_and_arch() {
+        let meta = tiny_meta();
+        let mut rng = Pcg64::new(1);
+        let state = ModelState::init(&meta, &mut rng);
+        let snap = ModelSnapshot::for_artifact(&meta, &state.params, 3).unwrap();
+        assert_eq!(snap.round, 3);
+        assert_eq!(snap.version, 0, "unpublished snapshots carry version 0");
+        assert_eq!(snap.dims.f1, meta.dims.f1);
+        // wrong tensor count is rejected
+        assert!(ModelSnapshot::for_artifact(&meta, &state.params[..2], 0).is_err());
+        // PJRT-only arch is rejected
+        let mut gat = meta.clone();
+        gat.arch = "gat".into();
+        assert!(ModelSnapshot::for_artifact(&gat, &state.params, 0).is_err());
+        assert!(SnapshotPublisher::new(SnapshotHub::new(), &gat).is_err());
+    }
+
+    #[test]
+    fn hub_versions_are_monotonic_and_swap_atomically() {
+        let meta = tiny_meta();
+        let mut rng = Pcg64::new(2);
+        let a = ModelState::init(&meta, &mut rng);
+        let b = ModelState::init(&meta, &mut rng);
+        let hub = SnapshotHub::new();
+        assert_eq!(hub.version(), 0);
+        assert!(hub.current().is_none());
+        let v1 = hub.publish(ModelSnapshot::for_artifact(&meta, &a.params, 1).unwrap());
+        assert_eq!((v1, hub.version()), (1, 1));
+        let held = hub.current().unwrap();
+        assert_eq!(held.version, 1);
+        let v2 = hub.publish(ModelSnapshot::for_artifact(&meta, &b.params, 2).unwrap());
+        assert_eq!((v2, hub.version()), (2, 2));
+        // the old snapshot stays alive for whoever held it (no tearing)
+        assert_eq!(held.version, 1);
+        assert_eq!(held.params[0].data, a.params[0].data);
+        assert_eq!(hub.current().unwrap().params[0].data, b.params[0].data);
+    }
+
+    #[test]
+    fn publisher_round_trip() {
+        let meta = tiny_meta();
+        let mut rng = Pcg64::new(3);
+        let state = ModelState::init(&meta, &mut rng);
+        let hub = SnapshotHub::new();
+        let p = SnapshotPublisher::new(hub.clone(), &meta).unwrap();
+        assert_eq!(p.publish(1, &state.params), 1);
+        assert_eq!(p.publish(2, &state.params), 2);
+        assert_eq!(p.hub().current().unwrap().round, 2);
+    }
+}

@@ -61,6 +61,36 @@ impl Welford {
     }
 }
 
+/// The latency percentile set (p50/p90/p95/p99) of a sample — one
+/// interpolation rule shared by every latency report: the bench harness
+/// sections (`BENCH_*.json`), the serve load generator, and [`Summary`].
+#[derive(Clone, Copy, Debug)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    pub fn of(xs: &[f64]) -> Percentiles {
+        assert!(!xs.is_empty(), "Percentiles::of on empty sample");
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles::of_sorted(&sorted)
+    }
+
+    /// [`Percentiles::of`] over an already ascending-sorted slice.
+    pub fn of_sorted(sorted: &[f64]) -> Percentiles {
+        Percentiles {
+            p50: percentile_sorted(sorted, 0.50),
+            p90: percentile_sorted(sorted, 0.90),
+            p95: percentile_sorted(sorted, 0.95),
+            p99: percentile_sorted(sorted, 0.99),
+        }
+    }
+}
+
 /// Summary of a sample: mean/std/min/max/percentiles.
 #[derive(Clone, Debug)]
 pub struct Summary {
@@ -70,6 +100,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -83,14 +114,16 @@ impl Summary {
         }
         let mut sorted = xs.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = Percentiles::of_sorted(&sorted);
         Summary {
             n: xs.len(),
             mean: w.mean(),
             std: w.std(),
             min: w.min(),
-            p50: percentile_sorted(&sorted, 0.50),
-            p90: percentile_sorted(&sorted, 0.90),
-            p99: percentile_sorted(&sorted, 0.99),
+            p50: p.p50,
+            p90: p.p90,
+            p95: p.p95,
+            p99: p.p99,
             max: w.max(),
         }
     }
@@ -100,8 +133,9 @@ impl std::fmt::Display for Summary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "n={} mean={:.4} std={:.4} min={:.4} p50={:.4} p90={:.4} p99={:.4} max={:.4}",
-            self.n, self.mean, self.std, self.min, self.p50, self.p90, self.p99, self.max
+            "n={} mean={:.4} std={:.4} min={:.4} p50={:.4} p90={:.4} p95={:.4} p99={:.4} max={:.4}",
+            self.n, self.mean, self.std, self.min, self.p50, self.p90, self.p95, self.p99,
+            self.max
         )
     }
 }
@@ -163,6 +197,20 @@ mod tests {
         let s = Summary::of(&xs);
         assert!((s.p50 - 50.5).abs() < 1e-9);
         assert!((s.p90 - 90.1).abs() < 1e-6);
+        assert!((s.p95 - 95.05).abs() < 1e-6);
+        // the standalone percentile set agrees with Summary's fields
+        let p = Percentiles::of(&xs);
+        assert_eq!(p.p50.to_bits(), s.p50.to_bits());
+        assert_eq!(p.p90.to_bits(), s.p90.to_bits());
+        assert_eq!(p.p95.to_bits(), s.p95.to_bits());
+        assert_eq!(p.p99.to_bits(), s.p99.to_bits());
+    }
+
+    #[test]
+    fn percentiles_unsorted_input() {
+        let p = Percentiles::of(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert!((p.p50 - 3.0).abs() < 1e-12);
+        assert!((p.p99 - 4.96).abs() < 1e-9);
     }
 
     #[test]

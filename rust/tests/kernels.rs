@@ -1,8 +1,10 @@
 //! Kernel-layer determinism contract at the system level: full train/eval
 //! steps and whole runs must be bit-identical across kernel thread counts
 //! {1, 2, 7} and against the scalar reference kernels, the pinned block
-//! staging must match the fresh-literal path, and the device-side eval
-//! reductions must reproduce the logits-download metrics exactly.
+//! staging must match the fresh-literal path, the device-side eval
+//! reductions must reproduce the logits-download metrics exactly, and the
+//! parallel optimizer-update passes must match their sequential reference
+//! at pool-engaging sizes.
 //! (Kernel-vs-reference parity on odd shapes lives in the unit tests of
 //! `runtime::kernels`; pool lifecycle tests in `runtime::pool`.)
 
@@ -22,8 +24,8 @@ fn native_rt() -> Runtime {
 }
 
 /// Train a few device-resident steps and return (losses, params) bits.
-fn run_steps(rt: &Runtime, name: &str, seed: u64) -> (Vec<u32>, Vec<Vec<u32>>) {
-    let ds = generators::by_name("tiny", 0).unwrap();
+fn run_steps(rt: &Runtime, ds_name: &str, name: &str, seed: u64) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let ds = generators::by_name(ds_name, 0).unwrap();
     let meta = rt.meta(name).unwrap().clone();
     let bb = BlockBuilder::new(
         meta.dims.b,
@@ -59,16 +61,22 @@ fn run_steps(rt: &Runtime, name: &str, seed: u64) -> (Vec<u32>, Vec<Vec<u32>>) {
 #[test]
 fn steps_are_bit_identical_across_thread_counts_and_scalar() {
     let rt = native_rt();
-    for arch in ["gcn", "sage", "appnp", "mlp"] {
-        let name = format!("{arch}_adam_tiny");
+    // tiny ships gcn/sage/mlp; appnp's smallest shape lives on flickr-s
+    for (ds_name, arch) in [
+        ("tiny", "gcn"),
+        ("tiny", "sage"),
+        ("tiny", "mlp"),
+        ("flickr-s", "appnp"),
+    ] {
+        let name = format!("{arch}_adam_{ds_name}");
         rt.set_kernel_scalar(true);
         rt.set_kernel_threads(1);
-        let want = run_steps(&rt, &name, 31);
+        let want = run_steps(&rt, ds_name, &name, 31);
         rt.set_kernel_scalar(false);
         for threads in [1usize, 2, 7] {
             rt.set_kernel_threads(threads);
             assert_eq!(rt.kernel_threads(), threads);
-            let got = run_steps(&rt, &name, 31);
+            let got = run_steps(&rt, ds_name, &name, 31);
             assert_eq!(want, got, "{arch} t={threads}: diverged from scalar");
         }
     }
@@ -165,6 +173,59 @@ fn eval_split_matches_logits_download_path() {
             loss.to_bits(),
             "{ds_name}: mean loss diverged"
         );
+    }
+}
+
+#[test]
+fn parallel_optimizer_updates_match_scalar_reference_at_scale() {
+    // tiny-model tensors stay under the pool-engagement threshold, so the
+    // whole-step tests above exercise the inline path; this drives the
+    // update kernels at production-sized tensors where the pool really
+    // splits the index space, against the scalar-reference path
+    use llcg::runtime::kernels::{adam_update, sgd_update, KernelCtx};
+    use llcg::runtime::ThreadPool;
+    use std::sync::Arc;
+
+    let n = 80_000usize;
+    let mut rng = Pcg64::new(43);
+    let dense = |rng: &mut Pcg64, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    };
+    let p0 = dense(&mut rng, n);
+    let g0 = dense(&mut rng, n);
+    let g1 = dense(&mut rng, n);
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+    // reference: the scalar flag routes both kernels to the sequential loop
+    let scalar = KernelCtx::with_pool(Arc::new(ThreadPool::new(4)), true);
+    let run = |kc: &KernelCtx| {
+        let mut p = p0.clone();
+        sgd_update(kc, &mut p, &g0, 0.03);
+        let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+        for (t, g) in [&g0, &g1].into_iter().enumerate() {
+            let t1 = (t + 1) as f32;
+            let bc1 = 1.0 - llcg::runtime::native::ADAM_B1.powf(t1);
+            let bc2 = 1.0 - llcg::runtime::native::ADAM_B2.powf(t1);
+            adam_update(
+                kc,
+                &mut p,
+                &mut m,
+                &mut v,
+                g,
+                0.01,
+                bc1,
+                bc2,
+                llcg::runtime::native::ADAM_B1,
+                llcg::runtime::native::ADAM_B2,
+                llcg::runtime::native::ADAM_EPS,
+            );
+        }
+        (bits(&p), bits(&m), bits(&v))
+    };
+    let want = run(&scalar);
+    for threads in [1usize, 2, 7] {
+        let got = run(&KernelCtx::new(threads));
+        assert_eq!(want, got, "optimizer updates diverged at t={threads}");
     }
 }
 

@@ -1,0 +1,296 @@
+//! Serving-parity and server-behavior tests (acceptance criteria of the
+//! serve subsystem):
+//!
+//! - scores from the cached serve path (embedding cache + one output-layer
+//!   step) are **bit-identical** to the training-side eval path
+//!   (`driver::eval_logits`, the forward behind `driver::eval_split`) for
+//!   every node of a split, across batch sizes {1, 7, 64} and kernel
+//!   threads {1, 4}, on every servable arch;
+//! - the live micro-batching server preserves that parity under concurrent
+//!   clients and across a snapshot hot-swap (versions observed to change);
+//! - snapshots published through `Run::publish_to` arrive once per round on
+//!   both engines, and sync-mode published params agree bit-for-bit;
+//! - the load generator completes its request budget and reports sane
+//!   percentiles.
+
+use std::sync::Arc;
+
+use llcg::api::ExperimentBuilder;
+use llcg::cluster::Engine;
+use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::graph::generators;
+use llcg::metrics;
+use llcg::runtime::{KernelCtx, ModelState, Runtime};
+use llcg::sampler::BlockBuilder;
+use llcg::serve::{
+    run_load, InferenceEngine, LoadMode, LoadSpec, ModelSnapshot, ServeConfig, Server,
+    SnapshotHub,
+};
+use llcg::util::Pcg64;
+
+fn native_rt() -> Runtime {
+    let (rt, _dir) =
+        Runtime::load_or_native("target/native-artifacts").expect("native runtime");
+    assert_eq!(rt.backend_name(), "native");
+    rt
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The training-side eval forward: full-neighbor (capped) blocks on the
+/// full graph, logits in `ids` order — the reference the serve path must
+/// reproduce bit-for-bit.
+fn eval_reference(
+    rt: &Runtime,
+    eval_name: &str,
+    params: &[llcg::runtime::Tensor],
+    ds: &llcg::graph::Dataset,
+    ids: &[u32],
+) -> Vec<f32> {
+    let meta = rt.meta(eval_name).unwrap().clone();
+    let bb = BlockBuilder::new(
+        meta.dims.b,
+        meta.dims.f1,
+        meta.dims.f2,
+        meta.dims.d,
+        meta.dims.c,
+        meta.multilabel(),
+    );
+    driver::eval_logits(rt, eval_name, params, ds, ids, &bb, &mut Pcg64::new(1)).unwrap()
+}
+
+#[test]
+fn serve_scores_match_eval_path_bitwise() {
+    let rt = native_rt();
+    // every servable arch; appnp lives on flickr-s in the shape table
+    for (ds_name, arch) in [
+        ("tiny", "gcn"),
+        ("tiny", "sage"),
+        ("tiny", "mlp"),
+        ("flickr-s", "appnp"),
+    ] {
+        let ds = Arc::new(generators::by_name(ds_name, 2).unwrap());
+        let train_meta = rt
+            .meta(&Runtime::train_name(arch, "adam", ds_name))
+            .unwrap()
+            .clone();
+        let mut rng = Pcg64::new(7);
+        let state = ModelState::init(&train_meta, &mut rng);
+        let ids: Vec<u32> = ds.splits.val.iter().copied().take(70).collect();
+        assert!(!ids.is_empty());
+        let want = eval_reference(
+            &rt,
+            &Runtime::eval_name(arch, ds_name),
+            &state.params,
+            &ds,
+            &ids,
+        );
+        let snap =
+            Arc::new(ModelSnapshot::for_artifact(&train_meta, &state.params, 1).unwrap());
+        let c = train_meta.dims.c;
+        for threads in [1usize, 4] {
+            let mut engine =
+                InferenceEngine::new(snap.clone(), ds.clone(), KernelCtx::new(threads))
+                    .unwrap();
+            for batch in [1usize, 7, 64] {
+                let mut got: Vec<f32> = Vec::with_capacity(ids.len() * c);
+                for chunk in ids.chunks(batch) {
+                    got.extend_from_slice(engine.score_batch(chunk).unwrap());
+                }
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "{ds_name}/{arch} threads={threads} batch={batch}: serve diverged \
+                     from the eval path"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn server_preserves_parity_and_hot_swaps() {
+    let rt = native_rt();
+    let ds = Arc::new(generators::by_name("tiny", 4).unwrap());
+    let train_meta = rt.meta("gcn_adam_tiny").unwrap().clone();
+    let c = train_meta.dims.c;
+    let mut rng = Pcg64::new(9);
+    let before = ModelState::init(&train_meta, &mut rng);
+    let after = ModelState::init(&train_meta, &mut rng);
+
+    let hub = SnapshotHub::new();
+    hub.publish(ModelSnapshot::for_artifact(&train_meta, &before.params, 1).unwrap());
+    let server = Server::start(
+        hub.clone(),
+        ds.clone(),
+        ServeConfig {
+            max_batch: 8,
+            flush_us: 300,
+            threads: 1,
+            queue: 64,
+        },
+    )
+    .unwrap();
+    let client = server.client();
+    let ids: Vec<u32> = ds.splits.val.iter().copied().take(24).collect();
+
+    // concurrent clients: requests may coalesce into micro-batches, and
+    // every answer must still be the snapshot-1 eval-path result
+    let want1 = eval_reference(&rt, "gcn_eval_tiny", &before.params, &ds, &ids);
+    std::thread::scope(|s| {
+        for (k, chunk) in ids.chunks(6).enumerate() {
+            let cl = client.clone();
+            let want = &want1;
+            let all = &ids;
+            s.spawn(move || {
+                for &v in chunk {
+                    let r = cl.query(v).unwrap();
+                    assert_eq!(r.version, 1, "pre-swap answer from wrong snapshot");
+                    let i = all.iter().position(|&x| x == v).unwrap();
+                    assert_eq!(
+                        bits(&want[i * c..(i + 1) * c]),
+                        bits(&r.scores),
+                        "client {k} node {v}: served scores diverged"
+                    );
+                    assert_eq!(r.pred as usize, metrics::argmax(&r.scores));
+                }
+            });
+        }
+    });
+
+    // hot-swap: publish new params; the very next batches must serve them
+    hub.publish(ModelSnapshot::for_artifact(&train_meta, &after.params, 2).unwrap());
+    let want2 = eval_reference(&rt, "gcn_eval_tiny", &after.params, &ds, &ids);
+    for (i, &v) in ids.iter().enumerate() {
+        let r = client.query(v).unwrap();
+        assert_eq!(r.version, 2, "post-swap answer from stale snapshot");
+        assert_eq!(
+            bits(&want2[i * c..(i + 1) * c]),
+            bits(&r.scores),
+            "node {v}: post-swap scores diverged"
+        );
+    }
+
+    // out-of-range ids error without wedging the batch loop
+    assert!(client.query(ds.n() as u32 + 5).is_err());
+    let ok = client.query(ids[0]).unwrap();
+    assert_eq!(ok.version, 2);
+
+    // a published snapshot the server cannot build a cache for (different
+    // dataset behind a shared hub) must NOT take the server down: it keeps
+    // answering from the engine it has, and a later good snapshot swaps in
+    let hetero_meta = rt.meta("gcn_adam_tiny-hetero").unwrap().clone();
+    let mut hrng = Pcg64::new(10);
+    let hetero = ModelState::init(&hetero_meta, &mut hrng);
+    hub.publish(ModelSnapshot::for_artifact(&hetero_meta, &hetero.params, 3).unwrap());
+    let still = client.query(ids[0]).unwrap();
+    assert_eq!(still.version, 2, "bad snapshot must not replace the engine");
+    assert_eq!(bits(&want2[..c]), bits(&still.scores));
+    hub.publish(ModelSnapshot::for_artifact(&train_meta, &before.params, 4).unwrap());
+    let back = client.query(ids[0]).unwrap();
+    assert_eq!(back.version, 4, "good snapshot after a failed one swaps in");
+    assert_eq!(bits(&want1[..c]), bits(&back.scores));
+
+    let stats = server.stats();
+    assert_eq!(stats.swaps, 2, "v1->v2 and v2->v4 rebuilds");
+    assert_eq!(stats.failed_swaps, 1, "the mismatched v3 publish");
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.requests, 2 * ids.len() as u64 + 3);
+    assert!(stats.batches >= 1 && stats.batches <= stats.requests);
+    assert!(stats.max_batch >= 1 && stats.max_batch <= 8);
+
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn both_engines_publish_identical_per_round_snapshots() {
+    let rt = native_rt();
+    let ds = Arc::new(generators::by_name("tiny", 5).unwrap());
+    let rounds = 3usize;
+    let mut published: Vec<Vec<Vec<u32>>> = Vec::new();
+    for engine in [Engine::Sequential, Engine::Cluster] {
+        let exp = ExperimentBuilder::new()
+            .with_dataset(ds.clone())
+            .arch("gcn")
+            .algorithm(Algorithm::Llcg)
+            .engine(engine)
+            .parts(2)
+            .rounds(rounds)
+            .schedule(Schedule::Fixed { k: 2 })
+            .correction_steps(1)
+            .eval_max_nodes(32)
+            .seed(11)
+            .build()
+            .unwrap();
+        let hub = SnapshotHub::new();
+        exp.launch(&rt)
+            .publish_to(hub.clone())
+            .unwrap()
+            .finish()
+            .unwrap();
+        assert_eq!(
+            hub.version(),
+            rounds as u64,
+            "{}: one publish per round boundary",
+            engine.name()
+        );
+        let snap = hub.current().unwrap();
+        assert_eq!(snap.round, rounds);
+        assert_eq!(snap.arch, "gcn");
+        published.push(snap.params.iter().map(|t| bits(&t.data)).collect());
+    }
+    // sync-mode bit-parity extends to the published serving snapshots
+    assert_eq!(
+        published[0], published[1],
+        "sequential and cluster engines published different final snapshots"
+    );
+}
+
+#[test]
+fn load_generator_completes_and_reports() {
+    let rt = native_rt();
+    let ds = Arc::new(generators::by_name("tiny", 6).unwrap());
+    let train_meta = rt.meta("gcn_adam_tiny").unwrap().clone();
+    let mut rng = Pcg64::new(13);
+    let state = ModelState::init(&train_meta, &mut rng);
+    let hub = SnapshotHub::new();
+    hub.publish(ModelSnapshot::for_artifact(&train_meta, &state.params, 1).unwrap());
+    let server = Server::start(hub, ds.clone(), ServeConfig::default()).unwrap();
+    let client = server.client();
+    let nodes: Vec<u32> = ds.splits.val.clone();
+
+    let closed = run_load(
+        &client,
+        &nodes,
+        &LoadSpec {
+            mode: LoadMode::Closed,
+            clients: 3,
+            requests: 90,
+            seed: 21,
+        },
+    );
+    assert_eq!(closed.completed, 90);
+    assert_eq!(closed.errors, 0);
+    assert!(closed.throughput_rps > 0.0);
+    assert!(closed.latency.p50 <= closed.latency.p95);
+    assert!(closed.latency.p95 <= closed.latency.p99);
+
+    let open = run_load(
+        &client,
+        &nodes,
+        &LoadSpec {
+            mode: LoadMode::Open { rate_rps: 2000.0 },
+            clients: 3,
+            requests: 60,
+            seed: 21,
+        },
+    );
+    assert_eq!(open.completed + open.errors, 60);
+    assert_eq!(open.errors, 0);
+
+    drop(client);
+    server.shutdown();
+}
