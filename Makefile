@@ -7,6 +7,9 @@
 #   make bench       perf benches; writes BENCH_<section>.json per section
 #   make bench-cluster  just the sequential-vs-threaded engine benches
 #                    (writes BENCH_cluster.json)
+#   make bench-cluster-faults  robustness benches: time-to-target-loss at
+#                    drop 0/0.02/0.1 and a mid-run crash with and without
+#                    worker respawn (writes BENCH_cluster_faults.json)
 #   make bench-kernels  just the kernel-layer benches: scalar vs tiled vs
 #                    tiled+pool at 1/2/4/8 threads, step latency per engine,
 #                    staged-vs-pinned block upload (writes BENCH_kernels.json)
@@ -16,7 +19,7 @@
 #                    (writes BENCH_serve.json)
 #   make test        quick test run
 
-.PHONY: artifacts check fmt test bench bench-cluster bench-kernels bench-serve clean
+.PHONY: artifacts check fmt test bench bench-cluster bench-cluster-faults bench-kernels bench-serve clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -36,7 +39,10 @@ bench:
 	cargo bench
 
 bench-cluster:
-	cargo bench -- cluster
+	cargo bench -- cluster/
+
+bench-cluster-faults:
+	cargo bench -- cluster_faults
 
 bench-kernels:
 	cargo bench -- kernels

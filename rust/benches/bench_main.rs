@@ -589,6 +589,7 @@ fn main() {
                                 flush_us: 200,
                                 threads: t,
                                 queue: 1024,
+                                shed: false,
                             },
                         )
                         .unwrap();
@@ -685,6 +686,102 @@ fn main() {
                                     seq / clu
                                 );
                             }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- cluster-faults: robustness cost of injected failures ----------------
+    // End-to-end LLCG runs on the cluster engine under message loss
+    // (drop ∈ {0, 0.02, 0.1}) and a mid-run crash with/without respawn.
+    // Each row's timing is the full run; the trailing println reports the
+    // first round at which the global loss reaches the fault-free run's
+    // final loss (+5%), so BENCH_cluster_faults.json + stdout together give
+    // time-to-target under each failure mode.
+    // (`make bench-cluster-faults` -> BENCH_cluster_faults.json)
+    if b.enabled("cluster_faults/") {
+        match Runtime::load_or_native("artifacts") {
+            Err(e) => {
+                eprintln!("(no runtime available — skipping cluster-faults benches: {e:#})")
+            }
+            Ok((rt, _adir)) => {
+                if rt.backend_name() != "native" {
+                    eprintln!(
+                        "(cluster engine needs the native backend — skipping cluster-faults benches)"
+                    );
+                } else if rt.meta("gcn_adam_reddit-s").is_err() {
+                    eprintln!("(no gcn/reddit-s artifact — skipping cluster-faults benches)");
+                } else {
+                    let data = Arc::new(generators::by_name("reddit-s", 0).unwrap());
+                    let rounds = 6usize;
+                    let mk = |net: &str, respawn: bool| {
+                        ExperimentBuilder::new()
+                            .with_dataset(data.clone())
+                            .arch("gcn")
+                            .algorithm(Algorithm::Llcg)
+                            .parts(4)
+                            .rounds(rounds)
+                            .set("local_steps", "4")
+                            .unwrap()
+                            .correction_steps(2)
+                            .eval_every(100) // no per-round eval
+                            .eval_max_nodes(32)
+                            .engine(llcg::cluster::Engine::Cluster)
+                            .net(net)
+                            .respawn(respawn)
+                            .build()
+                            .unwrap()
+                    };
+                    // the fault-free run sets the bar every variant must reach
+                    let clean = mk("ideal", true).launch(&rt).finish().unwrap();
+                    let target = clean.records.last().unwrap().global_loss * 1.05;
+                    let report = |tag: &str, res: &llcg::coordinator::driver::RunResult| {
+                        let hit = res
+                            .records
+                            .iter()
+                            .find(|r| r.global_loss <= target)
+                            .map(|r| r.round);
+                        match hit {
+                            Some(r) => println!(
+                                "  -> {tag}: target loss {target:.4} reached at round {r}/{rounds} \
+                                 (drops={}, respawns={})",
+                                res.total_drops, res.total_respawns
+                            ),
+                            None => println!(
+                                "  -> {tag}: target loss {target:.4} NOT reached in {rounds} rounds \
+                                 (final {:.4}, drops={}, respawns={})",
+                                res.records.last().map(|r| r.global_loss).unwrap_or(f64::NAN),
+                                res.total_drops,
+                                res.total_respawns
+                            ),
+                        }
+                    };
+                    for &(label, net) in &[
+                        ("0", "ideal"),
+                        ("0.02", "drop=0.02"),
+                        ("0.1", "drop=0.1"),
+                    ] {
+                        let exp = mk(net, true);
+                        let row = format!("cluster_faults/llcg(P=4,drop={label})");
+                        let mut last = None;
+                        b.run(&row, 1, 3, || {
+                            last = Some(exp.launch(&rt).finish().unwrap());
+                        });
+                        if let Some(res) = &last {
+                            report(&format!("drop={label}"), res);
+                        }
+                    }
+                    for &respawn in &[true, false] {
+                        let exp = mk("crash=1@3", respawn);
+                        let row = format!("cluster_faults/llcg(P=4,crash=1@3,respawn={respawn})");
+                        let mut last = None;
+                        b.run(&row, 1, 3, || {
+                            last = Some(exp.launch(&rt).finish().unwrap());
+                        });
+                        if let Some(res) = &last {
+                            report(&format!("crash=1@3 respawn={respawn}"), res);
                         }
                     }
                 }

@@ -401,6 +401,85 @@ static KEYS: &[KeySpec] = &[
         },
         show: |cfg| cfg.serve_queue.to_string(),
     },
+    KeySpec {
+        name: "serve_shed",
+        kind: KeyKind::Bool,
+        doc: "serving: reject with a typed Overloaded reply when the queue is \
+              full instead of blocking the producer",
+        apply: |cfg, v| {
+            cfg.serve_shed = req_bool(v, "serve_shed")?;
+            Ok(())
+        },
+        show: |cfg| cfg.serve_shed.to_string(),
+    },
+    KeySpec {
+        name: "round_timeout",
+        kind: KeyKind::Num,
+        doc: "cluster sync: modeled-time deadline (s) before the round closes \
+              on the quorum it has (0 = wait for everyone)",
+        apply: |cfg, v| {
+            let t = req_num(v, "round_timeout")?;
+            if !t.is_finite() || t < 0.0 {
+                return Err(format!("round_timeout must be a finite number >= 0, got {t}"));
+            }
+            cfg.round_timeout = t;
+            Ok(())
+        },
+        show: |cfg| cfg.round_timeout.to_string(),
+    },
+    KeySpec {
+        name: "quorum",
+        kind: KeyKind::Num,
+        doc: "cluster sync: minimum params averaged when the deadline fires \
+              (K-of-P; 0 = all P)",
+        apply: |cfg, v| {
+            cfg.quorum = req_count(v, "quorum", 0)?;
+            Ok(())
+        },
+        show: |cfg| cfg.quorum.to_string(),
+    },
+    KeySpec {
+        name: "respawn",
+        kind: KeyKind::Bool,
+        doc: "respawn crashed workers from the current global params \
+              (false = a dead worker stays dead)",
+        apply: |cfg, v| {
+            cfg.respawn = req_bool(v, "respawn")?;
+            Ok(())
+        },
+        show: |cfg| cfg.respawn.to_string(),
+    },
+    KeySpec {
+        name: "checkpoint_every",
+        kind: KeyKind::Num,
+        doc: "write a round-boundary checkpoint every N rounds (0 = off)",
+        apply: |cfg, v| {
+            cfg.checkpoint_every = req_count(v, "checkpoint_every", 0)?;
+            Ok(())
+        },
+        show: |cfg| cfg.checkpoint_every.to_string(),
+    },
+    KeySpec {
+        name: "checkpoint_dir",
+        kind: KeyKind::Str,
+        doc: "directory checkpoints are written under (<dir>/round_<r>/)",
+        apply: |cfg, v| {
+            cfg.checkpoint_dir = req_str(v, "checkpoint_dir")?;
+            Ok(())
+        },
+        show: |cfg| cfg.checkpoint_dir.clone(),
+    },
+    KeySpec {
+        name: "resume",
+        kind: KeyKind::Str,
+        doc: "resume from a checkpoint: a round_<r> dir, or a parent dir \
+              (latest round wins; \"\" = fresh run)",
+        apply: |cfg, v| {
+            cfg.resume = req_str(v, "resume")?;
+            Ok(())
+        },
+        show: |cfg| cfg.resume.clone(),
+    },
 ];
 
 /// Look up a key by its canonical (underscore) name.
@@ -490,7 +569,7 @@ mod tests {
         dedup.dedup();
         assert_eq!(names.len(), dedup.len(), "duplicate KeySpec rows");
         // one row per ExperimentConfig knob (schedule takes two)
-        assert_eq!(names.len(), 29);
+        assert_eq!(names.len(), 36);
     }
 
     #[test]
@@ -568,6 +647,34 @@ mod tests {
         assert!(apply_str(&mut cfg, "serve_queue", "0").is_err());
         apply_str(&mut cfg, "serve_flush_us", "0").unwrap(); // 0 = flush instantly
         apply_str(&mut cfg, "serve_threads", "0").unwrap(); // 0 = all cores
+    }
+
+    #[test]
+    fn fault_and_checkpoint_keys_parse_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        apply_str(&mut cfg, "round-timeout", "0.25").unwrap();
+        apply_str(&mut cfg, "quorum", "3").unwrap();
+        apply_str(&mut cfg, "respawn", "false").unwrap();
+        apply_str(&mut cfg, "checkpoint_every", "5").unwrap();
+        apply_str(&mut cfg, "checkpoint-dir", "ckpt").unwrap();
+        apply_str(&mut cfg, "resume", "ckpt/round_5").unwrap();
+        apply_str(&mut cfg, "serve_shed", "true").unwrap();
+        assert_eq!(cfg.round_timeout, 0.25);
+        assert_eq!(cfg.quorum, 3);
+        assert!(!cfg.respawn);
+        assert_eq!(cfg.checkpoint_every, 5);
+        assert_eq!(cfg.checkpoint_dir, "ckpt");
+        assert_eq!(cfg.resume, "ckpt/round_5");
+        assert!(cfg.serve_shed);
+        assert!(apply_str(&mut cfg, "round_timeout", "-1").is_err());
+        assert!(apply_str(&mut cfg, "round_timeout", "inf").is_err());
+        assert!(apply_str(&mut cfg, "quorum", "-2").is_err());
+        assert!(apply_str(&mut cfg, "checkpoint_every", "1.5").is_err());
+        assert!(apply_str(&mut cfg, "respawn", "yes").is_err());
+        // net spec faults validate at config time too
+        assert!(apply_str(&mut cfg, "net", "lan,drop=0.05,crash=1@3").is_ok());
+        assert!(apply_str(&mut cfg, "net", "lan,drop=2").is_err());
+        assert!(apply_str(&mut cfg, "net", "crash=1").is_err());
     }
 
     #[test]

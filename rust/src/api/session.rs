@@ -61,6 +61,18 @@ pub enum Event {
         val_score: f64,
         global_loss: f64,
     },
+    /// A crashed/dead worker was respawned on a fresh thread, seeded from
+    /// the current global params (the paper's "local model = averaged
+    /// global model" round entry). Emitted by the cluster engine only.
+    WorkerRestarted {
+        round: usize,
+        part: u32,
+    },
+    /// A round-boundary checkpoint was written (`checkpoint_every`).
+    CheckpointSaved {
+        round: usize,
+        path: String,
+    },
     RoundCompleted(RoundRecord),
     Finished(RunResult),
 }
@@ -72,6 +84,8 @@ impl Event {
             Event::WorkerRoundCompleted { .. } => "worker_round_completed",
             Event::CorrectionApplied { .. } => "correction_applied",
             Event::EvalCompleted { .. } => "eval_completed",
+            Event::WorkerRestarted { .. } => "worker_restarted",
+            Event::CheckpointSaved { .. } => "checkpoint_saved",
             Event::RoundCompleted(_) => "round_completed",
             Event::Finished(_) => "finished",
         }
@@ -272,6 +286,47 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Modeled-time deadline (seconds) after which a cluster sync round
+    /// closes on whatever quorum of params has arrived (0 = wait for all).
+    pub fn round_timeout(mut self, seconds: f64) -> Self {
+        self.cfg.round_timeout = seconds;
+        self
+    }
+
+    /// Minimum params averaged when the round deadline fires (0 = all P).
+    pub fn quorum(mut self, k: usize) -> Self {
+        self.cfg.quorum = k;
+        self
+    }
+
+    /// Respawn crashed workers from the current global params (default on).
+    pub fn respawn(mut self, on: bool) -> Self {
+        self.cfg.respawn = on;
+        self
+    }
+
+    /// Write a round-boundary checkpoint every `n` rounds into `dir`
+    /// (`n = 0` disables checkpointing).
+    pub fn checkpoint(mut self, n: usize, dir: &str) -> Self {
+        self.cfg.checkpoint_every = n;
+        self.cfg.checkpoint_dir = dir.to_string();
+        self
+    }
+
+    /// Resume from a checkpoint directory (a `round_<r>` dir, or a parent
+    /// whose latest round wins; "" = fresh run).
+    pub fn resume(mut self, path: &str) -> Self {
+        self.cfg.resume = path.to_string();
+        self
+    }
+
+    /// Serving: shed load with a typed `Overloaded` reply when the request
+    /// queue is full, instead of blocking the producer.
+    pub fn serve_shed(mut self, on: bool) -> Self {
+        self.cfg.serve_shed = on;
+        self
+    }
+
     /// Set any key by its config-schema name (same table as JSON/CLI).
     pub fn set(mut self, key: &str, value: &str) -> Result<Self, String> {
         keys::apply_str(&mut self.cfg, key, value)?;
@@ -319,6 +374,42 @@ impl ExperimentBuilder {
             return Err(anyhow!(
                 "round_mode {} requires the cluster engine — the sequential \
                  driver is always sync; use engine=cluster",
+                cfg.round_mode.name()
+            ));
+        }
+        // fault tolerance lives in the cluster engine's sync collection path
+        let netm = crate::cluster::NetModel::parse(&cfg.net).map_err(|e| anyhow!(e))?;
+        let quorum_on = cfg.round_timeout > 0.0 || cfg.quorum > 0;
+        if netm.has_faults() || quorum_on {
+            if cfg.engine != Engine::Cluster {
+                return Err(anyhow!(
+                    "fault injection / quorum rounds (net faults, round_timeout, \
+                     quorum) require engine=cluster"
+                ));
+            }
+            if cfg.round_mode != RoundMode::Sync {
+                return Err(anyhow!(
+                    "fault injection / quorum rounds require round_mode=sync \
+                     (got {})",
+                    cfg.round_mode.name()
+                ));
+            }
+        }
+        if !(cfg.round_timeout.is_finite() && cfg.round_timeout >= 0.0) {
+            return Err(anyhow!("round_timeout must be a finite number >= 0"));
+        }
+        if cfg.quorum > cfg.parts {
+            return Err(anyhow!(
+                "quorum {} exceeds parts {} — no round could ever close",
+                cfg.quorum,
+                cfg.parts
+            ));
+        }
+        if (cfg.checkpoint_every > 0 || !cfg.resume.is_empty())
+            && cfg.round_mode != RoundMode::Sync
+        {
+            return Err(anyhow!(
+                "checkpoint/resume require round_mode=sync (got {})",
                 cfg.round_mode.name()
             ));
         }
@@ -515,6 +606,57 @@ mod tests {
             .err()
             .unwrap();
         assert!(format!("{err:#}").contains("cluster engine"));
+    }
+
+    #[test]
+    fn builder_validates_fault_and_checkpoint_combos() {
+        // faults / quorum need the cluster engine ...
+        for b in [
+            ExperimentBuilder::new().net("lan,drop=0.1"),
+            ExperimentBuilder::new().net("lan,crash=1@2"),
+            ExperimentBuilder::new().round_timeout(0.5),
+            ExperimentBuilder::new().quorum(2),
+        ] {
+            let err = b.build().err().unwrap();
+            assert!(format!("{err:#}").contains("engine=cluster"), "{err:#}");
+        }
+        // ... and sync mode
+        let err = ExperimentBuilder::new()
+            .engine(Engine::Cluster)
+            .round_mode(RoundMode::AsyncStaleness { tau: 2 })
+            .net("lan,drop=0.1")
+            .build()
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("round_mode=sync"), "{err:#}");
+        // checkpoint/resume are sync-only too (either engine)
+        let err = ExperimentBuilder::new()
+            .engine(Engine::Cluster)
+            .round_mode(RoundMode::PipelinedCorrection)
+            .checkpoint(2, "ckpt")
+            .build()
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("checkpoint/resume"), "{err:#}");
+        // quorum can't exceed parts
+        let err = ExperimentBuilder::new()
+            .engine(Engine::Cluster)
+            .parts(2)
+            .quorum(3)
+            .build()
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("exceeds parts"), "{err:#}");
+        // valid combos build fine
+        ExperimentBuilder::new()
+            .engine(Engine::Cluster)
+            .net("lan,drop=0.02,crash=1@3")
+            .round_timeout(0.5)
+            .quorum(2)
+            .checkpoint(2, "ckpt")
+            .build()
+            .unwrap();
+        ExperimentBuilder::new().checkpoint(2, "ckpt").build().unwrap();
     }
 
     #[test]

@@ -1,0 +1,580 @@
+//! Round-boundary checkpoints: everything needed to resume a sync run
+//! bit-identically — the global params, the server correction state, every
+//! worker's local state (params *and* optimizer moments: worker Adam state
+//! persists across rounds, FedAvg-style, so dropping it would fork the
+//! stream), the sequentially-consumed RNG streams (`eval_rng`, `corr_rng`),
+//! and the cumulative byte counter.
+//!
+//! On-disk format (`<dir>/round_<r>/`):
+//!
+//! - `meta.json` — round, counters, RNG raw states (hex strings: `Json`
+//!   numbers are f64 and cannot hold a `u128` exactly), a shape manifest
+//!   for every tensor group, and a config digest used to reject resuming
+//!   under a different experiment.
+//! - `tensors.bin` — every tensor's `f32` data concatenated little-endian
+//!   in manifest order: global params, server params, server opt, then per
+//!   worker params + opt. Bytes round-trip exactly, so a resumed run
+//!   replays the remaining rounds bit-for-bit.
+//!
+//! Only data derived *inside* the round loop is stored. Setup-time products
+//! (partition assignment, block builders, worker RNGs — which are stateless
+//! per `(seed, part, round)`) are re-derived by running `setup_run` again
+//! on resume, which also burns the setup RNG streams in the exact order a
+//! fresh run would.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::runtime::{ModelState, Tensor};
+use crate::util::{Json, Pcg64};
+
+/// Format version, bumped on any layout change.
+const VERSION: f64 = 1.0;
+
+/// Config fields a checkpoint must agree on to be resumable: anything that
+/// changes the numerical stream of the remaining rounds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Digest {
+    pub dataset: String,
+    pub arch: String,
+    pub algorithm: String,
+    pub optimizer: String,
+    pub server_optimizer: String,
+    pub partitioner: String,
+    pub parts: usize,
+    pub seed: u64,
+    pub net: String,
+}
+
+impl Digest {
+    pub fn of(cfg: &ExperimentConfig) -> Digest {
+        Digest {
+            dataset: cfg.dataset.clone(),
+            arch: cfg.arch.clone(),
+            algorithm: cfg.algorithm.name().to_string(),
+            optimizer: cfg.optimizer.clone(),
+            server_optimizer: cfg.server_optimizer.clone(),
+            partitioner: cfg.partitioner.clone(),
+            parts: cfg.parts,
+            seed: cfg.seed,
+            net: cfg.net.clone(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(&self.dataset)),
+            ("arch", Json::str(&self.arch)),
+            ("algorithm", Json::str(&self.algorithm)),
+            ("optimizer", Json::str(&self.optimizer)),
+            ("server_optimizer", Json::str(&self.server_optimizer)),
+            ("partitioner", Json::str(&self.partitioner)),
+            ("parts", Json::num(self.parts as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("net", Json::str(&self.net)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Digest> {
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| anyhow!("checkpoint digest: missing/invalid {k}"))
+        };
+        let n = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("checkpoint digest: missing/invalid {k}"))
+        };
+        Ok(Digest {
+            dataset: s("dataset")?,
+            arch: s("arch")?,
+            algorithm: s("algorithm")?,
+            optimizer: s("optimizer")?,
+            server_optimizer: s("server_optimizer")?,
+            partitioner: s("partitioner")?,
+            parts: n("parts")?,
+            seed: n("seed")? as u64,
+            net: s("net")?,
+        })
+    }
+}
+
+/// One resumable snapshot of a sync run at a round boundary.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// the round this state is the *result of* (resume starts at `round+1`)
+    pub round: usize,
+    pub cum_bytes: u64,
+    pub global_params: Vec<Tensor>,
+    pub server_state: ModelState,
+    /// per-worker local states in part order
+    pub workers: Vec<ModelState>,
+    /// raw `(state, inc)` of the sequentially-consumed eval stream
+    pub eval_rng: (u128, u128),
+    /// raw `(state, inc)` of the correction-batch stream
+    pub corr_rng: (u128, u128),
+    /// parts whose worker was dead at the checkpoint boundary (crashed or
+    /// failed, not yet respawned); their stored state is the respawn
+    /// template (current global params + fresh optimizer). The cluster
+    /// engine re-marks them dead on resume so `respawn=false` runs stay
+    /// faithful; always empty for sequential-engine checkpoints.
+    pub dead: Vec<u32>,
+    pub digest: Digest,
+}
+
+fn hex_u128(x: u128) -> Json {
+    Json::str(format!("{x:x}"))
+}
+
+fn parse_hex_u128(j: Option<&Json>, what: &str) -> Result<u128> {
+    let s = j
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("checkpoint meta: missing/invalid {what}"))?;
+    u128::from_str_radix(s, 16).with_context(|| format!("checkpoint meta: bad hex in {what}"))
+}
+
+fn shapes_json(tensors: &[Tensor]) -> Json {
+    Json::arr(
+        tensors
+            .iter()
+            .map(|t| Json::arr(t.shape.iter().map(|&d| Json::num(d as f64)).collect()))
+            .collect(),
+    )
+}
+
+fn shapes_from_json(j: Option<&Json>, what: &str) -> Result<Vec<Vec<usize>>> {
+    let arr = j
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("checkpoint meta: missing/invalid {what}"))?;
+    arr.iter()
+        .map(|s| {
+            s.as_array()
+                .ok_or_else(|| anyhow!("checkpoint meta: bad shape in {what}"))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| anyhow!("checkpoint meta: bad dim in {what}"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn push_tensors(buf: &mut Vec<u8>, tensors: &[Tensor]) {
+    for t in tensors {
+        for &x in &t.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Consume the next tensors from `bytes` per `shapes`, advancing `off`.
+fn take_tensors(bytes: &[u8], off: &mut usize, shapes: &[Vec<usize>]) -> Result<Vec<Tensor>> {
+    let mut out = Vec::with_capacity(shapes.len());
+    for shape in shapes {
+        let numel: usize = shape.iter().product();
+        let need = numel * 4;
+        if *off + need > bytes.len() {
+            bail!("checkpoint tensors.bin truncated (need {need} bytes at offset {off})");
+        }
+        let data: Vec<f32> = bytes[*off..*off + need]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        *off += need;
+        out.push(Tensor {
+            shape: shape.clone(),
+            data,
+        });
+    }
+    Ok(out)
+}
+
+/// `<dir>/round_<r>`
+pub fn round_dir(dir: &Path, round: usize) -> PathBuf {
+    dir.join(format!("round_{round}"))
+}
+
+impl Checkpoint {
+    /// Capture the round-boundary state. RNGs are cloned out via their raw
+    /// state, so the live streams are unaffected.
+    #[allow(clippy::too_many_arguments)]
+    pub fn capture(
+        cfg: &ExperimentConfig,
+        round: usize,
+        cum_bytes: u64,
+        global_params: &[Tensor],
+        server_state: &ModelState,
+        workers: &[ModelState],
+        eval_rng: &Pcg64,
+        corr_rng: &Pcg64,
+        dead: &[u32],
+    ) -> Checkpoint {
+        Checkpoint {
+            round,
+            cum_bytes,
+            global_params: global_params.to_vec(),
+            server_state: server_state.clone(),
+            workers: workers.to_vec(),
+            eval_rng: eval_rng.raw_state(),
+            corr_rng: corr_rng.raw_state(),
+            dead: dead.to_vec(),
+            digest: Digest::of(cfg),
+        }
+    }
+
+    /// Write `<dir>/round_<round>/{meta.json,tensors.bin}`; returns the
+    /// round directory. `tensors.bin` lands before `meta.json`, so a
+    /// directory with a readable meta is always complete.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        let rd = round_dir(dir, self.round);
+        std::fs::create_dir_all(&rd)
+            .with_context(|| format!("creating checkpoint dir {}", rd.display()))?;
+
+        let mut bin = Vec::new();
+        push_tensors(&mut bin, &self.global_params);
+        push_tensors(&mut bin, &self.server_state.params);
+        push_tensors(&mut bin, &self.server_state.opt);
+        for w in &self.workers {
+            push_tensors(&mut bin, &w.params);
+            push_tensors(&mut bin, &w.opt);
+        }
+        let bin_path = rd.join("tensors.bin");
+        let mut f = std::fs::File::create(&bin_path)
+            .with_context(|| format!("creating {}", bin_path.display()))?;
+        f.write_all(&bin)
+            .with_context(|| format!("writing {}", bin_path.display()))?;
+
+        // all workers share one shape manifest (they start from one init)
+        let w0 = self
+            .workers
+            .first()
+            .ok_or_else(|| anyhow!("checkpoint with zero workers"))?;
+        let meta = Json::obj(vec![
+            ("version", Json::num(VERSION)),
+            ("round", Json::num(self.round as f64)),
+            ("cum_bytes", hex_u128(self.cum_bytes as u128)),
+            (
+                "eval_rng",
+                Json::arr(vec![hex_u128(self.eval_rng.0), hex_u128(self.eval_rng.1)]),
+            ),
+            (
+                "corr_rng",
+                Json::arr(vec![hex_u128(self.corr_rng.0), hex_u128(self.corr_rng.1)]),
+            ),
+            ("digest", self.digest.to_json()),
+            ("global_shapes", shapes_json(&self.global_params)),
+            ("server_param_shapes", shapes_json(&self.server_state.params)),
+            ("server_opt_shapes", shapes_json(&self.server_state.opt)),
+            ("worker_param_shapes", shapes_json(&w0.params)),
+            ("worker_opt_shapes", shapes_json(&w0.opt)),
+            ("workers", Json::num(self.workers.len() as f64)),
+            (
+                "dead",
+                Json::arr(self.dead.iter().map(|&p| Json::num(p as f64)).collect()),
+            ),
+        ]);
+        let meta_path = rd.join("meta.json");
+        std::fs::write(&meta_path, meta.to_string_pretty())
+            .with_context(|| format!("writing {}", meta_path.display()))?;
+        Ok(rd)
+    }
+
+    /// Load from `path`: either a `round_<r>` directory itself, or a parent
+    /// checkpoint directory (the highest complete round wins).
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let rd = resolve_round_dir(path)?;
+        let meta_path = rd.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let meta = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", meta_path.display()))?;
+        let version = meta.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+        if version != VERSION {
+            bail!(
+                "checkpoint {}: format version {version} (this build reads {VERSION})",
+                rd.display()
+            );
+        }
+        let round = meta
+            .get("round")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("checkpoint meta: missing round"))?;
+        let cum_bytes = parse_hex_u128(meta.get("cum_bytes"), "cum_bytes")? as u64;
+        let rng_pair = |k: &str| -> Result<(u128, u128)> {
+            let arr = meta
+                .get(k)
+                .and_then(Json::as_array)
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow!("checkpoint meta: missing/invalid {k}"))?;
+            Ok((
+                parse_hex_u128(Some(&arr[0]), k)?,
+                parse_hex_u128(Some(&arr[1]), k)?,
+            ))
+        };
+        let eval_rng = rng_pair("eval_rng")?;
+        let corr_rng = rng_pair("corr_rng")?;
+        let digest = Digest::from_json(
+            meta.get("digest")
+                .ok_or_else(|| anyhow!("checkpoint meta: missing digest"))?,
+        )?;
+        let global_shapes = shapes_from_json(meta.get("global_shapes"), "global_shapes")?;
+        let server_param_shapes =
+            shapes_from_json(meta.get("server_param_shapes"), "server_param_shapes")?;
+        let server_opt_shapes =
+            shapes_from_json(meta.get("server_opt_shapes"), "server_opt_shapes")?;
+        let worker_param_shapes =
+            shapes_from_json(meta.get("worker_param_shapes"), "worker_param_shapes")?;
+        let worker_opt_shapes =
+            shapes_from_json(meta.get("worker_opt_shapes"), "worker_opt_shapes")?;
+        let n_workers = meta
+            .get("workers")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("checkpoint meta: missing workers"))?;
+        let dead: Vec<u32> = meta
+            .get("dead")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("checkpoint meta: missing dead"))?
+            .iter()
+            .map(|p| {
+                p.as_usize()
+                    .map(|p| p as u32)
+                    .ok_or_else(|| anyhow!("checkpoint meta: bad part id in dead"))
+            })
+            .collect::<Result<_>>()?;
+
+        let bin_path = rd.join("tensors.bin");
+        let bytes = std::fs::read(&bin_path)
+            .with_context(|| format!("reading {}", bin_path.display()))?;
+        let mut off = 0usize;
+        let global_params = take_tensors(&bytes, &mut off, &global_shapes)?;
+        let server_state = ModelState {
+            params: take_tensors(&bytes, &mut off, &server_param_shapes)?,
+            opt: take_tensors(&bytes, &mut off, &server_opt_shapes)?,
+        };
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            workers.push(ModelState {
+                params: take_tensors(&bytes, &mut off, &worker_param_shapes)?,
+                opt: take_tensors(&bytes, &mut off, &worker_opt_shapes)?,
+            });
+        }
+        if off != bytes.len() {
+            bail!(
+                "checkpoint {}: tensors.bin has {} trailing bytes",
+                rd.display(),
+                bytes.len() - off
+            );
+        }
+        Ok(Checkpoint {
+            round,
+            cum_bytes,
+            global_params,
+            server_state,
+            workers,
+            eval_rng,
+            corr_rng,
+            dead,
+            digest,
+        })
+    }
+
+    /// Refuse to resume under a config that would fork the numerical
+    /// stream of the remaining rounds.
+    pub fn check_compatible(&self, cfg: &ExperimentConfig) -> Result<()> {
+        let now = Digest::of(cfg);
+        if self.digest != now {
+            bail!(
+                "checkpoint was written by a different experiment:\n  saved: {:?}\n  now:   {now:?}",
+                self.digest
+            );
+        }
+        if self.workers.len() != cfg.parts {
+            bail!(
+                "checkpoint has {} worker states but parts={}",
+                self.workers.len(),
+                cfg.parts
+            );
+        }
+        if self.round >= cfg.rounds {
+            bail!(
+                "checkpoint is at round {} but the run only has {} rounds — nothing to resume",
+                self.round,
+                cfg.rounds
+            );
+        }
+        Ok(())
+    }
+}
+
+/// `path` is either a round dir (has `meta.json`) or a parent holding
+/// `round_<r>` subdirectories — pick the highest complete round.
+fn resolve_round_dir(path: &Path) -> Result<PathBuf> {
+    if path.join("meta.json").is_file() {
+        return Ok(path.to_path_buf());
+    }
+    let entries = std::fs::read_dir(path)
+        .with_context(|| format!("reading checkpoint dir {}", path.display()))?;
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(r) = name
+            .to_str()
+            .and_then(|n| n.strip_prefix("round_"))
+            .and_then(|n| n.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        if !entry.path().join("meta.json").is_file() {
+            continue; // partial write: tensors.bin lands first
+        }
+        if best.as_ref().map(|(br, _)| r > *br).unwrap_or(true) {
+            best = Some((r, entry.path()));
+        }
+    }
+    best.map(|(_, p)| p).ok_or_else(|| {
+        anyhow!(
+            "{}: not a checkpoint (no meta.json, no round_<r> subdirectory with one)",
+            path.display()
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg64::new(seed);
+        let numel: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..numel).map(|_| rng.f32() * 2.0 - 1.0).collect(),
+        }
+    }
+
+    fn state(seed: u64) -> ModelState {
+        ModelState {
+            params: vec![tensor(&[4, 3], seed), tensor(&[3], seed + 1)],
+            opt: vec![tensor(&[4, 3], seed + 2), tensor(&[4, 3], seed + 3)],
+        }
+    }
+
+    fn sample_checkpoint(round: usize) -> Checkpoint {
+        let cfg = ExperimentConfig::default();
+        let mut eval_rng = Pcg64::new(4);
+        let mut corr_rng = Pcg64::new(5);
+        eval_rng.next_u64(); // mid-stream states must round-trip
+        corr_rng.next_u64();
+        corr_rng.next_u64();
+        Checkpoint::capture(
+            &cfg,
+            round,
+            123_456_789,
+            &[tensor(&[4, 3], 1), tensor(&[3], 2)],
+            &state(10),
+            &(0..cfg.parts).map(|p| state(20 + p as u64)).collect::<Vec<_>>(),
+            &eval_rng,
+            &corr_rng,
+            &[1],
+        )
+    }
+
+    fn assert_states_eq(a: &ModelState, b: &ModelState) {
+        assert_eq!(a.params.len(), b.params.len());
+        for (x, y) in a.params.iter().zip(&b.params).chain(a.opt.iter().zip(&b.opt)) {
+            assert_eq!(x.shape, y.shape);
+            let same = x
+                .data
+                .iter()
+                .zip(&y.data)
+                .all(|(p, q)| p.to_bits() == q.to_bits());
+            assert!(same, "tensor bits diverged through save/load");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_bit_exact() {
+        let dir = std::env::temp_dir().join(format!("llcg_ckpt_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ck = sample_checkpoint(3);
+        let rd = ck.save(&dir).unwrap();
+        assert!(rd.ends_with("round_3"));
+
+        // load via the round dir and via the parent (same result)
+        for path in [rd.clone(), dir.clone()] {
+            let got = Checkpoint::load(&path).unwrap();
+            assert_eq!(got.round, 3);
+            assert_eq!(got.cum_bytes, ck.cum_bytes);
+            assert_eq!(got.eval_rng, ck.eval_rng);
+            assert_eq!(got.corr_rng, ck.corr_rng);
+            assert_eq!(got.dead, vec![1]);
+            assert_eq!(got.digest, ck.digest);
+            assert_eq!(got.workers.len(), ck.workers.len());
+            for (a, b) in got.global_params.iter().zip(&ck.global_params) {
+                assert_eq!(a.shape, b.shape);
+                assert!(a.data.iter().zip(&b.data).all(|(p, q)| p.to_bits() == q.to_bits()));
+            }
+            assert_states_eq(&got.server_state, &ck.server_state);
+            for (a, b) in got.workers.iter().zip(&ck.workers) {
+                assert_states_eq(a, b);
+            }
+            // restored RNGs continue the stream exactly
+            let mut live = Pcg64::new(4);
+            live.next_u64();
+            let mut restored = Pcg64::from_raw_state(got.eval_rng.0, got.eval_rng.1);
+            for _ in 0..16 {
+                assert_eq!(live.next_u64(), restored.next_u64());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parent_dir_resolves_to_latest_round() {
+        let dir = std::env::temp_dir().join(format!("llcg_ckpt_latest_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        sample_checkpoint(2).save(&dir).unwrap();
+        sample_checkpoint(7).save(&dir).unwrap();
+        sample_checkpoint(4).save(&dir).unwrap();
+        // a partial round (no meta.json) is skipped
+        std::fs::create_dir_all(round_dir(&dir, 9)).unwrap();
+        std::fs::write(round_dir(&dir, 9).join("tensors.bin"), b"partial").unwrap();
+        let got = Checkpoint::load(&dir).unwrap();
+        assert_eq!(got.round, 7);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compatibility_check_rejects_config_drift() {
+        let ck = sample_checkpoint(3);
+        let mut cfg = ExperimentConfig::default();
+        cfg.rounds = 10;
+        ck.check_compatible(&cfg).unwrap();
+        let mut other = cfg.clone();
+        other.seed = 99;
+        assert!(ck.check_compatible(&other).is_err());
+        let mut other = cfg.clone();
+        other.arch = "sage".into();
+        assert!(ck.check_compatible(&other).is_err());
+        let mut other = cfg.clone();
+        other.rounds = 3; // checkpoint already at the last round
+        assert!(ck.check_compatible(&other).is_err());
+    }
+
+    #[test]
+    fn load_rejects_non_checkpoints() {
+        let dir = std::env::temp_dir().join(format!("llcg_ckpt_empty_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("not a checkpoint"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -9,11 +9,13 @@
 //! engine uses, so sync mode is bit-compatible with it by construction.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::checkpoint::Checkpoint;
+use super::net::{LEG_DOWN, LEG_UP};
 use super::{Engine, NetModel, RoundMode, StalenessGate};
 use crate::api::session::{Event, RunCtx};
 use crate::config::ExperimentConfig;
@@ -36,6 +38,9 @@ enum Down {
         k: usize,
         params: Vec<Tensor>,
     },
+    /// Checkpoint boundary: reply with the full local state (params +
+    /// optimizer moments) via [`Up::Snapshot`].
+    Snapshot,
     /// Terminal: the run is over; exit the worker loop.
     Shutdown,
 }
@@ -47,9 +52,18 @@ enum Up {
     Features { bytes: u64 },
     /// `ParamsUp`: end-of-round parameter upload + round stats.
     Round(ParamsUp),
-    /// Unrecoverable worker error; the server aborts the run.
+    /// Reply to [`Down::Snapshot`]: the worker's full resumable state.
+    Snapshot { part: u32, state: Box<ModelState> },
+    /// Unrecoverable worker error; with fault tolerance off the server
+    /// aborts the run, with it on the worker is respawned next round.
     Failed { part: u32, err: String },
 }
+
+/// How long the server waits on the shared `Up` channel (per message)
+/// before writing off the still-outstanding workers as dead. Only applies
+/// under fault tolerance; the fault-free path blocks indefinitely, exactly
+/// like the legacy engine.
+const LIVENESS_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Payload of [`Up::Round`].
 struct ParamsUp {
@@ -103,6 +117,12 @@ fn worker_main(spec: WorkerSpec<'_>, rx: Receiver<Down>, up: Sender<Up>, mut sta
     while let Ok(msg) = rx.recv() {
         match msg {
             Down::Round { round, k, params } => {
+                if spec.netm.crashed(spec.info.part, round as u64) {
+                    // injected fault: die silently at round start, like a
+                    // lost node (the server knows the schedule and does not
+                    // wait for this worker)
+                    return;
+                }
                 let out = driver::run_worker_round(
                     &rt,
                     &spec.train_name,
@@ -140,6 +160,15 @@ fn worker_main(spec: WorkerSpec<'_>, rx: Receiver<Down>, up: Sender<Up>, mut sta
                 };
                 let fatal = matches!(reply, Up::Failed { .. });
                 if up.send(reply).is_err() || fatal {
+                    break;
+                }
+            }
+            Down::Snapshot => {
+                let reply = Up::Snapshot {
+                    part: spec.info.part,
+                    state: Box::new(state.clone()),
+                };
+                if up.send(reply).is_err() {
                     break;
                 }
             }
@@ -237,6 +266,43 @@ fn worker_send_error(up_rx: &Receiver<Up>, fallback: &str) -> anyhow::Error {
     anyhow!("{fallback}")
 }
 
+/// Spawn a single worker thread for `info` seeded with `state`; returns its
+/// `Down` sender. Used at startup for every part and again by the
+/// supervisor when it respawns a dead worker mid-run.
+#[allow(clippy::too_many_arguments)]
+fn spawn_one_worker<'scope, 'env>(
+    s: &'scope std::thread::Scope<'scope, 'env>,
+    cfg: &'env ExperimentConfig,
+    ds: &'env Dataset,
+    assignment: &'env [u32],
+    netm: &'env NetModel,
+    info: &'env PartInfo,
+    state: ModelState,
+    dir: &std::path::Path,
+    train_name: &str,
+    builder: &BlockBuilder,
+    param_bytes: u64,
+    up_tx: &Sender<Up>,
+    kernel_threads: usize,
+) -> Sender<Down> {
+    let (dtx, drx) = channel::<Down>();
+    let spec = WorkerSpec {
+        cfg,
+        ds,
+        assignment,
+        info,
+        netm,
+        dir: dir.to_path_buf(),
+        train_name: train_name.to_string(),
+        builder: builder.clone(),
+        param_bytes,
+        kernel_threads,
+    };
+    let up = up_tx.clone();
+    s.spawn(move || worker_main(spec, drx, up, state));
+    dtx
+}
+
 /// Spawn one worker thread per part; returns the per-worker `Down` senders
 /// (index = part id).
 #[allow(clippy::too_many_arguments)]
@@ -255,26 +321,16 @@ fn spawn_workers<'scope, 'env>(
     up_tx: &Sender<Up>,
     kernel_threads: usize,
 ) -> Vec<Sender<Down>> {
-    let mut down_txs = Vec::with_capacity(parts.len());
-    for (info, state) in parts.iter().zip(workers) {
-        let (dtx, drx) = channel::<Down>();
-        down_txs.push(dtx);
-        let spec = WorkerSpec {
-            cfg,
-            ds,
-            assignment,
-            info,
-            netm,
-            dir: dir.to_path_buf(),
-            train_name: train_name.to_string(),
-            builder: builder.clone(),
-            param_bytes,
-            kernel_threads,
-        };
-        let up = up_tx.clone();
-        s.spawn(move || worker_main(spec, drx, up, state));
-    }
-    down_txs
+    parts
+        .iter()
+        .zip(workers)
+        .map(|(info, state)| {
+            spawn_one_worker(
+                s, cfg, ds, assignment, netm, info, state, dir, train_name, builder,
+                param_bytes, up_tx, kernel_threads,
+            )
+        })
+        .collect()
 }
 
 /// Kernel-pool lanes per compute thread: the explicit `kernel_threads`
@@ -348,16 +404,27 @@ fn run_rounds(
         assignment,
         cut_ratio,
         parts,
-        workers,
+        mut workers,
         mut global_params,
-        server_state,
+        mut server_state,
         local_builder,
         corr_builder,
         param_bytes,
         mut eval_rng,
-        corr_rng,
+        mut corr_rng,
         net: netm,
     } = setup;
+    let ft = netm.has_faults() || cfg.round_timeout > 0.0 || cfg.quorum > 0;
+    if pipelined && (ft || cfg.checkpoint_every > 0 || !cfg.resume.is_empty()) {
+        bail!(
+            "fault tolerance and checkpoint/resume run under round_mode=sync \
+             only — pipelined mode overlaps the correction with the next \
+             local epoch, so there is no round boundary to cut at"
+        );
+    }
+    if cfg.quorum > parts.len() {
+        bail!("quorum {} exceeds parts {}", cfg.quorum, parts.len());
+    }
     let dir = rt.artifacts_dir().to_path_buf();
     let is_fullsync = cfg.algorithm == Algorithm::FullSync;
     let do_correct = cfg.algorithm.corrects() && cfg.correction_steps > 0;
@@ -368,9 +435,48 @@ fn run_rounds(
     // budget the kernel lanes over all of them
     let lanes = worker_kernel_threads(cfg, parts_n + usize::from(pipe_corr));
 
+    // respawn template: a restarted worker re-enters the round from the
+    // current global params with zeroed optimizer moments — the paper's
+    // round entry ("local model := averaged global model") for a node that
+    // lost its local state
+    let fresh_opt: Vec<Tensor> = workers
+        .first()
+        .map(|w| {
+            w.opt
+                .iter()
+                .map(|t| Tensor {
+                    shape: t.shape.clone(),
+                    data: vec![0.0; t.data.len()],
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+
+    // --- resume: overwrite loop-carried state from a checkpoint -------------
+    // `setup_run` above already burned the setup-time RNG streams in
+    // fresh-run order, so only the loop state needs restoring; the remaining
+    // rounds then replay bit-for-bit (asserted by tests/cluster.rs).
+    let mut alive: Vec<bool> = vec![true; parts_n];
+    let mut start_round = 1usize;
+    let mut resume_cum_bytes = 0u64;
+    if !cfg.resume.is_empty() {
+        let ck = Checkpoint::load(std::path::Path::new(&cfg.resume))?;
+        ck.check_compatible(cfg)?;
+        global_params = ck.global_params;
+        server_state = ck.server_state;
+        workers = ck.workers;
+        eval_rng = Pcg64::from_raw_state(ck.eval_rng.0, ck.eval_rng.1);
+        corr_rng = Pcg64::from_raw_state(ck.corr_rng.0, ck.corr_rng.1);
+        resume_cum_bytes = ck.cum_bytes;
+        start_round = ck.round + 1;
+        for &p in &ck.dead {
+            alive[p as usize] = false;
+        }
+    }
+
     std::thread::scope(|s| -> Result<RunResult> {
         let (up_tx, up_rx) = channel::<Up>();
-        let down_txs = spawn_workers(
+        let mut down_txs = spawn_workers(
             s,
             cfg,
             ds,
@@ -385,7 +491,15 @@ fn run_rounds(
             &up_tx,
             lanes,
         );
-        drop(up_tx);
+        // under fault tolerance the server keeps an `Up` sender so respawned
+        // workers get fresh clones; without it the dropped sender keeps total
+        // worker death observable as a channel disconnect (legacy behavior)
+        let up_hold = if ft {
+            Some(up_tx)
+        } else {
+            drop(up_tx);
+            None
+        };
 
         // sync mode corrects inline and keeps these; pipelined mode moves
         // them onto the correction thread
@@ -412,10 +526,14 @@ fn run_rounds(
 
         let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
         // storage bytes ride round 1's comm (see the sequential driver)
-        let mut cum_bytes: u64 = 0;
+        let mut cum_bytes: u64 = resume_cum_bytes;
         let mut corr_arena = BlockArena::new();
+        // uploads that missed their round (up-leg drop → retransmit, or past
+        // the `round_timeout` deadline), held for the next round's average —
+        // the staleness-1 bound the async engine's `StalenessGate` enforces
+        let mut held: Vec<Option<ParamsUp>> = (0..parts_n).map(|_| None).collect();
 
-        for round in 1..=cfg.rounds {
+        for round in start_round..=cfg.rounds {
             if ctx.stopped() {
                 break; // RunControl::stop(): end at the round boundary
             }
@@ -434,8 +552,59 @@ fn run_rounds(
                 comm.feature_bytes += storage_sum;
             }
 
+            // ---- supervise: respawn workers that died last round ----------
+            let mut respawns_r = 0u32;
+            if ft && cfg.respawn {
+                for p in 0..parts_n {
+                    if alive[p] {
+                        continue;
+                    }
+                    let state = ModelState {
+                        params: global_params.clone(),
+                        opt: fresh_opt.clone(),
+                    };
+                    // replacing the sender drops the old one, so a worker
+                    // that is merely wedged (rather than exited) unblocks
+                    // and dies with the channel
+                    down_txs[p] = spawn_one_worker(
+                        s,
+                        cfg,
+                        ds,
+                        &assignment,
+                        &netm,
+                        &parts[p],
+                        state,
+                        &dir,
+                        &train_name,
+                        &local_builder,
+                        param_bytes,
+                        up_hold.as_ref().expect("ft keeps the up sender"),
+                        lanes,
+                    );
+                    alive[p] = true;
+                    respawns_r += 1;
+                    ctx.emit(Event::WorkerRestarted {
+                        round,
+                        part: parts[p].part,
+                    });
+                }
+            }
+
             // ---- broadcast ParamsDown (and the correction snapshot) -------
-            for tx in &down_txs {
+            let mut drops_r: u64 = 0;
+            let mut expected: Vec<bool> = vec![false; parts_n];
+            for (p, tx) in down_txs.iter().enumerate() {
+                if !alive[p] {
+                    continue; // dead with respawn off: out for the run
+                }
+                let crashes_now = netm.crashed(parts[p].part, round as u64);
+                if netm.dropped(parts[p].part, round as u64, LEG_DOWN) {
+                    // broadcast lost: p sits this round out (and still dies
+                    // here if its crash was scheduled now)
+                    drops_r += 1;
+                    alive[p] = !crashes_now;
+                    continue;
+                }
                 if tx
                     .send(Down::Round {
                         round,
@@ -444,9 +613,20 @@ fn run_rounds(
                     })
                     .is_err()
                 {
+                    if ft {
+                        alive[p] = false; // died unannounced; respawn next round
+                        continue;
+                    }
                     return Err(worker_send_error(&up_rx, "a worker thread terminated early"));
                 }
                 comm.down_bytes += param_bytes;
+                if crashes_now {
+                    // the worker checks the same schedule and exits on
+                    // receipt without replying; don't wait for it
+                    alive[p] = false;
+                } else {
+                    expected[p] = true;
+                }
             }
             if pipe_corr {
                 // correct θ_r concurrently with the local epoch on θ_r
@@ -457,13 +637,56 @@ fn run_rounds(
 
             // ---- collect ParamsUp + RemoteFeatures ------------------------
             let mut ups: Vec<Option<ParamsUp>> = (0..parts_n).map(|_| None).collect();
-            let mut got = 0usize;
-            while got < parts_n {
-                match up_rx.recv() {
-                    Err(_) => bail!("all worker threads disconnected mid-round"),
-                    Ok(Up::Features { bytes }) => comm.feature_bytes += bytes,
-                    Ok(Up::Failed { part, err }) => bail!("worker {part} failed: {err}"),
-                    Ok(Up::Round(u)) => {
+            let mut late_next: Vec<Option<ParamsUp>> = (0..parts_n).map(|_| None).collect();
+            let mut need: usize = expected.iter().filter(|e| **e).count();
+            while need > 0 {
+                let msg = if ft {
+                    match up_rx.recv_timeout(LIVENESS_TIMEOUT) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => {
+                            // liveness guard: whoever is still outstanding
+                            // is wedged or gone; write them off and let the
+                            // supervisor respawn them next round
+                            for (p, e) in expected.iter_mut().enumerate() {
+                                if *e {
+                                    alive[p] = false;
+                                    *e = false;
+                                }
+                            }
+                            need = 0;
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => {
+                            bail!("all worker threads disconnected mid-round")
+                        }
+                    }
+                } else {
+                    match up_rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => bail!("all worker threads disconnected mid-round"),
+                    }
+                };
+                match msg {
+                    Up::Features { bytes } => comm.feature_bytes += bytes,
+                    Up::Snapshot { .. } => {
+                        // stale reply from a timed-out checkpoint snapshot;
+                        // a protocol bug on the fault-free path
+                        if !ft {
+                            bail!("unexpected snapshot reply mid-round");
+                        }
+                    }
+                    Up::Failed { part, err } => {
+                        if !ft {
+                            bail!("worker {part} failed: {err}");
+                        }
+                        let p = part as usize;
+                        alive[p] = false;
+                        if expected[p] {
+                            expected[p] = false;
+                            need -= 1;
+                        }
+                    }
+                    Up::Round(u) => {
                         if u.round != round {
                             bail!(
                                 "worker {} answered round {} during round {round}",
@@ -471,11 +694,69 @@ fn run_rounds(
                                 u.round
                             );
                         }
-                        comm.up_bytes += param_bytes;
-                        got += 1;
                         let p = u.part as usize;
-                        ups[p] = Some(u);
+                        if expected[p] {
+                            expected[p] = false;
+                            need -= 1;
+                        }
+                        let lost = netm.dropped(u.part, round as u64, LEG_UP);
+                        if lost {
+                            drops_r += 1;
+                        }
+                        if lost || (cfg.round_timeout > 0.0 && u.net_s > cfg.round_timeout) {
+                            // upload lost (it retransmits) or past the round
+                            // deadline: hold for the next round's average
+                            late_next[p] = Some(u);
+                        } else {
+                            ups[p] = Some(u);
+                        }
                     }
+                }
+            }
+
+            // ---- integrate: last round's late arrivals + this round's
+            // on-time uploads (a fresh upload supersedes a stale held one,
+            // which is then discarded as a drop) ----------------------------
+            let mut contributors: Vec<Option<ParamsUp>> =
+                (0..parts_n).map(|_| None).collect();
+            for p in 0..parts_n {
+                match (ups[p].take(), held[p].take()) {
+                    (Some(u), stale) => {
+                        if stale.is_some() {
+                            drops_r += 1;
+                        }
+                        comm.up_bytes += param_bytes;
+                        contributors[p] = Some(u);
+                    }
+                    (None, Some(u)) => {
+                        comm.up_bytes += param_bytes;
+                        contributors[p] = Some(u);
+                    }
+                    (None, None) => {}
+                }
+            }
+            // quorum backfill: if fewer than K contributors made the
+            // deadline, admit the late uploads with the smallest modeled
+            // arrival time (tie: part id) until K is met or none remain
+            if cfg.quorum > 0 {
+                let mut have = contributors.iter().filter(|c| c.is_some()).count();
+                let mut order: Vec<usize> = (0..parts_n)
+                    .filter(|&p| contributors[p].is_none() && late_next[p].is_some())
+                    .collect();
+                order.sort_by(|&a, &b| {
+                    let na = late_next[a].as_ref().expect("filtered").net_s;
+                    let nb = late_next[b].as_ref().expect("filtered").net_s;
+                    na.partial_cmp(&nb)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                for p in order {
+                    if have >= cfg.quorum {
+                        break;
+                    }
+                    comm.up_bytes += param_bytes;
+                    contributors[p] = late_next[p].take();
+                    have += 1;
                 }
             }
             // fold per-worker stats in part order (float sums must not
@@ -486,30 +767,36 @@ fn run_rounds(
             let mut net_time = 0f64;
             let mut loss_sum = 0f64;
             let mut loss_n = 0usize;
-            for u in ups.iter().flatten() {
+            for u in contributors.iter().flatten() {
                 worker_time = worker_time.max(u.elapsed_s);
                 net_time = net_time.max(u.net_s);
                 loss_sum += u.loss_sum;
                 loss_n += u.loss_n;
                 ctx.emit(Event::WorkerRoundCompleted {
-                    round,
+                    round: u.round,
                     part: u.part,
                     compute_s: u.elapsed_s,
                     net_s: u.net_s,
                 });
             }
+            let quorum_r = contributors.iter().filter(|c| c.is_some()).count();
 
             // ---- server: average (+ correct) + eval -----------------------
             let t_server = Instant::now();
-            let states: Vec<ModelState> = ups
+            let states: Vec<ModelState> = contributors
                 .into_iter()
+                .flatten()
                 .map(|u| ModelState {
-                    params: u.expect("all ups collected").params,
+                    params: u.params,
                     opt: Vec::new(),
                 })
                 .collect();
-            let refs: Vec<&ModelState> = states.iter().collect();
-            ModelState::average_params_into(&mut global_params, &refs);
+            if !states.is_empty() {
+                // uniform mean over whoever contributed; with zero
+                // contributors the global model carries over unchanged
+                let refs: Vec<&ModelState> = states.iter().collect();
+                ModelState::average_params_into(&mut global_params, &refs);
+            }
 
             let (val_score, global_loss) = if pipe_corr {
                 // the correction of θ_r overlapped the local epoch; apply
@@ -563,6 +850,19 @@ fn run_rounds(
             };
             let server_time = t_server.elapsed().as_secs_f64();
 
+            // a checkpoint is a barrier: held-late uploads cannot outlive it
+            // (the on-disk state must fully determine the remaining rounds),
+            // and nothing is carried past the final round either way
+            let ckpt_due = cfg.checkpoint_every > 0 && round % cfg.checkpoint_every == 0;
+            if ckpt_due || round == cfg.rounds {
+                for l in late_next.iter_mut() {
+                    if l.take().is_some() {
+                        drops_r += 1;
+                    }
+                }
+            }
+            held = late_next;
+
             cum_bytes += comm.total();
             records.push(RoundRecord {
                 round,
@@ -580,6 +880,9 @@ fn run_rounds(
                 server_time_s: server_time,
                 net_time_s: net_time,
                 wall_time_s: t_round.elapsed().as_secs_f64(),
+                drops: drops_r,
+                respawns: respawns_r,
+                quorum: quorum_r,
             });
             // round boundary: publish the (corrected) global model for any
             // live serving hub while the next round keeps training
@@ -587,10 +890,109 @@ fn run_rounds(
             ctx.emit(Event::RoundCompleted(
                 records.last().expect("just pushed").clone(),
             ));
+
+            // ---- round-boundary checkpoint --------------------------------
+            if ckpt_due {
+                // gather full worker states (params + optimizer moments:
+                // worker Adam state persists across rounds); dead workers
+                // are recorded as such and stored as their respawn template
+                let mut snaps: Vec<Option<ModelState>> =
+                    (0..parts_n).map(|_| None).collect();
+                let mut want = 0usize;
+                for (p, tx) in down_txs.iter().enumerate() {
+                    if !alive[p] {
+                        continue;
+                    }
+                    if tx.send(Down::Snapshot).is_ok() {
+                        want += 1;
+                    } else if ft {
+                        alive[p] = false;
+                    } else {
+                        return Err(worker_send_error(
+                            &up_rx,
+                            "a worker thread terminated early",
+                        ));
+                    }
+                }
+                while want > 0 {
+                    let msg = if ft {
+                        match up_rx.recv_timeout(LIVENESS_TIMEOUT) {
+                            Ok(m) => m,
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => {
+                                bail!("all worker threads disconnected at a checkpoint")
+                            }
+                        }
+                    } else {
+                        match up_rx.recv() {
+                            Ok(m) => m,
+                            Err(_) => {
+                                bail!("all worker threads disconnected at a checkpoint")
+                            }
+                        }
+                    };
+                    match msg {
+                        Up::Snapshot { part, state } => {
+                            snaps[part as usize] = Some(*state);
+                            want -= 1;
+                        }
+                        Up::Failed { part, err } => {
+                            if !ft {
+                                bail!("worker {part} failed: {err}");
+                            }
+                            alive[part as usize] = false;
+                            want -= 1;
+                        }
+                        Up::Features { .. } | Up::Round(_) => {
+                            bail!("unexpected worker message during a checkpoint snapshot")
+                        }
+                    }
+                }
+                // liveness-timeout stragglers count as dead like the rest
+                for (p, snap) in snaps.iter().enumerate() {
+                    if snap.is_none() {
+                        alive[p] = false;
+                    }
+                }
+                let worker_states: Vec<ModelState> = snaps
+                    .into_iter()
+                    .map(|snap| {
+                        snap.unwrap_or_else(|| ModelState {
+                            params: global_params.clone(),
+                            opt: fresh_opt.clone(),
+                        })
+                    })
+                    .collect();
+                let dead: Vec<u32> =
+                    (0..parts_n as u32).filter(|&p| !alive[p as usize]).collect();
+                let ck = Checkpoint::capture(
+                    cfg,
+                    round,
+                    cum_bytes,
+                    &global_params,
+                    inline_server_state.as_ref().expect("sync keeps state"),
+                    &worker_states,
+                    &eval_rng,
+                    inline_corr_rng.as_ref().expect("sync keeps rng"),
+                    &dead,
+                );
+                let path = ck.save(std::path::Path::new(&cfg.checkpoint_dir))?;
+                ctx.emit(Event::CheckpointSaved {
+                    round,
+                    path: path.display().to_string(),
+                });
+            }
         }
 
-        for tx in &down_txs {
-            let _ = tx.send(Down::Shutdown);
+        for (p, tx) in down_txs.iter().enumerate() {
+            if tx.send(Down::Shutdown).is_err() && alive[p] {
+                // a worker we believed alive is gone: surface the root cause
+                // instead of silently swallowing the failed send
+                return Err(worker_send_error(
+                    &up_rx,
+                    &format!("worker {p} exited before shutdown"),
+                ));
+            }
         }
         driver::finish_run(
             rt,
@@ -639,6 +1041,18 @@ fn run_async(
         mut corr_rng,
         net: netm,
     } = setup;
+    if netm.has_faults()
+        || cfg.round_timeout > 0.0
+        || cfg.quorum > 0
+        || cfg.checkpoint_every > 0
+        || !cfg.resume.is_empty()
+    {
+        bail!(
+            "fault injection, quorum rounds, and checkpoint/resume require \
+             round_mode=sync — the async engine already tolerates pacing \
+             differences through its staleness gate"
+        );
+    }
     let dir = rt.artifacts_dir().to_path_buf();
     let is_fullsync = cfg.algorithm == Algorithm::FullSync;
     let storage_sum: u64 = parts.iter().map(|p| p.storage_bytes).sum();
@@ -674,6 +1088,9 @@ fn run_async(
         drop(up_tx);
 
         let mut gate = StalenessGate::new(parts_n, tau);
+        // workers already sent Shutdown when they finished their rounds (a
+        // second send at teardown would trip over the closed channel)
+        let mut shut = vec![false; parts_n];
         let mut waiting: Vec<usize> = Vec::new();
         let mut max_staleness = 0u64;
         let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
@@ -722,6 +1139,7 @@ fn run_async(
             match up_rx.recv() {
                 Err(_) => bail!("all worker threads disconnected mid-run"),
                 Ok(Up::Features { bytes }) => comm.feature_bytes += bytes,
+                Ok(Up::Snapshot { .. }) => bail!("unexpected snapshot reply in async mode"),
                 Ok(Up::Failed { part, err }) => bail!("worker {part} failed: {err}"),
                 Ok(Up::Round(u)) => {
                     let p = u.part as usize;
@@ -794,6 +1212,9 @@ fn run_async(
                             server_time_s: fold_time + t_server.elapsed().as_secs_f64(),
                             net_time_s: net_time,
                             wall_time_s: t_window.elapsed().as_secs_f64(),
+                            drops: 0,
+                            respawns: 0,
+                            quorum: parts_n,
                         });
                         // window boundary: publish for any live serving hub
                         ctx.publish_params(round, &global_params);
@@ -825,7 +1246,13 @@ fn run_async(
                     while i < waiting.len() {
                         let q = waiting[i];
                         if gate.done(q) >= cfg.rounds || records.len() >= cfg.rounds {
-                            let _ = down_txs[q].send(Down::Shutdown);
+                            if down_txs[q].send(Down::Shutdown).is_err() {
+                                return Err(worker_send_error(
+                                    &up_rx,
+                                    &format!("worker {q} exited before shutdown"),
+                                ));
+                            }
+                            shut[q] = true;
                             waiting.swap_remove(i);
                         } else if gate.may_start(q) {
                             max_staleness = max_staleness.max(gate.staleness(q) as u64);
@@ -853,8 +1280,15 @@ fn run_async(
             }
         }
 
-        for tx in &down_txs {
-            let _ = tx.send(Down::Shutdown);
+        for (q, tx) in down_txs.iter().enumerate() {
+            if !shut[q] && tx.send(Down::Shutdown).is_err() {
+                // a worker died without us noticing: surface the root cause
+                // instead of silently swallowing the failed send
+                return Err(worker_send_error(
+                    &up_rx,
+                    &format!("worker {q} exited before shutdown"),
+                ));
+            }
         }
         driver::finish_run(
             rt,

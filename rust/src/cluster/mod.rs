@@ -67,6 +67,23 @@
 //! `coordinator::driver`), and emit the same `RoundRecord`/`RunResult`
 //! schema, so every figure, bench, and test runs on either.
 
+//! ## Fault model (see `cluster/README.md` for the full contract)
+//!
+//! `NetModel` specs can inject reproducible failures: `drop=p` loses each
+//! message leg with probability `p` (a pure seeded draw per
+//! `(link, round, leg)`, salted independently of the jitter stream), and
+//! `crash=p@r` kills worker `p` at the start of round `r`. The sync engine
+//! tolerates them with **quorum rounds** (`round_timeout` + `quorum`:
+//! average whatever K-of-P params made it, re-admit late ones next round
+//! under the [`StalenessGate`] bound), **worker respawn** (a dead worker is
+//! relaunched on a fresh thread seeded from the current global params —
+//! the paper's "local model = averaged global model" round entry), and
+//! **round-boundary checkpoints** ([`checkpoint`]) from which `--resume`
+//! replays the remaining rounds bit-for-bit. With no faults configured the
+//! collection path degenerates to the legacy all-P fold, keeping sync mode
+//! bit-identical to the sequential driver.
+
+pub mod checkpoint;
 pub mod engine;
 pub mod net;
 

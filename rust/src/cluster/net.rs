@@ -25,6 +25,16 @@
 //! Specs are parsed from strings: a preset (`ideal` | `lan` | `wan`)
 //! optionally followed by `key=value` overrides, comma-separated —
 //! e.g. `"lan,scale=1"` or `"lat=2e-2,bw=1.25e8,jitter=0.1,scale=1"`.
+//!
+//! **Fault injection** rides the same spec grammar so every failure mode is
+//! reproducible from a string: `drop=0.02` gives each message leg an
+//! independent 2% chance of being lost (a pure, seeded draw per
+//! `(link, round, leg)` — like the jitter stream, but salted differently so
+//! drop and jitter decisions are independent), and `crash=p@r` kills worker
+//! `p` at the start of round `r` (repeatable for multiple crashes:
+//! `crash=1@3,crash=2@5`). The engine decides what a lost message or dead
+//! worker *means* (quorum averaging, respawn); the model only answers
+//! "was this message dropped?" / "does this worker crash here?".
 
 use crate::util::Pcg64;
 
@@ -53,6 +63,10 @@ pub struct NetModel {
     pub straggle_mult: f64,
     /// real-sleep factor for [`NetModel::sleep`] (0 = model only)
     pub sleep_scale: f64,
+    /// probability that any one message leg is lost (`drop=p`)
+    pub drop_p: f64,
+    /// crash schedule: worker `p` dies at the start of round `r` (`crash=p@r`)
+    pub crashes: Vec<(u32, u64)>,
     /// decorrelates the jitter stream between runs (set from the run seed)
     pub seed: u64,
 }
@@ -67,6 +81,8 @@ impl NetModel {
             straggle_p: 0.0,
             straggle_mult: 1.0,
             sleep_scale: 0.0,
+            drop_p: 0.0,
+            crashes: Vec::new(),
             seed: 0,
         }
     }
@@ -116,6 +132,25 @@ impl NetModel {
                     let (k, v) = tok
                         .split_once('=')
                         .ok_or_else(|| format!("net spec token {tok:?} is not a preset (ideal|lan|wan) or key=value"))?;
+                    if k == "crash" {
+                        // crash=p@r is not numeric — handle before the parse
+                        let (p, r) = v.split_once('@').ok_or_else(|| {
+                            format!("net spec crash={v:?}: expected crash=<worker>@<round>")
+                        })?;
+                        let part = p.parse::<u32>().map_err(|_| {
+                            format!("net spec crash={v:?}: worker {p:?} is not an integer")
+                        })?;
+                        let round = r.parse::<u64>().map_err(|_| {
+                            format!("net spec crash={v:?}: round {r:?} is not an integer")
+                        })?;
+                        if round == 0 {
+                            return Err(format!(
+                                "net spec crash={v:?}: rounds are 1-based (round >= 1)"
+                            ));
+                        }
+                        net.crashes.push((part, round));
+                        continue;
+                    }
                     let num = v
                         .parse::<f64>()
                         .map_err(|_| format!("net spec {k}={v:?}: not a number"))?;
@@ -126,6 +161,7 @@ impl NetModel {
                         "straggle" => net.straggle_p = num,
                         "straggle_mult" => net.straggle_mult = num,
                         "scale" => net.sleep_scale = num,
+                        "drop" => net.drop_p = num,
                         other => return Err(format!("unknown net spec key {other:?}")),
                     }
                 }
@@ -146,6 +182,9 @@ impl NetModel {
                 "net spec {spec:?}: need 0 <= straggle <= 1, finite straggle_mult >= 1, \
                  finite scale >= 0"
             ));
+        }
+        if !(0.0..=1.0).contains(&net.drop_p) {
+            return Err(format!("net spec {spec:?}: need 0 <= drop <= 1"));
         }
         Ok(net)
     }
@@ -183,6 +222,35 @@ impl NetModel {
             t *= self.straggle_mult;
         }
         t.max(0.0)
+    }
+
+    /// Any failure mode configured? Engines without fault-tolerant
+    /// collection (sequential, async) reject such specs up front.
+    pub fn has_faults(&self) -> bool {
+        self.drop_p > 0.0 || !self.crashes.is_empty()
+    }
+
+    /// Was the message on worker `link`'s connection in `round`, transfer
+    /// `leg`, lost? Pure in its arguments like [`NetModel::transfer_s`] —
+    /// the draw is seeded from the coordinates with a salt distinct from
+    /// the jitter stream, so enabling drops never perturbs modeled times.
+    pub fn dropped(&self, link: u32, round: u64, leg: u64) -> bool {
+        if self.drop_p <= 0.0 {
+            return false;
+        }
+        let mut rng = Pcg64::new(
+            self.seed
+                ^ 0xd1b5_4a32_d192_ed03
+                ^ (link as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ round.wrapping_mul(0xc2b2_ae3d_27d4_eb4f)
+                ^ leg.wrapping_mul(0x1656_67b1_9e37_79f9),
+        );
+        rng.bernoulli(self.drop_p)
+    }
+
+    /// Does worker `link` crash at the start of `round` per the schedule?
+    pub fn crashed(&self, link: u32, round: u64) -> bool {
+        self.crashes.iter().any(|&(p, r)| p == link && r == round)
     }
 
     /// Inject `modeled_s` as real wall-clock, scaled by `sleep_scale`
@@ -280,5 +348,52 @@ mod tests {
         assert!(NetModel::parse("lan,scale=inf").is_err());
         assert!(NetModel::parse("lan,straggle=0.1,straggle_mult=nan").is_err());
         assert!(NetModel::parse("bw=inf").is_ok());
+    }
+
+    #[test]
+    fn fault_spec_parses_and_validates() {
+        let net = NetModel::parse("lan,drop=0.05,crash=1@3,crash=2@5").unwrap();
+        assert_eq!(net.drop_p, 0.05);
+        assert_eq!(net.crashes, vec![(1, 3), (2, 5)]);
+        assert!(net.has_faults());
+        assert!(net.crashed(1, 3) && net.crashed(2, 5));
+        assert!(!net.crashed(1, 4) && !net.crashed(0, 3));
+        assert!(!NetModel::parse("lan").unwrap().has_faults());
+        assert!(NetModel::parse("drop=1.5").is_err());
+        assert!(NetModel::parse("drop=-0.1").is_err());
+        assert!(NetModel::parse("drop=nan").is_err());
+        assert!(NetModel::parse("crash=1").is_err());
+        assert!(NetModel::parse("crash=a@3").is_err());
+        assert!(NetModel::parse("crash=1@x").is_err());
+        assert!(NetModel::parse("crash=1@0").is_err()); // rounds are 1-based
+    }
+
+    #[test]
+    fn drop_draws_are_deterministic_and_at_rate() {
+        let net = NetModel::parse("lan,drop=0.1").unwrap().with_seed(3);
+        let n = 4000u64;
+        let hits = (0..n).filter(|&r| net.dropped(0, r, LEG_UP)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.03, "drop rate {rate}");
+        for r in 0..32u64 {
+            assert_eq!(net.dropped(1, r, LEG_DOWN), net.dropped(1, r, LEG_DOWN));
+        }
+        // no drops configured -> never drops
+        let clean = NetModel::lan().with_seed(3);
+        assert!((0..256).all(|r| !clean.dropped(0, r, LEG_UP)));
+    }
+
+    #[test]
+    fn drop_draws_do_not_perturb_modeled_times() {
+        // same spec with and without drop must model identical transfer times
+        let a = NetModel::parse("wan").unwrap().with_seed(9);
+        let b = NetModel::parse("wan,drop=0.5").unwrap().with_seed(9);
+        for r in 1..64u64 {
+            for leg in [LEG_DOWN, LEG_UP, LEG_STORAGE] {
+                let ta = a.transfer_s(100_000, 2, r, leg);
+                let tb = b.transfer_s(100_000, 2, r, leg);
+                assert_eq!(ta.to_bits(), tb.to_bits());
+            }
+        }
     }
 }

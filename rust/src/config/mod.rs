@@ -63,6 +63,24 @@ pub struct ExperimentConfig {
     pub serve_threads: usize,
     /// serving: bounded request-queue depth (senders block when full)
     pub serve_queue: usize,
+    /// serving: shed load when the queue is full (typed `Overloaded` reply)
+    /// instead of blocking the producer
+    pub serve_shed: bool,
+    /// cluster sync: modeled-time deadline (seconds) after which the round
+    /// closes on whatever quorum has arrived (0 = wait for everyone)
+    pub round_timeout: f64,
+    /// cluster sync: minimum params the server averages when the deadline
+    /// fires (K-of-P; 0 = all P workers)
+    pub quorum: usize,
+    /// respawn crashed workers from the current global params (off = a dead
+    /// worker stays dead and contributes nothing to later rounds)
+    pub respawn: bool,
+    /// write a checkpoint every N rounds (0 = off)
+    pub checkpoint_every: usize,
+    /// directory checkpoints are written under (`<dir>/round_<r>/`)
+    pub checkpoint_dir: String,
+    /// resume from a checkpoint directory ("" = fresh run)
+    pub resume: String,
 }
 
 impl Default for ExperimentConfig {
@@ -96,6 +114,13 @@ impl Default for ExperimentConfig {
             serve_flush_us: 200,
             serve_threads: 0,
             serve_queue: 1024,
+            serve_shed: false,
+            round_timeout: 0.0,
+            quorum: 0,
+            respawn: true,
+            checkpoint_every: 0,
+            checkpoint_dir: "checkpoints".into(),
+            resume: String::new(),
         }
     }
 }

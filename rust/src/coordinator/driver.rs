@@ -25,6 +25,7 @@ use anyhow::{bail, Result};
 use super::{Algorithm, CommStats, CorrectionBatch};
 use crate::api::registry;
 use crate::api::session::{Event, RunControl, RunCtx};
+use crate::cluster::checkpoint::Checkpoint;
 use crate::cluster::{net, Engine, NetModel, RoundMode};
 use crate::config::ExperimentConfig;
 use crate::graph::{CsrGraph, Dataset, Labels};
@@ -71,6 +72,13 @@ pub struct RoundRecord {
     pub net_time_s: f64,
     /// measured end-to-end wall-clock of the round on the server
     pub wall_time_s: f64,
+    /// messages lost this round (injected drops + discarded stale params)
+    pub drops: u64,
+    /// workers respawned at the start of this round
+    pub respawns: u32,
+    /// param sets averaged into the global model this round (= P when
+    /// every worker contributed; fewer under quorum rounds / dead workers)
+    pub quorum: usize,
 }
 
 /// Complete result of one distributed run.
@@ -91,6 +99,10 @@ pub struct RunResult {
     pub total_steps: usize,
     /// max observed round-staleness (async-staleness mode only)
     pub max_staleness: Option<u64>,
+    /// messages lost over the whole run (fault injection)
+    pub total_drops: u64,
+    /// workers respawned over the whole run
+    pub total_respawns: u32,
 }
 
 impl RunResult {
@@ -110,6 +122,8 @@ impl RunResult {
             ("cut_ratio", Json::num(self.cut_ratio)),
             ("avg_round_mb", Json::num(self.avg_round_mb())),
             ("total_steps", Json::num(self.total_steps as f64)),
+            ("total_drops", Json::num(self.total_drops as f64)),
+            ("total_respawns", Json::num(self.total_respawns as f64)),
             (
                 "rounds",
                 Json::arr(
@@ -128,6 +142,9 @@ impl RunResult {
                                 ("server_time_s", Json::num(r.server_time_s)),
                                 ("net_time_s", Json::num(r.net_time_s)),
                                 ("wall_time_s", Json::num(r.wall_time_s)),
+                                ("drops", Json::num(r.drops as f64)),
+                                ("respawns", Json::num(r.respawns as f64)),
+                                ("quorum", Json::num(r.quorum as f64)),
                             ])
                         })
                         .collect(),
@@ -853,6 +870,8 @@ pub(crate) fn finish_run(
     let final_test =
         final_test_score(rt, eval_name, global_params, ds, cfg, builder, eval_rng)?;
     let (final_val, avg_round_bytes) = summarize(&records);
+    let total_drops = records.iter().map(|r| r.drops).sum();
+    let total_respawns = records.iter().map(|r| r.respawns).sum();
     Ok(RunResult {
         algorithm: cfg.algorithm,
         dataset: cfg.dataset.clone(),
@@ -866,6 +885,8 @@ pub(crate) fn finish_run(
         avg_round_bytes,
         total_steps: planned_total_steps(cfg),
         max_staleness,
+        total_drops,
+        total_respawns,
     })
 }
 
@@ -939,6 +960,12 @@ fn run_sequential(
         mut corr_rng,
         net: netm,
     } = setup_run(cfg, ds, rt, pre_assignment)?;
+    if netm.has_faults() || cfg.round_timeout > 0.0 || cfg.quorum > 0 {
+        bail!(
+            "fault injection (drop=/crash=) and quorum rounds (round_timeout, \
+             quorum) require the cluster engine; rerun with --engine cluster"
+        );
+    }
     let is_fullsync = cfg.algorithm == Algorithm::FullSync;
     // workers run serially on this thread, so the kernel pool may use the
     // whole host (0 = auto); results are bit-identical at any setting
@@ -949,6 +976,30 @@ fn run_sequential(
     // starts at zero (counting them here too would double-book them)
     let mut cum_bytes: u64 = 0;
 
+    // --- resume: overwrite round-loop state from a checkpoint ---------------
+    // `setup_run` above already burned the setup-time RNG streams in fresh-run
+    // order, so only loop-carried state needs restoring; the remaining rounds
+    // then replay bit-for-bit (asserted by tests/cluster.rs).
+    let mut start_round = 1usize;
+    if !cfg.resume.is_empty() {
+        let ck = Checkpoint::load(std::path::Path::new(&cfg.resume))?;
+        ck.check_compatible(cfg)?;
+        if !ck.dead.is_empty() {
+            bail!(
+                "checkpoint has dead workers {:?} — resuming a faulted run \
+                 requires the cluster engine",
+                ck.dead
+            );
+        }
+        global_params = ck.global_params;
+        server_state = ck.server_state;
+        workers = ck.workers;
+        eval_rng = Pcg64::from_raw_state(ck.eval_rng.0, ck.eval_rng.1);
+        corr_rng = Pcg64::from_raw_state(ck.corr_rng.0, ck.corr_rng.1);
+        cum_bytes = ck.cum_bytes;
+        start_round = ck.round + 1;
+    }
+
     // reusable hot-path buffers: block arenas (local + correction shapes)
     // and the remote-feature dedup scratch — no per-batch allocation
     let mut arena = BlockArena::new();
@@ -956,7 +1007,7 @@ fn run_sequential(
     let mut node_scratch = NodeScratch::new();
 
     // --- round loop ---------------------------------------------------------
-    for round in 1..=cfg.rounds {
+    for round in start_round..=cfg.rounds {
         if ctx.stopped() {
             break; // RunControl::stop(): end at the round boundary
         }
@@ -1054,6 +1105,9 @@ fn run_sequential(
             server_time_s: server_time,
             net_time_s: net_time,
             wall_time_s: t_round.elapsed().as_secs_f64(),
+            drops: 0,
+            respawns: 0,
+            quorum: parts.len(),
         });
         // round boundary: hand the (corrected) global model to any live
         // serving hub (no-op unless the run was launched with publish_to)
@@ -1061,6 +1115,24 @@ fn run_sequential(
         ctx.emit(Event::RoundCompleted(
             records.last().expect("just pushed").clone(),
         ));
+        if cfg.checkpoint_every > 0 && round % cfg.checkpoint_every == 0 {
+            let ck = Checkpoint::capture(
+                cfg,
+                round,
+                cum_bytes,
+                &global_params,
+                &server_state,
+                &workers,
+                &eval_rng,
+                &corr_rng,
+                &[],
+            );
+            let path = ck.save(std::path::Path::new(&cfg.checkpoint_dir))?;
+            ctx.emit(Event::CheckpointSaved {
+                round,
+                path: path.display().to_string(),
+            });
+        }
     }
 
     finish_run(

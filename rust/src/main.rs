@@ -287,8 +287,12 @@ fn cmd_serve(flags: &[(String, String)]) -> Result<()> {
         seed: exp.config().seed,
     };
     eprintln!(
-        "serving: batch<= {}, flush {}us, {} kernel lanes, queue {}; load: {mode} x{clients} clients",
-        scfg.max_batch, scfg.flush_us, scfg.threads, scfg.queue
+        "serving: batch<= {}, flush {}us, {} kernel lanes, queue {}{}; load: {mode} x{clients} clients",
+        scfg.max_batch,
+        scfg.flush_us,
+        scfg.threads,
+        scfg.queue,
+        if scfg.shed { " (shedding)" } else { "" }
     );
     let client = server.client();
     let report = run_load(&client, &nodes, &spec);
@@ -296,13 +300,14 @@ fn cmd_serve(flags: &[(String, String)]) -> Result<()> {
     let stats = server.stats();
     println!(
         "server: {} requests in {} batches (mean batch {:.1}, max {}), {} snapshot swaps, \
-         {} rejected",
+         {} rejected, {} shed",
         stats.requests,
         stats.batches,
         stats.mean_batch(),
         stats.max_batch,
         stats.swaps,
-        stats.rejected
+        stats.rejected,
+        stats.shed
     );
     drop(client);
     server.shutdown();

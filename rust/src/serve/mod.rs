@@ -35,5 +35,5 @@ pub mod snapshot;
 
 pub use cache::{EmbeddingCache, InferenceEngine};
 pub use loadgen::{run_load, LoadMode, LoadReport, LoadSpec};
-pub use server::{NodeScores, ServeConfig, ServeStats, Server, ServerClient};
+pub use server::{NodeScores, QueryError, ServeConfig, ServeStats, Server, ServerClient};
 pub use snapshot::{ModelSnapshot, SnapshotHub, SnapshotPublisher};

@@ -21,12 +21,14 @@
 //! requests of the previous batch keep their already-computed scores — a
 //! swap never tears a batch.
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::config::ExperimentConfig;
 use crate::graph::Dataset;
@@ -36,8 +38,9 @@ use crate::serve::cache::InferenceEngine;
 use crate::serve::snapshot::SnapshotHub;
 
 /// Serving knobs; every field is also an `ExperimentConfig` key
-/// (`serve_batch` / `serve_flush_us` / `serve_threads` / `serve_queue`), so
-/// `llcg serve` takes them from the same schema as everything else.
+/// (`serve_batch` / `serve_flush_us` / `serve_threads` / `serve_queue` /
+/// `serve_shed`), so `llcg serve` takes them from the same schema as
+/// everything else.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     /// flush a micro-batch at this many queued requests
@@ -49,6 +52,9 @@ pub struct ServeConfig {
     pub threads: usize,
     /// bounded request-queue depth (senders block when full — backpressure)
     pub queue: usize,
+    /// load-shedding: when the queue is full, reject the query immediately
+    /// with [`QueryError::Overloaded`] instead of blocking the sender
+    pub shed: bool,
 }
 
 impl Default for ServeConfig {
@@ -58,6 +64,7 @@ impl Default for ServeConfig {
             flush_us: 200,
             threads: 0,
             queue: 1024,
+            shed: false,
         }
     }
 }
@@ -70,6 +77,7 @@ impl ServeConfig {
             flush_us: cfg.serve_flush_us,
             threads: cfg.serve_threads,
             queue: cfg.serve_queue,
+            shed: cfg.serve_shed,
         }
     }
 }
@@ -95,6 +103,41 @@ enum Req {
     Shutdown,
 }
 
+/// Why a query was not answered. A real enum rather than a boxed message
+/// because the vendored `anyhow` shim has no downcasting: shed-aware
+/// clients must be able to tell "back off and retry" ([`Overloaded`])
+/// apart from a hard failure by matching, not by parsing strings.
+///
+/// [`Overloaded`]: QueryError::Overloaded
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QueryError {
+    /// shed mode only: the bounded request queue was full and the query was
+    /// rejected without blocking — retry later or slow down
+    Overloaded,
+    /// anything terminal: server shut down, node id out of range, engine
+    /// failure while scoring the batch
+    Failed(String),
+}
+
+impl QueryError {
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, QueryError::Overloaded)
+    }
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::Overloaded => write!(f, "serve: overloaded (queue full, request shed)"),
+            QueryError::Failed(msg) => write!(f, "serve: {msg}"),
+        }
+    }
+}
+
+// gives `client.query(..)?` in `anyhow::Result` contexts the blanket
+// `From<E: std::error::Error>` conversion of the shim
+impl std::error::Error for QueryError {}
+
 /// Dispatcher-side counters, readable via [`Server::stats`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeStats {
@@ -109,6 +152,9 @@ pub struct ServeStats {
     pub max_batch: usize,
     /// requests rejected before batching (out-of-range node id)
     pub rejected: u64,
+    /// requests shed at the queue in [`ServeConfig::shed`] mode (the queue
+    /// was full; the client got [`QueryError::Overloaded`] immediately)
+    pub shed: u64,
 }
 
 impl ServeStats {
@@ -126,33 +172,52 @@ impl ServeStats {
 /// [`Server::client`]; stop it with [`Server::shutdown`].
 pub struct Server {
     tx: SyncSender<Req>,
+    shed: bool,
     stats: Arc<Mutex<ServeStats>>,
     handle: Option<JoinHandle<()>>,
 }
 
-/// Cheap cloneable handle for issuing blocking queries; safe to share
-/// across client threads.
+/// Cheap cloneable handle for issuing queries; safe to share across client
+/// threads. In [`ServeConfig::shed`] mode a full queue rejects the query
+/// with [`QueryError::Overloaded`] instead of blocking.
 #[derive(Clone)]
 pub struct ServerClient {
     tx: SyncSender<Req>,
+    shed: bool,
+    stats: Arc<Mutex<ServeStats>>,
 }
 
 impl ServerClient {
     /// Score one node (blocks until the micro-batch containing this request
-    /// flushes). Errors if the node id is out of range or the server has
-    /// shut down.
-    pub fn query(&self, node: u32) -> Result<NodeScores> {
+    /// flushes — except in shed mode, where a full queue returns
+    /// [`QueryError::Overloaded`] without enqueueing). Fails if the node id
+    /// is out of range or the server has shut down.
+    pub fn query(&self, node: u32) -> std::result::Result<NodeScores, QueryError> {
         let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Req::Query {
-                node,
-                reply: reply_tx,
-            })
-            .map_err(|_| anyhow!("serve: server has shut down"))?;
+        let req = Req::Query {
+            node,
+            reply: reply_tx,
+        };
+        if self.shed {
+            match self.tx.try_send(req) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    self.stats.lock().expect("serve stats poisoned").shed += 1;
+                    return Err(QueryError::Overloaded);
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    return Err(QueryError::Failed("server has shut down".into()));
+                }
+            }
+        } else if self.tx.send(req).is_err() {
+            return Err(QueryError::Failed("server has shut down".into()));
+        }
         match reply_rx.recv() {
             Ok(Ok(scores)) => Ok(scores),
-            Ok(Err(msg)) => bail!("serve: {msg}"),
-            Err(_) => bail!("serve: server dropped the request (shutting down?)"),
+            Ok(Err(msg)) => Err(QueryError::Failed(msg)),
+            Err(_) => Err(QueryError::Failed(
+                "server dropped the request (shutting down?)".into(),
+            )),
         }
     }
 }
@@ -179,6 +244,7 @@ impl Server {
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(Server {
                 tx,
+                shed: cfg.shed,
                 stats,
                 handle: Some(handle),
             }),
@@ -196,6 +262,8 @@ impl Server {
     pub fn client(&self) -> ServerClient {
         ServerClient {
             tx: self.tx.clone(),
+            shed: self.shed,
+            stats: self.stats.clone(),
         }
     }
 
@@ -384,5 +452,65 @@ fn flush(
                 let _ = reply.send(Err(msg.clone()));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn client_over(tx: SyncSender<Req>, shed: bool) -> (ServerClient, Arc<Mutex<ServeStats>>) {
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        (
+            ServerClient {
+                tx,
+                shed,
+                stats: stats.clone(),
+            },
+            stats,
+        )
+    }
+
+    #[test]
+    fn shed_mode_rejects_on_full_queue_without_blocking() {
+        // a queue of depth 1, pre-filled, with no dispatcher draining it: a
+        // blocking client would hang here forever, a shedding one must
+        // return Overloaded immediately and count it
+        let (tx, rx) = sync_channel::<Req>(1);
+        tx.send(Req::Shutdown).expect("pre-fill");
+        let (client, stats) = client_over(tx, true);
+        let err = client.query(3).expect_err("queue is full");
+        assert_eq!(err, QueryError::Overloaded);
+        assert!(err.is_overloaded());
+        assert_eq!(stats.lock().unwrap().shed, 1);
+        // draining the queue makes room again; the next failure is the
+        // missing dispatcher (reply channel dies), not overload
+        drop(rx.recv().expect("the pre-filled request"));
+        drop(rx);
+        match client.query(3).expect_err("no dispatcher") {
+            QueryError::Failed(_) => {}
+            QueryError::Overloaded => panic!("room in the queue, must not shed"),
+        }
+        assert_eq!(stats.lock().unwrap().shed, 1, "hard failures are not sheds");
+    }
+
+    #[test]
+    fn non_shed_client_reports_shutdown_as_failed() {
+        let (tx, rx) = sync_channel::<Req>(1);
+        drop(rx);
+        let (client, stats) = client_over(tx, false);
+        let err = client.query(0).expect_err("server gone");
+        assert!(matches!(err, QueryError::Failed(_)));
+        assert!(!err.is_overloaded());
+        assert_eq!(stats.lock().unwrap().shed, 0);
+    }
+
+    #[test]
+    fn query_error_displays_and_converts() {
+        assert!(QueryError::Overloaded.to_string().contains("overloaded"));
+        assert!(QueryError::Failed("boom".into()).to_string().contains("boom"));
+        // the `?` bridge into anyhow contexts must keep working
+        let e: anyhow::Error = QueryError::Overloaded.into();
+        assert!(format!("{e:#}").contains("overloaded"));
     }
 }

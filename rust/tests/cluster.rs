@@ -170,6 +170,14 @@ fn event_summary(ev: &Event) -> String {
             val_score.to_bits(),
             global_loss.to_bits()
         ),
+        Event::WorkerRestarted { round, part } => {
+            format!("worker_restarted r={round} p={part}")
+        }
+        Event::CheckpointSaved { round, .. } => {
+            // the path embeds the (per-test, per-process) checkpoint dir;
+            // only the identity belongs in the digest
+            format!("checkpoint_saved r={round}")
+        }
         Event::RoundCompleted(r) => format!(
             "round_completed r={} k={} ll={:016x} gl={:016x} val={:016x} bytes={} cum={}",
             r.round,
@@ -388,6 +396,280 @@ fn queued_losses_match_per_step_losses() {
     for (ta, tb) in out_a.params.iter().zip(&state_a.params) {
         assert_eq!(ta.data, tb.data);
     }
+}
+
+// ---------------------------------------------------------------------------
+// fault tolerance: injected drops/crashes, quorum rounds, respawn
+// ---------------------------------------------------------------------------
+
+fn param_bytes_of(rt: &Runtime) -> u64 {
+    rt.meta("gcn_adam_tiny").unwrap().param_bytes()
+}
+
+#[test]
+fn crash_with_respawn_completes_all_rounds_near_fault_free_score() {
+    let rt = native_rt();
+    let mut clean_cfg = base_cfg();
+    clean_cfg.engine = Engine::Cluster;
+    clean_cfg.rounds = 6;
+    let clean = run_with(&clean_cfg, &rt);
+
+    let mut cfg = clean_cfg.clone();
+    cfg.net = "crash=1@3".into();
+    cfg.respawn = true;
+    let res = run_with(&cfg, &rt);
+
+    assert_eq!(res.records.len(), 6, "the crash must not end the run");
+    assert_eq!(res.total_respawns, 1);
+    assert_eq!(res.total_drops, 0, "a crash is not a message drop");
+    // worker 1 dies on receipt of round 3's broadcast: 3 of 4 params are
+    // averaged that round, and the supervisor respawns it at round 4
+    assert_eq!(res.records[2].quorum, 3);
+    assert_eq!(res.records[3].respawns, 1);
+    assert_eq!(res.records[3].quorum, 4, "respawned worker contributes again");
+    let pb = param_bytes_of(&rt);
+    for r in &res.records {
+        assert_eq!(
+            r.comm.up_bytes,
+            r.quorum as u64 * pb,
+            "round {}: up bytes must count integrated uploads only",
+            r.round
+        );
+    }
+    assert!(res.final_val.is_finite());
+    assert!(
+        (res.final_val - clean.final_val).abs() <= 0.05,
+        "crash+respawn drifted too far from the fault-free score: {} vs {}",
+        res.final_val,
+        clean.final_val
+    );
+}
+
+#[test]
+fn crash_without_respawn_drops_the_worker_for_good() {
+    let rt = native_rt();
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+    cfg.net = "crash=2@2".into();
+    cfg.respawn = false;
+    let res = run_with(&cfg, &rt);
+    assert_eq!(res.records.len(), cfg.rounds);
+    assert_eq!(res.total_respawns, 0);
+    assert_eq!(res.records[0].quorum, 4);
+    for r in &res.records[1..] {
+        assert_eq!(r.quorum, 3, "round {}: dead worker must stay out", r.round);
+    }
+}
+
+#[test]
+fn message_drops_are_tolerated_and_counted() {
+    let rt = native_rt();
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+    cfg.rounds = 6;
+    // 20% per-leg loss over 6 rounds x 4 workers x 2 legs: some drops are
+    // (deterministically, per the seeded draws) guaranteed in practice
+    cfg.net = "lan,drop=0.2".into();
+    let res = run_with(&cfg, &rt);
+    assert_eq!(res.records.len(), cfg.rounds);
+    assert!(res.total_drops > 0, "0 drops at drop=0.2 over 48 draws");
+    assert_eq!(
+        res.total_drops,
+        res.records.iter().map(|r| r.drops).sum::<u64>()
+    );
+    let pb = param_bytes_of(&rt);
+    for r in &res.records {
+        assert!(r.quorum <= cfg.parts, "round {}", r.round);
+        assert_eq!(r.comm.up_bytes, r.quorum as u64 * pb, "round {}", r.round);
+        // a down-leg drop skips that worker's download
+        assert!(r.comm.down_bytes <= cfg.parts as u64 * pb, "round {}", r.round);
+    }
+    assert!(res.final_val.is_finite());
+    // determinism: the same spec + seed reproduces the run bit-for-bit,
+    // drops and all
+    let again = run_with(&cfg, &rt);
+    assert_eq!(res.total_drops, again.total_drops);
+    for (a, b) in res.records.iter().zip(&again.records) {
+        assert_eq!(a.local_loss.to_bits(), b.local_loss.to_bits());
+        assert_eq!(a.quorum, b.quorum);
+        assert_eq!(a.drops, b.drops);
+    }
+}
+
+#[test]
+fn round_timeout_defers_late_uploads_one_round() {
+    let rt = native_rt();
+    // lan modeled latency (0.5 ms) >> the 1 us deadline: every upload is
+    // late, so each round averages the previous round's held uploads
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+    cfg.net = "lan".into();
+    cfg.round_timeout = 1e-6;
+    let res = run_with(&cfg, &rt);
+    assert_eq!(res.records.len(), cfg.rounds);
+    assert_eq!(res.records[0].quorum, 0, "round 1 has nothing held yet");
+    assert!(
+        res.records[0].local_loss.is_nan(),
+        "no contributors -> no local loss to report"
+    );
+    for r in &res.records[1..] {
+        assert_eq!(r.quorum, cfg.parts, "round {}: staleness-1 re-admission", r.round);
+    }
+    // the final round's fresh uploads have no next round: discarded as drops
+    assert_eq!(res.records.last().unwrap().drops, cfg.parts as u64);
+
+    // quorum backfill: K late uploads are admitted immediately instead
+    let mut qcfg = cfg.clone();
+    qcfg.quorum = 2;
+    let qres = run_with(&qcfg, &rt);
+    assert_eq!(qres.records[0].quorum, 2, "round 1 backfills to K from the late set");
+    for r in &qres.records {
+        assert!(r.quorum >= 2, "round {}: quorum floor", r.round);
+    }
+    assert!(qres.final_val.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint / resume
+// ---------------------------------------------------------------------------
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("llcg_cluster_ckpt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn resume_replays_remaining_rounds_bit_for_bit() {
+    let rt = native_rt();
+    for engine in [Engine::Sequential, Engine::Cluster] {
+        let mut full_cfg = base_cfg();
+        full_cfg.engine = engine;
+        let full = run_with(&full_cfg, &rt);
+
+        // the same run writing checkpoints every 2 rounds must not drift
+        let dir = ckpt_dir(engine.name());
+        let mut ck_cfg = full_cfg.clone();
+        ck_cfg.checkpoint_every = 2;
+        ck_cfg.checkpoint_dir = dir.display().to_string();
+        let with_ck = run_with(&ck_cfg, &rt);
+        for (a, b) in full.records.iter().zip(&with_ck.records) {
+            assert_eq!(
+                a.local_loss.to_bits(),
+                b.local_loss.to_bits(),
+                "{engine:?} round {}: checkpointing perturbed the run",
+                a.round
+            );
+            assert_eq!(a.val_score.to_bits(), b.val_score.to_bits());
+            assert_eq!(a.cum_bytes, b.cum_bytes);
+        }
+        assert_eq!(full.final_test.to_bits(), with_ck.final_test.to_bits());
+        assert!(dir.join("round_2").join("meta.json").is_file());
+        assert!(dir.join("round_4").join("meta.json").is_file());
+
+        // resuming from round 2 replays rounds 3..4 bit-for-bit
+        let mut res_cfg = full_cfg.clone();
+        res_cfg.resume = dir.join("round_2").display().to_string();
+        let resumed = run_with(&res_cfg, &rt);
+        assert_eq!(resumed.records.len(), 2, "{engine:?}: rounds 3 and 4 remain");
+        for (a, b) in full.records[2..].iter().zip(&resumed.records) {
+            assert_eq!(a.round, b.round, "{engine:?}");
+            assert_eq!(
+                a.local_loss.to_bits(),
+                b.local_loss.to_bits(),
+                "{engine:?} round {}: resume forked the local loss stream",
+                a.round
+            );
+            assert_eq!(
+                a.global_loss.to_bits(),
+                b.global_loss.to_bits(),
+                "{engine:?} round {}: resume forked the correction stream",
+                a.round
+            );
+            assert_eq!(
+                a.val_score.to_bits(),
+                b.val_score.to_bits(),
+                "{engine:?} round {}: resume forked the eval stream",
+                a.round
+            );
+            assert_eq!(a.comm.total(), b.comm.total(), "{engine:?}");
+            assert_eq!(a.cum_bytes, b.cum_bytes, "{engine:?}: cumulative bytes carry over");
+        }
+        assert_eq!(
+            full.final_val.to_bits(),
+            resumed.final_val.to_bits(),
+            "{engine:?}"
+        );
+        assert_eq!(
+            full.final_test.to_bits(),
+            resumed.final_test.to_bits(),
+            "{engine:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn resume_works_under_faults_on_the_cluster_engine() {
+    // checkpoint at round 2 of a run whose worker 3 crashes at round 2
+    // (leaving a dead entry in the checkpoint), then resume: the respawn
+    // happens at round 3 of the resumed run, and the run completes
+    let rt = native_rt();
+    let dir = ckpt_dir("faulted");
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+    cfg.net = "crash=3@2".into();
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = dir.display().to_string();
+    let full = run_with(&cfg, &rt);
+    assert_eq!(full.records.len(), cfg.rounds);
+    assert_eq!(full.total_respawns, 1);
+
+    let mut res_cfg = cfg.clone();
+    res_cfg.checkpoint_every = 0;
+    res_cfg.resume = dir.join("round_2").display().to_string();
+    let resumed = run_with(&res_cfg, &rt);
+    assert_eq!(resumed.records.len(), 2);
+    assert_eq!(
+        resumed.records[0].respawns, 1,
+        "the checkpointed dead worker respawns on resume"
+    );
+    assert_eq!(resumed.records[0].quorum, 4);
+    assert!(resumed.final_val.is_finite());
+
+    // the sequential engine must refuse a checkpoint with dead workers
+    let mut seq_cfg = res_cfg.clone();
+    seq_cfg.engine = Engine::Sequential;
+    seq_cfg.net = "ideal".into();
+    let ds = generators::by_name(&seq_cfg.dataset, seq_cfg.seed).unwrap();
+    let err = driver::run_experiment(&seq_cfg, &ds, &rt).unwrap_err();
+    // (digest mismatch: the checkpoint pins net="crash=3@2" — that alone
+    // rejects it; with a matching net it would be the dead-worker refusal)
+    assert!(
+        format!("{err:#}").contains("different experiment"),
+        "unhelpful error: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fault_and_checkpoint_event_streams_have_the_documented_shape() {
+    let rt = native_rt();
+    let dir = ckpt_dir("events");
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+    cfg.net = "crash=0@2".into();
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = dir.display().to_string();
+    let evs = collect_events(&rt, &cfg);
+    let count = |prefix: &str| evs.iter().filter(|s| s.starts_with(prefix)).count();
+    assert_eq!(count("worker_restarted"), 1);
+    assert!(evs.contains(&"worker_restarted r=3 p=0".to_string()), "{evs:?}");
+    assert_eq!(count("checkpoint_saved"), 2, "rounds 2 and 4");
+    assert!(evs.contains(&"checkpoint_saved r=2".to_string()));
+    // crash at round 2: worker 0 contributes to rounds 1, 3, 4 only
+    assert_eq!(count("worker_round"), cfg.rounds * cfg.parts - 1);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // ---------------------------------------------------------------------------

@@ -130,6 +130,7 @@ fn server_preserves_parity_and_hot_swaps() {
             flush_us: 300,
             threads: 1,
             queue: 64,
+            shed: false,
         },
     )
     .unwrap();
