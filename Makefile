@@ -17,9 +17,12 @@
 #                    cached query latency, batch=1 vs micro-batched, and
 #                    sustained throughput at 1/2/4/8 server threads
 #                    (writes BENCH_serve.json)
+#   make bench-obs   instrumentation-overhead benches: disabled/enabled span
+#                    cost, counter/histogram record cost, and an end-to-end
+#                    round with tracing off vs on (writes BENCH_obs.json)
 #   make test        quick test run
 
-.PHONY: artifacts check fmt test bench bench-cluster bench-cluster-faults bench-kernels bench-serve clean
+.PHONY: artifacts check fmt test bench bench-cluster bench-cluster-faults bench-kernels bench-serve bench-obs clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -49,6 +52,9 @@ bench-kernels:
 
 bench-serve:
 	cargo bench -- serve
+
+bench-obs:
+	cargo bench -- obs/
 
 clean:
 	cargo clean

@@ -17,10 +17,15 @@
 //!                      threads, whole-step latency per engine, and
 //!                      staged-vs-pinned block-input upload
 //!                      (`make bench-kernels` -> BENCH_kernels.json)
+//!   obs                instrumentation overhead: disabled/enabled span
+//!                      cost, counter + histogram record cost, and the same
+//!                      end-to-end round with tracing off vs on
+//!                      (`make bench-obs` -> BENCH_obs.json)
 //!
 //! Filter with `cargo bench -- <substring>`. On exit every section is also
 //! written as machine-readable `BENCH_<section>.json` (mean/p50/p99 per
-//! row) so the perf trajectory can be tracked across commits.
+//! row, stamped with the obs schema version) so the perf trajectory can be
+//! tracked across commits.
 //!
 //! Runs against `artifacts/` (PJRT) when present and loadable, otherwise
 //! against the generated native-backend manifest — the section layout and
@@ -99,6 +104,7 @@ impl Bench {
         }
         for (sec, rows) in sections {
             let j = Json::obj(vec![
+                ("schema", Json::num(llcg::obs::SCHEMA_VERSION as f64)),
                 ("section", Json::str(sec)),
                 ("unit", Json::str("ms")),
                 (
@@ -783,6 +789,89 @@ fn main() {
                         if let Some(res) = &last {
                             report(&format!("crash=1@3 respawn={respawn}"), res);
                         }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- obs: instrumentation overhead ---------------------------------------
+    // Micro rows price the primitives (a disabled span must stay at one
+    // relaxed load + branch), then the same end-to-end LLCG round runs with
+    // tracing off vs on so BENCH_obs.json carries the acceptance number:
+    // the off-row must sit within noise of an uninstrumented build, and the
+    // on/off ratio is the real cost of `--trace`.
+    // (`make bench-obs` -> BENCH_obs.json)
+    if b.enabled("obs/") {
+        use llcg::obs;
+
+        obs::set_enabled(false);
+        b.run("obs/span-disabled(x10k)", 3, 50, || {
+            for _ in 0..10_000 {
+                std::hint::black_box(obs::span("bench.obs"));
+            }
+        });
+        obs::set_enabled(true);
+        b.run("obs/span-enabled(x10k)", 3, 30, || {
+            for _ in 0..10_000 {
+                std::hint::black_box(obs::span("bench.obs"));
+            }
+        });
+        obs::set_enabled(false);
+        let drained = obs::take_spans().len();
+        println!("  -> drained {drained} bench spans");
+        let c = obs::counter("bench.counter");
+        b.run("obs/counter-inc(x10k)", 3, 50, || {
+            for _ in 0..10_000 {
+                c.inc();
+            }
+        });
+        let h = obs::histogram("bench.hist-record(x10k)");
+        b.run("obs/histogram-record(x10k)", 3, 50, || {
+            for _ in 0..10_000 {
+                h.record_ns(std::hint::black_box(1_234));
+            }
+        });
+
+        match Runtime::load_or_native("artifacts") {
+            Err(e) => eprintln!("(no runtime available — skipping obs round benches: {e:#})"),
+            Ok((rt, _adir)) => {
+                if rt.meta("gcn_adam_tiny").is_err() || rt.warmup("gcn_adam_tiny").is_err() {
+                    eprintln!("(no gcn/tiny artifact — skipping obs round benches)");
+                } else {
+                    let data = Arc::new(generators::by_name("tiny", 0).unwrap());
+                    let exp = ExperimentBuilder::new()
+                        .with_dataset(data)
+                        .arch("gcn")
+                        .algorithm(Algorithm::Llcg)
+                        .parts(4)
+                        .rounds(1)
+                        .set("local_steps", "4")
+                        .unwrap()
+                        .eval_every(1)
+                        .eval_max_nodes(64)
+                        .build()
+                        .unwrap();
+                    let off_row = "obs/round-trace-off(tiny,P=4,K=4)";
+                    obs::set_enabled(false);
+                    b.run(off_row, 1, 8, || {
+                        std::hint::black_box(exp.launch(&rt).finish().unwrap());
+                    });
+                    let on_row = "obs/round-trace-on(tiny,P=4,K=4)";
+                    obs::set_enabled(true);
+                    b.run(on_row, 1, 8, || {
+                        std::hint::black_box(exp.launch(&rt).finish().unwrap());
+                        // draining is part of what --trace pays, and keeps the
+                        // sink bounded across iterations
+                        std::hint::black_box(obs::take_spans().len());
+                    });
+                    obs::set_enabled(false);
+                    let _ = obs::take_spans();
+                    if let (Some(off), Some(on)) = (b.mean_of(off_row), b.mean_of(on_row)) {
+                        println!(
+                            "  -> tracing-on overhead vs off: {:+.2}%",
+                            (on / off - 1.0) * 100.0
+                        );
                     }
                 }
             }

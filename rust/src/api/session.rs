@@ -23,6 +23,7 @@ use crate::coordinator::{Algorithm, CorrectionBatch, Schedule};
 use crate::graph::Dataset;
 use crate::runtime::{Runtime, Tensor};
 use crate::serve::{SnapshotHub, SnapshotPublisher};
+use crate::util::Json;
 
 // ---------------------------------------------------------------------------
 // events
@@ -89,6 +90,54 @@ impl Event {
             Event::RoundCompleted(_) => "round_completed",
             Event::Finished(_) => "finished",
         }
+    }
+
+    /// One `--log-json` line body: `{"event": kind, ...payload}`. Round
+    /// and run payloads reuse `RoundRecord::to_json` / `RunResult::to_json`,
+    /// so the streamed rows match the `--json` report field-for-field.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("event", Json::str(self.kind()))];
+        match self {
+            Event::RoundStarted { round, local_steps } => {
+                fields.push(("round", Json::num(*round as f64)));
+                fields.push(("local_steps", Json::num(*local_steps as f64)));
+            }
+            Event::WorkerRoundCompleted {
+                round,
+                part,
+                compute_s,
+                net_s,
+            } => {
+                fields.push(("round", Json::num(*round as f64)));
+                fields.push(("part", Json::num(*part as f64)));
+                fields.push(("compute_s", Json::num(*compute_s)));
+                fields.push(("net_s", Json::num(*net_s)));
+            }
+            Event::CorrectionApplied { round, steps } => {
+                fields.push(("round", Json::num(*round as f64)));
+                fields.push(("steps", Json::num(*steps as f64)));
+            }
+            Event::EvalCompleted {
+                round,
+                val_score,
+                global_loss,
+            } => {
+                fields.push(("round", Json::num(*round as f64)));
+                fields.push(("val_score", Json::num(*val_score)));
+                fields.push(("global_loss", Json::num(*global_loss)));
+            }
+            Event::WorkerRestarted { round, part } => {
+                fields.push(("round", Json::num(*round as f64)));
+                fields.push(("part", Json::num(*part as f64)));
+            }
+            Event::CheckpointSaved { round, path } => {
+                fields.push(("round", Json::num(*round as f64)));
+                fields.push(("path", Json::str(path)));
+            }
+            Event::RoundCompleted(r) => fields.push(("record", r.to_json())),
+            Event::Finished(r) => fields.push(("result", r.to_json())),
+        }
+        Json::obj(fields)
     }
 }
 

@@ -232,6 +232,7 @@ impl Checkpoint {
     /// round directory. `tensors.bin` lands before `meta.json`, so a
     /// directory with a readable meta is always complete.
     pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        let _s = crate::obs::span_round("checkpoint.save", self.round as i64);
         let rd = round_dir(dir, self.round);
         std::fs::create_dir_all(&rd)
             .with_context(|| format!("creating checkpoint dir {}", rd.display()))?;
@@ -280,14 +281,19 @@ impl Checkpoint {
             ),
         ]);
         let meta_path = rd.join("meta.json");
-        std::fs::write(&meta_path, meta.to_string_pretty())
+        let meta_text = meta.to_string_pretty();
+        std::fs::write(&meta_path, &meta_text)
             .with_context(|| format!("writing {}", meta_path.display()))?;
+        crate::obs::counter("checkpoint.saves").inc();
+        crate::obs::counter("checkpoint.bytes_written")
+            .add((bin.len() + meta_text.len()) as u64);
         Ok(rd)
     }
 
     /// Load from `path`: either a `round_<r>` directory itself, or a parent
     /// checkpoint directory (the highest complete round wins).
     pub fn load(path: &Path) -> Result<Checkpoint> {
+        let _s = crate::obs::span("checkpoint.load");
         let rd = resolve_round_dir(path)?;
         let meta_path = rd.join("meta.json");
         let text = std::fs::read_to_string(&meta_path)
@@ -371,6 +377,8 @@ impl Checkpoint {
                 bytes.len() - off
             );
         }
+        crate::obs::counter("checkpoint.loads").inc();
+        crate::obs::counter("checkpoint.bytes_read").add((bytes.len() + text.len()) as u64);
         Ok(Checkpoint {
             round,
             cum_bytes,

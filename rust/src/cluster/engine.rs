@@ -538,6 +538,7 @@ fn run_rounds(
                 break; // RunControl::stop(): end at the round boundary
             }
             let t_round = Instant::now();
+            let _span_round = crate::obs::span_round("round", round as i64);
             let k = if is_fullsync {
                 1
             } else {
@@ -591,6 +592,7 @@ fn run_rounds(
             }
 
             // ---- broadcast ParamsDown (and the correction snapshot) -------
+            let span_bcast = crate::obs::span_round("round.broadcast", round as i64);
             let mut drops_r: u64 = 0;
             let mut expected: Vec<bool> = vec![false; parts_n];
             for (p, tx) in down_txs.iter().enumerate() {
@@ -635,7 +637,10 @@ fn run_rounds(
                     .map_err(|_| anyhow!("correction thread terminated early"))?;
             }
 
+            drop(span_bcast);
+
             // ---- collect ParamsUp + RemoteFeatures ------------------------
+            let span_collect = crate::obs::span_round("round.collect", round as i64);
             let mut ups: Vec<Option<ParamsUp>> = (0..parts_n).map(|_| None).collect();
             let mut late_next: Vec<Option<ParamsUp>> = (0..parts_n).map(|_| None).collect();
             let mut need: usize = expected.iter().filter(|e| **e).count();
@@ -714,6 +719,8 @@ fn run_rounds(
                 }
             }
 
+            drop(span_collect);
+
             // ---- integrate: last round's late arrivals + this round's
             // on-time uploads (a fresh upload supersedes a stale held one,
             // which is then discarded as a drop) ----------------------------
@@ -783,39 +790,49 @@ fn run_rounds(
 
             // ---- server: average (+ correct) + eval -----------------------
             let t_server = Instant::now();
-            let states: Vec<ModelState> = contributors
-                .into_iter()
-                .flatten()
-                .map(|u| ModelState {
-                    params: u.params,
-                    opt: Vec::new(),
-                })
-                .collect();
-            if !states.is_empty() {
-                // uniform mean over whoever contributed; with zero
-                // contributors the global model carries over unchanged
-                let refs: Vec<&ModelState> = states.iter().collect();
-                ModelState::average_params_into(&mut global_params, &refs);
+            let mut phases = driver::PhaseTimes::default();
+            {
+                let _s = crate::obs::span_round("server.average", round as i64);
+                let states: Vec<ModelState> = contributors
+                    .into_iter()
+                    .flatten()
+                    .map(|u| ModelState {
+                        params: u.params,
+                        opt: Vec::new(),
+                    })
+                    .collect();
+                if !states.is_empty() {
+                    // uniform mean over whoever contributed; with zero
+                    // contributors the global model carries over unchanged
+                    let refs: Vec<&ModelState> = states.iter().collect();
+                    ModelState::average_params_into(&mut global_params, &refs);
+                }
             }
+            phases.avg_s = t_server.elapsed().as_secs_f64();
 
             let (val_score, global_loss) = if pipe_corr {
                 // the correction of θ_r overlapped the local epoch; apply
                 // its delta on top of the fresh average
-                match cres_rx.recv() {
-                    Ok(Ok((delta, _corr_s))) => {
-                        for (g, d) in global_params.iter_mut().zip(&delta) {
-                            for (gv, dv) in g.data.iter_mut().zip(&d.data) {
-                                *gv += dv;
+                let t_corr = Instant::now();
+                {
+                    let _s = crate::obs::span_round("server.correction", round as i64);
+                    match cres_rx.recv() {
+                        Ok(Ok((delta, _corr_s))) => {
+                            for (g, d) in global_params.iter_mut().zip(&delta) {
+                                for (gv, dv) in g.data.iter_mut().zip(&d.data) {
+                                    *gv += dv;
+                                }
                             }
                         }
-                        ctx.emit(Event::CorrectionApplied {
-                            round,
-                            steps: cfg.correction_steps,
-                        });
+                        Ok(Err(msg)) => bail!("server correction failed: {msg}"),
+                        Err(_) => bail!("correction thread disconnected mid-round"),
                     }
-                    Ok(Err(msg)) => bail!("server correction failed: {msg}"),
-                    Err(_) => bail!("correction thread disconnected mid-round"),
                 }
+                phases.corr_s = t_corr.elapsed().as_secs_f64();
+                ctx.emit(Event::CorrectionApplied {
+                    round,
+                    steps: cfg.correction_steps,
+                });
                 driver::eval_if_due(
                     rt,
                     &eval_name,
@@ -825,6 +842,7 @@ fn run_rounds(
                     &local_builder,
                     &mut eval_rng,
                     round,
+                    &mut phases,
                     ctx,
                 )?
             } else {
@@ -845,6 +863,7 @@ fn run_rounds(
                     inline_corr_rng.as_mut().expect("sync keeps rng"),
                     &mut eval_rng,
                     round,
+                    &mut phases,
                     ctx,
                 )?
             };
@@ -880,6 +899,7 @@ fn run_rounds(
                 server_time_s: server_time,
                 net_time_s: net_time,
                 wall_time_s: t_round.elapsed().as_secs_f64(),
+                phases,
                 drops: drops_r,
                 respawns: respawns_r,
                 quorum: quorum_r,
@@ -893,6 +913,9 @@ fn run_rounds(
 
             // ---- round-boundary checkpoint --------------------------------
             if ckpt_due {
+                // covers the snapshot barrier (gather) plus the save I/O;
+                // the save itself also records a "checkpoint.save" span
+                let _s = crate::obs::span_round("checkpoint.round_barrier", round as i64);
                 // gather full worker states (params + optimizer moments:
                 // worker Adam state persists across rounds); dead workers
                 // are recorded as such and stored as their respawn template
@@ -1158,10 +1181,16 @@ fn run_async(
                     });
                     // fold the push into the running average (weight 1/P)
                     let t_fold = Instant::now();
-                    let alpha = 1.0 / parts_n as f32;
-                    for (g, w) in global_params.iter_mut().zip(&u.params) {
-                        for (gv, &wv) in g.data.iter_mut().zip(&w.data) {
-                            *gv += alpha * (wv - *gv);
+                    {
+                        let _s = crate::obs::span_round(
+                            "server.average",
+                            (records.len() + 1) as i64,
+                        );
+                        let alpha = 1.0 / parts_n as f32;
+                        for (g, w) in global_params.iter_mut().zip(&u.params) {
+                            for (gv, &wv) in g.data.iter_mut().zip(&w.data) {
+                                *gv += alpha * (wv - *gv);
+                            }
                         }
                     }
                     fold_time += t_fold.elapsed().as_secs_f64();
@@ -1173,6 +1202,12 @@ fn run_async(
                         pushes = 0;
                         let round = records.len() + 1;
                         let t_server = Instant::now();
+                        // the per-push folds above are this window's
+                        // averaging cost
+                        let mut phases = driver::PhaseTimes {
+                            avg_s: fold_time,
+                            ..Default::default()
+                        };
                         let (val_score, global_loss) = driver::server_round_epilogue(
                             rt,
                             cfg,
@@ -1189,6 +1224,7 @@ fn run_async(
                             &mut corr_rng,
                             &mut eval_rng,
                             round,
+                            &mut phases,
                             ctx,
                         )?;
                         cum_bytes += comm.total();
@@ -1212,6 +1248,7 @@ fn run_async(
                             server_time_s: fold_time + t_server.elapsed().as_secs_f64(),
                             net_time_s: net_time,
                             wall_time_s: t_window.elapsed().as_secs_f64(),
+                            phases,
                             drops: 0,
                             respawns: 0,
                             quorum: parts_n,

@@ -47,6 +47,22 @@ pub struct PartInfo {
     pub storage_bytes: u64,
 }
 
+/// Server-phase wall breakdown for one round, attributed to the round that
+/// ran the phase: eval on an `eval_every` cadence lands in the round that
+/// triggered it (asserted by the event-parity test in `tests/obs.rs`), and
+/// `avg_s + corr_s + eval_s` accounts for `server_time_s` up to the
+/// epilogue's own bookkeeping.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    /// parameter averaging (async engine: the window's accumulated folds)
+    pub avg_s: f64,
+    /// server correction steps (0 when the algorithm has none; pipelined
+    /// mode runs correction overlapped and reports the delta-apply time)
+    pub corr_s: f64,
+    /// round-boundary evaluation (0 on non-eval rounds)
+    pub eval_s: f64,
+}
+
 /// Per-round measurements — one row of every figure in the paper.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
@@ -72,6 +88,9 @@ pub struct RoundRecord {
     pub net_time_s: f64,
     /// measured end-to-end wall-clock of the round on the server
     pub wall_time_s: f64,
+    /// where `server_time_s` went: averaging / correction / eval, each
+    /// attributed to the round that ran it
+    pub phases: PhaseTimes,
     /// messages lost this round (injected drops + discarded stale params)
     pub drops: u64,
     /// workers respawned at the start of this round
@@ -105,6 +124,33 @@ pub struct RunResult {
     pub total_respawns: u32,
 }
 
+impl RoundRecord {
+    /// One JSON row, shared by `RunResult::to_json` and the `--log-json`
+    /// event stream (so both shapes change together, under one `schema`
+    /// version).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("local_steps", Json::num(self.local_steps as f64)),
+            ("local_loss", Json::num(self.local_loss)),
+            ("global_loss", Json::num(self.global_loss)),
+            ("val_score", Json::num(self.val_score)),
+            ("bytes", Json::num(self.comm.total() as f64)),
+            ("cum_bytes", Json::num(self.cum_bytes as f64)),
+            ("worker_time_s", Json::num(self.worker_time_s)),
+            ("server_time_s", Json::num(self.server_time_s)),
+            ("net_time_s", Json::num(self.net_time_s)),
+            ("wall_time_s", Json::num(self.wall_time_s)),
+            ("avg_time_s", Json::num(self.phases.avg_s)),
+            ("corr_time_s", Json::num(self.phases.corr_s)),
+            ("eval_time_s", Json::num(self.phases.eval_s)),
+            ("drops", Json::num(self.drops as f64)),
+            ("respawns", Json::num(self.respawns as f64)),
+            ("quorum", Json::num(self.quorum as f64)),
+        ])
+    }
+}
+
 impl RunResult {
     pub fn avg_round_mb(&self) -> f64 {
         self.avg_round_bytes / 1e6
@@ -112,6 +158,7 @@ impl RunResult {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("schema", Json::num(crate::obs::SCHEMA_VERSION as f64)),
             ("algorithm", Json::str(self.algorithm.name())),
             ("dataset", Json::str(&self.dataset)),
             ("arch", Json::str(&self.arch)),
@@ -126,29 +173,7 @@ impl RunResult {
             ("total_respawns", Json::num(self.total_respawns as f64)),
             (
                 "rounds",
-                Json::arr(
-                    self.records
-                        .iter()
-                        .map(|r| {
-                            Json::obj(vec![
-                                ("round", Json::num(r.round as f64)),
-                                ("local_steps", Json::num(r.local_steps as f64)),
-                                ("local_loss", Json::num(r.local_loss)),
-                                ("global_loss", Json::num(r.global_loss)),
-                                ("val_score", Json::num(r.val_score)),
-                                ("bytes", Json::num(r.comm.total() as f64)),
-                                ("cum_bytes", Json::num(r.cum_bytes as f64)),
-                                ("worker_time_s", Json::num(r.worker_time_s)),
-                                ("server_time_s", Json::num(r.server_time_s)),
-                                ("net_time_s", Json::num(r.net_time_s)),
-                                ("wall_time_s", Json::num(r.wall_time_s)),
-                                ("drops", Json::num(r.drops as f64)),
-                                ("respawns", Json::num(r.respawns as f64)),
-                                ("quorum", Json::num(r.quorum as f64)),
-                            ])
-                        })
-                        .collect(),
-                ),
+                Json::arr(self.records.iter().map(|r| r.to_json()).collect()),
             ),
         ])
     }
@@ -565,24 +590,34 @@ pub(crate) fn run_worker_round(
     mut on_feature_bytes: impl FnMut(u64),
 ) -> Result<WorkerRoundOut> {
     let t0 = std::time::Instant::now();
+    let _span_round = crate::obs::span_round("worker.round", round as i64);
     let mut net_s = 0f64;
 
-    // receive global params over the modeled link
-    let t_down = netm.transfer_s(param_bytes, info.part, round as u64, net::LEG_DOWN);
-    netm.sleep(t_down);
-    net_s += t_down;
-    if round == 1 && info.storage_bytes > 0 {
-        // SubgraphApprox one-time feature storage rides the first download
-        let t_store =
-            netm.transfer_s(info.storage_bytes, info.part, round as u64, net::LEG_STORAGE);
-        netm.sleep(t_store);
-        net_s += t_store;
+    // receive global params over the modeled link ("net.*" spans measure
+    // the *injected sleep*, i.e. modeled time made wall — see obs/README)
+    {
+        let _s = crate::obs::span_round("net.down", round as i64);
+        let t_down = netm.transfer_s(param_bytes, info.part, round as u64, net::LEG_DOWN);
+        netm.sleep(t_down);
+        net_s += t_down;
+        if round == 1 && info.storage_bytes > 0 {
+            // SubgraphApprox one-time feature storage rides the first download
+            let t_store = netm.transfer_s(
+                info.storage_bytes,
+                info.part,
+                round as u64,
+                net::LEG_STORAGE,
+            );
+            netm.sleep(t_store);
+            net_s += t_store;
+        }
     }
     state.copy_params_from(global);
 
     let mut loss_sum = 0f64;
     let mut loss_n = 0usize;
     if !info.train_ids.is_empty() {
+        let _s = crate::obs::span_round("worker.local_steps", round as i64);
         let mut rng = super::worker_rng(cfg.seed, info.part as usize, round);
         let mut batches = BatchIter::new(&info.train_ids, builder.b, &mut rng);
         // model + optimizer state stay device-resident across all K local
@@ -618,9 +653,12 @@ pub(crate) fn run_worker_round(
     }
 
     // send params back over the modeled link
-    let t_up = netm.transfer_s(param_bytes, info.part, round as u64, net::LEG_UP);
-    netm.sleep(t_up);
-    net_s += t_up;
+    {
+        let _s = crate::obs::span_round("net.up", round as i64);
+        let t_up = netm.transfer_s(param_bytes, info.part, round as u64, net::LEG_UP);
+        netm.sleep(t_up);
+        net_s += t_up;
+    }
 
     Ok(WorkerRoundOut {
         loss_sum,
@@ -684,23 +722,29 @@ pub(crate) fn server_round_epilogue(
     corr_rng: &mut Pcg64,
     eval_rng: &mut Pcg64,
     round: usize,
+    phases: &mut PhaseTimes,
     ctx: &mut RunCtx<'_>,
 ) -> Result<(f64, f64)> {
     if cfg.algorithm.corrects() && cfg.correction_steps > 0 {
-        run_correction_steps(
-            rt,
-            server_train_name,
-            cfg,
-            ds,
-            assignment,
-            dims.b,
-            server_state,
-            global_params,
-            corr_builder,
-            corr_arena,
-            corr_rng,
-        )?;
-        Tensor::copy_all(global_params, &server_state.params);
+        let t_corr = std::time::Instant::now();
+        {
+            let _s = crate::obs::span_round("server.correction", round as i64);
+            run_correction_steps(
+                rt,
+                server_train_name,
+                cfg,
+                ds,
+                assignment,
+                dims.b,
+                server_state,
+                global_params,
+                corr_builder,
+                corr_arena,
+                corr_rng,
+            )?;
+            Tensor::copy_all(global_params, &server_state.params);
+        }
+        phases.corr_s = t_corr.elapsed().as_secs_f64();
         ctx.emit(Event::CorrectionApplied {
             round,
             steps: cfg.correction_steps,
@@ -715,12 +759,17 @@ pub(crate) fn server_round_epilogue(
         local_builder,
         eval_rng,
         round,
+        phases,
         ctx,
     )
 }
 
 /// The eval-cadence rule in one place: evaluate on `eval_every` rounds and
 /// on the final round (emitting `EvalCompleted`), otherwise report NaNs.
+/// The eval span and `phases.eval_s` are tagged with the round that
+/// *triggered* the eval, so under `eval_every > 1` its cost is attributed
+/// to this round's record — never smeared into the rounds after it
+/// (asserted by the event-parity test in `tests/obs.rs`).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn eval_if_due(
     rt: &Runtime,
@@ -731,11 +780,16 @@ pub(crate) fn eval_if_due(
     builder: &BlockBuilder,
     eval_rng: &mut Pcg64,
     round: usize,
+    phases: &mut PhaseTimes,
     ctx: &mut RunCtx<'_>,
 ) -> Result<(f64, f64)> {
     if round % cfg.eval_every == 0 || round == cfg.rounds {
-        let (val_score, global_loss) =
-            eval_round(rt, eval_name, global_params, ds, cfg, builder, eval_rng)?;
+        let t_eval = std::time::Instant::now();
+        let (val_score, global_loss) = {
+            let _s = crate::obs::span_round("server.eval", round as i64);
+            eval_round(rt, eval_name, global_params, ds, cfg, builder, eval_rng)?
+        };
+        phases.eval_s = t_eval.elapsed().as_secs_f64();
         ctx.emit(Event::EvalCompleted {
             round,
             val_score,
@@ -1012,6 +1066,7 @@ fn run_sequential(
             break; // RunControl::stop(): end at the round boundary
         }
         let t_round = std::time::Instant::now();
+        let _span_round = crate::obs::span_round("round", round as i64);
         let k = if is_fullsync {
             1
         } else {
@@ -1066,8 +1121,13 @@ fn run_sequential(
 
         // ---- server: average + correct + eval -----------------------------
         let t_server = std::time::Instant::now();
-        let refs: Vec<&ModelState> = workers.iter().collect();
-        ModelState::average_params_into(&mut global_params, &refs);
+        let mut phases = PhaseTimes::default();
+        {
+            let _s = crate::obs::span_round("server.average", round as i64);
+            let refs: Vec<&ModelState> = workers.iter().collect();
+            ModelState::average_params_into(&mut global_params, &refs);
+        }
+        phases.avg_s = t_server.elapsed().as_secs_f64();
         let (val_score, global_loss) = server_round_epilogue(
             rt,
             cfg,
@@ -1084,6 +1144,7 @@ fn run_sequential(
             &mut corr_rng,
             &mut eval_rng,
             round,
+            &mut phases,
             ctx,
         )?;
         let server_time = t_server.elapsed().as_secs_f64();
@@ -1105,6 +1166,7 @@ fn run_sequential(
             server_time_s: server_time,
             net_time_s: net_time,
             wall_time_s: t_round.elapsed().as_secs_f64(),
+            phases,
             drops: 0,
             respawns: 0,
             quorum: parts.len(),

@@ -23,6 +23,11 @@
 //!   per-snapshot full-graph embedding cache, a micro-batching request
 //!   server, and a deterministic load generator — scores bit-identical to
 //!   the training-side eval path.
+//! - **`obs`** — observability across all of the above: span tracing with
+//!   a Chrome/Perfetto trace exporter behind a single relaxed atomic flag
+//!   (zero overhead when off), an atomic counter/gauge/histogram registry,
+//!   and a structured JSONL event log (`--trace` / `--metrics` /
+//!   `--log-json`).
 //! - **L2/L1 (`python/`, build-time only)** — JAX GNN models on Pallas
 //!   aggregation kernels, AOT-lowered to HLO text artifacts.
 //! - **runtime** — PJRT CPU client (`xla` crate) loading `artifacts/*.hlo.txt`.
@@ -37,6 +42,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod graph;
 pub mod metrics;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod sampler;

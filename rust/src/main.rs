@@ -89,6 +89,13 @@ fn run_help() {
     println!(
         "usage: llcg run [--config file.json] [--key=value ...] [--out result.json]\n\
          \n\
+         Observability (structural flags, not config keys):\n\
+         \x20 --trace trace.json       span tracing on; write a Chrome/Perfetto\n\
+         \x20                          trace at the end of the run\n\
+         \x20 --log-json events.jsonl  stream every run event as one JSON line,\n\
+         \x20                          plus end-of-run span summaries + metrics\n\
+         \x20 --metrics                print the metrics table after the run\n\
+         \n\
          Config keys (generated from the api::keys schema; every key works\n\
          both as a JSON field and as a --key=value override):\n\
          {}",
@@ -96,12 +103,79 @@ fn run_help() {
     );
 }
 
+/// Pull the obs flags (`--trace <path>`, `--log-json <path>`, `--metrics`)
+/// out of a flag list: run-structural, like `--out` — not config keys.
+struct ObsFlags {
+    trace: Option<String>,
+    log_json: Option<String>,
+    metrics: bool,
+}
+
+const OBS_FLAG_NAMES: &[&str] = &["trace", "log-json", "metrics"];
+
+impl ObsFlags {
+    fn parse(flags: &[(String, String)]) -> ObsFlags {
+        let find = |name: &str| {
+            flags
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| v.clone())
+        };
+        ObsFlags {
+            trace: find("trace"),
+            log_json: find("log-json"),
+            metrics: find("metrics").is_some_and(|v| v != "false"),
+        }
+    }
+
+    /// Enable tracing and open the event log; call before the run starts.
+    fn begin(&self) -> Result<Option<llcg::obs::JsonlLog>> {
+        if self.trace.is_some() {
+            llcg::obs::set_enabled(true);
+        }
+        Ok(match &self.log_json {
+            Some(p) => Some(llcg::obs::JsonlLog::create(std::path::Path::new(p))?),
+            None => None,
+        })
+    }
+
+    /// Write the trace file, span summaries, metrics dump, and `--metrics`
+    /// table; call after the run finishes.
+    fn finish(&self, mut log: Option<llcg::obs::JsonlLog>) -> Result<()> {
+        if self.trace.is_some() || log.is_some() {
+            llcg::obs::set_enabled(false);
+            let spans = llcg::obs::take_spans();
+            if let Some(path) = &self.trace {
+                let p = std::path::Path::new(path);
+                if let Some(dir) = p.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                }
+                std::fs::write(p, llcg::obs::chrome_trace_json(&spans).to_string_pretty())?;
+                eprintln!("trace: wrote {} spans to {path}", spans.len());
+            }
+            if let Some(log) = log.as_mut() {
+                log.write_span_summaries(&llcg::obs::summarize(&spans))?;
+                log.write_metrics()?;
+                log.flush()?;
+                eprintln!("log-json: wrote {} lines to {}", log.lines(), log.path().display());
+            }
+        }
+        if self.metrics {
+            print!("{}", llcg::obs::metrics_table());
+        }
+        Ok(())
+    }
+}
+
 fn cmd_run(flags: &[(String, String)]) -> Result<()> {
     if flags.iter().any(|(k, _)| k == "help") {
         run_help();
         return Ok(());
     }
-    let cfg = build_config(flags, &[])?;
+    let cfg = build_config(flags, OBS_FLAG_NAMES)?;
+    let obs_flags = ObsFlags::parse(flags);
     let (rt, _adir) = Runtime::load_or_native(&cfg.artifacts_dir)?;
     let exp = ExperimentBuilder::from_config(cfg).build()?;
     let cfg = exp.config();
@@ -122,7 +196,15 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
 
     // stream the run: one table row per completed round, as it happens
     let mut printer = TablePrinter::new();
-    let result = exp.launch(&rt).stream(|ev| printer.on_event(ev))?;
+    let mut event_log = obs_flags.begin()?;
+    let result = exp.launch(&rt).stream(|ev| {
+        if let Some(log) = event_log.as_mut() {
+            // best-effort: a full disk must not kill the training run
+            let _ = log.write(ev.to_json());
+        }
+        printer.on_event(ev)
+    })?;
+    obs_flags.finish(event_log)?;
 
     println!(
         "final: val={:.4} test={:.4} cut_ratio={:.3} avg_round_MB={:.3}",
@@ -231,7 +313,11 @@ fn cmd_sweep(flags: &[(String, String)]) -> Result<()> {
 /// round), start the micro-batching inference server over the final hub
 /// state, and drive it with the deterministic load generator.
 fn cmd_serve(flags: &[(String, String)]) -> Result<()> {
-    let cfg = build_config(flags, &["requests", "clients", "mode", "rate"])?;
+    let cfg = build_config(
+        flags,
+        &["requests", "clients", "mode", "rate", "trace", "log-json", "metrics"],
+    )?;
+    let obs_flags = ObsFlags::parse(flags);
     let mut requests = 2000usize;
     let mut clients = 4usize;
     let mut mode = "closed".to_string();
@@ -265,10 +351,16 @@ fn cmd_serve(flags: &[(String, String)]) -> Result<()> {
         cfg.engine.name()
     );
     let mut printer = TablePrinter::new();
+    let mut event_log = obs_flags.begin()?;
     let result = exp
         .launch(&rt)
         .publish_to(hub.clone())?
-        .stream(|ev| printer.on_event(ev))?;
+        .stream(|ev| {
+            if let Some(log) = event_log.as_mut() {
+                let _ = log.write(ev.to_json());
+            }
+            printer.on_event(ev)
+        })?;
     eprintln!(
         "trained: final val={:.4} test={:.4}; snapshots published: {}",
         result.final_val,
@@ -311,6 +403,9 @@ fn cmd_serve(flags: &[(String, String)]) -> Result<()> {
     );
     drop(client);
     server.shutdown();
+    // finish after shutdown so the dispatcher's serve.* spans and latency
+    // histograms make it into the trace / metrics table
+    obs_flags.finish(event_log)?;
     Ok(())
 }
 

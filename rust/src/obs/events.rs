@@ -1,0 +1,143 @@
+//! Structured JSONL event log: one compact JSON object per line, append
+//! order = emit order. `llcg run --log-json runs/events.jsonl` streams the
+//! `api::Event` sequence through [`JsonlLog`] and finishes with span
+//! summaries (when tracing was on) and a metrics dump, so one file replays
+//! the whole run for offline analysis without the binary.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::obs::trace::SpanSummary;
+use crate::util::Json;
+
+/// Line-buffered JSONL writer. Every record gets a `schema` field so
+/// parsers can detect shape changes (see [`crate::obs::SCHEMA_VERSION`]).
+pub struct JsonlLog {
+    w: BufWriter<File>,
+    path: PathBuf,
+    lines: u64,
+}
+
+impl JsonlLog {
+    /// Create (truncate) the log file, creating parent directories.
+    pub fn create(path: &Path) -> Result<JsonlLog> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating event log {}", path.display()))?;
+        Ok(JsonlLog {
+            w: BufWriter::new(f),
+            path: path.to_path_buf(),
+            lines: 0,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    /// Append one record as a single compact line, stamping `schema`.
+    pub fn write(&mut self, record: Json) -> Result<()> {
+        let stamped = match record {
+            Json::Object(mut m) => {
+                m.entry("schema".to_string())
+                    .or_insert(Json::num(crate::obs::SCHEMA_VERSION as f64));
+                Json::Object(m)
+            }
+            other => other,
+        };
+        writeln!(self.w, "{stamped}")
+            .with_context(|| format!("writing event log {}", self.path.display()))?;
+        self.lines += 1;
+        Ok(())
+    }
+
+    /// Append the end-of-run span summary records (one line per span name).
+    pub fn write_span_summaries(&mut self, sums: &[SpanSummary]) -> Result<()> {
+        for s in sums {
+            self.write(Json::obj(vec![
+                ("event", Json::str("span_summary")),
+                ("name", Json::str(s.name)),
+                ("count", Json::num(s.count as f64)),
+                ("total_s", Json::num(s.total_s)),
+                ("max_s", Json::num(s.max_s)),
+            ]))?;
+        }
+        Ok(())
+    }
+
+    /// Append the final metrics dump record.
+    pub fn write_metrics(&mut self) -> Result<()> {
+        self.write(Json::obj(vec![
+            ("event", Json::str("metrics")),
+            ("metrics", crate::obs::metrics::metrics_json()),
+        ]))
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w
+            .flush()
+            .with_context(|| format!("flushing event log {}", self.path.display()))
+    }
+}
+
+impl Drop for JsonlLog {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_lines_parse_and_carry_schema() {
+        let dir = std::env::temp_dir().join("llcg-obs-events-test");
+        let path = dir.join("events.jsonl");
+        {
+            let mut log = JsonlLog::create(&path).expect("create log");
+            log.write(Json::obj(vec![
+                ("event", Json::str("round_started")),
+                ("round", Json::num(1.0)),
+            ]))
+            .unwrap();
+            log.write_span_summaries(&[SpanSummary {
+                name: "round.local",
+                count: 4,
+                total_s: 0.25,
+                max_s: 0.1,
+            }])
+            .unwrap();
+            log.write_metrics().unwrap();
+            assert_eq!(log.lines(), 3);
+            log.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let j = Json::parse(line).expect("every line is one JSON object");
+            assert_eq!(
+                j.req("schema").as_f64().unwrap() as u64,
+                crate::obs::SCHEMA_VERSION
+            );
+        }
+        assert_eq!(
+            Json::parse(lines[1]).unwrap().req("name").as_str(),
+            Some("round.local")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,428 @@
+//! Process-wide metrics registry: atomic counters, gauges, and fixed-bucket
+//! latency histograms.
+//!
+//! Instruments are registered by name on first use and live for the
+//! process (`&'static` handles, leaked once): hot paths look a handle up
+//! once and then pay only a relaxed atomic op per update — no locks, which
+//! is what lets `serve::ServeStats` drop its per-request mutex.
+//!
+//! Histograms use power-of-two nanosecond buckets (`[2^i, 2^{i+1})`); the
+//! reported percentiles interpolate inside the hit bucket with the same
+//! rule as `util::stats` ([`Percentiles::of_buckets`]), so `--metrics`
+//! latency columns and `BENCH_*.json` percentiles read on one scale.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::stats::Percentiles;
+use crate::util::Json;
+
+/// Monotonic atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise the counter to `n` if below it (used for high-watermarks like
+    /// the largest micro-batch).
+    #[inline]
+    pub fn record_max(&self, n: u64) {
+        self.0.fetch_max(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an `AtomicU64`).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, x: f64) {
+        self.0.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Bucket count: `[2^0, 2^39)` ns spans 1 ns .. ~9 minutes, which covers
+/// every latency this repo measures (bucket 0 also absorbs 0 ns).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Fixed-bucket latency histogram (power-of-two nanosecond buckets).
+/// Recording is one branch-free bucket index + three relaxed atomic adds.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    // floor(log2(ns)) clamped to the table; 0 ns lands in bucket 0
+    ((63 - (ns | 1).leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.counts[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_s(&self, secs: f64) {
+        self.record_ns(if secs <= 0.0 { 0 } else { (secs * 1e9) as u64 });
+    }
+
+    /// Consistent-enough copy for reporting (individual fields are read
+    /// relaxed; exact cross-field consistency is not needed for a report).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+            counts: std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed)),
+        }
+    }
+
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time histogram contents.
+#[derive(Clone, Copy, Debug)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+    pub counts: [u64; HIST_BUCKETS],
+}
+
+impl HistSnapshot {
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64 / 1e9
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_ns as f64 / 1e9
+    }
+
+    /// Bucket-interpolated percentiles in seconds (`None` when empty).
+    pub fn percentiles_s(&self) -> Option<Percentiles> {
+        if self.count == 0 {
+            return None;
+        }
+        let bounds: Vec<(f64, f64)> = (0..HIST_BUCKETS)
+            .map(|i| {
+                let lo = if i == 0 { 0u64 } else { 1u64 << i };
+                let hi = 1u64 << (i + 1);
+                (lo as f64 / 1e9, hi as f64 / 1e9)
+            })
+            .collect();
+        Some(Percentiles::of_buckets(&bounds, &self.counts))
+    }
+}
+
+/// The process-wide instrument tables. One per process, behind
+/// [`counter`]/[`gauge`]/[`histogram`] lookups; instruments are leaked so
+/// handles are `&'static` and updates never re-enter the registry lock.
+struct Registry {
+    counters: Mutex<BTreeMap<&'static str, &'static Counter>>,
+    gauges: Mutex<BTreeMap<&'static str, &'static Gauge>>,
+    histograms: Mutex<BTreeMap<&'static str, &'static Histogram>>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        histograms: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// Look up (or register) the process-wide counter `name`. Cache the
+/// returned handle on hot paths — the lookup itself takes the registry
+/// lock.
+pub fn counter(name: &'static str) -> &'static Counter {
+    registry()
+        .counters
+        .lock()
+        .expect("metrics registry poisoned")
+        .entry(name)
+        .or_insert_with(|| Box::leak(Box::new(Counter::new())))
+}
+
+/// Look up (or register) the process-wide gauge `name`.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    registry()
+        .gauges
+        .lock()
+        .expect("metrics registry poisoned")
+        .entry(name)
+        .or_insert_with(|| Box::leak(Box::new(Gauge::new())))
+}
+
+/// Look up (or register) the process-wide histogram `name`.
+pub fn histogram(name: &'static str) -> &'static Histogram {
+    registry()
+        .histograms
+        .lock()
+        .expect("metrics registry poisoned")
+        .entry(name)
+        .or_insert_with(|| Box::leak(Box::new(Histogram::new())))
+}
+
+/// Zero every registered instrument (bench/test isolation; the instruments
+/// themselves stay registered).
+pub fn reset_all() {
+    let reg = registry();
+    for c in reg.counters.lock().expect("poisoned").values() {
+        c.reset();
+    }
+    for g in reg.gauges.lock().expect("poisoned").values() {
+        g.reset();
+    }
+    for h in reg.histograms.lock().expect("poisoned").values() {
+        h.reset();
+    }
+}
+
+/// The `--metrics` end-of-run table: counters, gauges, then histograms
+/// with count/mean/p50/p95/p99/max (latencies in milliseconds).
+pub fn metrics_table() -> String {
+    let reg = registry();
+    let mut out = String::new();
+    let counters = reg.counters.lock().expect("poisoned");
+    let gauges = reg.gauges.lock().expect("poisoned");
+    let histograms = reg.histograms.lock().expect("poisoned");
+    if !counters.is_empty() {
+        out.push_str("counters:\n");
+        for (name, c) in counters.iter() {
+            out.push_str(&format!("  {:<32} {}\n", name, c.get()));
+        }
+    }
+    if !gauges.is_empty() {
+        out.push_str("gauges:\n");
+        for (name, g) in gauges.iter() {
+            out.push_str(&format!("  {:<32} {:.6}\n", name, g.get()));
+        }
+    }
+    if !histograms.is_empty() {
+        out.push_str(&format!(
+            "histograms (ms):\n  {:<32} {:>8} {:>10} {:>10} {:>10} {:>10} {:>10}\n",
+            "name", "count", "mean", "p50", "p95", "p99", "max"
+        ));
+        for (name, h) in histograms.iter() {
+            let s = h.snapshot();
+            let p = s.percentiles_s();
+            let (p50, p95, p99) = match p {
+                Some(p) => (p.p50 * 1e3, p.p95 * 1e3, p.p99 * 1e3),
+                None => (0.0, 0.0, 0.0),
+            };
+            out.push_str(&format!(
+                "  {:<32} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3}\n",
+                name,
+                s.count,
+                s.mean_s() * 1e3,
+                p50,
+                p95,
+                p99,
+                s.max_s() * 1e3,
+            ));
+        }
+    }
+    if out.is_empty() {
+        out.push_str("(no metrics recorded)\n");
+    }
+    out
+}
+
+/// Every registered instrument as one JSON object (for the `--log-json`
+/// final record).
+pub fn metrics_json() -> Json {
+    let reg = registry();
+    let counters: Vec<Json> = reg
+        .counters
+        .lock()
+        .expect("poisoned")
+        .iter()
+        .map(|(name, c)| {
+            Json::obj(vec![
+                ("name", Json::str(*name)),
+                ("value", Json::num(c.get() as f64)),
+            ])
+        })
+        .collect();
+    let gauges: Vec<Json> = reg
+        .gauges
+        .lock()
+        .expect("poisoned")
+        .iter()
+        .map(|(name, g)| {
+            Json::obj(vec![
+                ("name", Json::str(*name)),
+                ("value", Json::num(g.get())),
+            ])
+        })
+        .collect();
+    let histograms: Vec<Json> = reg
+        .histograms
+        .lock()
+        .expect("poisoned")
+        .iter()
+        .map(|(name, h)| {
+            let s = h.snapshot();
+            let p = s.percentiles_s();
+            Json::obj(vec![
+                ("name", Json::str(*name)),
+                ("count", Json::num(s.count as f64)),
+                ("mean_s", Json::num(s.mean_s())),
+                ("p50_s", Json::num(p.map_or(0.0, |p| p.p50))),
+                ("p95_s", Json::num(p.map_or(0.0, |p| p.p95))),
+                ("p99_s", Json::num(p.map_or(0.0, |p| p.p99))),
+                ("max_s", Json::num(s.max_s())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("counters", Json::arr(counters)),
+        ("gauges", Json::arr(gauges)),
+        ("histograms", Json::arr(histograms)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        c.record_max(3); // below current 5: no-op
+        assert_eq!(c.get(), 5);
+        c.record_max(11);
+        assert_eq!(c.get(), 11);
+        let g = Gauge::new();
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        let h = Histogram::new();
+        assert!(h.snapshot().percentiles_s().is_none());
+        // 1000 recordings of ~1 us and one ~1 ms outlier
+        for _ in 0..1000 {
+            h.record_ns(1_000);
+        }
+        h.record_ns(1_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1001);
+        assert_eq!(s.max_ns, 1_000_000);
+        let p = s.percentiles_s().expect("non-empty");
+        // p50 in the 1 us bucket [1024ns, 2048ns); p99 must stay well
+        // below the outlier bucket
+        assert!(p.p50 > 0.5e-6 && p.p50 < 3e-6, "p50 {}", p.p50);
+        assert!(p.p99 < 1e-4, "p99 {}", p.p99);
+        assert!(s.mean_s() > 1e-6 && s.mean_s() < 3e-6);
+        h.reset();
+        assert_eq!(h.snapshot().count, 0);
+    }
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let a = counter("test.obs-registry-counter");
+        let b = counter("test.obs-registry-counter");
+        let before = a.get();
+        b.add(2);
+        assert_eq!(a.get(), before + 2);
+        let h1 = histogram("test.obs-registry-hist");
+        let h2 = histogram("test.obs-registry-hist");
+        let n0 = h1.snapshot().count;
+        h2.record_s(1e-6);
+        assert_eq!(h1.snapshot().count, n0 + 1);
+        // tables render without panicking and include the names
+        let t = metrics_table();
+        assert!(t.contains("test.obs-registry-counter"));
+        let j = metrics_json();
+        assert!(j.to_string().contains("test.obs-registry-hist"));
+    }
+}

@@ -1,0 +1,48 @@
+//! Observability: zero-overhead-when-off span tracing, a process-wide
+//! metrics registry, and a structured JSONL event log.
+//!
+//! Three layers, all std-only (see `rust/src/obs/README.md` for the span
+//! naming convention and the overhead contract):
+//!
+//! - [`trace`] — per-thread span buffers behind one relaxed atomic flag.
+//!   `obs::span("name")` costs a single branch while tracing is disabled;
+//!   enabled spans record `(name, tid, start, dur)` into a thread-local
+//!   buffer (no locks on the hot path) and export as Chrome trace-event
+//!   JSON (`llcg run --trace trace.json`, loadable in `chrome://tracing`
+//!   or <https://ui.perfetto.dev>).
+//! - [`metrics`] — atomic counters/gauges plus fixed-bucket latency
+//!   histograms whose percentiles reuse the `util::stats` interpolation
+//!   rule. Always on: every instrument is a relaxed atomic op.
+//! - [`events`] — a JSONL sink serializing the `api::Event` stream (one
+//!   object per line, `llcg run --log-json runs/events.jsonl`) plus
+//!   end-of-run span summaries.
+//!
+//! Instrumentation never touches RNG streams, float accumulation order, or
+//! iteration order — only clocks and atomics — so every bit-exactness
+//! contract in the repo (cluster sync ≡ sequential, serve ≡ eval path,
+//! checkpoint resume replay) holds with tracing and metrics on. This is
+//! asserted end-to-end in `rust/tests/obs.rs`.
+
+pub mod events;
+pub mod metrics;
+pub mod trace;
+
+pub use events::JsonlLog;
+pub use metrics::{
+    counter, gauge, histogram, metrics_json, metrics_table, reset_all, Counter, Gauge, Histogram,
+};
+pub use trace::{
+    chrome_trace_json, enabled, set_enabled, span, span_round, summarize, take_spans,
+    write_chrome_trace, Span, SpanRec, SpanSummary,
+};
+
+/// Version of every JSON shape this repo emits (`llcg run --json`,
+/// `BENCH_*.json`, `--trace`, `--log-json`). Bump when a field is added,
+/// removed, or changes meaning, so downstream parsers can detect shape
+/// changes instead of silently misreading (the p95 columns landed in PR 5
+/// with no such marker).
+///
+/// History: 1 = implicit pre-obs shapes (through PR 6); 2 = `schema` field
+/// added everywhere, `RoundRecord` gained `avg_time_s`/`corr_time_s`/
+/// `eval_time_s`.
+pub const SCHEMA_VERSION: u64 = 2;

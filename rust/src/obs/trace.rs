@@ -1,0 +1,345 @@
+//! Span tracing with per-thread lock-free buffers and a Chrome trace-event
+//! exporter.
+//!
+//! The enable gate is one relaxed [`AtomicBool`]: a disabled
+//! [`span`] call is a load + branch and touches no clock, no allocation,
+//! and no shared state — cheap enough to leave in kernel inner loops
+//! (measured per PR by `bench obs`, `BENCH_obs.json`).
+//!
+//! Enabled spans are recorded at guard drop into a `thread_local` buffer
+//! (plain `RefCell` push: no atomics or locks on the record path). Buffers
+//! publish into the global sink when their thread exits, when they exceed
+//! [`FLUSH_AT`] spans, or when [`take_spans`] drains the calling thread
+//! explicitly. Long-lived threads that never exit (the kernel pool) only
+//! contribute spans they have overflowed-flushed — in practice all
+//! round-loop spans are recorded on threads that exit (or drain) before
+//! export.
+//!
+//! Spans are strictly LIFO per thread (guard scopes), so per-thread spans
+//! always nest and never partially overlap — `tests/obs.rs` validates this
+//! on the exported JSON.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// One completed span: `name` is a `&'static str` so recording never
+/// allocates; `round` tags round-scoped phases (`-1` = not round-scoped) so
+/// eval on an `eval_every` cadence is attributed to the round that
+/// triggered it.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRec {
+    pub name: &'static str,
+    /// small per-thread id assigned on the thread's first recorded span
+    pub tid: u32,
+    /// nanoseconds since the trace epoch
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub round: i64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+/// Thread-local buffers overflow-publish to the global sink at this size.
+const FLUSH_AT: usize = 8192;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn sink() -> &'static Mutex<Vec<SpanRec>> {
+    static SINK: OnceLock<Mutex<Vec<SpanRec>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Turn tracing on or off (process-wide). Enabling pins the trace epoch
+/// first so no span can observe a start before it.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The single-branch gate every instrumented path checks.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+struct ThreadBuf {
+    tid: u32,
+    spans: Vec<SpanRec>,
+}
+
+impl ThreadBuf {
+    fn publish(&mut self) {
+        if !self.spans.is_empty() {
+            sink()
+                .lock()
+                .expect("span sink poisoned")
+                .append(&mut self.spans);
+        }
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.publish();
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        spans: Vec::new(),
+    });
+}
+
+/// Guard for an in-flight span; records on drop. Obtained from [`span`] /
+/// [`span_round`]; hold it in a `let _s = ...` for the scope being timed
+/// (`let _ = ...` drops immediately and records nothing).
+pub struct Span {
+    /// `None` = tracing was disabled at entry: drop is a no-op even if
+    /// tracing is flipped on mid-span (half-measured spans are worse than
+    /// missing ones)
+    start: Option<Instant>,
+    name: &'static str,
+    round: i64,
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur_ns = start.elapsed().as_nanos() as u64;
+        let start_ns = start
+            .checked_duration_since(epoch())
+            .unwrap_or_default()
+            .as_nanos() as u64;
+        let (name, round) = (self.name, self.round);
+        // try_with: a span dropped during TLS teardown is silently lost
+        let _ = BUF.try_with(|b| {
+            let mut b = b.borrow_mut();
+            let tid = b.tid;
+            b.spans.push(SpanRec {
+                name,
+                tid,
+                start_ns,
+                dur_ns,
+                round,
+            });
+            if b.spans.len() >= FLUSH_AT {
+                b.publish();
+            }
+        });
+    }
+}
+
+/// Open a span named `name`. When tracing is disabled this is one relaxed
+/// load and a branch.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    span_round(name, -1)
+}
+
+/// Open a round-tagged span: the round lands in the Chrome trace's `args`
+/// so phase durations can be grouped by the round that *triggered* them
+/// (eval under `eval_every > 1` belongs to the cadence round, not to
+/// whatever comes after).
+#[inline]
+pub fn span_round(name: &'static str, round: i64) -> Span {
+    let start = if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    };
+    Span { start, name, round }
+}
+
+/// Drain every published span plus the calling thread's buffer, sorted by
+/// `(tid, start)`. Used by the exporter and tests; leaves the sink empty.
+pub fn take_spans() -> Vec<SpanRec> {
+    let _ = BUF.try_with(|b| b.borrow_mut().publish());
+    let mut out = std::mem::take(&mut *sink().lock().expect("span sink poisoned"));
+    // equal starts: longer span first, so parents precede their children
+    out.sort_by(|a, b| {
+        (a.tid, a.start_ns, std::cmp::Reverse(a.dur_ns))
+            .cmp(&(b.tid, b.start_ns, std::cmp::Reverse(b.dur_ns)))
+    });
+    out
+}
+
+/// Chrome trace-event JSON (the "JSON object format": `traceEvents` +
+/// metadata) over complete (`ph:"X"`) events; `ts`/`dur` in microseconds.
+pub fn chrome_trace_json(spans: &[SpanRec]) -> Json {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            let mut fields = vec![
+                ("name", Json::str(s.name)),
+                ("cat", Json::str("llcg")),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(s.tid as f64)),
+                ("ts", Json::num(s.start_ns as f64 / 1e3)),
+                ("dur", Json::num(s.dur_ns as f64 / 1e3)),
+            ];
+            if s.round >= 0 {
+                fields.push((
+                    "args",
+                    Json::obj(vec![("round", Json::num(s.round as f64))]),
+                ));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::num(crate::obs::SCHEMA_VERSION as f64)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::arr(events)),
+    ])
+}
+
+/// Drain all spans and write them as a Chrome/Perfetto-loadable trace file.
+/// Returns the number of spans written.
+pub fn write_chrome_trace(path: &Path) -> Result<usize> {
+    let spans = take_spans();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json(&spans).to_string_pretty())
+        .with_context(|| format!("writing trace {}", path.display()))?;
+    Ok(spans.len())
+}
+
+/// Per-name rollup of a span set (for `--log-json` summaries and the
+/// `--metrics` table).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanSummary {
+    pub name: &'static str,
+    pub count: u64,
+    pub total_s: f64,
+    pub max_s: f64,
+}
+
+/// Aggregate spans by name (sorted by name).
+pub fn summarize(spans: &[SpanRec]) -> Vec<SpanSummary> {
+    let mut by_name: std::collections::BTreeMap<&'static str, SpanSummary> =
+        std::collections::BTreeMap::new();
+    for s in spans {
+        let e = by_name.entry(s.name).or_insert(SpanSummary {
+            name: s.name,
+            count: 0,
+            total_s: 0.0,
+            max_s: 0.0,
+        });
+        let dur_s = s.dur_ns as f64 / 1e9;
+        e.count += 1;
+        e.total_s += dur_s;
+        e.max_s = e.max_s.max(dur_s);
+    }
+    by_name.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the enable flag and sink are process-wide; tests touching them must
+    // not interleave (the test harness runs #[test]s on parallel threads)
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = test_lock();
+        set_enabled(false);
+        for _ in 0..100 {
+            let _s = span("test.disabled-xyzzy");
+        }
+        assert!(!take_spans().iter().any(|s| s.name == "test.disabled-xyzzy"));
+    }
+
+    #[test]
+    fn enabled_spans_nest_and_export() {
+        let _g = test_lock();
+        set_enabled(true);
+        {
+            let _outer = span_round("test.outer-xyzzy", 3);
+            let _inner = span("test.inner-xyzzy");
+        }
+        set_enabled(false);
+        let spans = take_spans();
+        let outer = spans
+            .iter()
+            .find(|s| s.name == "test.outer-xyzzy")
+            .expect("outer recorded");
+        let inner = spans
+            .iter()
+            .find(|s| s.name == "test.inner-xyzzy")
+            .expect("inner recorded");
+        assert_eq!(outer.round, 3);
+        assert_eq!(inner.round, -1);
+        assert_eq!(outer.tid, inner.tid);
+        // inner is contained in outer
+        assert!(inner.start_ns >= outer.start_ns);
+        assert!(inner.start_ns + inner.dur_ns <= outer.start_ns + outer.dur_ns);
+        // and the export parses back
+        let j = chrome_trace_json(&spans);
+        let txt = j.to_string_pretty();
+        let re = Json::parse(&txt).expect("chrome trace parses");
+        assert!(re.req("traceEvents").as_array().unwrap().len() >= 2);
+        assert_eq!(
+            re.req("schema").as_f64().unwrap() as u64,
+            crate::obs::SCHEMA_VERSION
+        );
+    }
+
+    #[test]
+    fn summaries_roll_up_by_name() {
+        let spans = [
+            SpanRec {
+                name: "a",
+                tid: 0,
+                start_ns: 0,
+                dur_ns: 1_000_000_000,
+                round: -1,
+            },
+            SpanRec {
+                name: "a",
+                tid: 1,
+                start_ns: 5,
+                dur_ns: 3_000_000_000,
+                round: 1,
+            },
+            SpanRec {
+                name: "b",
+                tid: 0,
+                start_ns: 9,
+                dur_ns: 500_000_000,
+                round: -1,
+            },
+        ];
+        let sums = summarize(&spans);
+        assert_eq!(sums.len(), 2);
+        assert_eq!(sums[0].name, "a");
+        assert_eq!(sums[0].count, 2);
+        assert!((sums[0].total_s - 4.0).abs() < 1e-9);
+        assert!((sums[0].max_s - 3.0).abs() < 1e-9);
+        assert_eq!(sums[1].name, "b");
+    }
+}

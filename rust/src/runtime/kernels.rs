@@ -309,6 +309,7 @@ fn matmul_rows(a: &[f32], b: &[f32], out_rows: &mut [f32], lo: usize, hi: usize,
 /// `out[m,n] = a[m,k] @ b[k,n]` — tiled, parallel by output-row ranges;
 /// bit-identical to [`matmul_ref`] at any thread count.
 pub fn matmul(ctx: &KernelCtx, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    let _s = crate::obs::span("kernel.matmul");
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -337,6 +338,7 @@ pub fn matmul_banded(
     n: usize,
     band: usize,
 ) {
+    let _s = crate::obs::span("kernel.matmul_banded");
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -376,6 +378,7 @@ pub fn matmul_at_b(
     n: usize,
     acc: bool,
 ) {
+    let _s = crate::obs::span("kernel.matmul_at_b");
     debug_assert_eq!(a.len(), r * m);
     debug_assert_eq!(b.len(), r * n);
     debug_assert_eq!(out.len(), m * n);
@@ -422,6 +425,7 @@ pub fn matmul_at_b_banded(
     band: usize,
     acc: bool,
 ) {
+    let _s = crate::obs::span("kernel.matmul_at_b_banded");
     debug_assert_eq!(a.len(), r * m);
     debug_assert_eq!(b.len(), r * n);
     debug_assert_eq!(out.len(), m * n);
@@ -460,6 +464,7 @@ pub fn matmul_a_bt(
     k: usize,
     n: usize,
 ) {
+    let _s = crate::obs::span("kernel.matmul_a_bt");
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
@@ -495,6 +500,7 @@ pub fn matmul_a_bt(
 
 /// SGD step `p[i] -= lr * g[i]`, parallelized over disjoint index ranges.
 pub fn sgd_update(ctx: &KernelCtx, p: &mut [f32], g: &[f32], lr: f32) {
+    let _s = crate::obs::span("kernel.sgd_update");
     debug_assert_eq!(p.len(), g.len());
     if ctx.scalar {
         for (pv, &gv) in p.iter_mut().zip(g) {
@@ -533,6 +539,7 @@ pub fn adam_update(
     b2: f32,
     eps: f32,
 ) {
+    let _s = crate::obs::span("kernel.adam_update");
     debug_assert_eq!(p.len(), g.len());
     debug_assert_eq!(p.len(), m.len());
     debug_assert_eq!(p.len(), v.len());
@@ -582,6 +589,7 @@ pub fn linear(
     n: usize,
     relu: bool,
 ) {
+    let _s = crate::obs::span("kernel.linear");
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(out.len(), m * n);

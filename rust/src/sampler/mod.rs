@@ -321,6 +321,7 @@ impl BlockBuilder {
         ds: &Dataset,
         rng: &mut Pcg64,
     ) -> &'a Block {
+        let _s = crate::obs::span("sampler.build_block");
         assert!(targets.len() <= self.b, "batch larger than block B");
         assert_eq!(ds.d, self.d, "dataset d mismatch");
         let (b, f1, f2, d, c) = (self.b, self.f1, self.f2, self.d, self.c);

@@ -147,6 +147,7 @@ impl EmbeddingCache {
     /// kernel pool. Cost: one layer-1 forward over all `n` nodes — paid
     /// once per snapshot instead of per query.
     pub fn build(snap: &ModelSnapshot, ds: &Dataset, kc: &KernelCtx) -> Result<EmbeddingCache> {
+        let _s = crate::obs::span("serve.cache_build");
         let dims = snap.dims;
         let (d, h, c) = (dims.d, dims.h, dims.c);
         if ds.name != snap.dataset {

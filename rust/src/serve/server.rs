@@ -24,7 +24,7 @@
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -33,6 +33,7 @@ use anyhow::{bail, Result};
 use crate::config::ExperimentConfig;
 use crate::graph::Dataset;
 use crate::metrics;
+use crate::obs;
 use crate::runtime::{KernelCtx, ThreadPool};
 use crate::serve::cache::InferenceEngine;
 use crate::serve::snapshot::SnapshotHub;
@@ -98,6 +99,10 @@ pub struct NodeScores {
 enum Req {
     Query {
         node: u32,
+        /// when the client enqueued the request — queue-wait time is
+        /// `enq.elapsed()` at flush, recorded in the `serve.queue_wait_s`
+        /// histogram
+        enq: Instant,
         reply: Sender<std::result::Result<NodeScores, String>>,
     },
     Shutdown,
@@ -168,12 +173,42 @@ impl ServeStats {
     }
 }
 
+/// The live counters behind [`ServeStats`]: per-server relaxed atomics, so
+/// the dispatcher's flush hot path and every client's shed path update them
+/// without a lock (the old `Mutex<ServeStats>` serialized clients against
+/// the dispatcher on overload). [`Server::stats`] reads them into the same
+/// `ServeStats` snapshot as before.
+#[derive(Default)]
+struct ServeShared {
+    requests: obs::Counter,
+    batches: obs::Counter,
+    swaps: obs::Counter,
+    failed_swaps: obs::Counter,
+    max_batch: obs::Counter,
+    rejected: obs::Counter,
+    shed: obs::Counter,
+}
+
+impl ServeShared {
+    fn snapshot(&self) -> ServeStats {
+        ServeStats {
+            requests: self.requests.get(),
+            batches: self.batches.get(),
+            swaps: self.swaps.get(),
+            failed_swaps: self.failed_swaps.get(),
+            max_batch: self.max_batch.get() as usize,
+            rejected: self.rejected.get(),
+            shed: self.shed.get(),
+        }
+    }
+}
+
 /// A running inference server. Create client handles with
 /// [`Server::client`]; stop it with [`Server::shutdown`].
 pub struct Server {
     tx: SyncSender<Req>,
     shed: bool,
-    stats: Arc<Mutex<ServeStats>>,
+    stats: Arc<ServeShared>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -184,7 +219,7 @@ pub struct Server {
 pub struct ServerClient {
     tx: SyncSender<Req>,
     shed: bool,
-    stats: Arc<Mutex<ServeStats>>,
+    stats: Arc<ServeShared>,
 }
 
 impl ServerClient {
@@ -196,13 +231,14 @@ impl ServerClient {
         let (reply_tx, reply_rx) = channel();
         let req = Req::Query {
             node,
+            enq: Instant::now(),
             reply: reply_tx,
         };
         if self.shed {
             match self.tx.try_send(req) {
                 Ok(()) => {}
                 Err(TrySendError::Full(_)) => {
-                    self.stats.lock().expect("serve stats poisoned").shed += 1;
+                    self.stats.shed.inc();
                     return Err(QueryError::Overloaded);
                 }
                 Err(TrySendError::Disconnected(_)) => {
@@ -235,7 +271,7 @@ impl Server {
         }
         let (tx, rx) = sync_channel::<Req>(cfg.queue);
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
-        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats = Arc::new(ServeShared::default());
         let stats2 = stats.clone();
         let handle = std::thread::Builder::new()
             .name("llcg-serve".into())
@@ -269,7 +305,7 @@ impl Server {
 
     /// Snapshot of the dispatcher counters.
     pub fn stats(&self) -> ServeStats {
-        *self.stats.lock().expect("serve stats poisoned")
+        self.stats.snapshot()
     }
 
     /// Stop the dispatcher (pending and queued requests error out) and join
@@ -294,14 +330,14 @@ impl Drop for Server {
     }
 }
 
-type Batch = Vec<(u32, Sender<std::result::Result<NodeScores, String>>)>;
+type Batch = Vec<(u32, Instant, Sender<std::result::Result<NodeScores, String>>)>;
 
 fn dispatcher(
     hub: Arc<SnapshotHub>,
     ds: Arc<Dataset>,
     cfg: ServeConfig,
     rx: Receiver<Req>,
-    stats: Arc<Mutex<ServeStats>>,
+    stats: Arc<ServeShared>,
     ready: Sender<std::result::Result<(), String>>,
 ) {
     // one persistent pool for the whole server lifetime: cache rebuilds on
@@ -329,12 +365,12 @@ fn dispatcher(
         // None = shutdown requested
         match req {
             Req::Shutdown => None,
-            Req::Query { node, reply } => {
+            Req::Query { node, enq, reply } => {
                 if (node as usize) >= n {
-                    stats.lock().expect("serve stats poisoned").rejected += 1;
+                    stats.rejected.inc();
                     let _ = reply.send(Err(format!("node {node} out of range (n={n})")));
                 } else {
-                    batch.push((node, reply));
+                    batch.push((node, enq, reply));
                 }
                 Some(())
             }
@@ -388,12 +424,13 @@ fn flush(
     kc: &KernelCtx,
     engine: &mut InferenceEngine,
     batch: &mut Batch,
-    stats: &Mutex<ServeStats>,
+    stats: &ServeShared,
     failed_swap: &mut u64,
 ) {
     if batch.is_empty() {
         return;
     }
+    let _flush_span = obs::span("serve.flush");
     // hot-swap: rebuild the cache when training published a newer snapshot.
     // A snapshot whose cache cannot be built (wrong dataset/dims on a
     // shared hub) is recorded in `failed_swap` and skipped until the hub
@@ -406,15 +443,22 @@ fn flush(
             // (or double-counted) on the next batch
             let snap_v = snap.version;
             if snap_v != engine.version() && snap_v != *failed_swap {
-                match InferenceEngine::new(snap, ds.clone(), kc.clone()) {
+                let t_swap = Instant::now();
+                let built = {
+                    let _s = obs::span("serve.swap_rebuild");
+                    InferenceEngine::new(snap, ds.clone(), kc.clone())
+                };
+                match built {
                     Ok(fresh) => {
                         *engine = fresh;
                         *failed_swap = 0;
-                        stats.lock().expect("serve stats poisoned").swaps += 1;
+                        stats.swaps.inc();
+                        obs::histogram("serve.cache_rebuild_s")
+                            .record_s(t_swap.elapsed().as_secs_f64());
                     }
                     Err(e) => {
                         *failed_swap = snap_v;
-                        stats.lock().expect("serve stats poisoned").failed_swaps += 1;
+                        stats.failed_swaps.inc();
                         eprintln!(
                             "serve: snapshot v{snap_v} rejected ({e:#}); \
                              continuing on v{}",
@@ -427,16 +471,24 @@ fn flush(
     }
     let c = engine.classes();
     let version = engine.version();
-    let nodes: Vec<u32> = batch.iter().map(|(v, _)| *v).collect();
-    {
-        let mut s = stats.lock().expect("serve stats poisoned");
-        s.requests += nodes.len() as u64;
-        s.batches += 1;
-        s.max_batch = s.max_batch.max(nodes.len());
+    let nodes: Vec<u32> = batch.iter().map(|(v, _, _)| *v).collect();
+    stats.requests.add(nodes.len() as u64);
+    stats.batches.inc();
+    stats.max_batch.record_max(nodes.len() as u64);
+    // queue wait = client enqueue → just before the batch computes
+    let qw = obs::histogram("serve.queue_wait_s");
+    for (_, enq, _) in batch.iter() {
+        qw.record_s(enq.elapsed().as_secs_f64());
     }
-    match engine.score_batch(&nodes) {
+    let t_compute = Instant::now();
+    let scored = {
+        let _s = obs::span("serve.batch_compute");
+        engine.score_batch(&nodes)
+    };
+    obs::histogram("serve.batch_compute_s").record_s(t_compute.elapsed().as_secs_f64());
+    match scored {
         Ok(scores) => {
-            for (i, (node, reply)) in batch.drain(..).enumerate() {
+            for (i, (node, _, reply)) in batch.drain(..).enumerate() {
                 let row = &scores[i * c..(i + 1) * c];
                 let _ = reply.send(Ok(NodeScores {
                     node,
@@ -448,7 +500,7 @@ fn flush(
         }
         Err(e) => {
             let msg = format!("{e:#}");
-            for (_, reply) in batch.drain(..) {
+            for (_, _, reply) in batch.drain(..) {
                 let _ = reply.send(Err(msg.clone()));
             }
         }
@@ -459,8 +511,8 @@ fn flush(
 mod tests {
     use super::*;
 
-    fn client_over(tx: SyncSender<Req>, shed: bool) -> (ServerClient, Arc<Mutex<ServeStats>>) {
-        let stats = Arc::new(Mutex::new(ServeStats::default()));
+    fn client_over(tx: SyncSender<Req>, shed: bool) -> (ServerClient, Arc<ServeShared>) {
+        let stats = Arc::new(ServeShared::default());
         (
             ServerClient {
                 tx,
@@ -482,7 +534,7 @@ mod tests {
         let err = client.query(3).expect_err("queue is full");
         assert_eq!(err, QueryError::Overloaded);
         assert!(err.is_overloaded());
-        assert_eq!(stats.lock().unwrap().shed, 1);
+        assert_eq!(stats.snapshot().shed, 1);
         // draining the queue makes room again; the next failure is the
         // missing dispatcher (reply channel dies), not overload
         drop(rx.recv().expect("the pre-filled request"));
@@ -491,7 +543,7 @@ mod tests {
             QueryError::Failed(_) => {}
             QueryError::Overloaded => panic!("room in the queue, must not shed"),
         }
-        assert_eq!(stats.lock().unwrap().shed, 1, "hard failures are not sheds");
+        assert_eq!(stats.snapshot().shed, 1, "hard failures are not sheds");
     }
 
     #[test]
@@ -502,7 +554,7 @@ mod tests {
         let err = client.query(0).expect_err("server gone");
         assert!(matches!(err, QueryError::Failed(_)));
         assert!(!err.is_overloaded());
-        assert_eq!(stats.lock().unwrap().shed, 0);
+        assert_eq!(stats.snapshot().shed, 0);
     }
 
     #[test]

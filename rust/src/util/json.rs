@@ -137,7 +137,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // RFC 8259 has no NaN/Infinity literal; null keeps the
+                    // document parseable (NaN val_score on non-eval rounds)
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{x}"));
@@ -478,5 +482,14 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(5.0).to_string(), "5");
         assert_eq!(Json::Num(5.25).to_string(), "5.25");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let v = Json::obj(vec![("x", Json::num(f64::NAN))]);
+        // the emitted document must stay parseable
+        assert_eq!(Json::parse(&v.to_string()).unwrap().req("x"), &Json::Null);
     }
 }

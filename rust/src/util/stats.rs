@@ -89,6 +89,18 @@ impl Percentiles {
             p99: percentile_sorted(sorted, 0.99),
         }
     }
+
+    /// The same percentile set over a fixed-bucket histogram
+    /// (`obs::Histogram`): `bounds[i]` is bucket `i`'s `(lo, hi)` value
+    /// range, `counts[i]` how many samples landed in it.
+    pub fn of_buckets(bounds: &[(f64, f64)], counts: &[u64]) -> Percentiles {
+        Percentiles {
+            p50: percentile_bucketed(bounds, counts, 0.50),
+            p90: percentile_bucketed(bounds, counts, 0.90),
+            p95: percentile_bucketed(bounds, counts, 0.95),
+            p99: percentile_bucketed(bounds, counts, 0.99),
+        }
+    }
 }
 
 /// Summary of a sample: mean/std/min/max/percentiles.
@@ -155,6 +167,38 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Percentile of a fixed-bucket histogram, q in [0, 1]: find the bucket
+/// holding the q-th sample by cumulative count and linearly interpolate
+/// inside its `(lo, hi)` range — the histogram analogue of
+/// [`percentile_sorted`]'s interpolation rule. Returns 0 for an all-empty
+/// histogram.
+pub fn percentile_bucketed(bounds: &[(f64, f64)], counts: &[u64], q: f64) -> f64 {
+    assert_eq!(bounds.len(), counts.len());
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    // rank in [0, total-1] on the same index scale as percentile_sorted
+    let rank = q * (total - 1) as f64;
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        // this bucket covers ranks [cum, cum + c)
+        if rank < (cum + c) as f64 {
+            let (lo, hi) = bounds[i];
+            // position of the rank within the bucket, in (0, 1]: the
+            // bucket's samples are spread evenly across its value range
+            let frac = (rank - cum as f64 + 1.0) / c as f64;
+            return lo + frac.min(1.0) * (hi - lo);
+        }
+        cum += c;
+    }
+    bounds.last().map(|&(_, hi)| hi).unwrap_or(0.0)
+}
+
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -211,6 +255,22 @@ mod tests {
         let p = Percentiles::of(&[5.0, 1.0, 3.0, 2.0, 4.0]);
         assert!((p.p50 - 3.0).abs() < 1e-12);
         assert!((p.p99 - 4.96).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucketed_percentiles_interpolate_within_buckets() {
+        // 10 samples in [0,1), 10 in [1,2), none above
+        let bounds = [(0.0, 1.0), (1.0, 2.0), (2.0, 4.0)];
+        let counts = [10u64, 10, 0];
+        let p = Percentiles::of_buckets(&bounds, &counts);
+        // the median sits at the first bucket's upper edge
+        assert!((p.p50 - 1.0).abs() < 0.06, "p50 {}", p.p50);
+        // the tail stays inside the second bucket, never in the empty third
+        assert!(p.p99 > 1.8 && p.p99 <= 2.0, "p99 {}", p.p99);
+        assert!(p.p90 > 1.5 && p.p90 < 2.0, "p90 {}", p.p90);
+        // empty histogram reports zeros; q is clamped
+        assert_eq!(percentile_bucketed(&bounds, &[0, 0, 0], 0.5), 0.0);
+        assert!(percentile_bucketed(&bounds, &counts, 2.0) <= 2.0);
     }
 
     #[test]

@@ -1,0 +1,532 @@
+//! Observability-layer acceptance tests:
+//!
+//! - every bit-exactness contract in the repo holds **with tracing and
+//!   metrics enabled**: cluster-sync ≡ sequential losses, serve ≡ eval
+//!   logits, checkpoint-resume replay;
+//! - the exported Chrome trace parses, carries the schema version, and its
+//!   spans nest (never partially overlap) per thread;
+//! - eval spans and `eval_time_s` attribute to the round that *triggered*
+//!   the eval under `eval_every > 1` — never to the rounds after it;
+//! - the JSONL event log parses line-by-line and every line is stamped
+//!   with the schema version, as is `RunResult::to_json`.
+//!
+//! The trace flag and span sink are process-global, so every test takes
+//! `test_lock()` and leaves tracing disabled + drained behind it.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use llcg::cluster::Engine;
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::graph::generators;
+use llcg::obs;
+use llcg::runtime::{KernelCtx, ModelState, Runtime};
+use llcg::sampler::BlockBuilder;
+use llcg::serve::{InferenceEngine, ModelSnapshot};
+use llcg::util::{Json, Pcg64};
+
+fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // a previous test may have panicked mid-trace: start from a clean slate
+    obs::set_enabled(false);
+    let _ = obs::take_spans();
+    guard
+}
+
+fn native_rt() -> Runtime {
+    let (rt, _dir) =
+        Runtime::load_or_native("target/native-artifacts").expect("native runtime");
+    assert_eq!(rt.backend_name(), "native");
+    rt
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.arch = "gcn".into();
+    cfg.algorithm = Algorithm::Llcg;
+    cfg.parts = 4;
+    cfg.rounds = 4;
+    cfg.schedule = Schedule::Fixed { k: 3 };
+    cfg.correction_steps = 2;
+    cfg.eval_every = 2;
+    cfg.eval_max_nodes = 64;
+    cfg.seed = 7;
+    cfg
+}
+
+fn run_with(cfg: &ExperimentConfig, rt: &Runtime) -> driver::RunResult {
+    let ds = generators::by_name(&cfg.dataset, cfg.seed).unwrap();
+    driver::run_experiment(cfg, &ds, rt).unwrap()
+}
+
+/// The rounds on which `eval_if_due` fires for this config.
+fn due_rounds(cfg: &ExperimentConfig) -> Vec<usize> {
+    (1..=cfg.rounds)
+        .filter(|r| r % cfg.eval_every == 0 || *r == cfg.rounds)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// bit-parity with instrumentation on
+// ---------------------------------------------------------------------------
+
+#[test]
+fn training_parity_holds_with_tracing_and_metrics_on() {
+    let _l = test_lock();
+    let rt = native_rt();
+    let cfg = base_cfg();
+
+    // baseline: tracing off (the shipped default)
+    let base = run_with(&cfg, &rt);
+
+    // same run traced, on both engines: numbers must not move a bit
+    obs::set_enabled(true);
+    let seq = run_with(&cfg, &rt);
+    let mut clu_cfg = cfg.clone();
+    clu_cfg.engine = Engine::Cluster;
+    let clu = run_with(&clu_cfg, &rt);
+    obs::set_enabled(false);
+    let spans = obs::take_spans();
+
+    for (tag, res) in [("sequential", &seq), ("cluster", &clu)] {
+        assert_eq!(base.records.len(), res.records.len(), "{tag}");
+        for (ra, rb) in base.records.iter().zip(&res.records) {
+            assert_eq!(
+                ra.local_loss.to_bits(),
+                rb.local_loss.to_bits(),
+                "{tag} round {}: tracing perturbed the local loss",
+                ra.round
+            );
+            assert_eq!(
+                ra.global_loss.to_bits(),
+                rb.global_loss.to_bits(),
+                "{tag} round {}: tracing perturbed the correction stream",
+                ra.round
+            );
+            assert_eq!(
+                ra.val_score.to_bits(),
+                rb.val_score.to_bits(),
+                "{tag} round {}: tracing perturbed the eval stream",
+                ra.round
+            );
+            assert_eq!(ra.comm.total(), rb.comm.total(), "{tag}");
+        }
+        assert_eq!(base.final_val.to_bits(), res.final_val.to_bits(), "{tag}");
+        assert_eq!(base.final_test.to_bits(), res.final_test.to_bits(), "{tag}");
+    }
+
+    // the traced runs actually recorded the whole stack
+    let names: std::collections::BTreeSet<&str> =
+        spans.iter().map(|s| s.name).collect();
+    for want in [
+        "round",
+        "server.average",
+        "server.correction",
+        "server.eval",
+        "worker.round",
+        "kernel.matmul",
+        "sampler.build_block",
+    ] {
+        assert!(names.contains(want), "no `{want}` span in {names:?}");
+    }
+}
+
+#[test]
+fn checkpoint_resume_parity_holds_with_tracing_on() {
+    let _l = test_lock();
+    let rt = native_rt();
+    let cfg = base_cfg();
+    let full = run_with(&cfg, &rt); // untraced reference
+
+    let dir = std::env::temp_dir()
+        .join(format!("llcg_obs_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let saves0 = obs::counter("checkpoint.saves").get();
+    let loads0 = obs::counter("checkpoint.loads").get();
+
+    obs::set_enabled(true);
+    let mut ck_cfg = cfg.clone();
+    ck_cfg.checkpoint_every = 2;
+    ck_cfg.checkpoint_dir = dir.display().to_string();
+    let with_ck = run_with(&ck_cfg, &rt);
+
+    let mut res_cfg = cfg.clone();
+    res_cfg.resume = dir.join("round_2").display().to_string();
+    let resumed = run_with(&res_cfg, &rt);
+    obs::set_enabled(false);
+    let spans = obs::take_spans();
+
+    for (a, b) in full.records.iter().zip(&with_ck.records) {
+        assert_eq!(
+            a.local_loss.to_bits(),
+            b.local_loss.to_bits(),
+            "round {}: traced checkpointing perturbed the run",
+            a.round
+        );
+    }
+    assert_eq!(resumed.records.len(), 2, "rounds 3 and 4 remain");
+    for (a, b) in full.records[2..].iter().zip(&resumed.records) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(
+            a.local_loss.to_bits(),
+            b.local_loss.to_bits(),
+            "round {}: traced resume forked the local loss stream",
+            a.round
+        );
+        assert_eq!(a.val_score.to_bits(), b.val_score.to_bits());
+    }
+    assert_eq!(full.final_test.to_bits(), resumed.final_test.to_bits());
+
+    // checkpoint I/O was both counted and traced
+    assert!(obs::counter("checkpoint.saves").get() >= saves0 + 2);
+    assert!(obs::counter("checkpoint.loads").get() >= loads0 + 1);
+    assert!(spans.iter().any(|s| s.name == "checkpoint.save"));
+    assert!(spans.iter().any(|s| s.name == "checkpoint.load"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_parity_holds_with_tracing_on() {
+    let _l = test_lock();
+    let rt = native_rt();
+    let ds = Arc::new(generators::by_name("tiny", 2).unwrap());
+    let train_meta = rt
+        .meta(&Runtime::train_name("gcn", "adam", "tiny"))
+        .unwrap()
+        .clone();
+    let mut rng = Pcg64::new(7);
+    let state = ModelState::init(&train_meta, &mut rng);
+    let ids: Vec<u32> = ds.splits.val.iter().copied().take(50).collect();
+
+    // reference logits from the training-side eval path, untraced
+    let eval_name = Runtime::eval_name("gcn", "tiny");
+    let meta = rt.meta(&eval_name).unwrap().clone();
+    let bb = BlockBuilder::new(
+        meta.dims.b,
+        meta.dims.f1,
+        meta.dims.f2,
+        meta.dims.d,
+        meta.dims.c,
+        meta.multilabel(),
+    );
+    let want =
+        driver::eval_logits(&rt, &eval_name, &state.params, &ds, &ids, &bb, &mut Pcg64::new(1))
+            .unwrap();
+
+    obs::set_enabled(true);
+    let snap = Arc::new(ModelSnapshot::for_artifact(&train_meta, &state.params, 1).unwrap());
+    let mut engine = InferenceEngine::new(snap, ds.clone(), KernelCtx::new(1)).unwrap();
+    let mut got: Vec<f32> = Vec::new();
+    for chunk in ids.chunks(7) {
+        got.extend_from_slice(engine.score_batch(chunk).unwrap());
+    }
+    obs::set_enabled(false);
+    let spans = obs::take_spans();
+
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&want), bits(&got), "traced serve diverged from the eval path");
+    assert!(spans.iter().any(|s| s.name == "serve.cache_build"));
+}
+
+// ---------------------------------------------------------------------------
+// eval attribution under eval_every > 1
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eval_cost_attributes_to_the_triggering_round() {
+    let _l = test_lock();
+    let rt = native_rt();
+    let mut cfg = base_cfg();
+    cfg.rounds = 5; // due rounds: 2, 4 (cadence) and 5 (final)
+    let due = due_rounds(&cfg);
+    assert_eq!(due, vec![2, 4, 5]);
+
+    for engine in [Engine::Sequential, Engine::Cluster] {
+        let mut c = cfg.clone();
+        c.engine = engine;
+        obs::set_enabled(true);
+        let res = run_with(&c, &rt);
+        obs::set_enabled(false);
+        let spans = obs::take_spans();
+
+        for r in &res.records {
+            if due.contains(&r.round) {
+                assert!(
+                    r.phases.eval_s > 0.0,
+                    "{engine:?} round {}: eval ran but eval_time_s is zero",
+                    r.round
+                );
+                assert!(!r.val_score.is_nan(), "{engine:?} round {}", r.round);
+            } else {
+                assert_eq!(
+                    r.phases.eval_s, 0.0,
+                    "{engine:?} round {}: eval cost smeared into a non-eval round",
+                    r.round
+                );
+            }
+            assert!(r.phases.avg_s > 0.0, "{engine:?} round {}", r.round);
+        }
+
+        // the span round-tags say the same thing as the records
+        let mut eval_rounds: Vec<i64> = spans
+            .iter()
+            .filter(|s| s.name == "server.eval")
+            .map(|s| s.round)
+            .collect();
+        eval_rounds.sort_unstable();
+        eval_rounds.dedup();
+        let want: Vec<i64> = due.iter().map(|&r| r as i64).collect();
+        assert_eq!(
+            eval_rounds, want,
+            "{engine:?}: server.eval spans mis-attributed"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace export shape
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chrome_trace_parses_and_spans_nest_per_thread() {
+    let _l = test_lock();
+    let rt = native_rt();
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+
+    obs::set_enabled(true);
+    let _ = run_with(&cfg, &rt);
+    obs::set_enabled(false);
+    let spans = obs::take_spans();
+    assert!(!spans.is_empty());
+
+    // export parses back and carries every span + the schema stamp
+    let trace = obs::chrome_trace_json(&spans);
+    let parsed = Json::parse(&trace.to_string_pretty()).expect("trace JSON parses");
+    assert_eq!(
+        parsed.req("schema").as_f64().unwrap() as u64,
+        obs::SCHEMA_VERSION
+    );
+    let events = parsed.req("traceEvents").as_array().unwrap();
+    assert_eq!(events.len(), spans.len());
+    for ev in events {
+        assert_eq!(ev.req("ph").as_str().unwrap(), "X");
+        assert!(ev.req("dur").as_f64().unwrap() >= 0.0);
+        assert!(ev.get("name").is_some() && ev.get("ts").is_some());
+        assert!(ev.get("tid").is_some() && ev.get("pid").is_some());
+    }
+
+    // per thread, spans must nest or be disjoint — a span that partially
+    // overlaps its predecessor means a guard outlived its enclosing scope.
+    // take_spans sorts by (tid, start, longest-first), so a stack of end
+    // times is enough.
+    let mut stack: Vec<(u32, u64)> = Vec::new(); // (tid, end_ns)
+    for s in &spans {
+        let end = s.start_ns + s.dur_ns;
+        while let Some(&(tid, top_end)) = stack.last() {
+            if tid != s.tid || top_end <= s.start_ns {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&(tid, top_end)) = stack.last() {
+            if tid == s.tid {
+                assert!(
+                    end <= top_end,
+                    "span `{}` [{}, {end}] on tid {} partially overlaps its \
+                     enclosing span ending at {top_end}",
+                    s.name,
+                    s.start_ns,
+                    s.tid
+                );
+            }
+        }
+        stack.push((s.tid, end));
+    }
+
+    // summaries cover every name once
+    let sums = obs::summarize(&spans);
+    let names: std::collections::BTreeSet<&str> = spans.iter().map(|s| s.name).collect();
+    assert_eq!(sums.len(), names.len());
+    for s in &sums {
+        assert!(s.count > 0 && s.total_s >= s.max_s && s.max_s >= 0.0);
+    }
+}
+
+#[test]
+fn traced_phase_durations_cover_the_round_wall_time() {
+    // acceptance: per-round phase spans must account for the round — the
+    // sum of a round's top-level phase times stays within its wall time,
+    // and the `round` span itself is at least as long as any phase.
+    let _l = test_lock();
+    let rt = native_rt();
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+
+    obs::set_enabled(true);
+    let res = run_with(&cfg, &rt);
+    obs::set_enabled(false);
+    let spans = obs::take_spans();
+
+    for r in &res.records {
+        let phase_sum = r.phases.avg_s + r.phases.corr_s + r.phases.eval_s;
+        assert!(
+            phase_sum <= r.wall_time_s * 1.05 + 1e-3,
+            "round {}: phases sum to {phase_sum}s but the round took {}s",
+            r.round,
+            r.wall_time_s
+        );
+        let round_span = spans
+            .iter()
+            .filter(|s| s.name == "round" && s.round == r.round as i64)
+            .map(|s| s.dur_ns)
+            .max()
+            .unwrap_or(0);
+        // the `round` span opens/closes with the round's wall clock: its
+        // duration must agree with wall_time_s within 5% (+2ms slop for the
+        // post-record bookkeeping before the guard drops)
+        let round_span_s = round_span as f64 / 1e9;
+        assert!(
+            round_span_s >= r.wall_time_s * 0.95 - 2e-3
+                && round_span_s <= r.wall_time_s * 1.05 + 2e-3,
+            "round {}: round span {round_span_s}s vs wall {}s",
+            r.round,
+            r.wall_time_s
+        );
+        for phase in ["server.average", "server.correction", "server.eval"] {
+            for s in spans
+                .iter()
+                .filter(|s| s.name == phase && s.round == r.round as i64)
+            {
+                assert!(
+                    s.dur_ns <= round_span,
+                    "round {}: `{phase}` span outlasted the round span",
+                    r.round
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// structured outputs: JSONL log, RunResult::to_json, metrics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn jsonl_log_parses_and_every_line_is_schema_stamped() {
+    let _l = test_lock();
+    let rt = native_rt();
+    let path = std::env::temp_dir().join(format!(
+        "llcg_obs_events_{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    let mut log = obs::JsonlLog::create(&path).unwrap();
+    obs::set_enabled(true);
+    let cfg = base_cfg();
+    let ds = Arc::new(generators::by_name(&cfg.dataset, cfg.seed).unwrap());
+    let res = llcg::api::ExperimentBuilder::from_config(cfg.clone())
+        .with_dataset(ds)
+        .build()
+        .unwrap()
+        .launch(&rt)
+        .stream(|ev| {
+            log.write(ev.to_json()).unwrap();
+        })
+        .unwrap();
+    obs::set_enabled(false);
+    let spans = obs::take_spans();
+    log.write_span_summaries(&obs::summarize(&spans)).unwrap();
+    log.write_metrics().unwrap();
+    log.flush().unwrap();
+    let lines_written = log.lines();
+    drop(log);
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut kinds: Vec<String> = Vec::new();
+    let mut n = 0u64;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line: {e:?}\n{line}"));
+        assert_eq!(
+            j.req("schema").as_f64().unwrap() as u64,
+            obs::SCHEMA_VERSION,
+            "line missing schema stamp: {line}"
+        );
+        kinds.push(j.req("event").as_str().unwrap().to_string());
+        n += 1;
+    }
+    assert_eq!(n, lines_written);
+    assert_eq!(kinds.first().map(String::as_str), Some("round_started"));
+    assert!(kinds.iter().any(|k| k == "finished"));
+    assert!(kinds.iter().any(|k| k == "span_summary"));
+    assert!(kinds.iter().any(|k| k == "metrics"));
+    assert_eq!(
+        kinds.iter().filter(|k| *k == "round_completed").count(),
+        cfg.rounds
+    );
+
+    // the finished line embeds the full RunResult, phase timings included
+    let fin_line = text
+        .lines()
+        .find(|l| l.contains("\"finished\""))
+        .expect("finished event logged");
+    let fin = Json::parse(fin_line).unwrap();
+    let result = fin.req("result");
+    assert_eq!(
+        result.req("schema").as_f64().unwrap() as u64,
+        obs::SCHEMA_VERSION
+    );
+    let rows = result.req("records").as_array().unwrap();
+    assert_eq!(rows.len(), res.records.len());
+    for row in rows {
+        for key in ["avg_time_s", "corr_time_s", "eval_time_s", "wall_time_s"] {
+            assert!(row.get(key).is_some(), "record row misses {key}");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn metrics_snapshot_parses_and_percentiles_are_ordered() {
+    let _l = test_lock();
+    let h = obs::histogram("test.obs.latency");
+    h.reset();
+    let mut rng = Pcg64::new(3);
+    for _ in 0..1000 {
+        h.record_ns(1_000 + (rng.f32() * 1_000_000.0) as u64);
+    }
+    let c = obs::counter("test.obs.count");
+    c.reset();
+    c.add(42);
+
+    let j = obs::metrics_json();
+    let parsed = Json::parse(&j.to_string_pretty()).expect("metrics JSON parses");
+    let by_name = |section: &str, name: &str| -> Json {
+        parsed
+            .req(section)
+            .as_array()
+            .unwrap()
+            .iter()
+            .find(|e| e.req("name").as_str() == Some(name))
+            .unwrap_or_else(|| panic!("{section} misses {name}"))
+            .clone()
+    };
+    assert_eq!(
+        by_name("counters", "test.obs.count").req("value").as_f64().unwrap(),
+        42.0
+    );
+    let lat = by_name("histograms", "test.obs.latency");
+    assert_eq!(lat.req("count").as_f64().unwrap(), 1000.0);
+    let p50 = lat.req("p50_s").as_f64().unwrap();
+    let p99 = lat.req("p99_s").as_f64().unwrap();
+    let max = lat.req("max_s").as_f64().unwrap();
+    // percentiles interpolate inside power-of-two buckets, so p99 may sit
+    // above the true max — but never past its bucket's upper bound (2x)
+    assert!(0.0 < p50 && p50 <= p99 && p99 <= max * 2.0, "{p50} {p99} {max}");
+    assert!(obs::metrics_table().contains("test.obs.latency"));
+}
