@@ -10,6 +10,11 @@
 #   make bench-cluster-faults  robustness benches: time-to-target-loss at
 #                    drop 0/0.02/0.1 and a mid-run crash with and without
 #                    worker respawn (writes BENCH_cluster_faults.json)
+#   make bench-cluster-transport  worker-wire benches: the same run over
+#                    in-process threads vs real worker processes on loopback
+#                    TCP and unix sockets, with measured wire bytes per round
+#                    (builds the CLI first — worker spawns need it; writes
+#                    BENCH_cluster_transport.json)
 #   make bench-kernels  just the kernel-layer benches: scalar vs tiled vs
 #                    tiled+pool at 1/2/4/8 threads, step latency per engine,
 #                    staged-vs-pinned block upload (writes BENCH_kernels.json)
@@ -22,7 +27,7 @@
 #                    round with tracing off vs on (writes BENCH_obs.json)
 #   make test        quick test run
 
-.PHONY: artifacts check fmt test bench bench-cluster bench-cluster-faults bench-kernels bench-serve bench-obs clean
+.PHONY: artifacts check fmt test bench bench-cluster bench-cluster-faults bench-cluster-transport bench-kernels bench-serve bench-obs clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -46,6 +51,10 @@ bench-cluster:
 
 bench-cluster-faults:
 	cargo bench -- cluster_faults
+
+bench-cluster-transport:
+	cargo build --release
+	cargo bench -- cluster_transport
 
 bench-kernels:
 	cargo bench -- kernels

@@ -795,6 +795,100 @@ fn main() {
         }
     }
 
+    // ---- cluster-transport: modeled threads vs real processes ---------------
+    // The same tiny LLCG run on the cluster engine over each worker wire:
+    // in-process threads (modeled net, zero wire bytes), loopback TCP, and
+    // unix-domain sockets — both remote rows spawn real `llcg worker`
+    // processes per iteration, so the row prices process startup + handshake
+    // + per-round framing against the in-process baseline. The trailing
+    // printlns report the measured wire bytes per round from the RunResult.
+    // (`make bench-cluster-transport` -> BENCH_cluster_transport.json)
+    if b.enabled("cluster_transport/") {
+        match Runtime::load_or_native("artifacts") {
+            Err(e) => {
+                eprintln!("(no runtime available — skipping cluster-transport benches: {e:#})")
+            }
+            Ok((rt, adir)) => {
+                if rt.backend_name() != "native" {
+                    eprintln!(
+                        "(cluster engine needs the native backend — skipping cluster-transport benches)"
+                    );
+                } else if rt.meta("gcn_adam_tiny").is_err() {
+                    eprintln!("(no gcn/tiny artifact — skipping cluster-transport benches)");
+                } else {
+                    let data = Arc::new(generators::by_name("tiny", 0).unwrap());
+                    let mk = |transport: &str| {
+                        ExperimentBuilder::new()
+                            .with_dataset(data.clone())
+                            .arch("gcn")
+                            .algorithm(Algorithm::Llcg)
+                            .parts(2)
+                            .rounds(2)
+                            .set("local_steps", "4")
+                            .unwrap()
+                            .correction_steps(2)
+                            .eval_every(100) // no per-round eval
+                            .eval_max_nodes(32)
+                            .engine(llcg::cluster::Engine::Cluster)
+                            // worker processes rebuild the runtime from the
+                            // config; pin them to the artifacts this rt uses
+                            .set("artifacts_dir", &adir)
+                            .unwrap()
+                            .transport(transport)
+                            .build()
+                            .unwrap()
+                    };
+                    let exp = mk("inprocess");
+                    b.run("cluster_transport/inprocess(tiny,P=2)", 1, 3, || {
+                        std::hint::black_box(exp.launch(&rt).finish().unwrap());
+                    });
+                    // remote rows need the CLI binary for worker spawns; a
+                    // bench invocation's current_exe() is the bench harness
+                    let exe = std::env::var("LLCG_WORKER_EXE").ok().or_else(|| {
+                        ["target/release/llcg", "target/debug/llcg"]
+                            .iter()
+                            .find(|p| std::path::Path::new(p).is_file())
+                            .map(|s| s.to_string())
+                    });
+                    match exe {
+                        None => eprintln!(
+                            "(no llcg binary under target/ and LLCG_WORKER_EXE unset — \
+                             skipping remote transport rows; `cargo build --release` first)"
+                        ),
+                        Some(exe) => {
+                            std::env::set_var("LLCG_WORKER_EXE", exe);
+                            let mut specs = vec!["tcp"];
+                            if cfg!(unix) {
+                                specs.push("uds");
+                            }
+                            for spec in specs {
+                                let exp = mk(spec);
+                                let mut last = None;
+                                b.run(&format!("cluster_transport/{spec}(tiny,P=2)"), 1, 3, || {
+                                    last = Some(exp.launch(&rt).finish().unwrap());
+                                });
+                                if let Some(res) = &last {
+                                    let up: u64 =
+                                        res.records.iter().map(|r| r.wire_bytes_up).sum();
+                                    let down: u64 =
+                                        res.records.iter().map(|r| r.wire_bytes_down).sum();
+                                    let n = res.records.len().max(1) as u64;
+                                    println!(
+                                        "  -> {spec}: measured wire bytes/round: \
+                                         down={} up={} (modeled {} B/round)",
+                                        down / n,
+                                        up / n,
+                                        res.avg_round_bytes as u64
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     // ---- obs: instrumentation overhead ---------------------------------------
     // Micro rows price the primitives (a disabled span must stay at one
     // relaxed load + branch), then the same end-to-end LLCG round runs with

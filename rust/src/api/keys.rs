@@ -480,6 +480,19 @@ static KEYS: &[KeySpec] = &[
         },
         show: |cfg| cfg.resume.clone(),
     },
+    KeySpec {
+        name: "transport",
+        kind: KeyKind::Str,
+        doc: "cluster worker wire: inprocess|tcp|uds, with optional \
+              process-kill faults (tcp,kill=1@3)",
+        apply: |cfg, v| {
+            let spec = req_str(v, "transport")?;
+            crate::transport::TransportSpec::parse(&spec)?; // validate here, re-parse at engine start
+            cfg.transport = spec;
+            Ok(())
+        },
+        show: |cfg| cfg.transport.clone(),
+    },
 ];
 
 /// Look up a key by its canonical (underscore) name.
@@ -557,6 +570,24 @@ pub fn help_table() -> String {
     out
 }
 
+/// Render `cfg` as CLI override flags (`--name value` pairs, table order)
+/// that `apply_str` round-trips back to the same config. Used to hand a
+/// remote worker process the exact run config the server holds. `rho` is
+/// skipped while the schedule is `Fixed` — its "-" placeholder is display
+/// glue, not a value.
+pub fn cli_args(cfg: &ExperimentConfig) -> Vec<String> {
+    let mut out = Vec::new();
+    for k in KEYS {
+        let v = (k.show)(cfg);
+        if k.name == "rho" && v == "-" {
+            continue;
+        }
+        out.push(format!("--{}", k.name));
+        out.push(v);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -569,7 +600,7 @@ mod tests {
         dedup.dedup();
         assert_eq!(names.len(), dedup.len(), "duplicate KeySpec rows");
         // one row per ExperimentConfig knob (schedule takes two)
-        assert_eq!(names.len(), 36);
+        assert_eq!(names.len(), 37);
     }
 
     #[test]
@@ -675,6 +706,45 @@ mod tests {
         assert!(apply_str(&mut cfg, "net", "lan,drop=0.05,crash=1@3").is_ok());
         assert!(apply_str(&mut cfg, "net", "lan,drop=2").is_err());
         assert!(apply_str(&mut cfg, "net", "crash=1").is_err());
+    }
+
+    #[test]
+    fn cli_args_round_trip_every_key() {
+        let mut cfg = ExperimentConfig::default();
+        for (k, v) in [
+            ("dataset", "reddit-s"),
+            ("engine", "cluster"),
+            ("round_mode", "async:2"),
+            ("net", "lan,scale=0.5"),
+            ("transport", "tcp"),
+            ("rho", "1.1"),
+            ("serve_shed", "true"),
+            ("lr", "0.025"),
+        ] {
+            apply_str(&mut cfg, k, v).unwrap();
+        }
+        let args = cli_args(&cfg);
+        assert_eq!(args.len() % 2, 0);
+        let mut back = ExperimentConfig::default();
+        for pair in args.chunks(2) {
+            let key = pair[0].strip_prefix("--").expect("flag form");
+            apply_str(&mut back, key, &pair[1]).unwrap();
+        }
+        // ExperimentConfig has no PartialEq; Debug covers every field
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+        // a Fixed schedule must not emit the "-" rho placeholder
+        let fixed = cli_args(&ExperimentConfig::default());
+        assert!(!fixed.iter().any(|a| a == "--rho"), "{fixed:?}");
+        assert!(fixed.iter().any(|a| a == "--transport"), "{fixed:?}");
+    }
+
+    #[test]
+    fn transport_key_validates_spec() {
+        let mut cfg = ExperimentConfig::default();
+        apply_str(&mut cfg, "transport", "tcp,kill=1@3").unwrap();
+        assert_eq!(cfg.transport, "tcp,kill=1@3");
+        assert!(apply_str(&mut cfg, "transport", "carrier-pigeon").is_err());
+        assert!(apply_str(&mut cfg, "transport", "inprocess,kill=1@3").is_err());
     }
 
     #[test]

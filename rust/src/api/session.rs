@@ -328,6 +328,14 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Cluster worker wire: `inprocess` (threads + modeled net), or
+    /// `tcp`/`uds` (real worker processes over the versioned wire
+    /// protocol), with optional `,kill=p@r` process-kill faults.
+    pub fn transport(mut self, spec: &str) -> Self {
+        self.cfg.transport = spec.to_string();
+        self
+    }
+
     /// Native kernel-pool lanes (0 = auto); a pure performance knob —
     /// results are bit-identical at any setting.
     pub fn kernel_threads(mut self, threads: usize) -> Self {
@@ -455,10 +463,28 @@ impl ExperimentBuilder {
             ));
         }
         if (cfg.checkpoint_every > 0 || !cfg.resume.is_empty())
-            && cfg.round_mode != RoundMode::Sync
+            && cfg.round_mode == RoundMode::PipelinedCorrection
         {
             return Err(anyhow!(
-                "checkpoint/resume require round_mode=sync (got {})",
+                "checkpoint/resume require round_mode=sync or async (got {})",
+                cfg.round_mode.name()
+            ));
+        }
+        let tspec =
+            crate::transport::TransportSpec::parse(&cfg.transport).map_err(|e| anyhow!(e))?;
+        if tspec.kind != crate::transport::TransportKind::InProcess
+            && cfg.engine != Engine::Cluster
+        {
+            return Err(anyhow!(
+                "transport={} spawns real worker processes and requires \
+                 engine=cluster",
+                tspec.kind.name()
+            ));
+        }
+        if !tspec.kills.is_empty() && cfg.round_mode != RoundMode::Sync {
+            return Err(anyhow!(
+                "transport kill faults feed the sync respawn path; they \
+                 require round_mode=sync (got {})",
                 cfg.round_mode.name()
             ));
         }
@@ -706,6 +732,39 @@ mod tests {
             .build()
             .unwrap();
         ExperimentBuilder::new().checkpoint(2, "ckpt").build().unwrap();
+        // async checkpoints are legal now (the async engine barriers at
+        // checkpoint boundaries); pipelined stays rejected above
+        ExperimentBuilder::new()
+            .engine(Engine::Cluster)
+            .round_mode(RoundMode::AsyncStaleness { tau: 2 })
+            .checkpoint(2, "ckpt")
+            .build()
+            .unwrap();
+    }
+
+    #[test]
+    fn builder_validates_transport_combos() {
+        // a remote transport needs the cluster engine
+        let err = ExperimentBuilder::new().transport("tcp").build().err().unwrap();
+        assert!(format!("{err:#}").contains("engine=cluster"), "{err:#}");
+        // kill faults need sync mode (they feed the respawn path)
+        let err = ExperimentBuilder::new()
+            .engine(Engine::Cluster)
+            .round_mode(RoundMode::AsyncStaleness { tau: 1 })
+            .transport("tcp,kill=0@2")
+            .build()
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("round_mode=sync"), "{err:#}");
+        // bad specs are rejected with the grammar
+        let err = ExperimentBuilder::new().transport("warp").build().err().unwrap();
+        assert!(format!("{err:#}").contains("transport"), "{err:#}");
+        // valid remote combos build fine
+        ExperimentBuilder::new()
+            .engine(Engine::Cluster)
+            .transport("tcp,kill=1@2")
+            .build()
+            .unwrap();
     }
 
     #[test]

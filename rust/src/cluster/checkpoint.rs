@@ -64,7 +64,7 @@ impl Digest {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         Json::obj(vec![
             ("dataset", Json::str(&self.dataset)),
             ("arch", Json::str(&self.arch)),
@@ -78,7 +78,7 @@ impl Digest {
         ])
     }
 
-    fn from_json(j: &Json) -> Result<Digest> {
+    pub(crate) fn from_json(j: &Json) -> Result<Digest> {
         let s = |k: &str| -> Result<String> {
             j.get(k)
                 .and_then(Json::as_str)
@@ -125,6 +125,10 @@ pub struct Checkpoint {
     /// faithful; always empty for sequential-engine checkpoints.
     pub dead: Vec<u32>,
     pub digest: Digest,
+    /// engine-specific extras (e.g. the async engine marks its barrier
+    /// checkpoints and carries its running `max_staleness`); `None` for
+    /// sync/sequential checkpoints, and older checkpoints load as `None`
+    pub extra: Option<Json>,
 }
 
 fn hex_u128(x: u128) -> Json {
@@ -165,7 +169,10 @@ fn shapes_from_json(j: Option<&Json>, what: &str) -> Result<Vec<Vec<usize>>> {
         .collect()
 }
 
-fn push_tensors(buf: &mut Vec<u8>, tensors: &[Tensor]) {
+/// Append every tensor's `f32` data little-endian (shared with the wire
+/// protocol in `transport/wire.rs`, so frames and checkpoints round-trip
+/// parameters through the identical byte layout).
+pub(crate) fn push_tensors(buf: &mut Vec<u8>, tensors: &[Tensor]) {
     for t in tensors {
         for &x in &t.data {
             buf.extend_from_slice(&x.to_le_bytes());
@@ -174,7 +181,11 @@ fn push_tensors(buf: &mut Vec<u8>, tensors: &[Tensor]) {
 }
 
 /// Consume the next tensors from `bytes` per `shapes`, advancing `off`.
-fn take_tensors(bytes: &[u8], off: &mut usize, shapes: &[Vec<usize>]) -> Result<Vec<Tensor>> {
+pub(crate) fn take_tensors(
+    bytes: &[u8],
+    off: &mut usize,
+    shapes: &[Vec<usize>],
+) -> Result<Vec<Tensor>> {
     let mut out = Vec::with_capacity(shapes.len());
     for shape in shapes {
         let numel: usize = shape.iter().product();
@@ -225,6 +236,7 @@ impl Checkpoint {
             corr_rng: corr_rng.raw_state(),
             dead: dead.to_vec(),
             digest: Digest::of(cfg),
+            extra: None,
         }
     }
 
@@ -280,6 +292,19 @@ impl Checkpoint {
                 Json::arr(self.dead.iter().map(|&p| Json::num(p as f64)).collect()),
             ),
         ]);
+        let meta = match &self.extra {
+            Some(x) => {
+                let mut pairs: Vec<(&str, Json)> = meta
+                    .as_object()
+                    .expect("meta is an object")
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect();
+                pairs.push(("extra", x.clone()));
+                Json::obj(pairs)
+            }
+            None => meta,
+        };
         let meta_path = rd.join("meta.json");
         let meta_text = meta.to_string_pretty();
         std::fs::write(&meta_path, &meta_text)
@@ -389,6 +414,7 @@ impl Checkpoint {
             corr_rng,
             dead,
             digest,
+            extra: meta.get("extra").cloned(),
         })
     }
 

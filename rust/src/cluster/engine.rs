@@ -16,166 +16,22 @@ use anyhow::{anyhow, bail, Result};
 
 use super::checkpoint::Checkpoint;
 use super::net::{LEG_DOWN, LEG_UP};
-use super::{Engine, NetModel, RoundMode, StalenessGate};
+use super::{Engine, RoundMode, StalenessGate};
 use crate::api::session::{Event, RunCtx};
 use crate::config::ExperimentConfig;
-use crate::coordinator::driver::{self, PartInfo, RoundRecord, RunResult, RunSetup};
+use crate::coordinator::driver::{self, RoundRecord, RunResult, RunSetup};
 use crate::coordinator::{Algorithm, CommStats};
 use crate::graph::Dataset;
 use crate::runtime::{ModelState, Runtime, Tensor};
-use crate::sampler::{BlockArena, BlockBuilder, NodeScratch};
-use crate::util::Pcg64;
-
-// ---------------------------------------------------------------------------
-// messages
-// ---------------------------------------------------------------------------
-
-/// Server → worker.
-enum Down {
-    /// `ParamsDown`: run local round `round` (`k` steps) from `params`.
-    Round {
-        round: usize,
-        k: usize,
-        params: Vec<Tensor>,
-    },
-    /// Checkpoint boundary: reply with the full local state (params +
-    /// optimizer moments) via [`Up::Snapshot`].
-    Snapshot,
-    /// Terminal: the run is over; exit the worker loop.
-    Shutdown,
-}
-
-/// Worker → server (one shared channel, tagged by worker).
-enum Up {
-    /// `RemoteFeatures`: a mini-batch fetched remote node features (GGS);
-    /// the server folds the bytes into the current round's accounting.
-    Features { bytes: u64 },
-    /// `ParamsUp`: end-of-round parameter upload + round stats.
-    Round(ParamsUp),
-    /// Reply to [`Down::Snapshot`]: the worker's full resumable state.
-    Snapshot { part: u32, state: Box<ModelState> },
-    /// Unrecoverable worker error; with fault tolerance off the server
-    /// aborts the run, with it on the worker is respawned next round.
-    Failed { part: u32, err: String },
-}
+use crate::sampler::{BlockArena, BlockBuilder};
+use crate::transport::{worker_send_error, Down, ParamsUp, Transport, Up, WorkerHost};
+use crate::util::{Json, Pcg64};
 
 /// How long the server waits on the shared `Up` channel (per message)
 /// before writing off the still-outstanding workers as dead. Only applies
 /// under fault tolerance; the fault-free path blocks indefinitely, exactly
 /// like the legacy engine.
 const LIVENESS_TIMEOUT: Duration = Duration::from_secs(60);
-
-/// Payload of [`Up::Round`].
-struct ParamsUp {
-    part: u32,
-    round: usize,
-    params: Vec<Tensor>,
-    loss_sum: f64,
-    loss_n: usize,
-    net_s: f64,
-    elapsed_s: f64,
-}
-
-// ---------------------------------------------------------------------------
-// worker / correction threads
-// ---------------------------------------------------------------------------
-
-/// Everything a worker thread needs; refs point at run-owned data that
-/// outlives the thread scope.
-struct WorkerSpec<'a> {
-    cfg: &'a ExperimentConfig,
-    ds: &'a Dataset,
-    assignment: &'a [u32],
-    info: &'a PartInfo,
-    netm: &'a NetModel,
-    dir: PathBuf,
-    train_name: String,
-    builder: BlockBuilder,
-    param_bytes: u64,
-    /// kernel-pool lanes for this worker's private runtime, sized so that
-    /// `P workers × T lanes` does not oversubscribe the host
-    kernel_threads: usize,
-}
-
-/// Worker thread body: build a private native `Runtime`, then serve
-/// `Down::Round` requests until shutdown / disconnect. Model + optimizer
-/// state, block arena, and sampling scratch live here for the whole run.
-fn worker_main(spec: WorkerSpec<'_>, rx: Receiver<Down>, up: Sender<Up>, mut state: ModelState) {
-    let rt = match Runtime::load(&spec.dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            let _ = up.send(Up::Failed {
-                part: spec.info.part,
-                err: format!("{e:#}"),
-            });
-            return;
-        }
-    };
-    rt.set_kernel_threads(spec.kernel_threads);
-    let mut arena = BlockArena::new();
-    let mut scratch = NodeScratch::new();
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Down::Round { round, k, params } => {
-                if spec.netm.crashed(spec.info.part, round as u64) {
-                    // injected fault: die silently at round start, like a
-                    // lost node (the server knows the schedule and does not
-                    // wait for this worker)
-                    return;
-                }
-                let out = driver::run_worker_round(
-                    &rt,
-                    &spec.train_name,
-                    spec.cfg,
-                    spec.ds,
-                    spec.assignment,
-                    spec.info,
-                    &spec.builder,
-                    spec.netm,
-                    spec.param_bytes,
-                    &mut state,
-                    &params,
-                    round,
-                    k,
-                    &mut arena,
-                    &mut scratch,
-                    |fb| {
-                        let _ = up.send(Up::Features { bytes: fb });
-                    },
-                );
-                let reply = match out {
-                    Ok(o) => Up::Round(ParamsUp {
-                        part: spec.info.part,
-                        round,
-                        params: state.params.clone(),
-                        loss_sum: o.loss_sum,
-                        loss_n: o.loss_n,
-                        net_s: o.net_s,
-                        elapsed_s: o.elapsed_s,
-                    }),
-                    Err(e) => Up::Failed {
-                        part: spec.info.part,
-                        err: format!("{e:#}"),
-                    },
-                };
-                let fatal = matches!(reply, Up::Failed { .. });
-                if up.send(reply).is_err() || fatal {
-                    break;
-                }
-            }
-            Down::Snapshot => {
-                let reply = Up::Snapshot {
-                    part: spec.info.part,
-                    state: Box::new(state.clone()),
-                };
-                if up.send(reply).is_err() {
-                    break;
-                }
-            }
-            Down::Shutdown => break,
-        }
-    }
-}
 
 /// Result of one overlapped correction: the parameter delta
 /// `correct(θ_r) − θ_r` plus the measured correction time.
@@ -254,85 +110,6 @@ fn correction_main(
     }
 }
 
-/// A failed `Down` send means the worker is gone; it usually queued an
-/// `Up::Failed` with the root cause (e.g. its `Runtime::load` error) before
-/// exiting — surface that instead of a generic channel error.
-fn worker_send_error(up_rx: &Receiver<Up>, fallback: &str) -> anyhow::Error {
-    while let Ok(msg) = up_rx.try_recv() {
-        if let Up::Failed { part, err } = msg {
-            return anyhow!("worker {part} failed: {err}");
-        }
-    }
-    anyhow!("{fallback}")
-}
-
-/// Spawn a single worker thread for `info` seeded with `state`; returns its
-/// `Down` sender. Used at startup for every part and again by the
-/// supervisor when it respawns a dead worker mid-run.
-#[allow(clippy::too_many_arguments)]
-fn spawn_one_worker<'scope, 'env>(
-    s: &'scope std::thread::Scope<'scope, 'env>,
-    cfg: &'env ExperimentConfig,
-    ds: &'env Dataset,
-    assignment: &'env [u32],
-    netm: &'env NetModel,
-    info: &'env PartInfo,
-    state: ModelState,
-    dir: &std::path::Path,
-    train_name: &str,
-    builder: &BlockBuilder,
-    param_bytes: u64,
-    up_tx: &Sender<Up>,
-    kernel_threads: usize,
-) -> Sender<Down> {
-    let (dtx, drx) = channel::<Down>();
-    let spec = WorkerSpec {
-        cfg,
-        ds,
-        assignment,
-        info,
-        netm,
-        dir: dir.to_path_buf(),
-        train_name: train_name.to_string(),
-        builder: builder.clone(),
-        param_bytes,
-        kernel_threads,
-    };
-    let up = up_tx.clone();
-    s.spawn(move || worker_main(spec, drx, up, state));
-    dtx
-}
-
-/// Spawn one worker thread per part; returns the per-worker `Down` senders
-/// (index = part id).
-#[allow(clippy::too_many_arguments)]
-fn spawn_workers<'scope, 'env>(
-    s: &'scope std::thread::Scope<'scope, 'env>,
-    cfg: &'env ExperimentConfig,
-    ds: &'env Dataset,
-    assignment: &'env [u32],
-    netm: &'env NetModel,
-    parts: &'env [PartInfo],
-    workers: Vec<ModelState>,
-    dir: &std::path::Path,
-    train_name: &str,
-    builder: &BlockBuilder,
-    param_bytes: u64,
-    up_tx: &Sender<Up>,
-    kernel_threads: usize,
-) -> Vec<Sender<Down>> {
-    parts
-        .iter()
-        .zip(workers)
-        .map(|(info, state)| {
-            spawn_one_worker(
-                s, cfg, ds, assignment, netm, info, state, dir, train_name, builder,
-                param_bytes, up_tx, kernel_threads,
-            )
-        })
-        .collect()
-}
-
 /// Kernel-pool lanes per compute thread: the explicit `kernel_threads`
 /// setting, or `host cores / concurrent` (min 1), where `concurrent` is the
 /// number of simultaneously-computing threads — `P` workers, plus the
@@ -378,11 +155,17 @@ pub(crate) fn run_cluster(
         _ => cfg.kernel_threads,
     });
     let setup = driver::setup_run(cfg, ds, rt, pre_assignment)?;
-    match cfg.round_mode {
-        RoundMode::Sync => run_rounds(cfg, ds, rt, setup, false, ctx),
-        RoundMode::PipelinedCorrection => run_rounds(cfg, ds, rt, setup, true, ctx),
-        RoundMode::AsyncStaleness { tau } => run_async(cfg, ds, rt, setup, tau, ctx),
-    }
+    // the transport outlives the round loop: bridge threads borrow it from
+    // inside the engine's thread scope, and `finish` reaps worker processes
+    // after the scope has joined (workers exit on Shutdown / socket EOF)
+    let transport = Transport::new(cfg, &setup)?;
+    let res = match cfg.round_mode {
+        RoundMode::Sync => run_rounds(cfg, ds, rt, setup, false, &transport, ctx),
+        RoundMode::PipelinedCorrection => run_rounds(cfg, ds, rt, setup, true, &transport, ctx),
+        RoundMode::AsyncStaleness { tau } => run_async(cfg, ds, rt, setup, tau, &transport, ctx),
+    };
+    transport.finish();
+    res
 }
 
 /// Lock-step rounds: sync mode (correction inline on the server thread,
@@ -394,6 +177,7 @@ fn run_rounds(
     rt: &Runtime,
     setup: RunSetup,
     pipelined: bool,
+    transport: &Transport,
     ctx: &mut RunCtx<'_>,
 ) -> Result<RunResult> {
     let RunSetup {
@@ -414,7 +198,10 @@ fn run_rounds(
         mut corr_rng,
         net: netm,
     } = setup;
-    let ft = netm.has_faults() || cfg.round_timeout > 0.0 || cfg.quorum > 0;
+    let ft = netm.has_faults()
+        || cfg.round_timeout > 0.0
+        || cfg.quorum > 0
+        || transport.has_faults();
     if pipelined && (ft || cfg.checkpoint_every > 0 || !cfg.resume.is_empty()) {
         bail!(
             "fault tolerance and checkpoint/resume run under round_mode=sync \
@@ -462,6 +249,12 @@ fn run_rounds(
     if !cfg.resume.is_empty() {
         let ck = Checkpoint::load(std::path::Path::new(&cfg.resume))?;
         ck.check_compatible(cfg)?;
+        if ck.extra.is_some() {
+            bail!(
+                "this checkpoint was written by the async engine (it carries \
+                 async barrier state); resume it under round_mode=async"
+            );
+        }
         global_params = ck.global_params;
         server_state = ck.server_state;
         workers = ck.workers;
@@ -474,23 +267,24 @@ fn run_rounds(
         }
     }
 
+    // run-owned data every spawn (and respawn) borrows, for either transport
+    let host = WorkerHost {
+        cfg,
+        ds,
+        assignment: &assignment,
+        netm: &netm,
+        dir: dir.clone(),
+        train_name: train_name.clone(),
+        builder: local_builder.clone(),
+        param_bytes,
+    };
     std::thread::scope(|s| -> Result<RunResult> {
         let (up_tx, up_rx) = channel::<Up>();
-        let mut down_txs = spawn_workers(
-            s,
-            cfg,
-            ds,
-            &assignment,
-            &netm,
-            &parts,
-            workers,
-            &dir,
-            &train_name,
-            &local_builder,
-            param_bytes,
-            &up_tx,
-            lanes,
-        );
+        let mut down_txs: Vec<Sender<Down>> = parts
+            .iter()
+            .zip(workers)
+            .map(|(info, state)| transport.spawn_worker(s, &host, info, state, &up_tx, lanes))
+            .collect();
         // under fault tolerance the server keeps an `Up` sender so respawned
         // workers get fresh clones; without it the dropped sender keeps total
         // worker death observable as a channel disconnect (legacy behavior)
@@ -527,6 +321,9 @@ fn run_rounds(
         let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
         // storage bytes ride round 1's comm (see the sequential driver)
         let mut cum_bytes: u64 = resume_cum_bytes;
+        // measured wire-byte baseline for per-round deltas (always zero on
+        // the in-process transport)
+        let (mut wire_up_prev, mut wire_down_prev) = transport.wire_totals();
         let mut corr_arena = BlockArena::new();
         // uploads that missed their round (up-leg drop → retransmit, or past
         // the `round_timeout` deadline), held for the next round's average —
@@ -566,19 +363,13 @@ fn run_rounds(
                     };
                     // replacing the sender drops the old one, so a worker
                     // that is merely wedged (rather than exited) unblocks
-                    // and dies with the channel
-                    down_txs[p] = spawn_one_worker(
+                    // and dies with the channel (remotely: its bridge closes
+                    // the socket, and the old process exits on EOF)
+                    down_txs[p] = transport.spawn_worker(
                         s,
-                        cfg,
-                        ds,
-                        &assignment,
-                        &netm,
+                        &host,
                         &parts[p],
                         state,
-                        &dir,
-                        &train_name,
-                        &local_builder,
-                        param_bytes,
                         up_hold.as_ref().expect("ft keeps the up sender"),
                         lanes,
                     );
@@ -883,6 +674,10 @@ fn run_rounds(
             held = late_next;
 
             cum_bytes += comm.total();
+            let (wu, wd) = transport.wire_totals();
+            let (wire_bytes_up, wire_bytes_down) =
+                (wu - wire_up_prev, wd - wire_down_prev);
+            (wire_up_prev, wire_down_prev) = (wu, wd);
             records.push(RoundRecord {
                 round,
                 local_steps: k,
@@ -903,6 +698,8 @@ fn run_rounds(
                 drops: drops_r,
                 respawns: respawns_r,
                 quorum: quorum_r,
+                wire_bytes_up,
+                wire_bytes_down,
             });
             // round boundary: publish the (corrected) global model for any
             // live serving hub while the next round keeps training
@@ -1044,6 +841,7 @@ fn run_async(
     rt: &Runtime,
     setup: RunSetup,
     tau: usize,
+    transport: &Transport,
     ctx: &mut RunCtx<'_>,
 ) -> Result<RunResult> {
     let RunSetup {
@@ -1054,7 +852,7 @@ fn run_async(
         assignment,
         cut_ratio,
         parts,
-        workers,
+        mut workers,
         mut global_params,
         mut server_state,
         local_builder,
@@ -1064,16 +862,12 @@ fn run_async(
         mut corr_rng,
         net: netm,
     } = setup;
-    if netm.has_faults()
-        || cfg.round_timeout > 0.0
-        || cfg.quorum > 0
-        || cfg.checkpoint_every > 0
-        || !cfg.resume.is_empty()
+    if netm.has_faults() || cfg.round_timeout > 0.0 || cfg.quorum > 0 || transport.has_faults()
     {
         bail!(
-            "fault injection, quorum rounds, and checkpoint/resume require \
-             round_mode=sync — the async engine already tolerates pacing \
-             differences through its staleness gate"
+            "fault injection and quorum rounds require round_mode=sync — the \
+             async engine already tolerates pacing differences through its \
+             staleness gate"
         );
     }
     let dir = rt.artifacts_dir().to_path_buf();
@@ -1091,39 +885,80 @@ fn run_async(
     // are budgeted as parts + 1 concurrent compute threads
     let lanes = worker_kernel_threads(cfg, parts_n + 1);
 
+    // --- resume: a checkpoint written by either engine is a clean barrier
+    // (every worker at round `base`, nothing in flight), which is exactly
+    // this engine's state right after a completed window — so restoring the
+    // loop-carried state and counting rounds from `base` replays the rest.
+    // The admission cap below guarantees the async engine only ever *writes*
+    // checkpoints at such barriers.
+    let mut base = 0usize;
+    let mut resume_cum_bytes = 0u64;
+    let mut max_staleness = 0u64;
+    if !cfg.resume.is_empty() {
+        let ck = Checkpoint::load(std::path::Path::new(&cfg.resume))?;
+        ck.check_compatible(cfg)?;
+        if !ck.dead.is_empty() {
+            bail!(
+                "this checkpoint records dead workers and the async engine \
+                 has no respawn path; resume it under round_mode=sync"
+            );
+        }
+        global_params = ck.global_params;
+        server_state = ck.server_state;
+        workers = ck.workers;
+        eval_rng = Pcg64::from_raw_state(ck.eval_rng.0, ck.eval_rng.1);
+        corr_rng = Pcg64::from_raw_state(ck.corr_rng.0, ck.corr_rng.1);
+        resume_cum_bytes = ck.cum_bytes;
+        base = ck.round;
+        // a sync-written checkpoint has no extra; staleness restarts at 0
+        if let Some(ms) = ck
+            .extra
+            .as_ref()
+            .and_then(|x| x.get("max_staleness"))
+            .and_then(|v| v.as_f64())
+        {
+            max_staleness = ms as u64;
+        }
+    }
+
+    // run-owned data every spawn borrows, for either transport
+    let host = WorkerHost {
+        cfg,
+        ds,
+        assignment: &assignment,
+        netm: &netm,
+        dir: dir.clone(),
+        train_name: train_name.clone(),
+        builder: local_builder.clone(),
+        param_bytes,
+    };
     std::thread::scope(|s| -> Result<RunResult> {
         let (up_tx, up_rx) = channel::<Up>();
-        let down_txs = spawn_workers(
-            s,
-            cfg,
-            ds,
-            &assignment,
-            &netm,
-            &parts,
-            workers,
-            &dir,
-            &train_name,
-            &local_builder,
-            param_bytes,
-            &up_tx,
-            lanes,
-        );
+        let down_txs: Vec<Sender<Down>> = parts
+            .iter()
+            .zip(workers)
+            .map(|(info, state)| transport.spawn_worker(s, &host, info, state, &up_tx, lanes))
+            .collect();
         drop(up_tx);
 
-        let mut gate = StalenessGate::new(parts_n, tau);
+        // every worker stands at the `base` barrier (absolute round counts,
+        // so schedule lookups and the tau bound work across a resume)
+        let mut gate = StalenessGate::from_done(vec![base; parts_n], tau);
         // workers already sent Shutdown when they finished their rounds (a
         // second send at teardown would trip over the closed channel)
         let mut shut = vec![false; parts_n];
         let mut waiting: Vec<usize> = Vec::new();
-        let mut max_staleness = 0u64;
         let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
         // storage bytes ride the first window's comm (see sequential driver)
-        let mut cum_bytes: u64 = 0;
+        let mut cum_bytes: u64 = resume_cum_bytes;
+        let (mut wire_up_prev, mut wire_down_prev) = transport.wire_totals();
         let mut corr_arena = BlockArena::new();
 
         // window accumulators (one window = P pushes = one RoundRecord)
         let mut comm = CommStats::default();
-        comm.feature_bytes += storage_sum;
+        if base == 0 {
+            comm.feature_bytes += storage_sum;
+        }
         let mut loss_sum = 0f64;
         let mut loss_n = 0usize;
         let mut k_sum = 0usize;
@@ -1136,16 +971,16 @@ fn run_async(
         let mut pushes = 0usize;
         let mut t_window = Instant::now();
 
-        // everyone starts round 1 (staleness 0)
+        // everyone starts the round after the barrier (staleness 0)
         ctx.emit(Event::RoundStarted {
-            round: 1,
-            local_steps: k_for(1),
+            round: base + 1,
+            local_steps: k_for(base + 1),
         });
         for tx in &down_txs {
             if tx
                 .send(Down::Round {
-                    round: 1,
-                    k: k_for(1),
+                    round: base + 1,
+                    k: k_for(base + 1),
                     params: global_params.clone(),
                 })
                 .is_err()
@@ -1158,7 +993,7 @@ fn run_async(
             comm.down_bytes += param_bytes;
         }
 
-        while records.len() < cfg.rounds {
+        while base + records.len() < cfg.rounds {
             match up_rx.recv() {
                 Err(_) => bail!("all worker threads disconnected mid-run"),
                 Ok(Up::Features { bytes }) => comm.feature_bytes += bytes,
@@ -1184,7 +1019,7 @@ fn run_async(
                     {
                         let _s = crate::obs::span_round(
                             "server.average",
-                            (records.len() + 1) as i64,
+                            (base + records.len() + 1) as i64,
                         );
                         let alpha = 1.0 / parts_n as f32;
                         for (g, w) in global_params.iter_mut().zip(&u.params) {
@@ -1200,7 +1035,7 @@ fn run_async(
 
                     if pushes == parts_n {
                         pushes = 0;
-                        let round = records.len() + 1;
+                        let round = base + records.len() + 1;
                         let t_server = Instant::now();
                         // the per-push folds above are this window's
                         // averaging cost
@@ -1228,6 +1063,10 @@ fn run_async(
                             ctx,
                         )?;
                         cum_bytes += comm.total();
+                        let (wu, wd) = transport.wire_totals();
+                        let (wire_bytes_up, wire_bytes_down) =
+                            (wu - wire_up_prev, wd - wire_down_prev);
+                        (wire_up_prev, wire_down_prev) = (wu, wd);
                         records.push(RoundRecord {
                             round,
                             // mean steps actually granted to this window's
@@ -1252,6 +1091,8 @@ fn run_async(
                             drops: 0,
                             respawns: 0,
                             quorum: parts_n,
+                            wire_bytes_up,
+                            wire_bytes_down,
                         });
                         // window boundary: publish for any live serving hub
                         ctx.publish_params(round, &global_params);
@@ -1266,11 +1107,84 @@ fn run_async(
                         net_time = 0.0;
                         fold_time = 0.0;
                         t_window = Instant::now();
+
+                        // ---- checkpoint barrier ---------------------------
+                        // the admission cap below stalls every worker at the
+                        // boundary, so when this window completes all P
+                        // workers are idle at `round` with nothing in flight
+                        // — the same clean barrier the sync engine cuts at
+                        let ckpt_due = cfg.checkpoint_every > 0
+                            && round % cfg.checkpoint_every == 0
+                            && round < cfg.rounds;
+                        if ckpt_due {
+                            let _s = crate::obs::span_round(
+                                "checkpoint.round_barrier",
+                                round as i64,
+                            );
+                            for tx in &down_txs {
+                                if tx.send(Down::Snapshot).is_err() {
+                                    return Err(worker_send_error(
+                                        &up_rx,
+                                        "a worker exited before the checkpoint barrier",
+                                    ));
+                                }
+                            }
+                            let mut snaps: Vec<Option<ModelState>> =
+                                (0..parts_n).map(|_| None).collect();
+                            let mut want = parts_n;
+                            while want > 0 {
+                                match up_rx.recv() {
+                                    Ok(Up::Snapshot { part, state }) => {
+                                        snaps[part as usize] = Some(*state);
+                                        want -= 1;
+                                    }
+                                    Ok(Up::Failed { part, err }) => {
+                                        bail!("worker {part} failed: {err}")
+                                    }
+                                    Ok(Up::Features { .. }) | Ok(Up::Round(_)) => bail!(
+                                        "unexpected worker message during a \
+                                         checkpoint snapshot"
+                                    ),
+                                    Err(_) => bail!(
+                                        "all worker threads disconnected at a checkpoint"
+                                    ),
+                                }
+                            }
+                            let worker_states: Vec<ModelState> = snaps
+                                .into_iter()
+                                .map(|s| s.expect("all P gathered"))
+                                .collect();
+                            let mut ck = Checkpoint::capture(
+                                cfg,
+                                round,
+                                cum_bytes,
+                                &global_params,
+                                &server_state,
+                                &worker_states,
+                                &eval_rng,
+                                &corr_rng,
+                                &[],
+                            );
+                            // marks the checkpoint as async-written (the sync
+                            // engine refuses it) and carries the running
+                            // staleness high-water mark across the resume
+                            ck.extra = Some(Json::obj(vec![
+                                ("mode", Json::str("async")),
+                                ("max_staleness", Json::num(max_staleness as f64)),
+                            ]));
+                            let path =
+                                ck.save(std::path::Path::new(&cfg.checkpoint_dir))?;
+                            ctx.emit(Event::CheckpointSaved {
+                                round,
+                                path: path.display().to_string(),
+                            });
+                        }
+
                         if ctx.stopped() {
                             break; // end the run at this window boundary
                         }
-                        if records.len() < cfg.rounds {
-                            let next = records.len() + 1;
+                        if base + records.len() < cfg.rounds {
+                            let next = base + records.len() + 1;
                             ctx.emit(Event::RoundStarted {
                                 round: next,
                                 local_steps: k_for(next),
@@ -1278,11 +1192,20 @@ fn run_async(
                         }
                     }
 
-                    // admit waiting workers within the staleness bound
+                    // admit waiting workers within the staleness bound, and
+                    // stall everyone at the next checkpoint boundary so the
+                    // window completing it is a clean barrier
+                    let cap = if cfg.checkpoint_every > 0 {
+                        ((base + records.len()) / cfg.checkpoint_every + 1)
+                            * cfg.checkpoint_every
+                    } else {
+                        usize::MAX
+                    };
                     let mut i = 0;
                     while i < waiting.len() {
                         let q = waiting[i];
-                        if gate.done(q) >= cfg.rounds || records.len() >= cfg.rounds {
+                        if gate.done(q) >= cfg.rounds || base + records.len() >= cfg.rounds
+                        {
                             if down_txs[q].send(Down::Shutdown).is_err() {
                                 return Err(worker_send_error(
                                     &up_rx,
@@ -1291,7 +1214,7 @@ fn run_async(
                             }
                             shut[q] = true;
                             waiting.swap_remove(i);
-                        } else if gate.may_start(q) {
+                        } else if gate.may_start(q) && gate.done(q) < cap {
                             max_staleness = max_staleness.max(gate.staleness(q) as u64);
                             let next = gate.done(q) + 1;
                             if down_txs[q]

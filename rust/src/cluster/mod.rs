@@ -172,6 +172,13 @@ impl StalenessGate {
         }
     }
 
+    /// Resume constructor: every worker has already completed the rounds a
+    /// checkpoint barrier recorded (the gate counts absolute rounds, so
+    /// admission math keeps working across a resume).
+    pub fn from_done(done: Vec<usize>, tau: usize) -> StalenessGate {
+        StalenessGate { tau, done }
+    }
+
     /// Record that worker `p` completed (pushed) one more round.
     pub fn push(&mut self, p: usize) {
         self.done[p] += 1;
@@ -244,6 +251,17 @@ mod tests {
         g.push(2);
         assert_eq!(g.min_done(), 1);
         assert!(g.may_start(0), "released once the bound holds again");
+    }
+
+    #[test]
+    fn staleness_gate_resumes_from_absolute_counts() {
+        let mut g = StalenessGate::from_done(vec![6, 6, 6], 1);
+        assert_eq!(g.min_done(), 6);
+        assert!(g.may_start(0) && g.may_start(1) && g.may_start(2));
+        g.push(0);
+        assert_eq!(g.done(0), 7);
+        g.push(0);
+        assert!(!g.may_start(0), "tau bound holds across the resume base");
     }
 
     #[test]

@@ -81,6 +81,10 @@ pub struct ExperimentConfig {
     pub checkpoint_dir: String,
     /// resume from a checkpoint directory ("" = fresh run)
     pub resume: String,
+    /// cluster worker wire: `inprocess` (threads + modeled net),
+    /// `tcp`/`uds` (real worker processes over the versioned wire
+    /// protocol), with optional `,kill=p@r` process-kill faults
+    pub transport: String,
 }
 
 impl Default for ExperimentConfig {
@@ -121,6 +125,7 @@ impl Default for ExperimentConfig {
             checkpoint_every: 0,
             checkpoint_dir: "checkpoints".into(),
             resume: String::new(),
+            transport: "inprocess".into(),
         }
     }
 }

@@ -98,6 +98,11 @@ pub struct RoundRecord {
     /// param sets averaged into the global model this round (= P when
     /// every worker contributed; fewer under quorum rounds / dead workers)
     pub quorum: usize,
+    /// measured bytes written to worker sockets this round (remote
+    /// transports only; zero in-process, where `net_time_s` models the link)
+    pub wire_bytes_down: u64,
+    /// measured bytes read from worker sockets this round (remote only)
+    pub wire_bytes_up: u64,
 }
 
 /// Complete result of one distributed run.
@@ -109,6 +114,8 @@ pub struct RunResult {
     pub parts: usize,
     /// execution engine that produced this result ("sequential" | "cluster")
     pub engine: &'static str,
+    /// worker wire under the cluster engine ("inprocess" | "tcp" | "uds")
+    pub transport: String,
     pub records: Vec<RoundRecord>,
     pub final_val: f64,
     pub final_test: f64,
@@ -147,6 +154,8 @@ impl RoundRecord {
             ("drops", Json::num(self.drops as f64)),
             ("respawns", Json::num(self.respawns as f64)),
             ("quorum", Json::num(self.quorum as f64)),
+            ("wire_bytes_down", Json::num(self.wire_bytes_down as f64)),
+            ("wire_bytes_up", Json::num(self.wire_bytes_up as f64)),
         ])
     }
 }
@@ -164,6 +173,7 @@ impl RunResult {
             ("arch", Json::str(&self.arch)),
             ("parts", Json::num(self.parts as f64)),
             ("engine", Json::str(self.engine)),
+            ("transport", Json::str(&self.transport)),
             ("final_val", Json::num(self.final_val)),
             ("final_test", Json::num(self.final_test)),
             ("cut_ratio", Json::num(self.cut_ratio)),
@@ -926,10 +936,20 @@ pub(crate) fn finish_run(
     let (final_val, avg_round_bytes) = summarize(&records);
     let total_drops = records.iter().map(|r| r.drops).sum();
     let total_respawns = records.iter().map(|r| r.respawns).sum();
+    // report the wire the run actually rode (kills and other options are
+    // not identity; the kind name is) — sequential runs are in-process by
+    // construction
+    let transport = match engine {
+        Engine::Sequential => "inprocess".to_string(),
+        Engine::Cluster => crate::transport::TransportSpec::parse(&cfg.transport)
+            .map(|t| t.kind.name().to_string())
+            .unwrap_or_else(|_| cfg.transport.clone()),
+    };
     Ok(RunResult {
         algorithm: cfg.algorithm,
         dataset: cfg.dataset.clone(),
         arch: cfg.arch.clone(),
+        transport,
         parts: cfg.parts,
         engine: engine.name(),
         records,
@@ -1170,6 +1190,8 @@ fn run_sequential(
             drops: 0,
             respawns: 0,
             quorum: parts.len(),
+            wire_bytes_down: 0,
+            wire_bytes_up: 0,
         });
         // round boundary: hand the (corrected) global model to any live
         // serving hub (no-op unless the run was launched with publish_to)

@@ -48,6 +48,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod serve;
 pub mod testkit;
+pub mod transport;
 pub mod util;
 
 pub use api::{Event, Experiment, ExperimentBuilder, Run, RunControl, Sweep};

@@ -15,6 +15,9 @@
 //!                                                micro-batching inference server
 //!   infer [--nodes 1,2,3 | --split val]          train, then score nodes through
 //!                                                the cached inference engine
+//!   worker --connect ADDR --rank P               cluster worker process; spawned
+//!                                                by the server when
+//!                                                transport=tcp|uds (internal)
 //!   datasets                                     registry listing + Table-2 stats
 //!   partition --dataset D --parts P              partitioner comparison
 //!   repro-<exp>                                  regenerate a paper table/figure
@@ -152,8 +155,20 @@ impl ObsFlags {
                         std::fs::create_dir_all(dir)?;
                     }
                 }
-                std::fs::write(p, llcg::obs::chrome_trace_json(&spans).to_string_pretty())?;
-                eprintln!("trace: wrote {} spans to {path}", spans.len());
+                // worker processes that flushed spans over the transport get
+                // their own named Perfetto track; with none the trace stays
+                // the plain single-process shape
+                let remote = llcg::transport::take_remote_spans();
+                let (json, n) = if remote.is_empty() {
+                    (llcg::obs::chrome_trace_json(&spans), spans.len())
+                } else {
+                    let n = spans.len() + remote.iter().map(|(_, s)| s.len()).sum::<usize>();
+                    let mut tracks = vec![("server".to_string(), spans.clone())];
+                    tracks.extend(remote);
+                    (llcg::obs::chrome_trace_json_multi(&tracks), n)
+                };
+                std::fs::write(p, json.to_string_pretty())?;
+                eprintln!("trace: wrote {n} spans to {path}");
             }
             if let Some(log) = log.as_mut() {
                 log.write_span_summaries(&llcg::obs::summarize(&spans))?;
@@ -181,7 +196,7 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
     let cfg = exp.config();
     eprintln!(
         "run: {} on {} ({} parts, {} rounds, arch={}, opt={}, backend={}, \
-         engine={}, mode={}, net={})",
+         engine={}, mode={}, net={}, transport={})",
         cfg.algorithm.name(),
         cfg.dataset,
         cfg.parts,
@@ -191,7 +206,8 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
         rt.backend_name(),
         cfg.engine.name(),
         cfg.round_mode.name(),
-        cfg.net
+        cfg.net,
+        cfg.transport
     );
 
     // stream the run: one table row per completed round, as it happens
@@ -492,6 +508,26 @@ fn cmd_infer(flags: &[(String, String)]) -> Result<()> {
     Ok(())
 }
 
+/// `llcg worker --connect <addr> --rank <p> [config flags]` — a cluster
+/// worker process. Not meant to be typed by hand: the server spawns these
+/// itself when `transport=tcp|uds`, passing its exact config via
+/// `api::keys::cli_args` so the handshake's config-digest check passes.
+fn cmd_worker(flags: &[(String, String)]) -> Result<()> {
+    let cfg = build_config(flags, &["connect", "rank"])?;
+    let mut connect = None;
+    let mut rank = None;
+    for (k, v) in flags {
+        match k.as_str() {
+            "connect" => connect = Some(v.clone()),
+            "rank" => rank = Some(v.parse::<u32>()?),
+            _ => {}
+        }
+    }
+    let connect = connect.ok_or_else(|| anyhow::anyhow!("worker requires --connect <addr>"))?;
+    let rank = rank.ok_or_else(|| anyhow::anyhow!("worker requires --rank <p>"))?;
+    llcg::transport::run_worker(&connect, rank, cfg)
+}
+
 fn cmd_datasets() -> Result<()> {
     println!("Registered datasets (synthetic; stats at seed 0):");
     for (name, doc) in registry::with(|r| r.dataset_docs()) {
@@ -556,6 +592,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&flags),
         "serve" => cmd_serve(&flags),
         "infer" => cmd_infer(&flags),
+        "worker" => cmd_worker(&flags),
         "datasets" => cmd_datasets(),
         "partition" => cmd_partition(&flags),
         other => {

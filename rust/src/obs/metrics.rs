@@ -361,6 +361,141 @@ pub fn metrics_json() -> Json {
     ])
 }
 
+/// Every registered instrument in *lossless* form, for shipping a worker
+/// process's registry to the server over the transport: histograms carry
+/// their raw power-of-two bucket counts (not interpolated percentiles) and
+/// `sum_ns`/`max_ns` travel as hex strings so u64 values survive the f64
+/// JSON number type exactly. Inverse of [`absorb_metrics_json`].
+pub fn metrics_raw_json() -> Json {
+    let reg = registry();
+    let counters: Vec<Json> = reg
+        .counters
+        .lock()
+        .expect("poisoned")
+        .iter()
+        .map(|(name, c)| {
+            Json::obj(vec![
+                ("name", Json::str(*name)),
+                ("value", Json::str(&format!("{:x}", c.get()))),
+            ])
+        })
+        .collect();
+    let gauges: Vec<Json> = reg
+        .gauges
+        .lock()
+        .expect("poisoned")
+        .iter()
+        .map(|(name, g)| {
+            Json::obj(vec![
+                ("name", Json::str(*name)),
+                ("value", Json::num(g.get())),
+            ])
+        })
+        .collect();
+    let histograms: Vec<Json> = reg
+        .histograms
+        .lock()
+        .expect("poisoned")
+        .iter()
+        .map(|(name, h)| {
+            let s = h.snapshot();
+            Json::obj(vec![
+                ("name", Json::str(*name)),
+                ("count", Json::str(&format!("{:x}", s.count))),
+                ("sum_ns", Json::str(&format!("{:x}", s.sum_ns))),
+                ("max_ns", Json::str(&format!("{:x}", s.max_ns))),
+                (
+                    "counts",
+                    Json::arr(
+                        s.counts
+                            .iter()
+                            .map(|&c| Json::str(&format!("{c:x}")))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("counters", Json::arr(counters)),
+        ("gauges", Json::arr(gauges)),
+        ("histograms", Json::arr(histograms)),
+    ])
+}
+
+fn hex_u64(j: &Json, key: &str) -> Result<u64, String> {
+    let s = j
+        .get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("metrics payload missing hex field {key:?}"))?;
+    u64::from_str_radix(s, 16).map_err(|e| format!("bad hex u64 in {key:?}: {e}"))
+}
+
+/// Merge a worker process's [`metrics_raw_json`] payload into this
+/// process's registry: counters add, gauges overwrite when the incoming
+/// value is non-zero (last writer wins, but a worker that never touched a
+/// gauge must not clobber the server's), histograms merge bucket-by-bucket.
+/// Lives here because [`Histogram`]'s atomics are private to this module.
+pub fn absorb_metrics_json(j: &Json) -> Result<(), String> {
+    let name_of = |entry: &Json| -> Result<&'static str, String> {
+        entry
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(super::trace::intern)
+            .ok_or_else(|| "metrics entry missing name".to_string())
+    };
+    for entry in j
+        .get("counters")
+        .and_then(|v| v.as_array())
+        .ok_or("metrics payload missing counters")?
+    {
+        counter(name_of(entry)?).add(hex_u64(entry, "value")?);
+    }
+    for entry in j
+        .get("gauges")
+        .and_then(|v| v.as_array())
+        .ok_or("metrics payload missing gauges")?
+    {
+        let v = entry
+            .get("value")
+            .and_then(|v| v.as_f64())
+            .ok_or("gauge entry missing value")?;
+        if v != 0.0 {
+            gauge(name_of(entry)?).set(v);
+        }
+    }
+    for entry in j
+        .get("histograms")
+        .and_then(|v| v.as_array())
+        .ok_or("metrics payload missing histograms")?
+    {
+        let h = histogram(name_of(entry)?);
+        let counts = entry
+            .get("counts")
+            .and_then(|v| v.as_array())
+            .ok_or("histogram entry missing counts")?;
+        if counts.len() != HIST_BUCKETS {
+            return Err(format!(
+                "histogram bucket count {} != {HIST_BUCKETS}",
+                counts.len()
+            ));
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let c = c
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or("bad hex bucket count")?;
+            h.counts[i].fetch_add(c, Ordering::Relaxed);
+        }
+        h.count.fetch_add(hex_u64(entry, "count")?, Ordering::Relaxed);
+        h.sum_ns
+            .fetch_add(hex_u64(entry, "sum_ns")?, Ordering::Relaxed);
+        h.max_ns
+            .fetch_max(hex_u64(entry, "max_ns")?, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -405,6 +540,40 @@ mod tests {
         assert!(s.mean_s() > 1e-6 && s.mean_s() < 3e-6);
         h.reset();
         assert_eq!(h.snapshot().count, 0);
+    }
+
+    #[test]
+    fn raw_json_absorb_round_trips_losslessly() {
+        let src = counter("test.obs-absorb-counter");
+        src.reset();
+        src.add(7);
+        let h = histogram("test.obs-absorb-hist");
+        h.reset();
+        h.record_ns(1_000);
+        h.record_ns((1u64 << 53) + 1); // not representable as f64
+        let g = gauge("test.obs-absorb-gauge");
+        g.set(2.5);
+        let payload = metrics_raw_json();
+        // wipe, then absorb the serialized registry back
+        src.reset();
+        h.reset();
+        g.set(0.0);
+        absorb_metrics_json(&payload).expect("absorb");
+        assert_eq!(src.get(), 7);
+        assert_eq!(g.get(), 2.5);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.max_ns, (1u64 << 53) + 1, "hex fields survive exactly");
+        assert_eq!(s.sum_ns, (1u64 << 53) + 1 + 1_000);
+        // absorbing again accumulates counters/histograms
+        absorb_metrics_json(&payload).expect("absorb twice");
+        assert_eq!(src.get(), 14);
+        assert_eq!(h.snapshot().count, 4);
+        // malformed payloads are typed errors, not panics
+        assert!(absorb_metrics_json(&Json::obj(vec![])).is_err());
+        src.reset();
+        h.reset();
+        g.set(0.0);
     }
 
     #[test]

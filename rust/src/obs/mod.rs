@@ -29,11 +29,13 @@ pub mod trace;
 
 pub use events::JsonlLog;
 pub use metrics::{
-    counter, gauge, histogram, metrics_json, metrics_table, reset_all, Counter, Gauge, Histogram,
+    absorb_metrics_json, counter, gauge, histogram, metrics_json, metrics_raw_json, metrics_table,
+    reset_all, Counter, Gauge, Histogram,
 };
 pub use trace::{
-    chrome_trace_json, enabled, set_enabled, span, span_round, summarize, take_spans,
-    write_chrome_trace, Span, SpanRec, SpanSummary,
+    chrome_trace_json, chrome_trace_json_multi, enabled, set_enabled, span, span_round,
+    spans_from_json, spans_to_json, summarize, take_spans, write_chrome_trace, Span, SpanRec,
+    SpanSummary,
 };
 
 /// Version of every JSON shape this repo emits (`llcg run --json`,
@@ -44,5 +46,8 @@ pub use trace::{
 ///
 /// History: 1 = implicit pre-obs shapes (through PR 6); 2 = `schema` field
 /// added everywhere, `RoundRecord` gained `avg_time_s`/`corr_time_s`/
-/// `eval_time_s`.
-pub const SCHEMA_VERSION: u64 = 2;
+/// `eval_time_s`; 3 = `RunResult` gained `transport`, `RoundRecord` gained
+/// `wire_bytes_up`/`wire_bytes_down`, `--trace` may emit multi-process
+/// traces (`ph:"M"` process_name metadata when worker processes flushed
+/// spans over the transport).
+pub const SCHEMA_VERSION: u64 = 3;

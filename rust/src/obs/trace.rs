@@ -224,6 +224,114 @@ pub fn write_chrome_trace(path: &Path) -> Result<usize> {
     Ok(spans.len())
 }
 
+/// Intern an arbitrary string as `&'static str` (leaked once per distinct
+/// name). [`SpanRec::name`] and the metrics registry key on `&'static str`
+/// so the record paths never allocate; names arriving from *another
+/// process* (a worker's obs flush) go through here. The span/metric name
+/// universe is small and fixed, so the leak is bounded.
+pub(crate) fn intern(s: &str) -> &'static str {
+    static INTERNED: Mutex<std::collections::BTreeMap<String, &'static str>> =
+        Mutex::new(std::collections::BTreeMap::new());
+    let mut map = INTERNED.lock().expect("intern table poisoned");
+    if let Some(&v) = map.get(s) {
+        return v;
+    }
+    let v: &'static str = Box::leak(s.to_string().into_boxed_str());
+    map.insert(s.to_string(), v);
+    v
+}
+
+/// Serialize spans for a worker process's end-of-run obs flush (the exact
+/// inverse of [`spans_from_json`]).
+pub fn spans_to_json(spans: &[SpanRec]) -> Json {
+    Json::arr(
+        spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name)),
+                    ("tid", Json::num(s.tid as f64)),
+                    ("start_ns", Json::num(s.start_ns as f64)),
+                    ("dur_ns", Json::num(s.dur_ns as f64)),
+                    ("round", Json::num(s.round as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Decode spans a worker process shipped over the transport. Names are
+/// interned (span records hold `&'static str`); timestamps stay on the
+/// worker's own epoch — tracks are per-process, so cross-process skew only
+/// shifts a track, never reorders one.
+pub fn spans_from_json(j: &Json) -> Result<Vec<SpanRec>, String> {
+    let arr = j.as_array().ok_or("spans must be a json array")?;
+    arr.iter()
+        .map(|s| {
+            let num = |k: &str| -> Result<f64, String> {
+                s.get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("span missing numeric {k:?}"))
+            };
+            let name = s
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("span missing name")?;
+            Ok(SpanRec {
+                name: intern(name),
+                tid: num("tid")? as u32,
+                start_ns: num("start_ns")? as u64,
+                dur_ns: num("dur_ns")? as u64,
+                round: num("round")? as i64,
+            })
+        })
+        .collect()
+}
+
+/// Chrome trace-event JSON over multiple *processes*: one `pid` per named
+/// track (`("server", ...)` first by convention, then each `worker-<rank>`),
+/// with `process_name` metadata events so Perfetto labels the tracks.
+/// Single-process traces keep using [`chrome_trace_json`] — its event list
+/// is pure `ph:"X"`, which downstream tooling asserts.
+pub fn chrome_trace_json_multi(tracks: &[(String, Vec<SpanRec>)]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for (pid, (name, spans)) in tracks.iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(0.0)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(name.as_str()))]),
+            ),
+        ]));
+        for s in spans {
+            let mut fields = vec![
+                ("name", Json::str(s.name)),
+                ("cat", Json::str("llcg")),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(s.tid as f64)),
+                ("ts", Json::num(s.start_ns as f64 / 1e3)),
+                ("dur", Json::num(s.dur_ns as f64 / 1e3)),
+            ];
+            if s.round >= 0 {
+                fields.push((
+                    "args",
+                    Json::obj(vec![("round", Json::num(s.round as f64))]),
+                ));
+            }
+            events.push(Json::obj(fields));
+        }
+    }
+    Json::obj(vec![
+        ("schema", Json::num(crate::obs::SCHEMA_VERSION as f64)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::arr(events)),
+    ])
+}
+
 /// Per-name rollup of a span set (for `--log-json` summaries and the
 /// `--metrics` table).
 #[derive(Clone, Copy, Debug)]
@@ -307,6 +415,60 @@ mod tests {
             re.req("schema").as_f64().unwrap() as u64,
             crate::obs::SCHEMA_VERSION
         );
+    }
+
+    #[test]
+    fn spans_round_trip_through_json_and_merge_multi_process() {
+        let spans = [
+            SpanRec {
+                name: "round",
+                tid: 0,
+                start_ns: 10,
+                dur_ns: 40,
+                round: 2,
+            },
+            SpanRec {
+                name: "worker_round",
+                tid: 3,
+                start_ns: 12,
+                dur_ns: 20,
+                round: -1,
+            },
+        ];
+        let j = spans_to_json(&spans);
+        let back = spans_from_json(&Json::parse(&j.to_string_pretty()).unwrap()).expect("decode");
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "round");
+        assert_eq!(back[0].round, 2);
+        assert_eq!(back[1].tid, 3);
+        assert_eq!(back[1].start_ns, 12);
+        assert_eq!(back[1].dur_ns, 20);
+        assert!(spans_from_json(&Json::num(1.0)).is_err());
+        // interning maps equal strings to one static
+        assert!(std::ptr::eq(intern("zz-interned"), intern("zz-interned")));
+
+        let multi = chrome_trace_json_multi(&[
+            ("server".to_string(), spans.to_vec()),
+            ("worker-0".to_string(), back),
+        ]);
+        let re = Json::parse(&multi.to_string_pretty()).unwrap();
+        let events = re.req("traceEvents").as_array().unwrap();
+        // one process_name metadata event per track + the spans
+        let metas: Vec<_> = events
+            .iter()
+            .filter(|e| e.req("ph").as_str() == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(
+            metas[1].req("args").req("name").as_str(),
+            Some("worker-0")
+        );
+        let pids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter(|e| e.req("ph").as_str() == Some("X"))
+            .map(|e| e.req("pid").as_f64().unwrap() as u64)
+            .collect();
+        assert_eq!(pids.into_iter().collect::<Vec<_>>(), vec![0, 1]);
     }
 
     #[test]

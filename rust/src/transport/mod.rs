@@ -1,0 +1,884 @@
+//! Transport layer under the cluster engine: how `ParamsDown`/`ParamsUp`/
+//! `RemoteFeatures`/`Snapshot`/`Shutdown` actually move between the
+//! parameter server and its workers.
+//!
+//! Two implementations behind one [`Transport`] front:
+//!
+//! - **in-process** (the default): workers are OS threads in this process,
+//!   wired over mpsc channels, with all network cost *modeled* by
+//!   [`NetModel`]. Kept verbatim from the original engine for simulation
+//!   and determinism tests.
+//! - **tcp / uds**: workers are real OS processes (`llcg worker --connect
+//!   <addr> --rank p`) spawned by the server and speaking the versioned,
+//!   length-prefixed wire format in [`wire`]. A pair of bridge threads per
+//!   worker adapts the socket to the engine's existing channel protocol,
+//!   so the engine body is transport-agnostic; per-connection heartbeats
+//!   replace the in-process liveness guard, and a dead connection surfaces
+//!   as [`Up::Failed`] feeding the PR-6 respawn/quorum machinery.
+//!
+//! Sync mode stays bit-identical to the sequential driver across the
+//! socket boundary: parameters cross as raw `f32` little-endian (the
+//! checkpoint tensor codec), the worker process rebuilds its run state
+//! from the same config via `setup_run`, and the server overwrites it
+//! with an exact [`wire::TAG_RESTORE`] image so optimizer moments survive
+//! respawn/resume exactly as they do in-process. Measured wire bytes
+//! (all framed traffic after the handshake, both legs) are tallied per
+//! round next to the modeled `CommStats`.
+
+pub mod wire;
+mod worker;
+
+pub use worker::run_worker;
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::Scope;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::checkpoint::Digest;
+use crate::cluster::NetModel;
+use crate::config::ExperimentConfig;
+use crate::coordinator::driver::{self, PartInfo, RunSetup};
+use crate::graph::Dataset;
+use crate::obs::SpanRec;
+use crate::runtime::{ModelState, Runtime, Tensor};
+use crate::sampler::{BlockArena, BlockBuilder, NodeScratch};
+use crate::util::Json;
+
+use wire::{Listener, Stream};
+
+/// How long a worker process gets to spawn + connect back before the
+/// server gives up on it (covers binary startup, not model setup).
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Worker → server heartbeat period while the worker is alive.
+pub(crate) const HEARTBEAT_PERIOD: Duration = Duration::from_millis(1000);
+
+/// Server-side read timeout on a worker connection. Heartbeats arrive
+/// every [`HEARTBEAT_PERIOD`], so silence this long means the process is
+/// wedged or the link is gone — the bridge reports the worker as failed.
+const CONN_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------------
+// engine-side messages (shared by both transports)
+// ---------------------------------------------------------------------------
+
+/// Server → worker.
+pub(crate) enum Down {
+    /// `ParamsDown`: run local round `round` (`k` steps) from `params`.
+    Round {
+        round: usize,
+        k: usize,
+        params: Vec<Tensor>,
+    },
+    /// Checkpoint boundary: reply with the full local state (params +
+    /// optimizer moments) via [`Up::Snapshot`].
+    Snapshot,
+    /// Terminal: the run is over; exit the worker loop.
+    Shutdown,
+}
+
+/// Worker → server (one shared channel, tagged by worker).
+pub(crate) enum Up {
+    /// `RemoteFeatures`: a mini-batch fetched remote node features (GGS);
+    /// the server folds the bytes into the current round's accounting.
+    Features { bytes: u64 },
+    /// `ParamsUp`: end-of-round parameter upload + round stats.
+    Round(ParamsUp),
+    /// Reply to [`Down::Snapshot`]: the worker's full resumable state.
+    Snapshot { part: u32, state: Box<ModelState> },
+    /// Unrecoverable worker error; with fault tolerance off the server
+    /// aborts the run, with it on the worker is respawned next round.
+    Failed { part: u32, err: String },
+}
+
+/// Payload of [`Up::Round`].
+pub(crate) struct ParamsUp {
+    pub part: u32,
+    pub round: usize,
+    pub params: Vec<Tensor>,
+    pub loss_sum: f64,
+    pub loss_n: usize,
+    pub net_s: f64,
+    pub elapsed_s: f64,
+}
+
+/// A failed `Down` send means the worker is gone; it usually queued an
+/// `Up::Failed` with the root cause (e.g. its `Runtime::load` error) before
+/// exiting — surface that instead of a generic channel error.
+pub(crate) fn worker_send_error(up_rx: &Receiver<Up>, fallback: &str) -> anyhow::Error {
+    while let Ok(msg) = up_rx.try_recv() {
+        if let Up::Failed { part, err } = msg {
+            return anyhow!("worker {part} failed: {err}");
+        }
+    }
+    anyhow!("{fallback}")
+}
+
+// ---------------------------------------------------------------------------
+// in-process worker body (moved verbatim from cluster/engine.rs)
+// ---------------------------------------------------------------------------
+
+/// Everything a worker thread needs; refs point at run-owned data that
+/// outlives the thread scope.
+pub(crate) struct WorkerSpec<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub ds: &'a Dataset,
+    pub assignment: &'a [u32],
+    pub info: &'a PartInfo,
+    pub netm: &'a NetModel,
+    pub dir: PathBuf,
+    pub train_name: String,
+    pub builder: BlockBuilder,
+    pub param_bytes: u64,
+    /// kernel-pool lanes for this worker's private runtime, sized so that
+    /// `P workers × T lanes` does not oversubscribe the host
+    pub kernel_threads: usize,
+}
+
+/// Worker thread body: build a private native `Runtime`, then serve
+/// `Down::Round` requests until shutdown / disconnect. Model + optimizer
+/// state, block arena, and sampling scratch live here for the whole run.
+pub(crate) fn worker_main(
+    spec: WorkerSpec<'_>,
+    rx: Receiver<Down>,
+    up: Sender<Up>,
+    mut state: ModelState,
+) {
+    let rt = match Runtime::load(&spec.dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = up.send(Up::Failed {
+                part: spec.info.part,
+                err: format!("{e:#}"),
+            });
+            return;
+        }
+    };
+    rt.set_kernel_threads(spec.kernel_threads);
+    let mut arena = BlockArena::new();
+    let mut scratch = NodeScratch::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Down::Round { round, k, params } => {
+                if spec.netm.crashed(spec.info.part, round as u64) {
+                    // injected fault: die silently at round start, like a
+                    // lost node (the server knows the schedule and does not
+                    // wait for this worker)
+                    return;
+                }
+                let out = driver::run_worker_round(
+                    &rt,
+                    &spec.train_name,
+                    spec.cfg,
+                    spec.ds,
+                    spec.assignment,
+                    spec.info,
+                    &spec.builder,
+                    spec.netm,
+                    spec.param_bytes,
+                    &mut state,
+                    &params,
+                    round,
+                    k,
+                    &mut arena,
+                    &mut scratch,
+                    |fb| {
+                        let _ = up.send(Up::Features { bytes: fb });
+                    },
+                );
+                let reply = match out {
+                    Ok(o) => Up::Round(ParamsUp {
+                        part: spec.info.part,
+                        round,
+                        params: state.params.clone(),
+                        loss_sum: o.loss_sum,
+                        loss_n: o.loss_n,
+                        net_s: o.net_s,
+                        elapsed_s: o.elapsed_s,
+                    }),
+                    Err(e) => Up::Failed {
+                        part: spec.info.part,
+                        err: format!("{e:#}"),
+                    },
+                };
+                let fatal = matches!(reply, Up::Failed { .. });
+                if up.send(reply).is_err() || fatal {
+                    break;
+                }
+            }
+            Down::Snapshot => {
+                let reply = Up::Snapshot {
+                    part: spec.info.part,
+                    state: Box::new(state.clone()),
+                };
+                if up.send(reply).is_err() {
+                    break;
+                }
+            }
+            Down::Shutdown => break,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transport selection
+// ---------------------------------------------------------------------------
+
+/// Which wire the workers ride.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// worker threads + mpsc channels, network cost modeled by `NetModel`
+    InProcess,
+    /// worker processes over loopback TCP
+    Tcp,
+    /// worker processes over a unix-domain socket
+    Uds,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "inprocess",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Uds => "uds",
+        }
+    }
+}
+
+/// Parsed `--transport` spec: `inprocess|tcp|uds[,kill=p@r]*`. `kill=p@r`
+/// SIGKILLs the worker *process* serving part `p` right after round `r`'s
+/// `ParamsDown` is written to it — the real-process analogue of the
+/// modeled `net=...,crash=p@r` fault (and it feeds the same respawn
+/// machinery), so it requires a real transport.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportSpec {
+    pub kind: TransportKind,
+    pub kills: Vec<(u32, u64)>,
+}
+
+impl TransportSpec {
+    pub fn parse(s: &str) -> std::result::Result<TransportSpec, String> {
+        let mut toks = s.split(',');
+        let kind = match toks.next().map(str::trim).unwrap_or("") {
+            "" | "inprocess" => TransportKind::InProcess,
+            "tcp" => TransportKind::Tcp,
+            "uds" => {
+                if cfg!(not(unix)) {
+                    return Err("transport=uds needs unix-domain sockets (unix only)".into());
+                }
+                TransportKind::Uds
+            }
+            other => {
+                return Err(format!(
+                    "unknown transport '{other}' (expected inprocess, tcp, or uds)"
+                ))
+            }
+        };
+        let mut kills = Vec::new();
+        for tok in toks {
+            let tok = tok.trim();
+            let Some(spec) = tok.strip_prefix("kill=") else {
+                return Err(format!(
+                    "unknown transport option '{tok}' (expected kill=part@round)"
+                ));
+            };
+            let (p, r) = spec
+                .split_once('@')
+                .ok_or_else(|| format!("kill spec '{spec}' must be part@round"))?;
+            let p: u32 = p
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad part in kill spec '{spec}'"))?;
+            let r: u64 = r
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad round in kill spec '{spec}'"))?;
+            if r == 0 {
+                return Err("kill rounds are 1-based (kill=p@r with r >= 1)".into());
+            }
+            kills.push((p, r));
+        }
+        if !kills.is_empty() && kind == TransportKind::InProcess {
+            return Err(
+                "kill=p@r needs a real transport (tcp or uds); the in-process \
+                 transport injects crashes via net=...,crash=p@r"
+                    .into(),
+            );
+        }
+        Ok(TransportSpec { kind, kills })
+    }
+}
+
+/// Run-owned data every spawned worker borrows; built once by the engine
+/// before its thread scope so both transports can spawn (and respawn)
+/// workers from it.
+pub(crate) struct WorkerHost<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub ds: &'a Dataset,
+    pub assignment: &'a [u32],
+    pub netm: &'a NetModel,
+    pub dir: PathBuf,
+    pub train_name: String,
+    pub builder: BlockBuilder,
+    pub param_bytes: u64,
+}
+
+/// Tensor shape manifests for decoding worker frames (every worker shares
+/// one model shape).
+struct WireShapes {
+    params: Vec<Vec<usize>>,
+    opt: Vec<Vec<usize>>,
+}
+
+/// The engine's handle on its worker fleet.
+pub(crate) enum Transport {
+    InProcess,
+    Remote(RemoteCluster),
+}
+
+impl Transport {
+    /// Build the transport for this run (binds the listener for remote
+    /// kinds; spawns nothing yet).
+    pub(crate) fn new(cfg: &ExperimentConfig, setup: &RunSetup) -> Result<Transport> {
+        let spec = TransportSpec::parse(&cfg.transport).map_err(|e| anyhow!(e))?;
+        if spec.kind == TransportKind::InProcess {
+            return Ok(Transport::InProcess);
+        }
+        let (listener, addr, uds_dir) = match spec.kind {
+            TransportKind::Tcp => {
+                let l = std::net::TcpListener::bind("127.0.0.1:0")
+                    .context("binding the worker listener")?;
+                let addr = l.local_addr()?.to_string();
+                (Listener::Tcp(l), addr, None)
+            }
+            #[cfg(unix)]
+            TransportKind::Uds => {
+                let dir = std::env::temp_dir().join(format!(
+                    "llcg-uds-{}-{:x}",
+                    std::process::id(),
+                    UDS_SEQ.fetch_add(1, Ordering::Relaxed)
+                ));
+                std::fs::create_dir_all(&dir)?;
+                let path = dir.join("w.sock");
+                let l = std::os::unix::net::UnixListener::bind(&path)
+                    .with_context(|| format!("binding {}", path.display()))?;
+                (Listener::Unix(l), format!("unix:{}", path.display()), Some(dir))
+            }
+            _ => unreachable!("parse rejects unsupported kinds"),
+        };
+        listener.set_nonblocking(true)?;
+        // `LLCG_WORKER_EXE` override: integration tests are not the `llcg`
+        // binary themselves, so they point this at env!("CARGO_BIN_EXE_llcg")
+        let exe = match std::env::var_os("LLCG_WORKER_EXE") {
+            Some(p) => PathBuf::from(p),
+            None => std::env::current_exe().context("locating the llcg binary")?,
+        };
+        let shapes = WireShapes {
+            params: setup
+                .workers
+                .first()
+                .map(|w| w.params.iter().map(|t| t.shape.clone()).collect())
+                .unwrap_or_default(),
+            opt: setup
+                .workers
+                .first()
+                .map(|w| w.opt.iter().map(|t| t.shape.clone()).collect())
+                .unwrap_or_default(),
+        };
+        Ok(Transport::Remote(RemoteCluster {
+            kind: spec.kind,
+            kills: spec.kills,
+            listener,
+            addr,
+            exe,
+            cfg: cfg.clone(),
+            digest: Digest::of(cfg),
+            trace: crate::obs::enabled(),
+            wire_up: AtomicU64::new(0),
+            wire_down: AtomicU64::new(0),
+            children: Mutex::new(Vec::new()),
+            uds_dir,
+            shapes,
+        }))
+    }
+
+    pub(crate) fn name(&self) -> &'static str {
+        match self {
+            Transport::InProcess => "inprocess",
+            Transport::Remote(r) => r.kind.name(),
+        }
+    }
+
+    /// Whether this transport injects its own faults (scheduled process
+    /// kills) — folded into the engine's fault-tolerance switch.
+    pub(crate) fn has_faults(&self) -> bool {
+        matches!(self, Transport::Remote(r) if !r.kills.is_empty())
+    }
+
+    /// Measured `(up, down)` wire bytes so far: every framed byte after the
+    /// handshake (rounds, snapshots, restore images, heartbeats, obs
+    /// flushes), summed over all worker connections. Always zero for the
+    /// in-process transport — its traffic is modeled, not measured.
+    pub(crate) fn wire_totals(&self) -> (u64, u64) {
+        match self {
+            Transport::InProcess => (0, 0),
+            Transport::Remote(r) => (
+                r.wire_up.load(Ordering::Relaxed),
+                r.wire_down.load(Ordering::Relaxed),
+            ),
+        }
+    }
+
+    /// Spawn (or respawn) the worker for `info` seeded with `state`;
+    /// returns its `Down` sender. Infallible by contract: a spawn that
+    /// cannot come up reports `Up::Failed` on the shared channel (the
+    /// fault-tolerant path respawns it; the fault-free path surfaces the
+    /// root cause via `worker_send_error`) and returns a dangling sender.
+    pub(crate) fn spawn_worker<'scope, 'env>(
+        &'env self,
+        s: &'scope Scope<'scope, 'env>,
+        host: &'env WorkerHost<'env>,
+        info: &'env PartInfo,
+        state: ModelState,
+        up_tx: &Sender<Up>,
+        lanes: usize,
+    ) -> Sender<Down> {
+        match self {
+            Transport::InProcess => {
+                let (dtx, drx) = channel::<Down>();
+                let spec = WorkerSpec {
+                    cfg: host.cfg,
+                    ds: host.ds,
+                    assignment: host.assignment,
+                    info,
+                    netm: host.netm,
+                    dir: host.dir.clone(),
+                    train_name: host.train_name.clone(),
+                    builder: host.builder.clone(),
+                    param_bytes: host.param_bytes,
+                    kernel_threads: lanes,
+                };
+                let up = up_tx.clone();
+                s.spawn(move || worker_main(spec, drx, up, state));
+                dtx
+            }
+            Transport::Remote(r) => match r.spawn_remote(s, host, info, state, up_tx, lanes) {
+                Ok(dtx) => dtx,
+                Err(e) => {
+                    let _ = up_tx.send(Up::Failed {
+                        part: info.part,
+                        err: format!("{e:#}"),
+                    });
+                    // dangling sender: every send fails, like a dead thread
+                    let (dtx, _drx) = channel::<Down>();
+                    dtx
+                }
+            },
+        }
+    }
+
+    /// End-of-run cleanup: reap worker processes (they exit on `Shutdown`
+    /// or socket EOF; anything still alive after a grace period is killed)
+    /// and remove the UDS socket directory.
+    pub(crate) fn finish(&self) {
+        if let Transport::Remote(r) = self {
+            r.reap(Duration::from_secs(5));
+        }
+    }
+}
+
+static UDS_SEQ: AtomicU64 = AtomicU64::new(0);
+
+// ---------------------------------------------------------------------------
+// the remote (process) transport
+// ---------------------------------------------------------------------------
+
+pub(crate) struct RemoteCluster {
+    kind: TransportKind,
+    kills: Vec<(u32, u64)>,
+    listener: Listener,
+    /// what workers dial: `host:port`, or `unix:<path>`
+    addr: String,
+    exe: PathBuf,
+    /// the run config, re-serialized to CLI flags for each worker process
+    cfg: ExperimentConfig,
+    digest: Digest,
+    trace: bool,
+    wire_up: AtomicU64,
+    wire_down: AtomicU64,
+    children: Mutex<Vec<Arc<Mutex<Child>>>>,
+    uds_dir: Option<PathBuf>,
+    /// shape manifests for decoding worker frames (fixed per run)
+    shapes: WireShapes,
+}
+
+impl RemoteCluster {
+    fn spawn_remote<'scope, 'env>(
+        &'env self,
+        s: &'scope Scope<'scope, 'env>,
+        host: &'env WorkerHost<'env>,
+        info: &'env PartInfo,
+        state: ModelState,
+        up_tx: &Sender<Up>,
+        lanes: usize,
+    ) -> Result<Sender<Down>> {
+        let part = info.part;
+        // the worker derives everything from the config; pin its kernel
+        // lanes to the same budget an in-process worker would get
+        let mut wcfg = self.cfg.clone();
+        wcfg.kernel_threads = lanes;
+        let mut cmd = Command::new(&self.exe);
+        cmd.arg("worker")
+            .arg("--connect")
+            .arg(&self.addr)
+            .arg("--rank")
+            .arg(part.to_string())
+            .args(crate::api::keys::cli_args(&wcfg))
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit());
+        let child = Arc::new(Mutex::new(cmd.spawn().with_context(|| {
+            format!("spawning worker {part} ({})", self.exe.display())
+        })?));
+        self.children.lock().expect("children lock").push(child.clone());
+
+        let mut stream = self.accept_one(part)?;
+        // exact state image: the worker re-derives its run state from the
+        // config, then overwrites params + optimizer moments with this, so
+        // resume and respawn stay bit-exact across the socket
+        let n = wire::write_frame(&mut stream, wire::TAG_RESTORE, &wire::enc_state(&state))
+            .context("sending the restore image")?;
+        self.wire_down.fetch_add(n, Ordering::Relaxed);
+
+        let reader = stream.try_clone()?;
+        let writer = stream;
+        let (dtx, drx) = channel::<Down>();
+        let up = up_tx.clone();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let last_round = Arc::new(AtomicU64::new(0));
+        let kills: Vec<u64> = self
+            .kills
+            .iter()
+            .filter(|&&(p, _)| p == part)
+            .map(|&(_, r)| r)
+            .collect();
+        {
+            let shutdown = shutdown.clone();
+            let last_round = last_round.clone();
+            let kills = kills.clone();
+            s.spawn(move || {
+                down_bridge(writer, drx, &self.wire_down, kills, child, shutdown, last_round)
+            });
+        }
+        {
+            let netm = host.netm;
+            s.spawn(move || {
+                up_bridge(
+                    reader,
+                    up,
+                    part,
+                    self,
+                    netm,
+                    shutdown,
+                    last_round,
+                )
+            });
+        }
+        Ok(dtx)
+    }
+
+    /// Accept + handshake the connection for `part` (spawns are serialized,
+    /// so exactly one worker is dialing at a time). Connections failing the
+    /// handshake are rejected and dropped; accepting continues until the
+    /// deadline.
+    fn accept_one(&self, part: u32) -> Result<Stream> {
+        let t0 = Instant::now();
+        loop {
+            match self.listener.accept() {
+                Ok(mut s) => {
+                    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+                    let flags = if self.trace { wire::WELCOME_TRACE } else { 0 };
+                    match wire::server_accept_hello(&mut s, &self.digest, part, flags) {
+                        Ok(_) => {
+                            s.set_read_timeout(None)?;
+                            return Ok(s);
+                        }
+                        Err(e) => {
+                            // rejected (wrong version/digest/rank) or broken:
+                            // drop it and keep listening for the real worker
+                            crate::obs::counter("transport.handshake_rejected").add(1);
+                            let _ = e;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if t0.elapsed() >= ACCEPT_TIMEOUT {
+                        bail!(
+                            "worker {part} did not connect within {:?} ({})",
+                            ACCEPT_TIMEOUT,
+                            self.addr
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Reap worker processes: poll for voluntary exit up to `grace`, then
+    /// kill whatever is left.
+    fn reap(&self, grace: Duration) {
+        let children = std::mem::take(&mut *self.children.lock().expect("children lock"));
+        let deadline = Instant::now() + grace;
+        for c in children {
+            loop {
+                let mut ch = c.lock().expect("child lock");
+                match ch.try_wait() {
+                    Ok(Some(_)) | Err(_) => break,
+                    Ok(None) => {
+                        if Instant::now() >= deadline {
+                            let _ = ch.kill();
+                            let _ = ch.wait();
+                            break;
+                        }
+                    }
+                }
+                drop(ch);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+        if let Some(dir) = &self.uds_dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
+impl Drop for RemoteCluster {
+    fn drop(&mut self) {
+        // safety net for abort paths that never reach `Transport::finish`
+        self.reap(Duration::ZERO);
+    }
+}
+
+/// Engine → socket: serialize `Down` messages as frames. Executes this
+/// connection's scheduled `kill=p@r` faults (SIGKILL right after round
+/// `r`'s frame is written, so the worker dies mid-round like a lost node).
+fn down_bridge(
+    mut w: Stream,
+    rx: Receiver<Down>,
+    wire_down: &AtomicU64,
+    kills: Vec<u64>,
+    child: Arc<Mutex<Child>>,
+    shutdown: Arc<AtomicBool>,
+    last_round: Arc<AtomicU64>,
+) {
+    loop {
+        match rx.recv() {
+            Ok(Down::Round { round, k, params }) => {
+                last_round.store(round as u64, Ordering::SeqCst);
+                match wire::write_frame(&mut w, wire::TAG_ROUND, &wire::enc_round(round, k, &params))
+                {
+                    Ok(n) => {
+                        wire_down.fetch_add(n, Ordering::Relaxed);
+                    }
+                    Err(_) => break, // connection dead; the up bridge reports it
+                }
+                if kills.contains(&(round as u64)) {
+                    let _ = child.lock().expect("child lock").kill();
+                    break;
+                }
+            }
+            Ok(Down::Snapshot) => match wire::write_frame(&mut w, wire::TAG_SNAPSHOT, &[]) {
+                Ok(n) => {
+                    wire_down.fetch_add(n, Ordering::Relaxed);
+                }
+                Err(_) => break,
+            },
+            Ok(Down::Shutdown) => {
+                // flag before the frame so the up bridge treats the EOF that
+                // follows the worker's obs flush as expected
+                shutdown.store(true, Ordering::SeqCst);
+                if let Ok(n) = wire::write_frame(&mut w, wire::TAG_SHUTDOWN, &[]) {
+                    wire_down.fetch_add(n, Ordering::Relaxed);
+                }
+                break;
+            }
+            Err(_) => {
+                // the engine dropped this sender (abort, or respawn replaced
+                // it): close the socket so the worker sees EOF and exits
+                shutdown.store(true, Ordering::SeqCst);
+                w.shutdown();
+                break;
+            }
+        }
+    }
+}
+
+/// Socket → engine: decode worker frames back into `Up` messages. Absorbs
+/// heartbeats and obs flushes; an unexpected EOF/timeout becomes
+/// `Up::Failed` so a killed process feeds the respawn machinery exactly
+/// like a crashed thread.
+fn up_bridge(
+    mut r: Stream,
+    up: Sender<Up>,
+    part: u32,
+    rc: &RemoteCluster,
+    netm: &NetModel,
+    shutdown: Arc<AtomicBool>,
+    last_round: Arc<AtomicU64>,
+) {
+    let _ = r.set_read_timeout(Some(CONN_TIMEOUT));
+    let mut failed_seen = false;
+    loop {
+        let (tag, payload, n) = match wire::read_frame(&mut r) {
+            Ok(f) => f,
+            Err(e) => {
+                let expected = failed_seen
+                    || shutdown.load(Ordering::SeqCst)
+                    || netm.crashed(part, last_round.load(Ordering::SeqCst));
+                if !expected {
+                    let _ = up.send(Up::Failed {
+                        part,
+                        err: format!("worker connection lost: {e}"),
+                    });
+                }
+                break;
+            }
+        };
+        rc.wire_up.fetch_add(n, Ordering::Relaxed);
+        let res: Result<()> = (|| {
+            match tag {
+                wire::TAG_HEARTBEAT => {}
+                wire::TAG_FEATURES => {
+                    let bytes = wire::dec_features(&payload)?;
+                    let _ = up.send(Up::Features { bytes });
+                }
+                wire::TAG_ROUND_REPLY => {
+                    let u = wire::dec_round_reply(&payload, &rc.shapes.params)?;
+                    let _ = up.send(Up::Round(u));
+                }
+                wire::TAG_SNAPSHOT_REPLY => {
+                    let sh = &rc.shapes;
+                    let (p, state) = wire::dec_snapshot_reply(&payload, &sh.params, &sh.opt)?;
+                    let _ = up.send(Up::Snapshot {
+                        part: p,
+                        state: Box::new(state),
+                    });
+                }
+                wire::TAG_FAILED => {
+                    let (p, err) = wire::dec_failed(&payload)?;
+                    failed_seen = true;
+                    let _ = up.send(Up::Failed { part: p, err });
+                }
+                wire::TAG_OBS_FLUSH => {
+                    absorb_obs_flush(part, &payload);
+                }
+                other => bail!("unexpected frame tag {other} from worker {part}"),
+            }
+            Ok(())
+        })();
+        if let Err(e) = res {
+            let _ = up.send(Up::Failed {
+                part,
+                err: format!("{e:#}"),
+            });
+            break;
+        }
+    }
+}
+
+/// Fold a worker process's end-of-run obs flush into this process's
+/// registries: metrics merge into the global registry immediately, spans
+/// land in the remote-span store for the merged multi-process trace.
+fn absorb_obs_flush(part: u32, payload: &[u8]) {
+    let Ok(text) = std::str::from_utf8(payload) else {
+        return;
+    };
+    let Ok(j) = Json::parse(text) else { return };
+    if let Some(m) = j.get("metrics") {
+        let _ = crate::obs::absorb_metrics_json(m);
+    }
+    if let Some(sp) = j.get("spans") {
+        if let Ok(spans) = crate::obs::spans_from_json(sp) {
+            add_remote_spans(format!("worker-{part}"), spans);
+        }
+    }
+}
+
+/// Spans shipped home by worker processes, keyed by track name
+/// (`worker-<rank>`); drained by the trace exporter at the end of the run.
+static REMOTE_SPANS: Mutex<Vec<(String, Vec<SpanRec>)>> = Mutex::new(Vec::new());
+
+fn add_remote_spans(track: String, spans: Vec<SpanRec>) {
+    let mut store = REMOTE_SPANS.lock().expect("remote span store");
+    if let Some((_, existing)) = store.iter_mut().find(|(t, _)| *t == track) {
+        existing.extend(spans); // a respawned worker extends its track
+    } else {
+        store.push((track, spans));
+    }
+}
+
+/// Drain the spans worker processes flushed over the transport. Non-empty
+/// only after a remote-transport run with tracing on; the trace exporter
+/// switches to the multi-process layout when it is.
+pub fn take_remote_spans() -> Vec<(String, Vec<SpanRec>)> {
+    std::mem::take(&mut *REMOTE_SPANS.lock().expect("remote span store"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_spec_parses_kinds_and_kills() {
+        assert_eq!(
+            TransportSpec::parse("inprocess").unwrap().kind,
+            TransportKind::InProcess
+        );
+        assert_eq!(TransportSpec::parse("").unwrap().kind, TransportKind::InProcess);
+        assert_eq!(TransportSpec::parse("tcp").unwrap().kind, TransportKind::Tcp);
+        #[cfg(unix)]
+        assert_eq!(TransportSpec::parse("uds").unwrap().kind, TransportKind::Uds);
+        let spec = TransportSpec::parse("tcp,kill=1@3,kill=0@2").unwrap();
+        assert_eq!(spec.kills, vec![(1, 3), (0, 2)]);
+    }
+
+    #[test]
+    fn transport_spec_rejects_bad_input() {
+        assert!(TransportSpec::parse("smoke").is_err());
+        assert!(TransportSpec::parse("tcp,kill=1").is_err());
+        assert!(TransportSpec::parse("tcp,kill=x@2").is_err());
+        // kill rounds are 1-based, like net=...,crash=p@r
+        assert!(TransportSpec::parse("tcp,kill=1@0").is_err());
+        // kills need a real process to kill
+        assert!(TransportSpec::parse("inprocess,kill=1@2").is_err());
+        assert!(TransportSpec::parse("tcp,frob=1").is_err());
+    }
+
+    #[test]
+    fn remote_spans_merge_by_track() {
+        let _ = take_remote_spans();
+        let sp = |tid: u32| SpanRec {
+            name: "x",
+            tid,
+            start_ns: 1,
+            dur_ns: 2,
+            round: -1,
+        };
+        add_remote_spans("worker-0".into(), vec![sp(1)]);
+        add_remote_spans("worker-1".into(), vec![sp(2)]);
+        add_remote_spans("worker-0".into(), vec![sp(3)]);
+        let got = take_remote_spans();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, "worker-0");
+        assert_eq!(got[0].1.len(), 2);
+        assert!(take_remote_spans().is_empty());
+    }
+}

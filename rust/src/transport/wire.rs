@@ -1,0 +1,652 @@
+//! The versioned, length-prefixed wire protocol spoken between the cluster
+//! server and `llcg worker` processes (contract: `rust/src/cluster/README.md`).
+//!
+//! Every message is one frame: `[len: u32 LE][tag: u8][payload: len-1 B]`.
+//! Tensor payloads reuse the checkpoint codec (`cluster/checkpoint.rs`):
+//! raw `f32` little-endian in shape-manifest order, so parameters cross the
+//! socket bit-exactly — the foundation of the sync-over-TCP ≡ sequential
+//! parity contract.
+//!
+//! A connection opens with a handshake — `ClientHello` (magic +
+//! [`WIRE_VERSION`] + rank + config digest) answered by `Welcome` or a
+//! coded `Reject` — and then carries framed round traffic. Version or
+//! digest mismatches surface as a typed [`HandshakeError`] on both ends;
+//! nothing past the handshake is parsed on a rejected connection.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::checkpoint::{push_tensors, take_tensors, Digest};
+use crate::runtime::{ModelState, Tensor};
+
+use super::ParamsUp;
+
+/// First bytes of every `ClientHello`; anything else is not this protocol.
+pub const MAGIC: [u8; 4] = *b"LLCG";
+
+/// Wire-format version. Bump on any frame-layout or tag change; the
+/// handshake rejects a mismatch with a typed error (compatibility rule:
+/// exact match only — no cross-version negotiation).
+pub const WIRE_VERSION: u32 = 1;
+
+/// Upper bound on one frame; larger prefixes mean a corrupt/foreign stream.
+const MAX_FRAME: u32 = 1 << 30;
+
+// frame tags ----------------------------------------------------------------
+pub const TAG_HELLO: u8 = 1;
+pub const TAG_WELCOME: u8 = 2;
+pub const TAG_REJECT: u8 = 3;
+pub const TAG_ROUND: u8 = 4;
+pub const TAG_SNAPSHOT: u8 = 5;
+pub const TAG_SHUTDOWN: u8 = 6;
+pub const TAG_FEATURES: u8 = 7;
+pub const TAG_ROUND_REPLY: u8 = 8;
+pub const TAG_SNAPSHOT_REPLY: u8 = 9;
+pub const TAG_FAILED: u8 = 10;
+pub const TAG_HEARTBEAT: u8 = 11;
+pub const TAG_OBS_FLUSH: u8 = 12;
+pub const TAG_RESTORE: u8 = 13;
+
+/// `Welcome` flag bit: span tracing is on server-side; the worker enables
+/// its own tracing and ships spans back in `ObsFlush`.
+pub const WELCOME_TRACE: u8 = 1;
+
+// reject codes --------------------------------------------------------------
+pub const REJ_VERSION: u8 = 1;
+pub const REJ_DIGEST: u8 = 2;
+pub const REJ_RANK: u8 = 3;
+pub const REJ_MAGIC: u8 = 4;
+
+// ---------------------------------------------------------------------------
+// streams and listeners (TCP + unix-domain sockets behind one enum)
+// ---------------------------------------------------------------------------
+
+/// One connected byte stream, TCP or UDS.
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    pub fn try_clone(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+
+    /// Close both directions (used to unblock the peer on an abort path).
+    pub fn shutdown(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound accept socket, TCP or UDS.
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    pub fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    pub fn accept(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Listener::Tcp(l) => Stream::Tcp(l.accept()?.0),
+            #[cfg(unix)]
+            Listener::Unix(l) => Stream::Unix(l.accept()?.0),
+        })
+    }
+}
+
+/// Dial `addr` (`host:port`, or `unix:<path>` for a UDS socket) with
+/// retry/backoff: 50 ms doubling to a 1 s cap, giving up after `deadline`.
+pub fn connect_retry(addr: &str, deadline: Duration) -> Result<Stream> {
+    let t0 = std::time::Instant::now();
+    let mut backoff = Duration::from_millis(50);
+    loop {
+        let got: std::io::Result<Stream> = if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                UnixStream::connect(path).map(Stream::Unix)
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::Unsupported,
+                    "unix-domain sockets are not available on this platform",
+                ))
+            }
+        } else {
+            TcpStream::connect(addr).map(Stream::Tcp)
+        };
+        match got {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if t0.elapsed() >= deadline {
+                    bail!("connecting to {addr}: {e} (gave up after {:?})", t0.elapsed());
+                }
+                std::thread::sleep(backoff.min(deadline.saturating_sub(t0.elapsed())));
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frame I/O
+// ---------------------------------------------------------------------------
+
+/// Write one `[len][tag][payload]` frame; returns the wire bytes written.
+pub fn write_frame(w: &mut Stream, tag: u8, payload: &[u8]) -> std::io::Result<u64> {
+    let len = (payload.len() + 1) as u32;
+    let mut buf = Vec::with_capacity(5 + payload.len());
+    buf.extend_from_slice(&len.to_le_bytes());
+    buf.push(tag);
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(buf.len() as u64)
+}
+
+/// Read one frame; returns `(tag, payload, wire bytes read)`. A clean EOF
+/// at a frame boundary and a read timeout both surface as `Err` — the
+/// caller decides whether the connection was expected to close.
+pub fn read_frame(r: &mut Stream) -> std::io::Result<(u8, Vec<u8>, u64)> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4);
+    if len == 0 || len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let mut payload = vec![0u8; len as usize - 1];
+    r.read_exact(&mut payload)?;
+    Ok((tag[0], payload, 4 + len as u64))
+}
+
+// ---------------------------------------------------------------------------
+// payload codecs (fixed-width little-endian scalars + checkpoint tensor codec)
+// ---------------------------------------------------------------------------
+
+fn put_u32(b: &mut Vec<u8>, x: u32) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, x: u64) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, x: f64) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Payload reader with bounds-checked typed takes.
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.b.len() {
+            bail!("frame payload truncated (need {n} bytes at offset {})", self.off);
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn rest_str(&mut self) -> Result<String> {
+        let s = &self.b[self.off..];
+        self.off = self.b.len();
+        String::from_utf8(s.to_vec()).map_err(|_| anyhow!("frame payload is not UTF-8"))
+    }
+
+    fn tensors(&mut self, shapes: &[Vec<usize>]) -> Result<Vec<Tensor>> {
+        // take_tensors advances its own offset over the raw f32 region
+        let out = take_tensors(self.b, &mut self.off, shapes)?;
+        Ok(out)
+    }
+}
+
+pub fn enc_hello(version: u32, rank: u32, digest: &Digest) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(&MAGIC);
+    put_u32(&mut b, version);
+    put_u32(&mut b, rank);
+    b.extend_from_slice(digest.to_json().to_string_pretty().as_bytes());
+    b
+}
+
+pub fn enc_round(round: usize, k: usize, params: &[Tensor]) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, round as u64);
+    put_u64(&mut b, k as u64);
+    push_tensors(&mut b, params);
+    b
+}
+
+pub fn dec_round(payload: &[u8], shapes: &[Vec<usize>]) -> Result<(usize, usize, Vec<Tensor>)> {
+    let mut r = Rd::new(payload);
+    let round = r.u64()? as usize;
+    let k = r.u64()? as usize;
+    let params = r.tensors(shapes)?;
+    Ok((round, k, params))
+}
+
+pub fn enc_state(state: &ModelState) -> Vec<u8> {
+    let mut b = Vec::new();
+    push_tensors(&mut b, &state.params);
+    push_tensors(&mut b, &state.opt);
+    b
+}
+
+pub fn dec_state(
+    payload: &[u8],
+    param_shapes: &[Vec<usize>],
+    opt_shapes: &[Vec<usize>],
+) -> Result<ModelState> {
+    let mut r = Rd::new(payload);
+    Ok(ModelState {
+        params: r.tensors(param_shapes)?,
+        opt: r.tensors(opt_shapes)?,
+    })
+}
+
+pub(crate) fn enc_round_reply(u: &ParamsUp) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u32(&mut b, u.part);
+    put_u64(&mut b, u.round as u64);
+    put_f64(&mut b, u.loss_sum);
+    put_u64(&mut b, u.loss_n as u64);
+    put_f64(&mut b, u.net_s);
+    put_f64(&mut b, u.elapsed_s);
+    push_tensors(&mut b, &u.params);
+    b
+}
+
+pub(crate) fn dec_round_reply(payload: &[u8], shapes: &[Vec<usize>]) -> Result<ParamsUp> {
+    let mut r = Rd::new(payload);
+    Ok(ParamsUp {
+        part: r.u32()?,
+        round: r.u64()? as usize,
+        loss_sum: r.f64()?,
+        loss_n: r.u64()? as usize,
+        net_s: r.f64()?,
+        elapsed_s: r.f64()?,
+        params: r.tensors(shapes)?,
+    })
+}
+
+pub fn enc_snapshot_reply(part: u32, state: &ModelState) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u32(&mut b, part);
+    push_tensors(&mut b, &state.params);
+    push_tensors(&mut b, &state.opt);
+    b
+}
+
+pub fn dec_snapshot_reply(
+    payload: &[u8],
+    param_shapes: &[Vec<usize>],
+    opt_shapes: &[Vec<usize>],
+) -> Result<(u32, ModelState)> {
+    let mut r = Rd::new(payload);
+    let part = r.u32()?;
+    Ok((
+        part,
+        ModelState {
+            params: r.tensors(param_shapes)?,
+            opt: r.tensors(opt_shapes)?,
+        },
+    ))
+}
+
+pub fn enc_features(bytes: u64) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, bytes);
+    b
+}
+
+pub fn dec_features(payload: &[u8]) -> Result<u64> {
+    Rd::new(payload).u64()
+}
+
+pub fn enc_failed(part: u32, msg: &str) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u32(&mut b, part);
+    b.extend_from_slice(msg.as_bytes());
+    b
+}
+
+pub fn dec_failed(payload: &[u8]) -> Result<(u32, String)> {
+    let mut r = Rd::new(payload);
+    let part = r.u32()?;
+    Ok((part, r.rest_str()?))
+}
+
+// ---------------------------------------------------------------------------
+// handshake
+// ---------------------------------------------------------------------------
+
+/// Typed handshake failure — both ends see the same variant for the same
+/// cause (the server also writes a coded `Reject` frame before erroring so
+/// the client can map it back).
+#[derive(Debug)]
+pub enum HandshakeError {
+    /// the first frame did not start with [`MAGIC`]
+    BadMagic,
+    /// wire-format versions differ; exact match is required
+    VersionMismatch { ours: u32, theirs: u32 },
+    /// the config digests differ — the peer is running a different
+    /// experiment (message lists both digests)
+    DigestMismatch(String),
+    /// the server refused the connection for another coded reason
+    /// (e.g. an unexpected rank)
+    Rejected { code: u8, msg: String },
+    Io(std::io::Error),
+}
+
+impl fmt::Display for HandshakeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HandshakeError::BadMagic => write!(f, "handshake: bad protocol magic"),
+            HandshakeError::VersionMismatch { ours, theirs } => write!(
+                f,
+                "handshake: wire version mismatch (ours {ours}, peer {theirs})"
+            ),
+            HandshakeError::DigestMismatch(msg) => {
+                write!(f, "handshake: config digest mismatch: {msg}")
+            }
+            HandshakeError::Rejected { code, msg } => {
+                write!(f, "handshake: rejected (code {code}): {msg}")
+            }
+            HandshakeError::Io(e) => write!(f, "handshake: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HandshakeError {}
+
+fn write_reject(s: &mut Stream, code: u8, ours: u32, msg: &str) {
+    let mut b = Vec::new();
+    b.push(code);
+    put_u32(&mut b, ours);
+    b.extend_from_slice(msg.as_bytes());
+    let _ = write_frame(s, TAG_REJECT, &b);
+}
+
+/// Server side: read one `ClientHello` and validate magic, version, digest,
+/// and rank. Writes `Welcome { flags }` on success, a coded `Reject` on any
+/// mismatch (then returns the matching typed error).
+pub fn server_accept_hello(
+    s: &mut Stream,
+    expect: &Digest,
+    expect_rank: u32,
+    flags: u8,
+) -> std::result::Result<u32, HandshakeError> {
+    let (tag, payload, _) = read_frame(s).map_err(HandshakeError::Io)?;
+    if tag != TAG_HELLO || payload.len() < 12 {
+        write_reject(s, REJ_MAGIC, WIRE_VERSION, "expected ClientHello");
+        return Err(HandshakeError::BadMagic);
+    }
+    if payload[0..4] != MAGIC {
+        write_reject(s, REJ_MAGIC, WIRE_VERSION, "bad magic");
+        return Err(HandshakeError::BadMagic);
+    }
+    let theirs = u32::from_le_bytes(payload[4..8].try_into().expect("4 bytes"));
+    if theirs != WIRE_VERSION {
+        write_reject(
+            s,
+            REJ_VERSION,
+            WIRE_VERSION,
+            &format!("wire version {theirs} (this server speaks {WIRE_VERSION})"),
+        );
+        return Err(HandshakeError::VersionMismatch {
+            ours: WIRE_VERSION,
+            theirs,
+        });
+    }
+    let rank = u32::from_le_bytes(payload[8..12].try_into().expect("4 bytes"));
+    let digest_text = std::str::from_utf8(&payload[12..]).unwrap_or("");
+    let theirs_digest = crate::util::Json::parse(digest_text)
+        .ok()
+        .and_then(|j| Digest::from_json(&j).ok());
+    match theirs_digest {
+        Some(d) if d == *expect => {}
+        other => {
+            let msg = format!("worker digest {other:?} != server digest {expect:?}");
+            write_reject(s, REJ_DIGEST, WIRE_VERSION, &msg);
+            return Err(HandshakeError::DigestMismatch(msg));
+        }
+    }
+    if rank != expect_rank {
+        let msg = format!("rank {rank} (expected {expect_rank})");
+        write_reject(s, REJ_RANK, WIRE_VERSION, &msg);
+        return Err(HandshakeError::Rejected { code: REJ_RANK, msg });
+    }
+    write_frame(s, TAG_WELCOME, &[flags]).map_err(HandshakeError::Io)?;
+    Ok(rank)
+}
+
+/// Client side with an explicit version (tests drive mismatches through
+/// this); returns the server's `Welcome` flags.
+pub fn client_hello_versioned(
+    s: &mut Stream,
+    version: u32,
+    rank: u32,
+    digest: &Digest,
+) -> std::result::Result<u8, HandshakeError> {
+    write_frame(s, TAG_HELLO, &enc_hello(version, rank, digest)).map_err(HandshakeError::Io)?;
+    let (tag, payload, _) = read_frame(s).map_err(HandshakeError::Io)?;
+    match tag {
+        TAG_WELCOME => Ok(payload.first().copied().unwrap_or(0)),
+        TAG_REJECT => {
+            let mut r = Rd::new(&payload);
+            let code = r.take(1).map(|b| b[0]).unwrap_or(0);
+            let server_version = r.u32().unwrap_or(0);
+            let msg = r.rest_str().unwrap_or_default();
+            Err(match code {
+                REJ_VERSION => HandshakeError::VersionMismatch {
+                    ours: version,
+                    theirs: server_version,
+                },
+                REJ_DIGEST => HandshakeError::DigestMismatch(msg),
+                REJ_MAGIC => HandshakeError::BadMagic,
+                _ => HandshakeError::Rejected { code, msg },
+            })
+        }
+        other => Err(HandshakeError::Io(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unexpected handshake frame tag {other}"),
+        ))),
+    }
+}
+
+/// Client side of the handshake at this build's [`WIRE_VERSION`].
+pub fn client_hello(
+    s: &mut Stream,
+    rank: u32,
+    digest: &Digest,
+) -> std::result::Result<u8, HandshakeError> {
+    client_hello_versioned(s, WIRE_VERSION, rank, digest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn pair() -> (Stream, Stream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let c = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (srv, _) = l.accept().unwrap();
+        (Stream::Tcp(srv), Stream::Tcp(c.join().unwrap()))
+    }
+
+    #[test]
+    fn frames_roundtrip_with_byte_counts() {
+        let (mut a, mut b) = pair();
+        let n = write_frame(&mut a, TAG_FEATURES, &enc_features(7)).unwrap();
+        let (tag, payload, m) = read_frame(&mut b).unwrap();
+        assert_eq!(tag, TAG_FEATURES);
+        assert_eq!(dec_features(&payload).unwrap(), 7);
+        assert_eq!(n, m);
+        assert_eq!(n, 4 + 1 + 8);
+    }
+
+    #[test]
+    fn tensor_payloads_are_bit_exact() {
+        let t = Tensor {
+            shape: vec![2, 3],
+            data: vec![1.5, -0.25, f32::MIN_POSITIVE, 3.0e7, -0.0, 42.0],
+        };
+        let state = ModelState {
+            params: vec![t.clone()],
+            opt: vec![t.clone(), t.clone()],
+        };
+        let payload = enc_state(&state);
+        let got = dec_state(&payload, &[vec![2, 3]], &[vec![2, 3], vec![2, 3]]).unwrap();
+        for (a, b) in got.params.iter().chain(&got.opt).zip([&t, &t, &t]) {
+            assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    fn handshake_accepts_matching_config() {
+        let cfg = ExperimentConfig::default();
+        let d = Digest::of(&cfg);
+        let (mut srv, mut cli) = pair();
+        let d2 = d.clone();
+        let t = std::thread::spawn(move || server_accept_hello(&mut srv, &d2, 3, WELCOME_TRACE));
+        let flags = client_hello(&mut cli, 3, &d).unwrap();
+        assert_eq!(flags, WELCOME_TRACE);
+        assert_eq!(t.join().unwrap().unwrap(), 3);
+    }
+
+    #[test]
+    fn handshake_rejects_version_and_digest_mismatch_typed() {
+        let cfg = ExperimentConfig::default();
+        let d = Digest::of(&cfg);
+        // version skew: both sides report the same (ours, theirs) pair
+        let (mut srv, mut cli) = pair();
+        let d2 = d.clone();
+        let t = std::thread::spawn(move || server_accept_hello(&mut srv, &d2, 0, 0));
+        let err = client_hello_versioned(&mut cli, WIRE_VERSION + 1, 0, &d).unwrap_err();
+        assert!(
+            matches!(err, HandshakeError::VersionMismatch { ours, theirs }
+                if ours == WIRE_VERSION + 1 && theirs == WIRE_VERSION),
+            "{err}"
+        );
+        assert!(matches!(
+            t.join().unwrap().unwrap_err(),
+            HandshakeError::VersionMismatch { .. }
+        ));
+        // digest skew (different seed)
+        let mut other = ExperimentConfig::default();
+        other.seed = 99;
+        let d_other = Digest::of(&other);
+        let (mut srv, mut cli) = pair();
+        let t = std::thread::spawn(move || server_accept_hello(&mut srv, &d_other, 0, 0));
+        let err = client_hello(&mut cli, 0, &d).unwrap_err();
+        assert!(matches!(err, HandshakeError::DigestMismatch(_)), "{err}");
+        assert!(matches!(
+            t.join().unwrap().unwrap_err(),
+            HandshakeError::DigestMismatch(_)
+        ));
+        // wrong rank is a coded rejection
+        let (mut srv, mut cli) = pair();
+        let d2 = d.clone();
+        let t = std::thread::spawn(move || server_accept_hello(&mut srv, &d2, 1, 0));
+        let err = client_hello(&mut cli, 2, &d).unwrap_err();
+        assert!(
+            matches!(err, HandshakeError::Rejected { code: REJ_RANK, .. }),
+            "{err}"
+        );
+        assert!(t.join().unwrap().is_err());
+    }
+}

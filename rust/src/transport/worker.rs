@@ -1,0 +1,205 @@
+//! The `llcg worker` process body: dial the server, handshake, restore the
+//! exact worker state, then serve framed rounds until shutdown.
+//!
+//! The worker re-derives its whole run state (dataset, partition,
+//! builders) from the same config the server used — shipped to it as CLI
+//! flags — and then overwrites its params + optimizer moments with the
+//! server's `Restore` image, so a remote worker is bit-identical to an
+//! in-process worker thread: same inputs, same kernels, same outputs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::checkpoint::Digest;
+use crate::config::ExperimentConfig;
+use crate::coordinator::driver;
+use crate::runtime::Runtime;
+use crate::sampler::{BlockArena, NodeScratch};
+use crate::util::Json;
+
+use super::wire::{self, Stream};
+use super::HEARTBEAT_PERIOD;
+
+/// Guarded writer shared by the reply path and the heartbeat thread (the
+/// socket has one reader — the main loop — but two writers).
+type SharedWriter = Arc<Mutex<Stream>>;
+
+fn send(w: &SharedWriter, tag: u8, payload: &[u8]) -> std::io::Result<u64> {
+    wire::write_frame(&mut w.lock().expect("writer lock"), tag, payload)
+}
+
+/// Serialize this process's spans + metrics for the end-of-run
+/// `ObsFlush` frame.
+fn obs_flush_json() -> Json {
+    Json::obj(vec![
+        ("schema", Json::num(crate::obs::SCHEMA_VERSION as f64)),
+        ("spans", crate::obs::spans_to_json(&crate::obs::take_spans())),
+        ("metrics", crate::obs::metrics_raw_json()),
+    ])
+}
+
+/// Entry point behind `llcg worker --connect <addr> --rank <p>`; every
+/// other flag is the run config, reproduced verbatim by the server.
+pub fn run_worker(connect: &str, rank: u32, cfg: ExperimentConfig) -> Result<()> {
+    let digest = Digest::of(&cfg);
+    let mut stream = wire::connect_retry(connect, Duration::from_secs(30))?;
+    let flags = wire::client_hello(&mut stream, rank, &digest)
+        .map_err(|e| anyhow!("worker {rank}: {e}"))?;
+    if flags & wire::WELCOME_TRACE != 0 {
+        crate::obs::set_enabled(true);
+    }
+
+    let reader = stream.try_clone()?;
+    let writer: SharedWriter = Arc::new(Mutex::new(stream));
+    let mut reader = reader;
+
+    // heartbeat immediately (setup below takes real time; the server's
+    // per-connection read timeout must not mistake it for a wedged worker)
+    let stop = Arc::new(AtomicBool::new(false));
+    {
+        let w = writer.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(HEARTBEAT_PERIOD);
+                if send(&w, wire::TAG_HEARTBEAT, &[]).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+
+    // the restore image arrives right behind the welcome; buffer its raw
+    // payload now (decoding needs the shape manifests from setup below)
+    let (tag, restore_raw, _) = wire::read_frame(&mut reader)?;
+    if tag != wire::TAG_RESTORE {
+        bail!("worker {rank}: expected a restore frame, got tag {tag}");
+    }
+
+    // re-derive the run exactly as the server did
+    let ds = driver::load_dataset(&cfg)?;
+    let (rt, _adir) = Runtime::load_or_native(&cfg.artifacts_dir)?;
+    if rt.backend_name() != "native" {
+        bail!("worker processes need the native backend");
+    }
+    rt.set_kernel_threads(cfg.kernel_threads.max(1));
+    let setup = driver::setup_run(&cfg, &ds, &rt, None)?;
+    let part = rank as usize;
+    if part >= setup.parts.len() {
+        bail!("worker rank {rank} out of range (parts = {})", setup.parts.len());
+    }
+    let info = &setup.parts[part];
+    let netm = &setup.net;
+    let mut state = setup.workers[part].clone();
+    // overwrite with the server's exact image: initial spawn ships the
+    // setup-time state (a no-op by construction), resume ships checkpointed
+    // optimizer moments, respawn ships the current global params
+    {
+        let pshapes: Vec<Vec<usize>> = state.params.iter().map(|t| t.shape.clone()).collect();
+        let oshapes: Vec<Vec<usize>> = state.opt.iter().map(|t| t.shape.clone()).collect();
+        state = wire::dec_state(&restore_raw, &pshapes, &oshapes)
+            .context("decoding the restore image")?;
+    }
+
+    let down_shapes: Vec<Vec<usize>> =
+        state.params.iter().map(|t| t.shape.clone()).collect();
+    let mut arena = BlockArena::new();
+    let mut scratch = NodeScratch::new();
+    loop {
+        let (tag, payload, _) = match wire::read_frame(&mut reader) {
+            Ok(f) => f,
+            // server gone (abort path closes the socket); exit quietly
+            Err(_) => break,
+        };
+        match tag {
+            wire::TAG_ROUND => {
+                let (round, k, params) = wire::dec_round(&payload, &down_shapes)?;
+                if netm.crashed(info.part, round as u64) {
+                    // modeled fault: die silently at round start, exactly
+                    // like the in-process worker (the server knows the
+                    // schedule and does not wait)
+                    stop.store(true, Ordering::Relaxed);
+                    return Ok(());
+                }
+                let out = driver::run_worker_round(
+                    &rt,
+                    &setup.train_name,
+                    &cfg,
+                    &ds,
+                    &setup.assignment,
+                    info,
+                    &setup.local_builder,
+                    netm,
+                    setup.param_bytes,
+                    &mut state,
+                    &params,
+                    round,
+                    k,
+                    &mut arena,
+                    &mut scratch,
+                    |fb| {
+                        let _ = send(&writer, wire::TAG_FEATURES, &wire::enc_features(fb));
+                    },
+                );
+                match out {
+                    Ok(o) => {
+                        let up = super::ParamsUp {
+                            part: info.part,
+                            round,
+                            params: state.params.clone(),
+                            loss_sum: o.loss_sum,
+                            loss_n: o.loss_n,
+                            net_s: o.net_s,
+                            elapsed_s: o.elapsed_s,
+                        };
+                        if send(&writer, wire::TAG_ROUND_REPLY, &wire::enc_round_reply(&up))
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        // report and exit: the obs flush rides ahead of the
+                        // failure so the server still merges this process's
+                        // spans/metrics
+                        let _ = send(
+                            &writer,
+                            wire::TAG_OBS_FLUSH,
+                            obs_flush_json().to_string_pretty().as_bytes(),
+                        );
+                        let _ = send(
+                            &writer,
+                            wire::TAG_FAILED,
+                            &wire::enc_failed(info.part, &format!("{e:#}")),
+                        );
+                        stop.store(true, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                }
+            }
+            wire::TAG_SNAPSHOT => {
+                if send(
+                    &writer,
+                    wire::TAG_SNAPSHOT_REPLY,
+                    &wire::enc_snapshot_reply(info.part, &state),
+                )
+                .is_err()
+                {
+                    break;
+                }
+            }
+            wire::TAG_SHUTDOWN => break,
+            other => bail!("worker {rank}: unexpected frame tag {other}"),
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let _ = send(
+        &writer,
+        wire::TAG_OBS_FLUSH,
+        obs_flush_json().to_string_pretty().as_bytes(),
+    );
+    Ok(())
+}
