@@ -926,6 +926,10 @@ fn main() {
                 h.record_ns(std::hint::black_box(1_234));
             }
         });
+        // one Prometheus scrape of /metrics = one registry render
+        b.run("obs/prometheus-render", 3, 50, || {
+            std::hint::black_box(obs::prometheus_text().len());
+        });
 
         match Runtime::load_or_native("artifacts") {
             Err(e) => eprintln!("(no runtime available — skipping obs round benches: {e:#})"),
@@ -965,6 +969,22 @@ fn main() {
                         println!(
                             "  -> tracing-on overhead vs off: {:+.2}%",
                             (on / off - 1.0) * 100.0
+                        );
+                    }
+                    // the training monitors (`--listen`): divergence math +
+                    // two extra correction-probe evals per round
+                    let mon_row = "obs/round-monitors-on(tiny,P=4,K=4)";
+                    obs::monitor::reset();
+                    obs::monitor::set_enabled(true);
+                    b.run(mon_row, 1, 8, || {
+                        std::hint::black_box(exp.launch(&rt).finish().unwrap());
+                    });
+                    obs::monitor::set_enabled(false);
+                    obs::monitor::reset();
+                    if let (Some(off), Some(mon)) = (b.mean_of(off_row), b.mean_of(mon_row)) {
+                        println!(
+                            "  -> monitors-on overhead vs off: {:+.2}%",
+                            (mon / off - 1.0) * 100.0
                         );
                     }
                 }

@@ -493,6 +493,17 @@ static KEYS: &[KeySpec] = &[
         },
         show: |cfg| cfg.transport.clone(),
     },
+    KeySpec {
+        name: "heartbeat_ms",
+        kind: KeyKind::Num,
+        doc: "worker heartbeat period in ms (process transports; liveness \
+              monitor unit; >= 10)",
+        apply: |cfg, v| {
+            cfg.heartbeat_ms = req_count(v, "heartbeat_ms", 10)? as u64;
+            Ok(())
+        },
+        show: |cfg| cfg.heartbeat_ms.to_string(),
+    },
 ];
 
 /// Look up a key by its canonical (underscore) name.
@@ -588,6 +599,22 @@ pub fn cli_args(cfg: &ExperimentConfig) -> Vec<String> {
     out
 }
 
+/// Short stable fingerprint of a resolved config: FNV-1a 64 over the
+/// round-trippable `cli_args` rendering, hex-encoded. Stamped into the
+/// run-metadata header (`obs::run_meta_json`) so artifacts from different
+/// processes of the same run are matchable — and artifacts from *different*
+/// configs are distinguishable — without shipping the whole config.
+pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for arg in cli_args(cfg) {
+        for b in arg.bytes().chain(std::iter::once(0x1f)) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    format!("{h:016x}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -600,7 +627,7 @@ mod tests {
         dedup.dedup();
         assert_eq!(names.len(), dedup.len(), "duplicate KeySpec rows");
         // one row per ExperimentConfig knob (schedule takes two)
-        assert_eq!(names.len(), 37);
+        assert_eq!(names.len(), 38);
     }
 
     #[test]
@@ -745,6 +772,31 @@ mod tests {
         assert_eq!(cfg.transport, "tcp,kill=1@3");
         assert!(apply_str(&mut cfg, "transport", "carrier-pigeon").is_err());
         assert!(apply_str(&mut cfg, "transport", "inprocess,kill=1@3").is_err());
+    }
+
+    #[test]
+    fn heartbeat_ms_parses_and_enforces_floor() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.heartbeat_ms, 1000);
+        apply_str(&mut cfg, "heartbeat-ms", "250").unwrap();
+        assert_eq!(cfg.heartbeat_ms, 250);
+        assert!(apply_str(&mut cfg, "heartbeat_ms", "5").is_err());
+        assert!(apply_str(&mut cfg, "heartbeat_ms", "0").is_err());
+        assert!(apply_str(&mut cfg, "heartbeat_ms", "99.5").is_err());
+        // ships to workers via cli_args like every other key
+        let args = cli_args(&cfg);
+        let i = args.iter().position(|a| a == "--heartbeat_ms").unwrap();
+        assert_eq!(args[i + 1], "250");
+    }
+
+    #[test]
+    fn config_fingerprint_is_stable_and_config_sensitive() {
+        let a = ExperimentConfig::default();
+        let mut b = ExperimentConfig::default();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        assert_eq!(config_fingerprint(&a).len(), 16);
+        b.parts = 8;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
     }
 
     #[test]

@@ -75,6 +75,17 @@ pub enum Event {
         path: String,
     },
     RoundCompleted(RoundRecord),
+    /// A training monitor crossed a threshold rule (loss non-finite,
+    /// cross-worker divergence growing for several rounds, a worker silent
+    /// past its heartbeat budget, ...). Emitted only while the telemetry
+    /// monitors are enabled (`--listen`); never part of the sync-mode
+    /// event-parity contract.
+    MonitorAlert {
+        round: usize,
+        monitor: &'static str,
+        message: String,
+        value: f64,
+    },
     Finished(RunResult),
 }
 
@@ -88,6 +99,7 @@ impl Event {
             Event::WorkerRestarted { .. } => "worker_restarted",
             Event::CheckpointSaved { .. } => "checkpoint_saved",
             Event::RoundCompleted(_) => "round_completed",
+            Event::MonitorAlert { .. } => "monitor_alert",
             Event::Finished(_) => "finished",
         }
     }
@@ -135,6 +147,17 @@ impl Event {
                 fields.push(("path", Json::str(path)));
             }
             Event::RoundCompleted(r) => fields.push(("record", r.to_json())),
+            Event::MonitorAlert {
+                round,
+                monitor,
+                message,
+                value,
+            } => {
+                fields.push(("round", Json::num(*round as f64)));
+                fields.push(("monitor", Json::str(*monitor)));
+                fields.push(("message", Json::str(message)));
+                fields.push(("value", Json::num(*value)));
+            }
             Event::Finished(r) => fields.push(("result", r.to_json())),
         }
         Json::obj(fields)
@@ -496,6 +519,13 @@ impl ExperimentBuilder {
         if cfg.eval_every == 0 {
             return Err(anyhow!("eval_every must be >= 1 (1 = every round)"));
         }
+        if cfg.heartbeat_ms < 10 {
+            return Err(anyhow!(
+                "heartbeat_ms must be >= 10 (got {}) — sub-10ms heartbeats \
+                 flood the wire",
+                cfg.heartbeat_ms
+            ));
+        }
         let ds = match self.preloaded {
             Some(ds) => ds,
             None => Arc::new(
@@ -778,6 +808,35 @@ mod tests {
         assert_eq!(exp.config().algorithm, Algorithm::Ggs);
         assert_eq!(exp.config().parts, 2);
         assert!(ExperimentBuilder::new().set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn build_rejects_sub_10ms_heartbeats() {
+        let mut b = ExperimentBuilder::new();
+        b.cfg.heartbeat_ms = 5; // typed path can bypass the key schema
+        let err = b.build().err().unwrap();
+        assert!(format!("{err:#}").contains("heartbeat_ms"), "{err:#}");
+        ExperimentBuilder::new()
+            .set("heartbeat_ms", "10")
+            .unwrap()
+            .build()
+            .unwrap();
+    }
+
+    #[test]
+    fn monitor_alert_event_serializes() {
+        let ev = Event::MonitorAlert {
+            round: 3,
+            monitor: "divergence",
+            message: "divergence grew 3 rounds straight".to_string(),
+            value: 0.25,
+        };
+        assert_eq!(ev.kind(), "monitor_alert");
+        let j = ev.to_json();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("monitor_alert"));
+        assert_eq!(j.get("round").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("monitor").and_then(Json::as_str), Some("divergence"));
+        assert_eq!(j.get("value").and_then(Json::as_f64), Some(0.25));
     }
 
     #[test]

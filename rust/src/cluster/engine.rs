@@ -579,6 +579,31 @@ fn run_rounds(
             }
             let quorum_r = contributors.iter().filter(|c| c.is_some()).count();
 
+            // training monitors (telemetry plane only): cross-worker
+            // parameter divergence (Thm 4.3/4.4's residual quantity),
+            // straggler skew, and heartbeat liveness — all read from the
+            // uploads and timestamps the server already holds, never from
+            // the training path
+            if crate::obs::monitor::enabled() {
+                let views: Vec<Vec<&[f32]>> = contributors
+                    .iter()
+                    .flatten()
+                    .map(|u| u.params.iter().map(|t| t.data.as_slice()).collect())
+                    .collect();
+                let mut alerts = crate::obs::monitor::observe_divergence(round, &views);
+                let times: Vec<(u32, f64)> = contributors
+                    .iter()
+                    .flatten()
+                    .map(|u| (u.part, u.elapsed_s))
+                    .collect();
+                alerts.extend(crate::obs::monitor::observe_round_times(round, &times));
+                alerts.extend(crate::obs::monitor::check_heartbeats(
+                    round,
+                    cfg.heartbeat_ms as f64 / 1000.0,
+                ));
+                driver::emit_alerts(ctx, alerts);
+            }
+
             // ---- server: average (+ correct) + eval -----------------------
             let t_server = Instant::now();
             let mut phases = driver::PhaseTimes::default();
@@ -1216,6 +1241,8 @@ fn run_async(
                             waiting.swap_remove(i);
                         } else if gate.may_start(q) && gate.done(q) < cap {
                             max_staleness = max_staleness.max(gate.staleness(q) as u64);
+                            crate::obs::gauge("cluster.staleness_hwm")
+                                .set(max_staleness as f64);
                             let next = gate.done(q) + 1;
                             if down_txs[q]
                                 .send(Down::Round {

@@ -85,6 +85,10 @@ pub struct ExperimentConfig {
     /// `tcp`/`uds` (real worker processes over the versioned wire
     /// protocol), with optional `,kill=p@r` process-kill faults
     pub transport: String,
+    /// worker heartbeat period in milliseconds (process transports only);
+    /// also the unit for liveness monitoring (a worker silent for several
+    /// periods raises a monitor alert). Must be >= 10.
+    pub heartbeat_ms: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -126,6 +130,7 @@ impl Default for ExperimentConfig {
             checkpoint_dir: "checkpoints".into(),
             resume: String::new(),
             transport: "inprocess".into(),
+            heartbeat_ms: 1000,
         }
     }
 }

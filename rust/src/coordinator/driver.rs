@@ -708,6 +708,20 @@ pub(crate) fn run_correction_steps(
     Ok(())
 }
 
+/// Forward training-monitor alerts into the run's event stream. A no-op
+/// list while the telemetry monitors are off, so the sync-mode event-parity
+/// contract (which runs with monitors off) is untouched.
+pub(crate) fn emit_alerts(ctx: &mut RunCtx<'_>, alerts: Vec<crate::obs::monitor::Alert>) {
+    for a in alerts {
+        ctx.emit(Event::MonitorAlert {
+            round: a.round,
+            monitor: a.monitor,
+            message: a.message,
+            value: a.value,
+        });
+    }
+}
+
 /// Server-side round epilogue shared by every engine's sync-style path:
 /// run the correction steps (when the algorithm has them) on the freshly
 /// averaged `global_params`, then the cadenced evaluation. Keeping this in
@@ -736,6 +750,39 @@ pub(crate) fn server_round_epilogue(
     ctx: &mut RunCtx<'_>,
 ) -> Result<(f64, f64)> {
     if cfg.algorithm.corrects() && cfg.correction_steps > 0 {
+        // Correction-efficacy probe (telemetry monitors only): global
+        // train-sample loss before vs. after the correction, plus the
+        // correction's parameter-delta norm. Every RNG it touches is a
+        // *clone* of `eval_rng`'s pre-correction state — the same clone
+        // twice, so both evals score the same node sample — which keeps
+        // every training-visible stream bit-identical with monitors on.
+        // The two extra evals are the monitors' documented cost.
+        let probe = crate::obs::monitor::enabled();
+        let mut probe_rng = eval_rng.clone();
+        let mut probe_sample: Vec<u32> = Vec::new();
+        let mut loss_before = f64::NAN;
+        let mut params_before: Vec<Vec<f32>> = Vec::new();
+        if probe {
+            probe_sample =
+                if cfg.eval_max_nodes > 0 && ds.splits.train.len() > cfg.eval_max_nodes {
+                    probe_rng.sample_without_replacement(&ds.splits.train, cfg.eval_max_nodes)
+                } else {
+                    ds.splits.train.clone()
+                };
+            let mut r = probe_rng.clone();
+            loss_before = eval_split(
+                rt,
+                eval_name,
+                global_params,
+                ds,
+                &probe_sample,
+                local_builder,
+                &mut r,
+                false,
+            )?
+            .1;
+            params_before = global_params.iter().map(|t| t.data.clone()).collect();
+        }
         let t_corr = std::time::Instant::now();
         {
             let _s = crate::obs::span_round("server.correction", round as i64);
@@ -759,6 +806,31 @@ pub(crate) fn server_round_epilogue(
             round,
             steps: cfg.correction_steps,
         });
+        if probe {
+            let mut r = probe_rng;
+            let loss_after = eval_split(
+                rt,
+                eval_name,
+                global_params,
+                ds,
+                &probe_sample,
+                local_builder,
+                &mut r,
+                false,
+            )?
+            .1;
+            let mut d2 = 0f64;
+            for (t, before) in global_params.iter().zip(&params_before) {
+                for (a, b) in t.data.iter().zip(before) {
+                    let d = (*a - *b) as f64;
+                    d2 += d * d;
+                }
+            }
+            emit_alerts(
+                ctx,
+                crate::obs::monitor::observe_correction(round, loss_before, loss_after, d2.sqrt()),
+            );
+        }
     }
     eval_if_due(
         rt,
@@ -1137,6 +1209,18 @@ fn run_sequential(
                 compute_s: out.elapsed_s,
                 net_s: out.net_s,
             });
+        }
+
+        // cross-worker parameter divergence (Thm 4.3/4.4's residual
+        // quantity), read from the states the server already holds —
+        // monitors only, never part of training
+        if crate::obs::monitor::enabled() {
+            let views: Vec<Vec<&[f32]>> = workers
+                .iter()
+                .map(|w| w.params.iter().map(|t| t.data.as_slice()).collect())
+                .collect();
+            let alerts = crate::obs::monitor::observe_divergence(round, &views);
+            emit_alerts(ctx, alerts);
         }
 
         // ---- server: average + correct + eval -----------------------------

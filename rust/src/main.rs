@@ -33,7 +33,7 @@
 
 use anyhow::{bail, Result};
 
-use llcg::api::{keys, registry, ExperimentBuilder, Sweep, TablePrinter};
+use llcg::api::{keys, registry, Event, ExperimentBuilder, Sweep, TablePrinter};
 use llcg::util::Json;
 use llcg::config::ExperimentConfig;
 use llcg::coordinator::driver;
@@ -98,6 +98,13 @@ fn run_help() {
          \x20 --log-json events.jsonl  stream every run event as one JSON line,\n\
          \x20                          plus end-of-run span summaries + metrics\n\
          \x20 --metrics                print the metrics table after the run\n\
+         \x20 --listen 127.0.0.1:9184  live telemetry plane: serve /metrics\n\
+         \x20                          (Prometheus), /health, /run, /series over\n\
+         \x20                          HTTP while the run is alive, and turn the\n\
+         \x20                          training monitors on (port 0 picks a free\n\
+         \x20                          port; the bound address is printed). With\n\
+         \x20                          --out, the sampled time series is embedded\n\
+         \x20                          in the result JSON as \"series\"\n\
          \n\
          Config keys (generated from the api::keys schema; every key works\n\
          both as a JSON field and as a --key=value override):\n\
@@ -106,15 +113,17 @@ fn run_help() {
     );
 }
 
-/// Pull the obs flags (`--trace <path>`, `--log-json <path>`, `--metrics`)
-/// out of a flag list: run-structural, like `--out` — not config keys.
+/// Pull the obs flags (`--trace <path>`, `--log-json <path>`, `--metrics`,
+/// `--listen <addr>`) out of a flag list: run-structural, like `--out` —
+/// not config keys.
 struct ObsFlags {
     trace: Option<String>,
     log_json: Option<String>,
     metrics: bool,
+    listen: Option<String>,
 }
 
-const OBS_FLAG_NAMES: &[&str] = &["trace", "log-json", "metrics"];
+const OBS_FLAG_NAMES: &[&str] = &["trace", "log-json", "metrics", "listen"];
 
 impl ObsFlags {
     fn parse(flags: &[(String, String)]) -> ObsFlags {
@@ -128,6 +137,7 @@ impl ObsFlags {
             trace: find("trace"),
             log_json: find("log-json"),
             metrics: find("metrics").is_some_and(|v| v != "false"),
+            listen: find("listen"),
         }
     }
 
@@ -137,7 +147,13 @@ impl ObsFlags {
             llcg::obs::set_enabled(true);
         }
         Ok(match &self.log_json {
-            Some(p) => Some(llcg::obs::JsonlLog::create(std::path::Path::new(p))?),
+            Some(p) => {
+                let mut log = llcg::obs::JsonlLog::create(std::path::Path::new(p))?;
+                // first line of every log file: who wrote it, for which
+                // config (schema v4 run-metadata header)
+                log.write_header()?;
+                Some(log)
+            }
             None => None,
         })
     }
@@ -184,6 +200,89 @@ impl ObsFlags {
     }
 }
 
+/// The live telemetry plane behind `--listen <addr>`: the HTTP exposition
+/// server (`/metrics` `/health` `/run` `/series`), the rolling registry
+/// sampler, and the training monitors. Exists only while the flag is
+/// given — without it there is no socket, no thread, and the monitor hook
+/// sites cost one relaxed atomic load each.
+struct Telemetry {
+    exporter: llcg::obs::Exporter,
+    sampler: Option<llcg::obs::Sampler>,
+    ring: llcg::obs::SeriesRing,
+    health: llcg::obs::RunHealth,
+    /// workers seen since the last round boundary (feeds `live_workers`)
+    round_workers: usize,
+}
+
+impl Telemetry {
+    fn start(addr: &str, engine: &str, parts: usize, rounds: usize) -> Result<Telemetry> {
+        let exporter = llcg::obs::Exporter::bind(addr)
+            .map_err(|e| anyhow::anyhow!("--listen {addr}: {e}"))?;
+        let sampler = llcg::obs::Sampler::start(
+            llcg::obs::timeseries::DEFAULT_INTERVAL_MS,
+            llcg::obs::timeseries::DEFAULT_CAPACITY,
+        );
+        let ring = sampler.ring();
+        exporter.attach_series(ring.clone());
+        llcg::obs::monitor::reset();
+        llcg::obs::monitor::set_enabled(true);
+        let health = llcg::obs::RunHealth::new(engine, parts, rounds);
+        exporter.set_health(health.clone());
+        // port 0 resolves here; scrapers parse this line for the address
+        eprintln!(
+            "listen: telemetry on http://{} (/metrics /health /run /series)",
+            exporter.addr()
+        );
+        Ok(Telemetry {
+            exporter,
+            sampler: Some(sampler),
+            ring,
+            health,
+            round_workers: 0,
+        })
+    }
+
+    /// Mirror one run event into the `/run` tail and `/health` snapshot.
+    fn on_event(&mut self, ev: &Event) {
+        match ev {
+            Event::RoundStarted { .. } => {
+                self.health.state = "running".into();
+                self.round_workers = 0;
+            }
+            Event::WorkerRoundCompleted { .. } => self.round_workers += 1,
+            Event::RoundCompleted(r) => {
+                self.health.last_round = r.round;
+                if self.round_workers > 0 {
+                    self.health.live_workers = self.round_workers;
+                }
+                self.health.staleness_hwm =
+                    llcg::obs::gauge("cluster.staleness_hwm").get() as u64;
+            }
+            Event::MonitorAlert { .. } => self.health.alerts += 1,
+            _ => {}
+        }
+        self.exporter.push_event(ev.to_json());
+        self.exporter.set_health(self.health.clone());
+    }
+
+    fn set_state(&mut self, state: &str) {
+        self.health.state = state.into();
+        self.exporter.set_health(self.health.clone());
+    }
+
+    /// Stop the sampler (one final sample), publish the terminal health
+    /// state, and return the ring for the `--out` dump. The exporter keeps
+    /// serving until this struct drops, so late scrapes still land.
+    fn finish(&mut self, state: &str) -> llcg::obs::SeriesRing {
+        if let Some(s) = self.sampler.take() {
+            s.stop();
+        }
+        llcg::obs::monitor::set_enabled(false);
+        self.set_state(state);
+        self.ring.clone()
+    }
+}
+
 fn cmd_run(flags: &[(String, String)]) -> Result<()> {
     if flags.iter().any(|(k, _)| k == "help") {
         run_help();
@@ -211,9 +310,17 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
     );
 
     // stream the run: one table row per completed round, as it happens
+    llcg::obs::set_config_digest(&keys::config_fingerprint(cfg));
+    let mut telemetry = match &obs_flags.listen {
+        Some(addr) => Some(Telemetry::start(addr, cfg.engine.name(), cfg.parts, cfg.rounds)?),
+        None => None,
+    };
     let mut printer = TablePrinter::new();
     let mut event_log = obs_flags.begin()?;
     let result = exp.launch(&rt).stream(|ev| {
+        if let Some(t) = telemetry.as_mut() {
+            t.on_event(ev);
+        }
         if let Some(log) = event_log.as_mut() {
             // best-effort: a full disk must not kill the training run
             let _ = log.write(ev.to_json());
@@ -221,6 +328,7 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
         printer.on_event(ev)
     })?;
     obs_flags.finish(event_log)?;
+    let series = telemetry.as_mut().map(|t| t.finish("finished"));
 
     println!(
         "final: val={:.4} test={:.4} cut_ratio={:.3} avg_round_MB={:.3}",
@@ -243,7 +351,13 @@ fn cmd_run(flags: &[(String, String)]) -> Result<()> {
             std::fs::create_dir_all(
                 std::path::Path::new(v).parent().unwrap_or(std::path::Path::new(".")),
             )?;
-            std::fs::write(v, result.to_json().to_string_pretty())?;
+            let mut out = result.to_json();
+            // --listen + --out: embed the sampled registry time series so
+            // the live `/series` view survives the run as a plot source
+            if let (Some(ring), Json::Object(m)) = (&series, &mut out) {
+                m.insert("series".into(), ring.to_json());
+            }
+            std::fs::write(v, out.to_string_pretty())?;
             eprintln!("wrote {v}");
         }
     }
@@ -331,7 +445,7 @@ fn cmd_sweep(flags: &[(String, String)]) -> Result<()> {
 fn cmd_serve(flags: &[(String, String)]) -> Result<()> {
     let cfg = build_config(
         flags,
-        &["requests", "clients", "mode", "rate", "trace", "log-json", "metrics"],
+        &["requests", "clients", "mode", "rate", "trace", "log-json", "metrics", "listen"],
     )?;
     let obs_flags = ObsFlags::parse(flags);
     let mut requests = 2000usize;
@@ -366,17 +480,30 @@ fn cmd_serve(flags: &[(String, String)]) -> Result<()> {
         cfg.rounds,
         cfg.engine.name()
     );
+    llcg::obs::set_config_digest(&keys::config_fingerprint(cfg));
+    let mut telemetry = match &obs_flags.listen {
+        Some(addr) => Some(Telemetry::start(addr, cfg.engine.name(), cfg.parts, cfg.rounds)?),
+        None => None,
+    };
     let mut printer = TablePrinter::new();
     let mut event_log = obs_flags.begin()?;
     let result = exp
         .launch(&rt)
         .publish_to(hub.clone())?
         .stream(|ev| {
+            if let Some(t) = telemetry.as_mut() {
+                t.on_event(ev);
+            }
             if let Some(log) = event_log.as_mut() {
                 let _ = log.write(ev.to_json());
             }
             printer.on_event(ev)
         })?;
+    if let Some(t) = telemetry.as_mut() {
+        // training is done; /metrics and /health stay up through the
+        // load-test so the serve-path histograms are scrapeable live
+        t.set_state("serving");
+    }
     eprintln!(
         "trained: final val={:.4} test={:.4}; snapshots published: {}",
         result.final_val,
@@ -422,6 +549,9 @@ fn cmd_serve(flags: &[(String, String)]) -> Result<()> {
     // finish after shutdown so the dispatcher's serve.* spans and latency
     // histograms make it into the trace / metrics table
     obs_flags.finish(event_log)?;
+    if let Some(t) = telemetry.as_mut() {
+        t.finish("finished");
+    }
     Ok(())
 }
 

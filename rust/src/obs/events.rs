@@ -63,6 +63,17 @@ impl JsonlLog {
         Ok(())
     }
 
+    /// Append the run-metadata header record (PID, hostname, wire/schema
+    /// versions, config digest). The CLI writes this as the *first* line
+    /// of every `--log-json` file so a directory of logs from many worker
+    /// processes stays attributable; library users opt in explicitly.
+    pub fn write_header(&mut self) -> Result<()> {
+        self.write(Json::obj(vec![
+            ("event", Json::str("run_meta")),
+            ("meta", crate::obs::run_meta_json()),
+        ]))
+    }
+
     /// Append the end-of-run span summary records (one line per span name).
     pub fn write_span_summaries(&mut self, sums: &[SpanSummary]) -> Result<()> {
         for s in sums {

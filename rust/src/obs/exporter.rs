@@ -1,0 +1,364 @@
+//! Std-only HTTP exposition server — the live telemetry plane.
+//!
+//! [`Exporter::bind`] opens a plain `TcpListener` (the CLI's structural
+//! `--listen <addr>` flag on `llcg run` / `llcg serve`) and serves four
+//! read-only routes from one accept thread:
+//!
+//! | route      | content                                              |
+//! |------------|------------------------------------------------------|
+//! | `/metrics` | the whole registry in Prometheus text format         |
+//! | `/health`  | engine state, live workers, last round, staleness    |
+//! | `/run`     | the trailing `api::Event` stream as JSON             |
+//! | `/series`  | the rolling registry time series (`obs/timeseries`)  |
+//!
+//! Everything served is a read of state the process already maintains
+//! (relaxed-atomic instrument reads, a mutexed health/event tail the run
+//! loop pushes into); requests never touch training state, so the
+//! bit-exactness contracts hold with the exporter up. With no `--listen`
+//! flag none of this exists — no socket, no thread, no cost.
+//!
+//! The implementation speaks just enough HTTP/1.1 for `curl`, Prometheus,
+//! and browsers: request-line parsing, `Connection: close`, fixed
+//! `Content-Length` responses.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::timeseries::SeriesRing;
+use crate::util::Json;
+
+/// Events retained for the `/run` tail.
+const EVENT_TAIL: usize = 256;
+
+/// Run-health snapshot served at `/health`. The run loop overwrites it
+/// at every event; the exporter only ever reads.
+#[derive(Clone, Debug)]
+pub struct RunHealth {
+    /// "starting" | "running" | "finished" | "serving"
+    pub state: String,
+    pub engine: String,
+    pub parts: usize,
+    pub rounds: usize,
+    /// last completed round (0 before the first boundary)
+    pub last_round: usize,
+    /// contributors to the last completed round (= parts at full strength)
+    pub live_workers: usize,
+    /// staleness high-water mark (async round modes; 0 under sync)
+    pub staleness_hwm: u64,
+    /// monitor alerts emitted so far
+    pub alerts: u64,
+}
+
+impl RunHealth {
+    pub fn new(engine: &str, parts: usize, rounds: usize) -> RunHealth {
+        RunHealth {
+            state: "starting".into(),
+            engine: engine.into(),
+            parts,
+            rounds,
+            last_round: 0,
+            live_workers: parts,
+            staleness_hwm: 0,
+            alerts: 0,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(super::SCHEMA_VERSION as f64)),
+            ("state", Json::str(&self.state)),
+            ("engine", Json::str(&self.engine)),
+            ("parts", Json::num(self.parts as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("last_round", Json::num(self.last_round as f64)),
+            ("live_workers", Json::num(self.live_workers as f64)),
+            ("staleness_hwm", Json::num(self.staleness_hwm as f64)),
+            ("alerts", Json::num(self.alerts as f64)),
+            ("meta", super::run_meta_json()),
+        ])
+    }
+}
+
+struct ExporterState {
+    health: Mutex<RunHealth>,
+    events: Mutex<VecDeque<Json>>,
+    series: Mutex<Option<SeriesRing>>,
+}
+
+/// The live exposition server; see the module docs for the routes.
+pub struct Exporter {
+    addr: SocketAddr,
+    state: Arc<ExporterState>,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Exporter {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`; port 0 picks a free port —
+    /// read the result back from [`Exporter::addr`]) and start serving.
+    pub fn bind(addr: &str) -> std::io::Result<Exporter> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ExporterState {
+            health: Mutex::new(RunHealth::new("", 0, 0)),
+            events: Mutex::new(VecDeque::with_capacity(EVENT_TAIL)),
+            series: Mutex::new(None),
+        });
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let thread_state = Arc::clone(&state);
+        let thread_shutdown = Arc::clone(&shutdown);
+        let handle = std::thread::Builder::new()
+            .name("obs-exporter".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if thread_shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        let _ = serve_one(stream, &thread_state);
+                    }
+                }
+            })
+            .expect("spawn obs-exporter thread");
+        Ok(Exporter {
+            addr,
+            state,
+            shutdown,
+            handle: Some(handle),
+        })
+    }
+
+    /// The actually-bound address (resolves `:0` to the chosen port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Overwrite the `/health` snapshot.
+    pub fn set_health(&self, health: RunHealth) {
+        *self.state.health.lock().expect("exporter health poisoned") = health;
+    }
+
+    /// Append one event to the `/run` tail (oldest fall off past the cap).
+    pub fn push_event(&self, event: Json) {
+        let mut q = self.state.events.lock().expect("exporter events poisoned");
+        if q.len() == EVENT_TAIL {
+            q.pop_front();
+        }
+        q.push_back(event);
+    }
+
+    /// Attach the time-series ring backing `/series`.
+    pub fn attach_series(&self, ring: SeriesRing) {
+        *self.state.series.lock().expect("exporter series poisoned") = Some(ring);
+    }
+
+    /// Stop accepting and join the server thread.
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        if self.handle.is_none() {
+            return;
+        }
+        self.shutdown.store(true, Ordering::Relaxed);
+        // unblock the accept loop with one throwaway connection
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Exporter {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Read one request, route it, write one response, close.
+fn serve_one(mut stream: TcpStream, state: &ExporterState) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let path = match read_request_path(&mut stream)? {
+        Some(p) => p,
+        None => return Ok(()), // empty/garbled request (e.g. the shutdown poke)
+    };
+    let (status, content_type, body) = match path.as_str() {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            super::metrics::prometheus_text(),
+        ),
+        "/health" => (
+            "200 OK",
+            "application/json",
+            state
+                .health
+                .lock()
+                .expect("exporter health poisoned")
+                .to_json()
+                .to_string_pretty(),
+        ),
+        "/run" => {
+            let events: Vec<Json> = state
+                .events
+                .lock()
+                .expect("exporter events poisoned")
+                .iter()
+                .cloned()
+                .collect();
+            let doc = Json::obj(vec![
+                ("schema", Json::num(super::SCHEMA_VERSION as f64)),
+                ("events", Json::arr(events)),
+            ]);
+            ("200 OK", "application/json", doc.to_string_pretty())
+        }
+        "/series" => {
+            let doc = match &*state.series.lock().expect("exporter series poisoned") {
+                Some(ring) => ring.to_json(),
+                None => Json::obj(vec![
+                    ("schema", Json::num(super::SCHEMA_VERSION as f64)),
+                    ("samples", Json::arr(Vec::new())),
+                ]),
+            };
+            ("200 OK", "application/json", doc.to_string_pretty())
+        }
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "unknown route; try /metrics /health /run /series\n".to_string(),
+        ),
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+/// Parse `GET <path> HTTP/1.x` off the wire; drains headers best-effort
+/// (the socket closes right after the response anyway).
+fn read_request_path(stream: &mut TcpStream) -> std::io::Result<Option<String>> {
+    let mut buf = [0u8; 2048];
+    let mut filled = 0usize;
+    // read until the request line is complete (first "\r\n")
+    loop {
+        if filled == buf.len() {
+            return Ok(None); // request line longer than any route we serve
+        }
+        let n = match stream.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(None),
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+            Err(e) if e.kind() == std::io::ErrorKind::TimedOut => return Ok(None),
+            Err(e) => return Err(e),
+        };
+        filled += n;
+        if buf[..filled].windows(2).any(|w| w == b"\r\n") {
+            break;
+        }
+    }
+    let line_end = buf[..filled]
+        .windows(2)
+        .position(|w| w == b"\r\n")
+        .unwrap_or(filled);
+    let line = String::from_utf8_lossy(&buf[..line_end]);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    if method != "GET" || target.is_empty() {
+        return Ok(None);
+    }
+    // strip any query string; Prometheus appends none but browsers might
+    let path = target.split('?').next().unwrap_or(target);
+    Ok(Some(path.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).expect("connect exporter");
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read response");
+        let (head, body) = out.split_once("\r\n\r\n").expect("no header break");
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn exporter_serves_all_routes_and_404s_unknown() {
+        let exporter = Exporter::bind("127.0.0.1:0").expect("bind");
+        let addr = exporter.addr();
+        assert_ne!(addr.port(), 0, "port 0 must resolve to a real port");
+
+        let c = super::super::counter("test.obs-exporter-counter");
+        c.reset();
+        c.add(3);
+        let (head, body) = http_get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(body.contains("llcg_test_obs_exporter_counter 3"), "{body}");
+
+        let mut health = RunHealth::new("cluster", 4, 8);
+        health.state = "running".into();
+        health.last_round = 5;
+        exporter.set_health(health);
+        let (_, body) = http_get(addr, "/health");
+        let j = Json::parse(&body).expect("health json");
+        assert_eq!(j.get("state").and_then(Json::as_str), Some("running"));
+        assert_eq!(j.get("last_round").and_then(Json::as_f64), Some(5.0));
+        assert!(j.get("meta").is_some(), "health carries run metadata");
+
+        exporter.push_event(Json::obj(vec![("event", Json::str("round_started"))]));
+        let (_, body) = http_get(addr, "/run");
+        let j = Json::parse(&body).expect("run json");
+        assert_eq!(
+            j.get("events").and_then(Json::as_array).map(|a| a.len()),
+            Some(1)
+        );
+
+        // /series before a ring is attached: empty but well-formed
+        let (_, body) = http_get(addr, "/series");
+        let j = Json::parse(&body).expect("series json");
+        assert_eq!(
+            j.get("samples").and_then(Json::as_array).map(|a| a.len()),
+            Some(0)
+        );
+        let sampler = super::super::timeseries::Sampler::start(1000, 16);
+        let ring = sampler.ring();
+        ring.sample_now();
+        exporter.attach_series(ring);
+        let (_, body) = http_get(addr, "/series");
+        let j = Json::parse(&body).expect("series json");
+        assert_eq!(
+            j.get("samples").and_then(Json::as_array).map(|a| a.len()),
+            Some(1)
+        );
+
+        let (head, _) = http_get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+        c.reset();
+        exporter.shutdown();
+    }
+
+    #[test]
+    fn event_tail_is_bounded() {
+        let exporter = Exporter::bind("127.0.0.1:0").expect("bind");
+        for i in 0..(EVENT_TAIL + 10) {
+            exporter.push_event(Json::num(i as f64));
+        }
+        let (_, body) = http_get(exporter.addr(), "/run");
+        let j = Json::parse(&body).expect("run json");
+        let events = j.get("events").and_then(Json::as_array).unwrap();
+        assert_eq!(events.len(), EVENT_TAIL);
+        assert_eq!(events[0].as_f64(), Some(10.0), "oldest events fell off");
+        exporter.shutdown();
+    }
+}

@@ -307,6 +307,94 @@ pub fn metrics_table() -> String {
     out
 }
 
+/// Sanitize an instrument name for Prometheus exposition: the repo's
+/// dotted names (`transport.heartbeat_rtt_s`) become legal metric names
+/// (`llcg_transport_heartbeat_rtt_s`), under one `llcg_` namespace.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 5);
+    out.push_str("llcg_");
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() || ch == '_' || ch == ':' {
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Render a float for exposition with NaN/Inf clamped to 0 — the format
+/// contract (and the CI scrape check) is that `/metrics` is NaN-free.
+fn prom_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// The whole registry in Prometheus text exposition format (version
+/// 0.0.4): counters and gauges as single samples, histograms as
+/// cumulative `le` buckets + `_sum`/`_count`, with the power-of-two
+/// nanosecond buckets mapped to their upper bounds in seconds. Bucket
+/// lines are emitted only where the cumulative count changes (plus the
+/// mandatory `+Inf`), which is valid exposition and keeps 40-bucket
+/// histograms readable.
+pub fn prometheus_text() -> String {
+    let reg = registry();
+    let mut out = String::new();
+    for (name, c) in reg.counters.lock().expect("poisoned").iter() {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+    }
+    for (name, g) in reg.gauges.lock().expect("poisoned").iter() {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", prom_num(g.get())));
+    }
+    for (name, h) in reg.histograms.lock().expect("poisoned").iter() {
+        let n = prom_name(name);
+        let s = h.snapshot();
+        out.push_str(&format!("# TYPE {n} histogram\n"));
+        let mut cum = 0u64;
+        for (i, &c) in s.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            // bucket i covers [2^i, 2^(i+1)) ns: upper bound in seconds
+            let le = (1u64 << (i + 1)) as f64 / 1e9;
+            out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", s.count));
+        out.push_str(&format!("{n}_sum {}\n", prom_num(s.sum_ns as f64 / 1e9)));
+        out.push_str(&format!("{n}_count {}\n", s.count));
+    }
+    out
+}
+
+/// Flat `name -> value` view of the registry for the time-series sampler
+/// (`obs/timeseries`): counters and gauges verbatim, histograms as
+/// derived `.count`/`.mean_s`/`.p95_s`/`.max_s` series.
+pub fn sample_flat() -> Vec<(String, f64)> {
+    let reg = registry();
+    let mut out = Vec::new();
+    for (name, c) in reg.counters.lock().expect("poisoned").iter() {
+        out.push(((*name).to_string(), c.get() as f64));
+    }
+    for (name, g) in reg.gauges.lock().expect("poisoned").iter() {
+        out.push(((*name).to_string(), g.get()));
+    }
+    for (name, h) in reg.histograms.lock().expect("poisoned").iter() {
+        let s = h.snapshot();
+        let p95 = s.percentiles_s().map_or(0.0, |p| p.p95);
+        out.push((format!("{name}.count"), s.count as f64));
+        out.push((format!("{name}.mean_s"), s.mean_s()));
+        out.push((format!("{name}.p95_s"), p95));
+        out.push((format!("{name}.max_s"), s.max_s()));
+    }
+    out
+}
+
 /// Every registered instrument as one JSON object (for the `--log-json`
 /// final record).
 pub fn metrics_json() -> Json {
@@ -355,6 +443,7 @@ pub fn metrics_json() -> Json {
         })
         .collect();
     Json::obj(vec![
+        ("meta", super::run_meta_json()),
         ("counters", Json::arr(counters)),
         ("gauges", Json::arr(gauges)),
         ("histograms", Json::arr(histograms)),
@@ -574,6 +663,112 @@ mod tests {
         src.reset();
         h.reset();
         g.set(0.0);
+    }
+
+    #[test]
+    fn prometheus_text_golden() {
+        let c = counter("test.prom-golden.counter");
+        c.reset();
+        c.add(7);
+        let g = gauge("test.prom-golden.gauge");
+        g.set(2.5);
+        let h = histogram("test.prom-golden.hist");
+        h.reset();
+        h.record_ns(1_500); // bucket 10: [1024, 2048) ns -> le 2.048e-6 s
+        h.record_ns(1_600); // same bucket
+        h.record_ns(3_000_000); // bucket 21: le (1<<22)/1e9 s
+        let text = prometheus_text();
+        for want in [
+            "# TYPE llcg_test_prom_golden_counter counter\nllcg_test_prom_golden_counter 7\n",
+            "# TYPE llcg_test_prom_golden_gauge gauge\nllcg_test_prom_golden_gauge 2.5\n",
+            "# TYPE llcg_test_prom_golden_hist histogram\n",
+            "llcg_test_prom_golden_hist_bucket{le=\"0.000002048\"} 2\n",
+            &format!(
+                "llcg_test_prom_golden_hist_bucket{{le=\"{}\"}} 3\n",
+                (1u64 << 22) as f64 / 1e9
+            ),
+            "llcg_test_prom_golden_hist_bucket{le=\"+Inf\"} 3\n",
+            "llcg_test_prom_golden_hist_sum 0.0030031\n",
+            "llcg_test_prom_golden_hist_count 3\n",
+        ] {
+            assert!(text.contains(want), "missing {want:?} in:\n{text}");
+        }
+        // cumulative le buckets must be non-decreasing within a histogram
+        let b2 = text.find("llcg_test_prom_golden_hist_bucket{le=\"0.000002048\"} 2");
+        let b3 = text.find("llcg_test_prom_golden_hist_bucket{le=\"+Inf\"} 3");
+        assert!(b2.unwrap() < b3.unwrap(), "bucket order");
+        // a NaN gauge must not leak NaN into the exposition
+        g.set(f64::NAN);
+        let text = prometheus_text();
+        assert!(!text.contains("NaN"), "NaN leaked:\n{text}");
+        assert!(text.contains("llcg_test_prom_golden_gauge 0\n"));
+        c.reset();
+        g.set(0.0);
+        h.reset();
+    }
+
+    #[test]
+    fn concurrent_recording_snapshots_are_consistent() {
+        // hammer one histogram + counter from 4 threads while snapshotting:
+        // every snapshot's bucket sum must equal its count field exactly
+        // once quiescent, and mid-flight snapshots must stay monotone
+        let h = histogram("test.prom-concurrent.hist");
+        h.reset();
+        let c = counter("test.prom-concurrent.counter");
+        c.reset();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let workers: Vec<_> = (0..4)
+            .map(|t| {
+                let stop = std::sync::Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        h.record_ns(100 + t * 1000);
+                        c.inc();
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        let mut last_count = 0u64;
+        for _ in 0..200 {
+            let s = h.snapshot();
+            assert!(s.count >= last_count, "count went backwards");
+            last_count = s.count;
+            let _ = prometheus_text(); // render under fire: no panic
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        let s = h.snapshot();
+        assert_eq!(s.count, total, "histogram lost recordings");
+        assert_eq!(s.counts.iter().sum::<u64>(), total, "buckets disagree with count");
+        assert_eq!(c.get(), total, "counter lost increments");
+        h.reset();
+        c.reset();
+    }
+
+    #[test]
+    fn sample_flat_covers_every_instrument_kind() {
+        let c = counter("test.flat.counter");
+        c.reset();
+        c.add(2);
+        let g = gauge("test.flat.gauge");
+        g.set(1.5);
+        let h = histogram("test.flat.hist");
+        h.reset();
+        h.record_s(1e-3);
+        let flat: std::collections::BTreeMap<String, f64> =
+            sample_flat().into_iter().collect();
+        assert_eq!(flat["test.flat.counter"], 2.0);
+        assert_eq!(flat["test.flat.gauge"], 1.5);
+        assert_eq!(flat["test.flat.hist.count"], 1.0);
+        assert!(flat["test.flat.hist.mean_s"] > 0.0);
+        assert!(flat.contains_key("test.flat.hist.p95_s"));
+        assert!(flat.contains_key("test.flat.hist.max_s"));
+        c.reset();
+        g.set(0.0);
+        h.reset();
     }
 
     #[test]

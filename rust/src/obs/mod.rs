@@ -1,8 +1,9 @@
 //! Observability: zero-overhead-when-off span tracing, a process-wide
-//! metrics registry, and a structured JSONL event log.
+//! metrics registry, a structured JSONL event log, and a live telemetry
+//! plane (HTTP exposition + time series + training monitors).
 //!
-//! Three layers, all std-only (see `rust/src/obs/README.md` for the span
-//! naming convention and the overhead contract):
+//! Six layers, all std-only (see `rust/src/obs/README.md` for the span
+//! naming convention, the endpoint contract, and the overhead contract):
 //!
 //! - [`trace`] — per-thread span buffers behind one relaxed atomic flag.
 //!   `obs::span("name")` costs a single branch while tracing is disabled;
@@ -12,26 +13,40 @@
 //!   or <https://ui.perfetto.dev>).
 //! - [`metrics`] — atomic counters/gauges plus fixed-bucket latency
 //!   histograms whose percentiles reuse the `util::stats` interpolation
-//!   rule. Always on: every instrument is a relaxed atomic op.
+//!   rule. Always on: every instrument is a relaxed atomic op. Renders as
+//!   Prometheus text exposition via [`metrics::prometheus_text`].
 //! - [`events`] — a JSONL sink serializing the `api::Event` stream (one
 //!   object per line, `llcg run --log-json runs/events.jsonl`) plus
 //!   end-of-run span summaries.
+//! - [`exporter`] — the `--listen <addr>` HTTP server: `/metrics`
+//!   (Prometheus), `/health`, `/run` (event tail), `/series`.
+//! - [`timeseries`] — a rolling registry sampler feeding `/series` and
+//!   the `--out` dump.
+//! - [`monitor`] — paper-grounded training monitors (cross-worker
+//!   divergence, correction efficacy, straggler skew, liveness) behind
+//!   their own relaxed-atomic switch, emitting `api::Event::MonitorAlert`.
 //!
 //! Instrumentation never touches RNG streams, float accumulation order, or
 //! iteration order — only clocks and atomics — so every bit-exactness
 //! contract in the repo (cluster sync ≡ sequential, serve ≡ eval path,
-//! checkpoint resume replay) holds with tracing and metrics on. This is
-//! asserted end-to-end in `rust/tests/obs.rs`.
+//! checkpoint resume replay) holds with tracing, metrics, the exporter,
+//! and the monitors on. This is asserted end-to-end in `rust/tests/obs.rs`
+//! and `rust/tests/telemetry.rs`.
 
 pub mod events;
+pub mod exporter;
 pub mod metrics;
+pub mod monitor;
+pub mod timeseries;
 pub mod trace;
 
 pub use events::JsonlLog;
+pub use exporter::{Exporter, RunHealth};
 pub use metrics::{
     absorb_metrics_json, counter, gauge, histogram, metrics_json, metrics_raw_json, metrics_table,
-    reset_all, Counter, Gauge, Histogram,
+    prometheus_text, reset_all, sample_flat, Counter, Gauge, Histogram,
 };
+pub use timeseries::{Sampler, SeriesRing};
 pub use trace::{
     chrome_trace_json, chrome_trace_json_multi, enabled, set_enabled, span, span_round,
     spans_from_json, spans_to_json, summarize, take_spans, write_chrome_trace, Span, SpanRec,
@@ -49,5 +64,86 @@ pub use trace::{
 /// `eval_time_s`; 3 = `RunResult` gained `transport`, `RoundRecord` gained
 /// `wire_bytes_up`/`wire_bytes_down`, `--trace` may emit multi-process
 /// traces (`ph:"M"` process_name metadata when worker processes flushed
-/// spans over the transport).
-pub const SCHEMA_VERSION: u64 = 3;
+/// spans over the transport); 4 = run-metadata `meta` header on traces,
+/// metrics dumps, and the first JSONL line; `--out` may carry a `series`
+/// time-series block; new `monitor_alert` event kind.
+pub const SCHEMA_VERSION: u64 = 4;
+
+use std::sync::Mutex;
+
+use crate::util::Json;
+
+/// Config fingerprint for the run-metadata header, set once at CLI
+/// startup (`main.rs` computes it from the resolved config via
+/// `api::keys::config_fingerprint`). Empty until set.
+static CONFIG_DIGEST: Mutex<String> = Mutex::new(String::new());
+
+/// Record the run's config fingerprint for [`run_meta_json`].
+pub fn set_config_digest(digest: &str) {
+    *CONFIG_DIGEST.lock().expect("config digest poisoned") = digest.to_string();
+}
+
+fn hostname() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    if let Ok(h) = std::fs::read_to_string("/proc/sys/kernel/hostname") {
+        let h = h.trim();
+        if !h.is_empty() {
+            return h.to_string();
+        }
+    }
+    "unknown".to_string()
+}
+
+/// The run-metadata header stamped on every multi-process artifact
+/// (Chrome traces, metrics dumps, the first JSONL line, `/health`): which
+/// process, on which host, speaking which wire and schema versions, for
+/// which config. This is what makes a pile of per-worker artifacts
+/// attributable after the fact.
+pub fn run_meta_json() -> Json {
+    Json::obj(vec![
+        ("pid", Json::num(std::process::id() as f64)),
+        ("hostname", Json::str(hostname())),
+        (
+            "wire_version",
+            Json::num(crate::transport::wire::WIRE_VERSION as f64),
+        ),
+        ("schema", Json::num(SCHEMA_VERSION as f64)),
+        (
+            "config_digest",
+            Json::str(CONFIG_DIGEST.lock().expect("config digest poisoned").as_str()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_meta_carries_identity_fields() {
+        set_config_digest("cafe1234");
+        let m = run_meta_json();
+        assert_eq!(
+            m.get("pid").and_then(Json::as_f64),
+            Some(std::process::id() as f64)
+        );
+        assert!(!m.get("hostname").and_then(Json::as_str).unwrap().is_empty());
+        assert_eq!(
+            m.get("wire_version").and_then(Json::as_f64),
+            Some(crate::transport::wire::WIRE_VERSION as f64)
+        );
+        assert_eq!(
+            m.get("schema").and_then(Json::as_f64),
+            Some(SCHEMA_VERSION as f64)
+        );
+        assert_eq!(
+            m.get("config_digest").and_then(Json::as_str),
+            Some("cafe1234")
+        );
+        set_config_digest("");
+    }
+}

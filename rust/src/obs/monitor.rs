@@ -1,0 +1,384 @@
+//! Paper-grounded training monitors: cross-worker parameter divergence,
+//! correction efficacy, straggler skew, and heartbeat liveness.
+//!
+//! LLCG's theory (PAPER.md, Thm. 4.3–4.4) bounds the residual error of
+//! periodic averaging by how far the workers' parameters drift from their
+//! mean between synchronizations; the Global Server Correction exists to
+//! cancel exactly that residual. These monitors make the quantities in
+//! that story observable *while the run is alive*: every value lands in
+//! the process metrics registry (scrapeable at `/metrics` when `--listen`
+//! is up), and threshold rules return typed [`Alert`]s that the engines
+//! emit as `api::Event::MonitorAlert`.
+//!
+//! Monitoring is off by default and gated on one relaxed atomic load
+//! ([`enabled`]), mirroring the tracing switch: with it off the training
+//! path pays a single branch per hook site and the bit-exactness
+//! contracts of `tests/obs.rs` hold untouched. With it on, the divergence
+//! math reads parameter snapshots the server already holds — no extra
+//! worker communication — and the correction-efficacy evals run on
+//! *clones* of the eval RNG, so the training-visible RNG streams never
+//! advance differently.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Rounds of strictly growing max-divergence before an alert fires.
+pub const DIVERGENCE_GROWTH_ROUNDS: usize = 3;
+/// A worker is "silent" after this many missed heartbeat periods.
+pub const SILENT_HEARTBEAT_PERIODS: f64 = 3.0;
+/// Straggler alert threshold: round-time z-score above the fleet mean.
+pub const STRAGGLER_Z: f64 = 3.0;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn the monitors on/off process-wide (the CLI does this when
+/// `--listen` is given; tests drive it directly).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// One relaxed load — the entire cost of the monitors when disabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// A threshold rule that fired. The engines wrap these in
+/// `api::Event::MonitorAlert`; the exporter's `/run` tail and the JSONL
+/// log both carry them.
+#[derive(Clone, Debug)]
+pub struct Alert {
+    pub round: usize,
+    /// which monitor fired ("divergence" | "correction" | "straggler" |
+    /// "liveness")
+    pub monitor: &'static str,
+    pub message: String,
+    /// the value that crossed the rule's threshold
+    pub value: f64,
+}
+
+/// Per-round cross-worker divergence sample (the Thm 4.3–4.4 residual
+/// quantity): L2 distance of each contributing worker's parameters from
+/// their average, reported as the max and mean over workers.
+#[derive(Clone, Copy, Debug)]
+pub struct DivSample {
+    pub round: usize,
+    pub max: f64,
+    pub mean: f64,
+}
+
+/// Per-round correction-efficacy sample: global train loss immediately
+/// before and after `server.correction`, plus the L2 norm of the
+/// parameter delta the correction applied.
+#[derive(Clone, Copy, Debug)]
+pub struct CorrSample {
+    pub round: usize,
+    pub loss_before: f64,
+    pub loss_after: f64,
+    pub delta_norm: f64,
+}
+
+#[derive(Default)]
+struct MonState {
+    divergence: Vec<DivSample>,
+    growth_streak: usize,
+    corrections: Vec<CorrSample>,
+    /// part -> last heartbeat arrival (remote transports feed this)
+    heartbeats: BTreeMap<u32, Instant>,
+}
+
+fn state() -> &'static Mutex<MonState> {
+    static STATE: Mutex<MonState> = Mutex::new(MonState {
+        divergence: Vec::new(),
+        growth_streak: 0,
+        corrections: Vec::new(),
+        heartbeats: BTreeMap::new(),
+    });
+    &STATE
+}
+
+/// Clear all monitor history (start of a run / test isolation). Leaves
+/// the enabled switch alone.
+pub fn reset() {
+    let mut s = state().lock().expect("monitor state poisoned");
+    s.divergence.clear();
+    s.growth_streak = 0;
+    s.corrections.clear();
+    s.heartbeats.clear();
+}
+
+/// The run's divergence samples so far, in round order.
+pub fn divergence_history() -> Vec<DivSample> {
+    state().lock().expect("monitor state poisoned").divergence.clone()
+}
+
+/// The run's correction-efficacy samples so far, in round order.
+pub fn correction_history() -> Vec<CorrSample> {
+    state().lock().expect("monitor state poisoned").corrections.clone()
+}
+
+/// Plain L2 distance of each worker's flattened parameters from their
+/// elementwise average: `(max, mean)` over workers. Accumulates in f64 on
+/// copies of the data — the training tensors are only read.
+pub fn divergence_of(workers: &[Vec<&[f32]>]) -> (f64, f64) {
+    if workers.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = workers.len() as f64;
+    let mut dists = vec![0f64; workers.len()];
+    let n_tensors = workers[0].len();
+    for t in 0..n_tensors {
+        let len = workers[0][t].len();
+        for i in 0..len {
+            let mut avg = 0f64;
+            for w in workers {
+                avg += w[t][i] as f64;
+            }
+            avg /= n;
+            for (wi, w) in workers.iter().enumerate() {
+                let d = w[t][i] as f64 - avg;
+                dists[wi] += d * d;
+            }
+        }
+    }
+    let mut max = 0f64;
+    let mut sum = 0f64;
+    for d in &mut dists {
+        *d = d.sqrt();
+        max = max.max(*d);
+        sum += *d;
+    }
+    (max, sum / n)
+}
+
+/// Record a round's cross-worker divergence (computed from the parameter
+/// uploads the server is about to average — snapshots it already holds).
+/// Fires an alert when the max has grown [`DIVERGENCE_GROWTH_ROUNDS`]
+/// rounds in a row: under LLCG the correction should keep this quantity
+/// bounded, so sustained growth means the residual error is compounding.
+pub fn observe_divergence(round: usize, workers: &[Vec<&[f32]>]) -> Vec<Alert> {
+    let (max, mean) = divergence_of(workers);
+    super::gauge("monitor.divergence_max").set(max);
+    super::gauge("monitor.divergence_mean").set(mean);
+    let mut s = state().lock().expect("monitor state poisoned");
+    let grew = s.divergence.last().map(|p| max > p.max).unwrap_or(false);
+    s.growth_streak = if grew { s.growth_streak + 1 } else { 0 };
+    s.divergence.push(DivSample { round, max, mean });
+    let mut alerts = Vec::new();
+    if s.growth_streak >= DIVERGENCE_GROWTH_ROUNDS {
+        alerts.push(Alert {
+            round,
+            monitor: "divergence",
+            message: format!(
+                "cross-worker divergence grew {} rounds straight (max {max:.3e})",
+                s.growth_streak
+            ),
+            value: max,
+        });
+    }
+    alerts
+}
+
+/// Record a round's correction efficacy. Alerts when the post-correction
+/// global loss is non-finite — training is diverging and every later
+/// round is wasted.
+pub fn observe_correction(
+    round: usize,
+    loss_before: f64,
+    loss_after: f64,
+    delta_norm: f64,
+) -> Vec<Alert> {
+    super::gauge("monitor.correction_loss_before").set(loss_before);
+    super::gauge("monitor.correction_loss_after").set(loss_after);
+    super::gauge("monitor.correction_delta_norm").set(delta_norm);
+    state()
+        .lock()
+        .expect("monitor state poisoned")
+        .corrections
+        .push(CorrSample {
+            round,
+            loss_before,
+            loss_after,
+            delta_norm,
+        });
+    let mut alerts = Vec::new();
+    if !loss_after.is_finite() {
+        alerts.push(Alert {
+            round,
+            monitor: "correction",
+            message: format!("global loss non-finite after correction ({loss_after})"),
+            value: loss_after,
+        });
+    }
+    alerts
+}
+
+/// Record per-worker round times and flag stragglers: any worker whose
+/// round time sits more than [`STRAGGLER_Z`] standard deviations above
+/// the fleet mean (needs >= 3 contributors for the z-score to mean
+/// anything). The max z lands in the `monitor.straggler_z` gauge.
+pub fn observe_round_times(round: usize, times: &[(u32, f64)]) -> Vec<Alert> {
+    let mut alerts = Vec::new();
+    if times.len() < 3 {
+        super::gauge("monitor.straggler_z").set(0.0);
+        return alerts;
+    }
+    let n = times.len() as f64;
+    let mean = times.iter().map(|(_, t)| t).sum::<f64>() / n;
+    let var = times.iter().map(|(_, t)| (t - mean) * (t - mean)).sum::<f64>() / n;
+    let sd = var.sqrt();
+    let mut z_max = 0f64;
+    for &(part, t) in times {
+        let z = if sd > 0.0 { (t - mean) / sd } else { 0.0 };
+        z_max = z_max.max(z);
+        if z > STRAGGLER_Z {
+            alerts.push(Alert {
+                round,
+                monitor: "straggler",
+                message: format!(
+                    "worker {part} round time {t:.3}s is {z:.1} sd above the fleet mean {mean:.3}s"
+                ),
+                value: z,
+            });
+        }
+    }
+    super::gauge("monitor.straggler_z").set(z_max);
+    alerts
+}
+
+/// Transport layer: a worker heartbeat arrived (remote transports call
+/// this from the per-worker reader thread; gated on [`enabled`] there).
+pub fn note_heartbeat(part: u32) {
+    state()
+        .lock()
+        .expect("monitor state poisoned")
+        .heartbeats
+        .insert(part, Instant::now());
+}
+
+/// Flag workers whose last heartbeat is older than
+/// [`SILENT_HEARTBEAT_PERIODS`] x `period_s`. Workers that never
+/// heartbeated (in-process transport) are skipped, so the hook is safe on
+/// every engine/transport combination.
+pub fn check_heartbeats(round: usize, period_s: f64) -> Vec<Alert> {
+    let s = state().lock().expect("monitor state poisoned");
+    let mut alerts = Vec::new();
+    let mut live = 0usize;
+    for (&part, &last) in &s.heartbeats {
+        let age = last.elapsed().as_secs_f64();
+        if age > SILENT_HEARTBEAT_PERIODS * period_s {
+            alerts.push(Alert {
+                round,
+                monitor: "liveness",
+                message: format!(
+                    "worker {part} silent for {age:.1}s (> {SILENT_HEARTBEAT_PERIODS} x {period_s:.1}s heartbeat)"
+                ),
+                value: age,
+            });
+        } else {
+            live += 1;
+        }
+    }
+    if !s.heartbeats.is_empty() {
+        super::gauge("transport.live_workers").set(live as f64);
+    }
+    alerts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divergence_of_identical_workers_is_zero() {
+        let a = vec![vec![1.0f32, 2.0, 3.0]];
+        let w: Vec<Vec<&[f32]>> = (0..3).map(|_| vec![a[0].as_slice()]).collect();
+        let (max, mean) = divergence_of(&w);
+        assert_eq!(max, 0.0);
+        assert_eq!(mean, 0.0);
+    }
+
+    #[test]
+    fn divergence_of_matches_hand_computation() {
+        // two workers, one tensor of one element: values 0 and 2, avg 1,
+        // each at distance 1
+        let a = [0.0f32];
+        let b = [2.0f32];
+        let w: Vec<Vec<&[f32]>> = vec![vec![&a], vec![&b]];
+        let (max, mean) = divergence_of(&w);
+        assert!((max - 1.0).abs() < 1e-12, "max {max}");
+        assert!((mean - 1.0).abs() < 1e-12, "mean {mean}");
+        // empty fleet: zeros, no panic
+        assert_eq!(divergence_of(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn growth_streak_fires_after_k_rounds() {
+        reset();
+        let mk = |x: f32| -> Vec<f32> { vec![x] };
+        let fire_round = |r: usize, spread: f32| -> Vec<Alert> {
+            let a = mk(-spread);
+            let b = mk(spread);
+            let w: Vec<Vec<&[f32]>> = vec![vec![a.as_slice()], vec![b.as_slice()]];
+            observe_divergence(r, &w)
+        };
+        assert!(fire_round(1, 1.0).is_empty());
+        assert!(fire_round(2, 2.0).is_empty(), "streak 1");
+        assert!(fire_round(3, 3.0).is_empty(), "streak 2");
+        let alerts = fire_round(4, 4.0);
+        assert_eq!(alerts.len(), 1, "streak 3 fires");
+        assert_eq!(alerts[0].monitor, "divergence");
+        assert_eq!(alerts[0].round, 4);
+        // a non-growing round resets the streak
+        assert!(fire_round(5, 1.0).is_empty());
+        assert!(fire_round(6, 2.0).is_empty());
+        assert_eq!(divergence_history().len(), 6);
+        reset();
+    }
+
+    #[test]
+    fn non_finite_correction_loss_alerts() {
+        reset();
+        assert!(observe_correction(1, 0.9, 0.7, 0.1).is_empty());
+        let alerts = observe_correction(2, 0.7, f64::NAN, 0.1);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].monitor, "correction");
+        assert_eq!(correction_history().len(), 2);
+        reset();
+    }
+
+    #[test]
+    fn straggler_z_score_flags_the_slow_worker() {
+        // 7 fast workers + one 10x straggler
+        let mut times: Vec<(u32, f64)> = (0..7).map(|p| (p, 1.0 + 1e-3 * p as f64)).collect();
+        times.push((7, 10.0));
+        let alerts = observe_round_times(3, &times);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].monitor, "straggler");
+        assert!(alerts[0].message.contains("worker 7"));
+        // a uniform fleet never alerts (sd == 0 path)
+        let even: Vec<(u32, f64)> = (0..4).map(|p| (p, 1.0)).collect();
+        assert!(observe_round_times(4, &even).is_empty());
+        // too few contributors: no z-score, no alert
+        assert!(observe_round_times(5, &times[..2]).is_empty());
+    }
+
+    #[test]
+    fn heartbeat_silence_only_covers_workers_that_ever_beat() {
+        reset();
+        // nobody heartbeated (in-process transport): no alerts at all
+        assert!(check_heartbeats(1, 0.001).is_empty());
+        note_heartbeat(2);
+        // fresh heartbeat, generous period: alive
+        assert!(check_heartbeats(1, 10.0).is_empty());
+        // tiny period: the same heartbeat is now ancient
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let alerts = check_heartbeats(2, 1e-4);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].monitor, "liveness");
+        assert!(alerts[0].message.contains("worker 2"));
+        reset();
+    }
+}

@@ -1,0 +1,242 @@
+//! Rolling time-series sampler over the metrics registry.
+//!
+//! [`Sampler::start`] spawns one background thread that snapshots every
+//! registered instrument on a fixed interval into a bounded ring buffer
+//! ([`SeriesRing`]). The ring is shared (cheaply clonable) so the HTTP
+//! exporter serves it live at `/series` while `--out` embeds the same
+//! JSON at the end of the run — post-hoc plots of loss / wire bytes /
+//! queue depth over wall time without any extra recording code.
+//!
+//! The sampler only *reads* relaxed atomics; it never touches training
+//! state, RNG streams, or iteration order, so the bit-exactness
+//! contracts hold with it running. It exists only while `--listen` is up
+//! (zero threads, zero cost otherwise).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::Json;
+
+/// Default sampling interval.
+pub const DEFAULT_INTERVAL_MS: u64 = 250;
+/// Default ring capacity (oldest samples fall off first). At the default
+/// interval this holds ~8.5 minutes of history.
+pub const DEFAULT_CAPACITY: usize = 2048;
+
+/// One registry snapshot at a point in wall time.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// seconds since the sampler started
+    pub t_s: f64,
+    /// flat `name -> value` view of the registry (histograms contribute
+    /// `<name>.count/.mean_s/.p95_s/.max_s` derived series)
+    pub values: Vec<(String, f64)>,
+}
+
+struct RingInner {
+    samples: Mutex<VecDeque<Sample>>,
+    capacity: usize,
+    interval_ms: u64,
+    t0: Instant,
+    /// samples dropped off the front of the ring (so truncation is
+    /// visible, not silent)
+    dropped: Mutex<u64>,
+}
+
+/// Shared handle on the bounded sample ring.
+#[derive(Clone)]
+pub struct SeriesRing(Arc<RingInner>);
+
+impl SeriesRing {
+    fn new(capacity: usize, interval_ms: u64) -> SeriesRing {
+        SeriesRing(Arc::new(RingInner {
+            samples: Mutex::new(VecDeque::with_capacity(capacity.min(256))),
+            capacity,
+            interval_ms,
+            t0: Instant::now(),
+            dropped: Mutex::new(0),
+        }))
+    }
+
+    /// Take one snapshot of the registry now (the sampler thread calls
+    /// this on its cadence; tests call it directly).
+    pub fn sample_now(&self) {
+        let sample = Sample {
+            t_s: self.0.t0.elapsed().as_secs_f64(),
+            values: super::metrics::sample_flat(),
+        };
+        let mut q = self.0.samples.lock().expect("series ring poisoned");
+        if q.len() == self.0.capacity {
+            q.pop_front();
+            *self.0.dropped.lock().expect("series ring poisoned") += 1;
+        }
+        q.push_back(sample);
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.samples.lock().expect("series ring poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `/series` document: schema stamp, cadence, drop count, and the
+    /// retained samples oldest-first.
+    pub fn to_json(&self) -> Json {
+        let q = self.0.samples.lock().expect("series ring poisoned");
+        let samples: Vec<Json> = q
+            .iter()
+            .map(|s| {
+                let values: Vec<(&str, Json)> = s
+                    .values
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), Json::num(*v)))
+                    .collect();
+                Json::obj(vec![
+                    ("t_s", Json::num(s.t_s)),
+                    ("values", Json::obj(values)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::num(super::SCHEMA_VERSION as f64)),
+            ("interval_ms", Json::num(self.0.interval_ms as f64)),
+            (
+                "dropped",
+                Json::num(*self.0.dropped.lock().expect("series ring poisoned") as f64),
+            ),
+            ("samples", Json::arr(samples)),
+        ])
+    }
+}
+
+/// The background sampler. Dropping (or [`Sampler::stop`]) ends the
+/// thread; the [`SeriesRing`] stays readable afterwards.
+pub struct Sampler {
+    ring: SeriesRing,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Sampler {
+    /// Start sampling every `interval_ms` into a ring of `capacity`.
+    pub fn start(interval_ms: u64, capacity: usize) -> Sampler {
+        let ring = SeriesRing::new(capacity.max(1), interval_ms.max(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_ring = ring.clone();
+        let thread_stop = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("obs-series".into())
+            .spawn(move || {
+                // sample in <=50ms slices so stop() never waits a full
+                // interval
+                let interval = Duration::from_millis(interval_ms.max(1));
+                let slice = Duration::from_millis(50).min(interval);
+                let mut next = Instant::now() + interval;
+                while !thread_stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(slice);
+                    if Instant::now() >= next {
+                        thread_ring.sample_now();
+                        next += interval;
+                    }
+                }
+            })
+            .expect("spawn obs-series thread");
+        Sampler {
+            ring,
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Shared handle for the exporter's `/series` route.
+    pub fn ring(&self) -> SeriesRing {
+        self.ring.clone()
+    }
+
+    /// Stop the thread and return the ring (one final sample is taken so
+    /// short runs always have at least one point).
+    pub fn stop(mut self) -> SeriesRing {
+        self.halt();
+        self.ring.sample_now();
+        self.ring.clone()
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_reports_drops() {
+        let ring = SeriesRing::new(3, 10);
+        for _ in 0..5 {
+            ring.sample_now();
+        }
+        assert_eq!(ring.len(), 3);
+        let j = ring.to_json();
+        assert_eq!(j.get("dropped").and_then(Json::as_f64), Some(2.0));
+        let samples = j.get("samples").and_then(Json::as_array).unwrap();
+        assert_eq!(samples.len(), 3);
+        // timestamps are monotone non-decreasing
+        let ts: Vec<f64> = samples
+            .iter()
+            .map(|s| s.get("t_s").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+        assert_eq!(
+            j.get("interval_ms").and_then(Json::as_f64),
+            Some(10.0)
+        );
+    }
+
+    #[test]
+    fn samples_carry_registry_values() {
+        let c = super::super::counter("test.obs-series-counter");
+        c.reset();
+        c.add(41);
+        let ring = SeriesRing::new(8, 10);
+        ring.sample_now();
+        c.inc();
+        ring.sample_now();
+        let j = ring.to_json();
+        let samples = j.get("samples").and_then(Json::as_array).unwrap();
+        let get = |i: usize| -> f64 {
+            samples[i]
+                .get("values")
+                .and_then(|v| v.get("test.obs-series-counter"))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_eq!(get(0), 41.0);
+        assert_eq!(get(1), 42.0);
+        c.reset();
+    }
+
+    #[test]
+    fn sampler_thread_samples_and_stops() {
+        let sampler = Sampler::start(5, 64);
+        std::thread::sleep(Duration::from_millis(40));
+        let ring = sampler.stop();
+        assert!(!ring.is_empty(), "no samples after 40ms at 5ms cadence");
+        let n = ring.len();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(ring.len(), n, "sampler kept running after stop");
+    }
+}

@@ -204,6 +204,7 @@ pub fn chrome_trace_json(spans: &[SpanRec]) -> Json {
         .collect();
     Json::obj(vec![
         ("schema", Json::num(crate::obs::SCHEMA_VERSION as f64)),
+        ("meta", crate::obs::run_meta_json()),
         ("displayTimeUnit", Json::str("ms")),
         ("traceEvents", Json::arr(events)),
     ])
@@ -327,6 +328,7 @@ pub fn chrome_trace_json_multi(tracks: &[(String, Vec<SpanRec>)]) -> Json {
     }
     Json::obj(vec![
         ("schema", Json::num(crate::obs::SCHEMA_VERSION as f64)),
+        ("meta", crate::obs::run_meta_json()),
         ("displayTimeUnit", Json::str("ms")),
         ("traceEvents", Json::arr(events)),
     ])

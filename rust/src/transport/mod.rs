@@ -56,12 +56,10 @@ use wire::{Listener, Stream};
 /// server gives up on it (covers binary startup, not model setup).
 const ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Worker → server heartbeat period while the worker is alive.
-pub(crate) const HEARTBEAT_PERIOD: Duration = Duration::from_millis(1000);
-
-/// Server-side read timeout on a worker connection. Heartbeats arrive
-/// every [`HEARTBEAT_PERIOD`], so silence this long means the process is
-/// wedged or the link is gone — the bridge reports the worker as failed.
+/// Server-side read-timeout floor on a worker connection. Heartbeats
+/// arrive every `cfg.heartbeat_ms`, so silence for `max(this, several
+/// periods)` means the process is wedged or the link is gone — the bridge
+/// reports the worker as failed.
 const CONN_TIMEOUT: Duration = Duration::from_secs(30);
 
 // ---------------------------------------------------------------------------
@@ -557,7 +555,9 @@ impl RemoteCluster {
         self.wire_down.fetch_add(n, Ordering::Relaxed);
 
         let reader = stream.try_clone()?;
-        let writer = stream;
+        // the writer is shared: the down bridge sends rounds/snapshots, the
+        // up bridge echoes timestamped heartbeats back for RTT measurement
+        let writer = Arc::new(Mutex::new(stream));
         let (dtx, drx) = channel::<Down>();
         let up = up_tx.clone();
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -569,6 +569,7 @@ impl RemoteCluster {
             .map(|&(_, r)| r)
             .collect();
         {
+            let writer = writer.clone();
             let shutdown = shutdown.clone();
             let last_round = last_round.clone();
             let kills = kills.clone();
@@ -581,6 +582,7 @@ impl RemoteCluster {
             s.spawn(move || {
                 up_bridge(
                     reader,
+                    writer,
                     up,
                     part,
                     self,
@@ -671,7 +673,7 @@ impl Drop for RemoteCluster {
 /// connection's scheduled `kill=p@r` faults (SIGKILL right after round
 /// `r`'s frame is written, so the worker dies mid-round like a lost node).
 fn down_bridge(
-    mut w: Stream,
+    w: Arc<Mutex<Stream>>,
     rx: Receiver<Down>,
     wire_down: &AtomicU64,
     kills: Vec<u64>,
@@ -679,12 +681,14 @@ fn down_bridge(
     shutdown: Arc<AtomicBool>,
     last_round: Arc<AtomicU64>,
 ) {
+    let send = |tag: u8, payload: &[u8]| -> std::io::Result<u64> {
+        wire::write_frame(&mut *w.lock().expect("writer lock"), tag, payload)
+    };
     loop {
         match rx.recv() {
             Ok(Down::Round { round, k, params }) => {
                 last_round.store(round as u64, Ordering::SeqCst);
-                match wire::write_frame(&mut w, wire::TAG_ROUND, &wire::enc_round(round, k, &params))
-                {
+                match send(wire::TAG_ROUND, &wire::enc_round(round, k, &params)) {
                     Ok(n) => {
                         wire_down.fetch_add(n, Ordering::Relaxed);
                     }
@@ -695,7 +699,7 @@ fn down_bridge(
                     break;
                 }
             }
-            Ok(Down::Snapshot) => match wire::write_frame(&mut w, wire::TAG_SNAPSHOT, &[]) {
+            Ok(Down::Snapshot) => match send(wire::TAG_SNAPSHOT, &[]) {
                 Ok(n) => {
                     wire_down.fetch_add(n, Ordering::Relaxed);
                 }
@@ -705,7 +709,7 @@ fn down_bridge(
                 // flag before the frame so the up bridge treats the EOF that
                 // follows the worker's obs flush as expected
                 shutdown.store(true, Ordering::SeqCst);
-                if let Ok(n) = wire::write_frame(&mut w, wire::TAG_SHUTDOWN, &[]) {
+                if let Ok(n) = send(wire::TAG_SHUTDOWN, &[]) {
                     wire_down.fetch_add(n, Ordering::Relaxed);
                 }
                 break;
@@ -714,7 +718,7 @@ fn down_bridge(
                 // the engine dropped this sender (abort, or respawn replaced
                 // it): close the socket so the worker sees EOF and exits
                 shutdown.store(true, Ordering::SeqCst);
-                w.shutdown();
+                w.lock().expect("writer lock").shutdown();
                 break;
             }
         }
@@ -725,8 +729,10 @@ fn down_bridge(
 /// heartbeats and obs flushes; an unexpected EOF/timeout becomes
 /// `Up::Failed` so a killed process feeds the respawn machinery exactly
 /// like a crashed thread.
+#[allow(clippy::too_many_arguments)]
 fn up_bridge(
     mut r: Stream,
+    w: Arc<Mutex<Stream>>,
     up: Sender<Up>,
     part: u32,
     rc: &RemoteCluster,
@@ -734,7 +740,9 @@ fn up_bridge(
     shutdown: Arc<AtomicBool>,
     last_round: Arc<AtomicU64>,
 ) {
-    let _ = r.set_read_timeout(Some(CONN_TIMEOUT));
+    // a slow configured heartbeat must not trip the liveness timeout
+    let timeout = CONN_TIMEOUT.max(Duration::from_millis(rc.cfg.heartbeat_ms.saturating_mul(5)));
+    let _ = r.set_read_timeout(Some(timeout));
     let mut failed_seen = false;
     loop {
         let (tag, payload, n) = match wire::read_frame(&mut r) {
@@ -755,7 +763,21 @@ fn up_bridge(
         rc.wire_up.fetch_add(n, Ordering::Relaxed);
         let res: Result<()> = (|| {
             match tag {
-                wire::TAG_HEARTBEAT => {}
+                wire::TAG_HEARTBEAT => {
+                    if crate::obs::monitor::enabled() {
+                        crate::obs::monitor::note_heartbeat(part);
+                    }
+                    // echo the worker's timestamp back so it can measure
+                    // the round trip (transport.heartbeat_rtt_s, merged
+                    // home with its next obs flush)
+                    if let Ok(n) = wire::write_frame(
+                        &mut *w.lock().expect("writer lock"),
+                        wire::TAG_HEARTBEAT,
+                        &payload,
+                    ) {
+                        rc.wire_down.fetch_add(n, Ordering::Relaxed);
+                    }
+                }
                 wire::TAG_FEATURES => {
                     let bytes = wire::dec_features(&payload)?;
                     let _ = up.send(Up::Features { bytes });

@@ -9,7 +9,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -21,7 +21,6 @@ use crate::sampler::{BlockArena, NodeScratch};
 use crate::util::Json;
 
 use super::wire::{self, Stream};
-use super::HEARTBEAT_PERIOD;
 
 /// Guarded writer shared by the reply path and the heartbeat thread (the
 /// socket has one reader — the main loop — but two writers).
@@ -31,14 +30,27 @@ fn send(w: &SharedWriter, tag: u8, payload: &[u8]) -> std::io::Result<u64> {
     wire::write_frame(&mut w.lock().expect("writer lock"), tag, payload)
 }
 
-/// Serialize this process's spans + metrics for the end-of-run
-/// `ObsFlush` frame.
+/// Serialize this process's spans + metrics for an `ObsFlush` frame.
 fn obs_flush_json() -> Json {
     Json::obj(vec![
         ("schema", Json::num(crate::obs::SCHEMA_VERSION as f64)),
         ("spans", crate::obs::spans_to_json(&crate::obs::take_spans())),
         ("metrics", crate::obs::metrics_raw_json()),
     ])
+}
+
+/// Ship spans + metric deltas home, then zero the local registry. Called
+/// at every round boundary (so a SIGKILLed worker's telemetry survives up
+/// to its last completed round) and once more at exit. The server's
+/// absorb is additive for counters/histograms, so each flush must carry
+/// only the delta since the previous one; `take_spans` already drains.
+fn flush_obs(w: &SharedWriter) {
+    let _ = send(
+        w,
+        wire::TAG_OBS_FLUSH,
+        obs_flush_json().to_string_pretty().as_bytes(),
+    );
+    crate::obs::reset_all();
 }
 
 /// Entry point behind `llcg worker --connect <addr> --rank <p>`; every
@@ -57,15 +69,21 @@ pub fn run_worker(connect: &str, rank: u32, cfg: ExperimentConfig) -> Result<()>
     let mut reader = reader;
 
     // heartbeat immediately (setup below takes real time; the server's
-    // per-connection read timeout must not mistake it for a wedged worker)
+    // per-connection read timeout must not mistake it for a wedged worker).
+    // Each beat carries this process's monotonic clock in nanoseconds; the
+    // server echoes it back verbatim so the main loop below can measure
+    // the round trip without any cross-host clock agreement.
+    let epoch = Instant::now();
+    let heartbeat = Duration::from_millis(cfg.heartbeat_ms);
     let stop = Arc::new(AtomicBool::new(false));
     {
         let w = writer.clone();
         let stop = stop.clone();
         std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
-                std::thread::sleep(HEARTBEAT_PERIOD);
-                if send(&w, wire::TAG_HEARTBEAT, &[]).is_err() {
+                std::thread::sleep(heartbeat);
+                let sent = (epoch.elapsed().as_nanos() as u64).to_le_bytes();
+                if send(&w, wire::TAG_HEARTBEAT, &sent).is_err() {
                     break;
                 }
             }
@@ -160,16 +178,15 @@ pub fn run_worker(connect: &str, rank: u32, cfg: ExperimentConfig) -> Result<()>
                         {
                             break;
                         }
+                        // round boundary: telemetry must not wait for a
+                        // clean exit a fault run never reaches
+                        flush_obs(&writer);
                     }
                     Err(e) => {
                         // report and exit: the obs flush rides ahead of the
                         // failure so the server still merges this process's
                         // spans/metrics
-                        let _ = send(
-                            &writer,
-                            wire::TAG_OBS_FLUSH,
-                            obs_flush_json().to_string_pretty().as_bytes(),
-                        );
+                        flush_obs(&writer);
                         let _ = send(
                             &writer,
                             wire::TAG_FAILED,
@@ -177,6 +194,16 @@ pub fn run_worker(connect: &str, rank: u32, cfg: ExperimentConfig) -> Result<()>
                         );
                         stop.store(true, Ordering::Relaxed);
                         return Ok(());
+                    }
+                }
+            }
+            wire::TAG_HEARTBEAT => {
+                // server echo of a timestamped beat: record the round trip
+                if payload.len() == 8 {
+                    let sent = u64::from_le_bytes(payload[..8].try_into().expect("len checked"));
+                    let now = epoch.elapsed().as_nanos() as u64;
+                    if now > sent {
+                        crate::obs::histogram("transport.heartbeat_rtt_s").record_ns(now - sent);
                     }
                 }
             }
@@ -196,10 +223,6 @@ pub fn run_worker(connect: &str, rank: u32, cfg: ExperimentConfig) -> Result<()>
         }
     }
     stop.store(true, Ordering::Relaxed);
-    let _ = send(
-        &writer,
-        wire::TAG_OBS_FLUSH,
-        obs_flush_json().to_string_pretty().as_bytes(),
-    );
+    flush_obs(&writer);
     Ok(())
 }

@@ -188,6 +188,16 @@ fn event_summary(ev: &Event) -> String {
             r.comm.total(),
             r.cum_bytes
         ),
+        Event::MonitorAlert {
+            round,
+            monitor,
+            value,
+            ..
+        } => {
+            // only emitted while the telemetry monitors are on (they are
+            // off in every parity test here); digest identity + value
+            format!("monitor_alert r={round} m={monitor} v={:016x}", value.to_bits())
+        }
         Event::Finished(res) => format!(
             "finished rounds={} val={:016x} test={:016x}",
             res.records.len(),

@@ -1,0 +1,220 @@
+//! Live-telemetry-plane acceptance tests:
+//!
+//! - the HTTP exposition server answers `/metrics`, `/health`, `/run`, and
+//!   `/series` **while a cluster run is in flight**, with valid NaN-free
+//!   Prometheus text and schema-stamped JSON;
+//! - the paper-grounded divergence monitor sees what Thm 4.3–4.4 predict:
+//!   on the same seed, cross-worker parameter divergence is strictly lower
+//!   with Global Server Corrections enabled than with them disabled.
+//!
+//! The monitor switch + history and the metrics registry are process-global
+//! state, so every test takes `test_lock()` and resets both behind it.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use llcg::api::{Event, ExperimentBuilder};
+use llcg::cluster::Engine;
+use llcg::config::ExperimentConfig;
+use llcg::coordinator::{driver, Algorithm, Schedule};
+use llcg::graph::generators;
+use llcg::obs;
+use llcg::runtime::Runtime;
+use llcg::util::Json;
+
+fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // a previous test may have panicked with the monitors live
+    obs::monitor::set_enabled(false);
+    obs::monitor::reset();
+    guard
+}
+
+fn native_rt() -> Runtime {
+    let (rt, _dir) =
+        Runtime::load_or_native("target/native-artifacts").expect("native runtime");
+    assert_eq!(rt.backend_name(), "native");
+    rt
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.arch = "gcn".into();
+    cfg.algorithm = Algorithm::Llcg;
+    cfg.parts = 4;
+    cfg.rounds = 4;
+    cfg.schedule = Schedule::Fixed { k: 3 };
+    cfg.correction_steps = 2;
+    cfg.eval_every = 2;
+    cfg.eval_max_nodes = 64;
+    cfg.seed = 7;
+    cfg
+}
+
+fn run_with(cfg: &ExperimentConfig, rt: &Runtime) -> driver::RunResult {
+    let ds = generators::by_name(&cfg.dataset, cfg.seed).unwrap();
+    driver::run_experiment(cfg, &ds, rt).unwrap()
+}
+
+/// Minimal HTTP/1.1 GET against the exporter: returns (head, body).
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect exporter");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: llcg-test\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read response");
+    let (head, body) = out.split_once("\r\n\r\n").expect("no header break");
+    (head.to_string(), body.to_string())
+}
+
+#[test]
+fn endpoints_answer_during_a_live_cluster_run() {
+    let _l = test_lock();
+    let rt = native_rt();
+    let mut cfg = base_cfg();
+    cfg.engine = Engine::Cluster;
+
+    // the plane the CLI assembles for `--listen`: exporter + sampler +
+    // monitors, health/events fed from the run's event stream
+    let exporter = obs::Exporter::bind("127.0.0.1:0").expect("bind exporter");
+    let addr = exporter.addr();
+    let sampler = obs::Sampler::start(5, 512);
+    exporter.attach_series(sampler.ring());
+    obs::monitor::reset();
+    obs::monitor::set_enabled(true);
+    // guarantee at least one histogram so the bucket exposition is exercised
+    let rtt = obs::histogram("test.telemetry.rtt");
+    rtt.reset();
+    rtt.record_ns(1_234_567);
+    let mut health = obs::RunHealth::new(cfg.engine.name(), cfg.parts, cfg.rounds);
+    health.state = "running".into();
+    exporter.set_health(health.clone());
+
+    let ds = Arc::new(generators::by_name(&cfg.dataset, cfg.seed).unwrap());
+    let mut mid: Option<(String, String)> = None;
+    let res = ExperimentBuilder::from_config(cfg.clone())
+        .with_dataset(ds)
+        .build()
+        .unwrap()
+        .launch(&rt)
+        .stream(|ev| {
+            exporter.push_event(ev.to_json());
+            if let Event::RoundCompleted(r) = ev {
+                health.last_round = r.round;
+                exporter.set_health(health.clone());
+                if r.round == 2 && mid.is_none() {
+                    // scrape mid-run, exactly like a Prometheus poll
+                    mid = Some((http_get(addr, "/metrics").1, http_get(addr, "/health").1));
+                }
+            }
+        })
+        .unwrap();
+    obs::monitor::set_enabled(false);
+    let ring = sampler.stop();
+    assert_eq!(res.records.len(), cfg.rounds);
+
+    // ---- /metrics, captured while round 3 had not started yet
+    let (metrics, health_body) = mid.expect("round 2 never completed");
+    assert!(!metrics.is_empty(), "empty exposition mid-run");
+    assert!(!metrics.contains("NaN"), "exposition must be NaN-free:\n{metrics}");
+    assert!(metrics.contains("# TYPE"), "no TYPE lines:\n{metrics}");
+    for want in [
+        "llcg_monitor_divergence_max",
+        "llcg_monitor_divergence_mean",
+        "llcg_test_telemetry_rtt_bucket{le=\"+Inf\"} 1",
+        "llcg_test_telemetry_rtt_count 1",
+    ] {
+        assert!(metrics.contains(want), "`{want}` missing from:\n{metrics}");
+    }
+
+    // ---- /health, same moment: the run self-reports as live at round 2
+    let h = Json::parse(&health_body).expect("health JSON parses");
+    assert_eq!(h.req("schema").as_f64().unwrap() as u64, obs::SCHEMA_VERSION);
+    assert_eq!(h.req("state").as_str(), Some("running"));
+    assert_eq!(h.req("last_round").as_f64(), Some(2.0));
+    assert_eq!(h.req("parts").as_f64(), Some(cfg.parts as f64));
+    assert_eq!(h.req("rounds").as_f64(), Some(cfg.rounds as f64));
+    let meta = h.req("meta");
+    assert_eq!(
+        meta.req("pid").as_f64(),
+        Some(std::process::id() as f64),
+        "health meta names the wrong process"
+    );
+
+    // ---- /run: the event tail replays the stream we pushed
+    let (_, run_body) = http_get(addr, "/run");
+    let r = Json::parse(&run_body).expect("run JSON parses");
+    let events = r.req("events").as_array().unwrap();
+    assert!(!events.is_empty());
+    let completed = events
+        .iter()
+        .filter(|e| e.req("event").as_str() == Some("round_completed"))
+        .count();
+    assert_eq!(completed, cfg.rounds, "event tail misses round boundaries");
+
+    // ---- /series: the sampler caught the monitor gauges moving
+    let (_, series_body) = http_get(addr, "/series");
+    let s = Json::parse(&series_body).expect("series JSON parses");
+    assert_eq!(s.req("schema").as_f64().unwrap() as u64, obs::SCHEMA_VERSION);
+    let samples = s.req("samples").as_array().unwrap();
+    assert!(!samples.is_empty(), "no samples after a multi-round run");
+    let last = samples.last().unwrap().req("values");
+    assert!(
+        last.get("monitor.divergence_max").and_then(Json::as_f64).is_some(),
+        "series samples miss the divergence gauge: {last:?}"
+    );
+    // the stopped ring and the live route agree
+    assert_eq!(
+        samples.len(),
+        ring.to_json().req("samples").as_array().unwrap().len()
+    );
+
+    // one divergence observation per round landed in the history
+    assert_eq!(obs::monitor::divergence_history().len(), cfg.rounds);
+    obs::monitor::reset();
+    exporter.shutdown();
+}
+
+/// The acceptance check grounded in Thm 4.3–4.4: the Global Server
+/// Correction exists to cancel the residual error that worker drift
+/// creates, and a corrected global model sits closer to the optimum, so
+/// the same seed must show strictly lower cross-worker divergence with
+/// corrections on (`rho > 0`) than off.
+#[test]
+fn corrections_keep_cross_worker_divergence_strictly_lower() {
+    let _l = test_lock();
+    let rt = native_rt();
+    let mut cfg = base_cfg();
+    cfg.rounds = 6;
+    cfg.correction_steps = 5;
+
+    let mean_divergence = |cfg: &ExperimentConfig| -> f64 {
+        obs::monitor::reset();
+        obs::monitor::set_enabled(true);
+        let _ = run_with(cfg, &rt);
+        obs::monitor::set_enabled(false);
+        let hist = obs::monitor::divergence_history();
+        assert_eq!(hist.len(), cfg.rounds, "one divergence sample per round");
+        assert!(hist.iter().all(|d| d.max >= d.mean && d.mean >= 0.0));
+        hist.iter().map(|d| d.mean).sum::<f64>() / hist.len() as f64
+    };
+
+    let corrected = mean_divergence(&cfg);
+    let mut plain = cfg.clone();
+    plain.correction_steps = 0;
+    let uncorrected = mean_divergence(&plain);
+    obs::monitor::reset();
+
+    assert!(
+        corrected > 0.0 && uncorrected > 0.0,
+        "partitioned workers must actually drift apart \
+         (corrected {corrected}, uncorrected {uncorrected})"
+    );
+    assert!(
+        corrected < uncorrected,
+        "corrections did not reduce cross-worker divergence: \
+         {corrected} (rho > 0) vs {uncorrected} (rho = 0)"
+    );
+}

@@ -196,7 +196,20 @@ fn sigkilled_worker_respawns_and_the_run_completes() {
     // supervisor must respawn a fresh process from the current global
     // params and finish every round
     cfg.transport = "tcp,kill=1@2".into();
+    // trace the run: workers flush spans at every round boundary, so the
+    // doomed process's round-1 telemetry must survive its SIGKILL
+    llcg::obs::set_enabled(true);
+    let _ = llcg::transport::take_remote_spans();
     let res = run_with(&cfg, &rt);
+    llcg::obs::set_enabled(false);
+    let remote = llcg::transport::take_remote_spans();
+    let _ = llcg::obs::take_spans();
+    assert!(
+        remote.iter().any(|(track, spans)| track == "worker-1"
+            && spans.iter().any(|s| s.name == "worker.round" && s.round == 1)),
+        "round-1 spans from the SIGKILLed worker-1 process were lost (tracks: {:?})",
+        remote.iter().map(|(t, s)| (t.as_str(), s.len())).collect::<Vec<_>>()
+    );
     assert_eq!(res.transport, "tcp");
     assert_eq!(res.records.len(), cfg.rounds, "all rounds complete despite the kill");
     assert!(
